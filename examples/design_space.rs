@@ -1,0 +1,62 @@
+//! Design-space characterization — the paper's §III motivation study:
+//! sweep all 26 DPU configurations for a set of models under the three
+//! workload states and print the PPW/FPS landscape (Figs 1-3) plus the
+//! Table-III model characteristics.
+//!
+//! ```bash
+//! cargo run --release --example design_space [-- <model> ...]
+//! ```
+
+use dpuconfig::data::load_models;
+use dpuconfig::dpusim::DpuSim;
+use dpuconfig::eval::figures;
+use dpuconfig::models::ModelVariant;
+use dpuconfig::workload::ALL_STATES;
+
+fn main() -> anyhow::Result<()> {
+    let sim = DpuSim::load()?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let wanted: Vec<String> = if args.is_empty() {
+        vec!["ResNet152".into(), "MobileNetV2".into()]
+    } else {
+        args
+    };
+
+    // Table III first: the models' static characteristics
+    print!("{}", figures::render_table_iii(&figures::table_iii(&sim)?));
+    println!();
+
+    let models = load_models()?;
+    for name in &wanted {
+        let Some(base) = models.iter().find(|m| &m.name == name) else {
+            eprintln!("unknown model {name} — available: {:?}",
+                models.iter().map(|m| &m.name).collect::<Vec<_>>());
+            continue;
+        };
+        // Fig 1/2: the landscape under each workload state
+        for st in ALL_STATES {
+            let v = ModelVariant::new(base.clone(), 0.0);
+            let b = figures::bars(&sim, &v, st)?;
+            print!("{}", figures::render_bars(&format!("{name} [{st}]"), &b));
+            println!();
+        }
+        // Fig 3: pruning ratios under N
+        for prune in [0.25, 0.50] {
+            let v = ModelVariant::new(base.clone(), prune);
+            let b = figures::bars(&sim, &v, dpuconfig::workload::WorkloadState::None)?;
+            print!(
+                "{}",
+                figures::render_bars(
+                    &format!(
+                        "{name} PR{} [N] (accuracy {:.2}%)",
+                        (prune * 100.0) as u32,
+                        v.accuracy()
+                    ),
+                    &b
+                )
+            );
+            println!();
+        }
+    }
+    Ok(())
+}

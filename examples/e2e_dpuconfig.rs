@@ -1,0 +1,155 @@
+//! End-to-end driver: exercises the full three-layer system on a real
+//! workload and reports the paper's headline metrics. This is the run
+//! recorded in EXPERIMENTS.md.
+//!
+//! 1. loads the AOT policy artifact (L1 Pallas kernels inside the L2 jax
+//!    graph, exported to HLO text) into the PJRT runtime,
+//! 2. measures the real decision latency against the paper's 20 ms
+//!    RL-inference budget, single and micro-batched through the threaded
+//!    decision service (1024 concurrent requests),
+//! 3. reproduces Fig 5 (normalized PPW vs the static baselines on the 9
+//!    held-out model variants under C and M),
+//! 4. runs a 10-minute adaptive-serving scenario with workload flips and
+//!    model arrivals, comparing total frames/joule against max-FPS.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_dpuconfig
+//! ```
+
+use dpuconfig::coordinator::{
+    Arrival, Coordinator, DecisionService, Scenario, Selector,
+};
+use dpuconfig::dpusim::DpuSim;
+use dpuconfig::eval::fig5;
+use dpuconfig::models::load_variants;
+use dpuconfig::rl::{Baseline, Featurizer};
+use dpuconfig::runtime::{default_policy_path, PolicyRuntime};
+use dpuconfig::telemetry::{PlatformState, Sampler};
+use dpuconfig::workload::{WorkloadState, WorkloadSchedule};
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    println!("== DPUConfig end-to-end driver ==\n");
+    let sim = DpuSim::load()?;
+
+    // ---- 1. decision latency (the 20 ms budget of Fig 6) --------------
+    let rt = PolicyRuntime::load(&default_policy_path(1), 1)?;
+    println!("policy artifact compiled on PJRT [{}]", rt.platform());
+    let obs = [0.5f32; 22];
+    rt.infer(&obs)?; // warm
+    let reps = 2000;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(rt.infer(&obs)?);
+    }
+    let per = t0.elapsed() / reps;
+    println!(
+        "single decision latency: {per:?} (paper budget on Arm A53: 20 ms) -> {}",
+        if per < Duration::from_millis(20) { "PASS" } else { "FAIL" }
+    );
+
+    // ---- 2. threaded decision service, 1024 concurrent requests -------
+    let service =
+        DecisionService::spawn(default_policy_path(8), 8, Duration::from_micros(200))?;
+    let featurizer = Featurizer::new();
+    let mut sampler = Sampler::from_calibration(7, sim.calibration());
+    let variants = load_variants()?;
+    let n_req = 1024;
+    let observations: Vec<[f32; 22]> = (0..n_req)
+        .map(|i| {
+            let v = &variants[i % variants.len()];
+            let st = [WorkloadState::None, WorkloadState::Cpu, WorkloadState::Mem][i % 3];
+            let p = PlatformState {
+                workload: st,
+                dpu_traffic_bps: 0.0,
+                host_cpu_util: 0.0,
+                p_fpga: 2.2,
+                p_arm: 1.5,
+            };
+            featurizer.observe(&sampler.sample(i as u64, &p), v)
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for chunk in observations.chunks(n_req / 8) {
+        let client = service.client();
+        let chunk = chunk.to_vec();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<u64> {
+            let mut acc = 0u64;
+            for o in chunk {
+                acc += client.decide(o)?.argmax() as u64;
+            }
+            Ok(acc)
+        }));
+    }
+    let mut checksum = 0;
+    for h in handles {
+        checksum += h.join().unwrap()?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "decision service: {n_req} concurrent requests in {dt:?} \
+         ({:.0} decisions/s, microbatch 8, checksum {checksum})",
+        n_req as f64 / dt.as_secs_f64()
+    );
+
+    // ---- 3. Fig 5 on the held-out models -------------------------------
+    let rt5 = PolicyRuntime::load(&default_policy_path(1), 1)?;
+    let mut engine = dpuconfig::coordinator::DecisionEngine::new(Selector::Agent(rt5), 5);
+    let (cases, summaries) = fig5::run(
+        &sim,
+        &mut engine,
+        &[WorkloadState::Cpu, WorkloadState::Mem],
+        5,
+    )?;
+    print!("\n{}", fig5::render(&cases, &summaries));
+
+    // ---- 4. 10-minute adaptive serving scenario ------------------------
+    let mut sched = WorkloadSchedule::new(11, 20.0, 60.0);
+    let mut workload = vec![(0.0, WorkloadState::None)];
+    let mut t = 0.0;
+    while t < 600.0 {
+        t += 10.0;
+        workload.push((t, sched.advance(10.0)));
+    }
+    let mut arrivals = Vec::new();
+    let mut rng = dpuconfig::workload::XorShift64::new(13);
+    let mut at = 0.0;
+    while at < 600.0 {
+        let dur = rng.range_f64(30.0, 90.0);
+        arrivals.push(Arrival {
+            model: variants[rng.below(variants.len())].clone(),
+            at_s: at,
+            duration_s: dur.min(600.0 - at),
+        });
+        at += dur;
+    }
+    let scenario = Scenario { arrivals, workload, seed: 13 };
+
+    let rt6 = PolicyRuntime::load(&default_policy_path(1), 1)?;
+    let mut agent = Coordinator::new(Selector::Agent(rt6), 13)?;
+    let a = agent.run_scenario(&scenario)?.totals;
+    let mut maxfps = Coordinator::new(Selector::Static(Baseline::MaxFps), 13)?;
+    let b = maxfps.run_scenario(&scenario)?.totals;
+    let mut oracle = Coordinator::new(Selector::Static(Baseline::Optimal), 13)?;
+    let o = oracle.run_scenario(&scenario)?.totals;
+
+    println!("\n== 10-minute adaptive serving (simulated time) ==");
+    for (name, t) in [("dpuconfig", &a), ("max_fps", &b), ("oracle", &o)] {
+        println!(
+            "{:>10}: {:>9.0} frames, {:>8.0} J, {:>5.2} frames/J, {:>2} reconfigs, {:>5.1}s in violation",
+            name,
+            t.frames,
+            t.energy_fpga_j,
+            t.avg_ppw(),
+            t.reconfigs,
+            t.constraint_violation_s
+        );
+    }
+    println!(
+        "\nagent energy efficiency: {:.1}% of oracle, {:.2}x max-FPS",
+        100.0 * a.avg_ppw() / o.avg_ppw(),
+        a.avg_ppw() / b.avg_ppw()
+    );
+    Ok(())
+}

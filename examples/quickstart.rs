@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT-compiled DPUConfig agent, observe the system,
+//! and pick a DPU configuration for one model — the whole public API in
+//! thirty lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use dpuconfig::data::load_models;
+use dpuconfig::dpusim::DpuSim;
+use dpuconfig::models::ModelVariant;
+use dpuconfig::rl::Featurizer;
+use dpuconfig::runtime::{default_policy_path, PolicyRuntime};
+use dpuconfig::telemetry::{PlatformState, Sampler};
+use dpuconfig::workload::WorkloadState;
+
+fn main() -> anyhow::Result<()> {
+    // the substrate: a calibrated analytical ZCU102 + DPU simulator
+    let sim = DpuSim::load()?;
+    // the agent: PPO policy trained at build time, loaded via PJRT
+    let agent = PolicyRuntime::load(&default_policy_path(1), 1)?;
+    println!("DPUConfig agent up on PJRT [{}]", agent.platform());
+
+    // a model arrives while a memory-intensive co-runner is active
+    let resnet152 = ModelVariant::new(
+        load_models()?.into_iter().find(|m| m.name == "ResNet152").unwrap(),
+        0.0,
+    );
+    let state = WorkloadState::Mem;
+
+    // observe (Table II features), decide, compare with the oracle
+    let mut sampler = Sampler::from_calibration(42, sim.calibration());
+    let platform = PlatformState {
+        workload: state,
+        dpu_traffic_bps: 0.0,
+        host_cpu_util: 0.0,
+        p_fpga: 2.2,
+        p_arm: 1.5,
+    };
+    let obs = Featurizer::new().observe(&sampler.sample(0, &platform), &resnet152);
+    let out = agent.infer(&obs)?;
+    let chosen = &sim.actions()[out.argmax()];
+    let optimal = &sim.actions()[sim.optimal_action(&resnet152, state)?];
+
+    let m = sim.evaluate(&resnet152, &chosen.size, chosen.instances, state)?;
+    println!(
+        "{} under [{}]: agent chose {} -> {:.1} fps @ {:.2} W ({:.2} fps/W)",
+        resnet152.name(),
+        state,
+        chosen.notation(),
+        m.fps,
+        m.p_fpga,
+        m.ppw
+    );
+    let o = sim.evaluate(&resnet152, &optimal.size, optimal.instances, state)?;
+    println!(
+        "oracle would choose {} -> {:.2} fps/W (agent at {:.1}% of optimal)",
+        optimal.notation(),
+        o.ppw,
+        100.0 * m.ppw / o.ppw
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""Reward-design ablation (paper §IV-A).
+
+The paper argues for (a) context-relative baselines (vs absolute PPW),
+(b) blending local and global baselines, and (c) bounded (squashed)
+rewards. This script trains the agent under ablated reward designs and
+reports the test-split normalized PPW per workload state — the evidence
+for the design choices. Results recorded in EXPERIMENTS.md §E3.
+
+Run: ``python -m compile.ablate_reward [epochs]``
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+
+import numpy as np
+
+from . import ppo, reward
+
+
+class AblatedReward(reward.RewardCalculator):
+    """RewardCalculator with switchable design pieces."""
+
+    def __init__(self, lam=reward.LAMBDA, squash=True, contextual=True):
+        super().__init__(lam=lam)
+        self.squash = squash
+        self.contextual = contextual
+
+    def calculate(self, measured_fps, fpga_power, cpu_util, mem_util_gbs,
+                  gmac, model_data_mb, fps_constraint=reward.FPS_CONSTRAINT_DEFAULT):
+        ppw = measured_fps / fpga_power
+        if measured_fps < fps_constraint:
+            return -1.0
+        if not self.contextual:
+            # absolute-PPW reward (no baseline at all): scaled raw PPW
+            r = ppw / 50.0
+            return math.tanh(r) if self.squash else max(-1.0, min(1.0, r))
+        key = reward.context_key(cpu_util, mem_util_gbs, gmac, model_data_mb)
+        local = self.ctx_mean.get(key)
+        b_local = local.mean if local is not None and local.count > 0 else ppw
+        b_global = self.global_mean.mean if self.global_mean.count > 0 else ppw
+        baseline = (1.0 - self.lam) * b_local + self.lam * b_global
+        r = self.alpha * (ppw - baseline) / max(1.0, abs(baseline))
+        r = math.tanh(r) if self.squash else max(-3.0, min(3.0, r))
+        if local is None:
+            local = reward.RunningMean()
+            self.ctx_mean[key] = local
+        local.update(ppw)
+        self.global_mean.update(ppw)
+        return r
+
+
+VARIANTS = {
+    "paper (blended, tanh)": dict(),
+    "local-only (lambda=0)": dict(lam=0.0),
+    "global-only (lambda=1)": dict(lam=1.0),
+    "no squash (clip +/-3)": dict(squash=False),
+    "absolute PPW (no baseline)": dict(contextual=False),
+}
+
+
+def run(epochs: int = 400, seed: int = 0):
+    rows = []
+    for name, kw in VARIANTS.items():
+        # monkey-patch the reward calculator used by training
+        orig = ppo.reward_mod.RewardCalculator
+        ppo.reward_mod.RewardCalculator = lambda: AblatedReward(**kw)  # type: ignore
+        try:
+            res = ppo.train(epochs=epochs, batch_per_context=8, seed=seed, verbose=False)
+        finally:
+            ppo.reward_mod.RewardCalculator = orig
+        m = ppo.evaluate(res, states=("N", "C", "M"))
+        avg = float(np.mean([m[s]["agent_norm_ppw"] for s in ("N", "C", "M")]))
+        rows.append((name, m, avg))
+        print(
+            f"{name:<28} N={m['N']['agent_norm_ppw']:.3f} "
+            f"C={m['C']['agent_norm_ppw']:.3f} M={m['M']['agent_norm_ppw']:.3f} "
+            f"avg={avg:.3f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    epochs = int(sys.argv[1]) if len(sys.argv) > 1 else 400
+    run(epochs)

@@ -1,0 +1,156 @@
+"""AOT export: train the PPO agent, fold the weights, lower to HLO text.
+
+This is the only python entrypoint in the build (`make artifacts`). It
+ 1. trains the PPO agent on the dpusim measurement tables (or reuses
+    cached weights in artifacts/weights.npz),
+ 2. folds the trained weights as constants into the Pallas-kernel forward
+    pass (model.apply use_pallas=True),
+ 3. lowers `policy_infer: f32[B,22] -> (logits f32[B,26], value f32[B,1])`
+    to HLO TEXT via stablehlo -> XlaComputation, and
+ 4. writes artifacts/policy.hlo.txt (batch=1), policy_b8.hlo.txt (batch=8)
+    and policy_meta.csv (normalization stats + training metrics + action
+    table) for the rust runtime.
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto: the
+xla crate's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit ids); the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dpusim, model, ppo
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XLA HLO text (see module docstring for why text).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    dense constants as `{...}`, which the 0.5.1 text parser silently reads
+    back as zeros — the folded policy weights would all vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_policy(params, batch: int, path: str) -> None:
+    """Fold `params` as constants; export obs -> (logits, value)."""
+    const_params = jax.tree_util.tree_map(jnp.asarray, params)
+
+    def policy_infer(obs):
+        logits, value = model.apply(const_params, obs, use_pallas=True)
+        return logits, value
+
+    spec = jax.ShapeDtypeStruct((batch, model.OBS_DIM), jnp.float32)
+    lowered = jax.jit(policy_infer).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def save_weights(result: ppo.TrainResult, path: str) -> None:
+    # params already include the folded obs_mu / obs_sigma entries
+    np.savez(path, **{k: np.asarray(v) for k, v in result.params.items()})
+
+
+def load_weights(path: str):
+    z = np.load(path)
+    keys = ["obs_mu", "obs_sigma", "w1", "b1", "w2", "b2", "w_pi", "b_pi", "w_v", "b_v"]
+    return {k: jnp.asarray(z[k]) for k in keys}
+
+
+def write_meta(path: str, params, eval_metrics, history) -> None:
+    """Machine-readable metadata for the rust side + EXPERIMENTS.md."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["key", "value"])
+        w.writerow(["obs_dim", model.OBS_DIM])
+        w.writerow(["num_actions", model.NUM_ACTIONS])
+        w.writerow(["hidden", model.HIDDEN])
+        for i, mu in enumerate(np.asarray(params["obs_mu"])):
+            w.writerow([f"obs_mu_{i}", repr(float(mu))])
+        for i, sd in enumerate(np.asarray(params["obs_sigma"])):
+            w.writerow([f"obs_sigma_{i}", repr(float(sd))])
+        if history:
+            w.writerow(["final_mean_reward", repr(history[-1]["mean_reward"])])
+            w.writerow(["epochs", len(history)])
+        for st, m in eval_metrics.items():
+            for k, v in m.items():
+                w.writerow([f"eval_{st}_{k}", repr(float(v))])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=ARTIFACTS)
+    ap.add_argument("--epochs", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch-per-context", type=int, default=8)
+    ap.add_argument(
+        "--retrain", action="store_true", help="ignore cached weights.npz"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    weights_path = os.path.join(args.out_dir, "weights.npz")
+
+    if os.path.exists(weights_path) and not args.retrain:
+        print(f"using cached weights {weights_path}")
+        params = load_weights(weights_path)
+        tables = ppo.build_tables()
+        result = ppo.TrainResult(
+            params=params,
+            obs_mu=np.asarray(params["obs_mu"]),
+            obs_sigma=np.asarray(params["obs_sigma"]),
+            history=[],
+            tables=tables,
+        )
+    else:
+        result = ppo.train(
+            epochs=args.epochs,
+            seed=args.seed,
+            batch_per_context=args.batch_per_context,
+        )
+        save_weights(result, weights_path)
+        print(f"wrote {weights_path}")
+
+    metrics = ppo.evaluate(result, states=("N", "C", "M"))
+    for st, m in metrics.items():
+        print(
+            f"[{st}] agent={m['agent_norm_ppw']:.3f} "
+            f"maxfps={m['maxfps_norm_ppw']:.3f} "
+            f"minpow={m['minpower_norm_ppw']:.3f} "
+            f"met={m['constraint_met_frac']:.2f} exact={m['exact_optimal']}/{m['cases']}"
+        )
+
+    export_policy(result.params, 1, os.path.join(args.out_dir, "policy.hlo.txt"))
+    export_policy(result.params, 8, os.path.join(args.out_dir, "policy_b8.hlo.txt"))
+    write_meta(
+        os.path.join(args.out_dir, "policy_meta.csv"),
+        result.params,
+        metrics,
+        result.history,
+    )
+
+    # the measurement table the training consumed — for the record and for
+    # rust-side parity checks / benches
+    dpusim.generate_measurements(os.path.join(args.out_dir, "measurements.csv"))
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,330 @@
+"""Fit the dpusim free parameters to the paper's observed behaviour.
+
+The paper gives us (a) exact B4096_1 latencies (Table III — used directly as
+anchors, not fitted), and (b) a set of qualitative/quantitative facts about
+where PPW optima fall (Figs 1-3), which configurations violate the 30 FPS
+constraint (§V-B), and how static baselines score (Fig 5). This script
+searches the remaining free constants (memory contention, host coordination,
+power coefficients) until every hard fact holds, then writes
+``data/calibration.csv`` and the rust<->python parity vectors
+``data/golden_parity.csv``.
+
+Run manually: ``python -m compile.calibrate`` (from python/). The fitted
+constants are committed; tests assert the facts, not the fit procedure.
+
+Hard targets
+  H1  opt(ResNet152 PR0,  N) = B4096_1          (Fig 1)
+  H2  opt(MobileNetV2 PR0, N) = B2304_2         (Fig 1)
+  H3  opt(MobileNetV2 PR0, C) = B1600_2         (Fig 2)
+  H4  opt(MobileNetV2 PR0, M) = B1600_2         (Fig 2)
+  H5  opt(ResNet152 PR0,  M) = B3136_2, and no config meets 30 FPS (Fig 2, §V-B)
+  H6  opt(ResNet152 PR25, N) = B3136_1, with PPW > opt PPW of PR0 (Fig 3)
+  H7  B4096_1/B512_1 fps ratio: MobileNetV2 in [2.4, 2.8], ResNet152 in [5.5, 6.1] (§III-A)
+  H8  fps(ResNet152 PR0, B4096_1, N) in [30, 35] (Table III anchor + §V-B)
+  H9  constraint violations on the test set under {C,M} are exactly
+      {ResNet152 PR0 @ M, ResNet152 PR25 @ M} -> 16/18 = 89% satisfaction (§V-B)
+
+Soft targets (Fig 5 static baselines, test set averages)
+  S1  mean normalized PPW of the max-FPS config ~ 0.47 under C, ~ 0.35 under M
+  S2  min-power config normalized PPW well below 0.6 everywhere
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import random
+from typing import Dict, List, Tuple
+
+from . import dpusim
+from .dpusim import DpuSim, ModelVariant, load_action_space, load_models
+
+DATA = dpusim.DATA_DIR
+
+DEFAULTS: Dict[str, float] = {
+    "f_clk_hz": 300e6,
+    # throughput saturation: B4096/B512 speedup = sat_q0 + sat_q1*eff4096,
+    # knee = array size where layer shapes stop scaling
+    "sat_q0": 1.39,
+    "sat_q1": 7.11,
+    "sat_knee": 1800.0,
+    "sat_k0": 0.468,
+    "sat_k1": 0.857,
+    "burst_mult": 1.5,
+    # host coordination slice
+    "host_h0_ms": 0.10,
+    "host_h1_ms": 0.002,
+    "host_mult_c": 3.0,
+    "host_mult_m": 1.5,
+    "host_gamma": 0.15,
+    "cpu_load_n": 0.05,
+    "cpu_load_m": 0.40,
+    "host_delay_n_ms": 0.0,
+    "host_delay_c_ms": 2.0,
+    "host_delay_m_ms": 0.6,
+    # memory system
+    "bw_total": 14.6e9,
+    "bw_cap1": 4.0e9,
+    "bw_ext_c": 0.5e9,
+    "bw_ext_m": 8.0e9,
+    "beta_mem": 3.0,
+    "bw_dpu_n": 11.0e9,
+    "bw_dpu_c": 10.0e9,
+    "bw_dpu_m": 1.40e9,
+    # power
+    "p_pl_static": 3.0,
+    "p_idle0": 0.5,
+    "p_idle1": 0.0015,
+    "e_mac_j_per_gmac": 0.010,
+    "e_io_j_per_gb": 0.05,
+    "io_growth_exp": 0.25,
+    "emac_growth_exp": 0.30,
+    "p_arm_base": 1.5,
+    "p_arm_c": 2.0,
+    "p_arm_m": 1.5,
+    "p_arm_host": 1.0,
+    # telemetry observation model
+    "cpu_util_n": 5.0,
+    "cpu_util_c": 95.0,
+    "cpu_util_m": 60.0,
+    "telemetry_noise": 0.02,
+}
+
+# parameters the search may move, with (lo, hi) bounds
+SEARCH: Dict[str, Tuple[float, float]] = {
+    "sat_q0": (0.8, 2.2),
+    "sat_q1": (5.0, 9.0),
+    "sat_knee": (1580.0, 2040.0),
+    "sat_k0": (0.2, 0.8),
+    "sat_k1": (0.3, 1.3),
+    "burst_mult": (0.8, 4.0),
+    "host_h0_ms": (0.02, 0.30),
+    "host_h1_ms": (0.0005, 0.006),
+    "host_mult_c": (1.5, 6.0),
+    "host_mult_m": (1.0, 3.0),
+    "host_gamma": (0.02, 0.60),
+    "cpu_load_m": (0.1, 0.8),
+    "bw_cap1": (2.5e9, 8e9),
+    "bw_ext_m": (4e9, 11e9),
+    "beta_mem": (1.0, 5.0),
+    "e_mac_j_per_gmac": (0.002, 0.03),
+    "e_io_j_per_gb": (0.01, 0.2),
+    "p_pl_static": (1.0, 6.0),
+    "io_growth_exp": (0.0, 0.6),
+    "emac_growth_exp": (0.0, 0.8),
+    "bw_dpu_n": (6e9, 13e9),
+    "bw_dpu_c": (5e9, 12e9),
+    "bw_dpu_m": (1.2e9, 1.8e9),
+    "p_idle0": (0.1, 2.0),
+    "p_idle1": (0.0003, 0.005),
+    "host_delay_c_ms": (0.3, 2.8),
+    "host_delay_m_ms": (0.0, 1.5),
+    "host_mult_c": (1.0, 8.0),
+    "beta_mem": (0.5, 6.0),
+    "bw_cap1": (1.8e9, 8e9),
+}
+
+A = {(s, n): i for i, (s, n) in enumerate(load_action_space())}
+
+
+def _variants():
+    ms = {m.name: m for m in load_models()}
+    return ms
+
+
+def score(cal: Dict[str, float]) -> Tuple[float, List[str]]:
+    """Lower is better; 1000 per hard violation + soft distances."""
+    sim = DpuSim(cal)
+    ms = _variants()
+    mob = ModelVariant(ms["MobileNetV2"], 0.0)
+    r152 = ModelVariant(ms["ResNet152"], 0.0)
+    r152_25 = ModelVariant(ms["ResNet152"], 0.25)
+    bad: List[str] = []
+    s = 0.0
+
+    def hard(cond: bool, msg: str):
+        nonlocal s
+        if not cond:
+            s += 1000.0
+            bad.append(msg)
+
+    def ppw_rank(v, st, size, n):
+        """0-based PPW rank of (size, n) within the feasible pool."""
+        rows = sim.sweep_variant(v, st)
+        ok = [r for r in rows if r["meets_constraint"] == 1.0] or rows
+        order = sorted(ok, key=lambda r: -r["ppw"])
+        for i, r in enumerate(order):
+            if int(r["action_id"]) == A[(size, n)]:
+                return i
+        return 99
+
+    hard(sim.optimal_action(r152, "N") == A[("B4096", 1)], "H1")
+    hard(sim.optimal_action(mob, "N") == A[("B2304", 2)], "H2")
+    hard(sim.optimal_action(mob, "C") == A[("B1600", 2)], "H3")
+    # H4/H5b are knife-edge ties in any physical model (see DESIGN.md §7):
+    # require top-2 hard, exact-top soft.
+    rk = ppw_rank(mob, "M", "B1600", 2)
+    hard(rk <= 1, f"H4(rank={rk})")
+    s += 50.0 * rk
+    rows_m = sim.sweep_variant(r152, "M")
+    hard(all(r["meets_constraint"] == 0.0 for r in rows_m), "H5a")
+    rk = ppw_rank(r152, "M", "B3136", 2)
+    hard(rk <= 1, f"H5b(rank={rk})")
+    s += 50.0 * rk
+    hard(sim.optimal_action(r152_25, "N") == A[("B3136", 1)], "H6a")
+    ppw25 = sim.sweep_variant(r152_25, "N")[sim.optimal_action(r152_25, "N")]["ppw"]
+    ppw0 = sim.sweep_variant(r152, "N")[sim.optimal_action(r152, "N")]["ppw"]
+    hard(ppw25 > ppw0, "H6b")
+
+    def fps(v, size, n, st):
+        return sim.evaluate(v, size, n, st)["fps"]
+
+    ratio_mob = fps(mob, "B4096", 1, "N") / fps(mob, "B512", 1, "N")
+    ratio_r152 = fps(r152, "B4096", 1, "N") / fps(r152, "B512", 1, "N")
+    hard(2.4 <= ratio_mob <= 2.8, f"H7a({ratio_mob:.2f})")
+    hard(5.5 <= ratio_r152 <= 6.1, f"H7b({ratio_r152:.2f})")
+    f = fps(r152, "B4096", 1, "N")
+    hard(30.0 <= f <= 35.0, f"H8({f:.1f})")
+
+    # H9: exact violation set on the test split
+    test_variants = [
+        ModelVariant(ms[n], p)
+        for n in ("RegNetX_400MF", "InceptionV3", "ResNet152")
+        for p in dpusim.PRUNE_RATIOS
+    ]
+    expected_viol = {("ResNet152", 0.0, "M"), ("ResNet152", 0.25, "M")}
+    viol = set()
+    for v in test_variants:
+        for st in ("C", "M"):
+            rows = sim.sweep_variant(v, st)
+            if not any(r["meets_constraint"] == 1.0 for r in rows):
+                viol.add((v.base.name, v.prune, st))
+    hard(viol == expected_viol, f"H9({sorted(viol)})")
+
+    # soft: Fig 5 static baselines
+    for st, target in (("C", 0.47), ("M", 0.35)):
+        vals = []
+        for v in test_variants:
+            rows = sim.sweep_variant(v, st)
+            opt = rows[sim.optimal_action(v, st)]["ppw"]
+            mf = rows[sim.max_fps_action(v, st)]["ppw"]
+            vals.append(mf / opt)
+        avg = sum(vals) / len(vals)
+        s += 80.0 * abs(avg - target)
+        bad.append(f"S1[{st}]={avg:.3f}")
+    return s, bad
+
+
+def _starting_points() -> List[Dict[str, float]]:
+    """Candidate seeds: defaults, the last committed fit, and a
+    hand-analysed power-structure point (DESIGN.md §7)."""
+    pts = [dict(DEFAULTS)]
+    try:
+        prev = dict(DEFAULTS)
+        prev.update(dpusim.load_calibration())
+        pts.append(prev)
+    except FileNotFoundError:
+        pass
+    hand = dict(pts[-1])
+    hand.update(
+        {
+            "p_pl_static": 2.4,
+            "p_idle0": 0.2,
+            "p_idle1": 0.00107,
+            "e_mac_j_per_gmac": 0.010,
+        }
+    )
+    pts.append(hand)
+    return pts
+
+
+def fit(iters: int = 4000, seed: int = 7) -> Dict[str, float]:
+    rng = random.Random(seed)
+    best, best_s = None, float("inf")
+    for pt in _starting_points():
+        s, bad = score(pt)
+        print(f"seed score={s:.2f} {bad}")
+        if s < best_s:
+            best, best_s = dict(pt), s
+    cur, cur_s = dict(best), best_s
+    for i in range(iters):
+        cand = dict(cur)
+        # perturb 1-3 searchable params
+        for k in rng.sample(list(SEARCH), rng.randint(1, 3)):
+            lo, hi = SEARCH[k]
+            if rng.random() < 0.3:
+                cand[k] = rng.uniform(lo, hi)
+            else:
+                span = (hi - lo) * 0.15
+                cand[k] = min(hi, max(lo, cand[k] + rng.uniform(-span, span)))
+        s, bad = score(cand)
+        if s <= cur_s:
+            cur, cur_s = cand, s
+        if s < best_s:
+            best, best_s = dict(cand), s
+            print(f"iter {i}: score={s:.2f} {bad}")
+        if best_s < 1.0 and i > 200:
+            break
+        # occasional restart from best
+        if i % 500 == 499:
+            cur, cur_s = dict(best), best_s
+    print(f"final score={best_s:.2f}")
+    return best
+
+
+def write_calibration(cal: Dict[str, float]):
+    path = os.path.join(DATA, "calibration.csv")
+    with open(path, "w") as f:
+        f.write("# Fitted dpusim constants — see python/compile/calibrate.py\n")
+        f.write("key,value\n")
+        for k in sorted(cal):
+            f.write(f"{k},{cal[k]!r}\n")
+    print(f"wrote {path}")
+
+
+def write_golden(cal: Dict[str, float]):
+    """Parity vectors: all 26 actions x 5 variants x 3 states."""
+    sim = DpuSim(cal)
+    ms = _variants()
+    sample = [
+        ModelVariant(ms["MobileNetV2"], 0.0),
+        ModelVariant(ms["ResNet152"], 0.0),
+        ModelVariant(ms["ResNet152"], 0.25),
+        ModelVariant(ms["InceptionV3"], 0.0),
+        ModelVariant(ms["YOLOv5s"], 0.50),
+    ]
+    path = os.path.join(DATA, "golden_parity.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(
+            ["model", "prune", "state", "action_id", "latency_ms", "fps", "p_fpga", "p_arm", "ppw"]
+        )
+        for v in sample:
+            for st in dpusim.WORKLOAD_STATES:
+                for aid, (size, inst) in enumerate(load_action_space()):
+                    m = sim.evaluate(v, size, inst, st)
+                    w.writerow(
+                        [
+                            v.base.name,
+                            v.prune,
+                            st,
+                            aid,
+                            repr(m["latency_ms"]),
+                            repr(m["fps"]),
+                            repr(m["p_fpga"]),
+                            repr(m["p_arm"]),
+                            repr(m["ppw"]),
+                        ]
+                    )
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    iters = int(sys.argv[1]) if len(sys.argv) > 1 else 4000
+    cal = fit(iters)
+    s, bad = score(cal)
+    print("residual:", s, bad)
+    write_calibration(cal)
+    write_golden(cal)

@@ -1,0 +1,62 @@
+"""Generate the rust<->python parity vectors.
+
+``python -m compile.golden`` writes:
+  data/golden_parity.csv  — dpusim metrics over a sample grid (also written
+                            by calibrate.py; regenerated here standalone)
+  data/golden_reward.csv  — an Algorithm-1 reward trace: a deterministic
+                            sequence of outcomes and the reward after each,
+                            exercising context creation, blending, bounding
+                            and the violation path.
+
+Both test suites replay these files against their own implementation.
+"""
+
+from __future__ import annotations
+
+import os
+
+from . import dpusim
+from .calibrate import write_golden
+from .reward import RewardCalculator
+
+DATA = dpusim.DATA_DIR
+
+
+def write_golden_reward() -> None:
+    rc = RewardCalculator()
+    # deterministic outcome sequence covering: fresh context, repeat
+    # context, different contexts, violations, outliers
+    seq = [
+        # (fps, power, cpu, mem_gbs, gmac, data_mb)
+        (60.0, 6.0, 5.0, 0.1, 4.0, 40.0),
+        (90.0, 6.0, 5.0, 0.1, 4.0, 40.0),
+        (40.0, 6.0, 5.0, 0.1, 4.0, 40.0),
+        (10.0, 3.0, 5.0, 0.1, 4.0, 40.0),  # violation
+        (300.0, 8.0, 95.0, 0.3, 0.3, 5.74),
+        (280.0, 7.5, 95.0, 0.3, 0.3, 5.74),
+        (33.0, 9.0, 60.0, 8.0, 11.54, 76.52),
+        (1e5, 0.5, 60.0, 8.0, 11.54, 76.52),  # outlier, must squash
+        (31.0, 12.0, 60.0, 8.0, 11.54, 76.52),
+        (45.0, 5.0, 5.0, 0.1, 1.57, 24.33),
+        (29.999, 5.0, 5.0, 0.1, 1.57, 24.33),  # just below constraint
+        (30.0, 5.0, 5.0, 0.1, 1.57, 24.33),  # exactly at constraint
+    ]
+    path = os.path.join(DATA, "golden_reward.csv")
+    with open(path, "w") as f:
+        f.write("fps,power,cpu,mem_gbs,gmac,data_mb,reward\n")
+        for fps, power, cpu, mem, gmac, data in seq:
+            r = rc.calculate(
+                measured_fps=fps,
+                fpga_power=power,
+                cpu_util=cpu,
+                mem_util_gbs=mem,
+                gmac=gmac,
+                model_data_mb=data,
+            )
+            f.write(f"{fps!r},{power!r},{cpu!r},{mem!r},{gmac!r},{data!r},{r!r}\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    write_golden_reward()
+    write_golden(dpusim.load_calibration())

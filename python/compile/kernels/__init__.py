@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the DPUConfig policy network.
+
+Everything here runs at build time only (interpret=True — the CPU PJRT
+client cannot execute Mosaic custom-calls) and lowers into the same HLO
+module as the L2 jax graph, so the rust runtime executes the fused kernels
+without ever touching python.
+"""
+
+from .mlp import fused_linear, actor_critic_forward  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,148 @@
+"""Fused linear (matmul + bias + activation) Pallas kernels.
+
+Hardware adaptation (DESIGN.md §8): the paper's accelerator is a systolic
+MAC array (DPUCZDX8G) fed from on-chip BRAM. The TPU analogue is the MXU
+fed from VMEM, so we express the DPU's PP x ICP x OCP work decomposition as
+BlockSpec tiling:
+
+  batch tile  (block_m)  <->  pixel parallelism (PP)
+  in-feature  (full K)   <->  input channel parallelism (ICP) — K fits VMEM
+  out-feature (block_n)  <->  output channel parallelism (OCP)
+
+Weights stream HBM->VMEM once per output tile (the DPU's weight-buffer
+loads, LDWB in Table II); bias-add and the activation are fused into the
+epilogue exactly like the DPU's fused post-conv ops.
+
+All kernels run with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles. The policy net dims (22/128/26) are padded up to these.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+_ACTIVATIONS = {
+    "linear": lambda x: x,
+    "tanh": jnp.tanh,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (block_m, block_n) output tile: x_tile @ w_tile + b, activated.
+
+    The full K dimension is resident in VMEM (K <= a few hundred for the
+    policy net), so each grid step is a single MXU pass plus a fused
+    epilogue — one read of x, one of w, one write of o.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    o_ref[...] = _ACTIVATIONS[activation](acc)
+
+
+def _pad_to(x: jax.Array, size: int, axis: int) -> jax.Array:
+    pad = -x.shape[axis] % size
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "interpret")
+)
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "linear",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """activation(x @ w + b) as a single fused Pallas kernel.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 -> (M, N) f32.
+    Arbitrary M/K/N are supported by zero-padding to the tile grid; the
+    padding is sliced off the result (zero rows/cols cannot perturb the
+    valid region of a matmul, and the epilogue is elementwise).
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError("fused_linear expects x:(M,K) w:(K,N) b:(N,)")
+    if x.shape[1] != w.shape[0] or w.shape[1] != b.shape[0]:
+        raise ValueError(
+            f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}"
+        )
+    m, k = x.shape
+    n = w.shape[1]
+    # Adapt the batch tile to the actual batch: padding a batch-1 policy
+    # inference to a 128-row MXU tile costs 128x redundant FLOPs on the
+    # CPU interpret path (EXPERIMENTS.md §Perf L1). On a real MXU the
+    # sublane minimum is 8, so round up to 8, capped at the MXU-shaped
+    # default.
+    block_m = min(block_m, -(-m // 8) * 8)
+    xp = _pad_to(x.astype(jnp.float32), block_m, 0)
+    wp = _pad_to(w.astype(jnp.float32), block_n, 1)
+    bp = _pad_to(b.astype(jnp.float32), block_n, 0)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    grid = (mp // block_m, np_ // block_n)
+    out = pl.pallas_call(
+        functools.partial(_fused_linear_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _normalize_kernel(x_ref, mu_ref, sigma_ref, o_ref):
+    """Observation whitening: (x - mu) / sigma, fused elementwise."""
+    o_ref[...] = (x_ref[...] - mu_ref[...][None, :]) / sigma_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def normalize_obs(
+    x: jax.Array, mu: jax.Array, sigma: jax.Array, interpret: bool = True
+) -> jax.Array:
+    """(x - mu) / sigma over a (M, F) batch as a Pallas kernel."""
+    m, f = x.shape
+    return pl.pallas_call(
+        _normalize_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, f), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), mu.astype(jnp.float32), sigma.astype(jnp.float32))
+
+
+def actor_critic_forward(params: dict, obs: jax.Array, interpret: bool = True):
+    """Policy-network forward pass built entirely from fused kernels.
+
+    obs (M, F) -> whiten -> tanh trunk (2 layers) -> (logits (M, A),
+    value (M, 1)). `params` layout matches model.init_params.
+    """
+    h = normalize_obs(obs, params["obs_mu"], params["obs_sigma"], interpret)
+    h = fused_linear(h, params["w1"], params["b1"], "tanh", interpret=interpret)
+    h = fused_linear(h, params["w2"], params["b2"], "tanh", interpret=interpret)
+    logits = fused_linear(h, params["w_pi"], params["b_pi"], "linear", interpret=interpret)
+    value = fused_linear(h, params["w_v"], params["b_v"], "linear", interpret=interpret)
+    return logits, value

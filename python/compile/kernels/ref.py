@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in mlp.py has a reference here with identical semantics; the
+pytest suite asserts allclose across a hypothesis-driven sweep of shapes
+and dtypes (python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = {
+    "linear": lambda x: x,
+    "tanh": jnp.tanh,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+
+def fused_linear(x, w, b, activation: str = "linear"):
+    """Reference for kernels.mlp.fused_linear."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    out = out + b.astype(jnp.float32)[None, :]
+    return _ACTIVATIONS[activation](out)
+
+
+def normalize_obs(x, mu, sigma):
+    """Reference for kernels.mlp.normalize_obs."""
+    return (x.astype(jnp.float32) - mu[None, :]) / sigma[None, :]
+
+
+def actor_critic_forward(params: dict, obs: jax.Array):
+    """Reference for kernels.mlp.actor_critic_forward."""
+    h = normalize_obs(obs, params["obs_mu"], params["obs_sigma"])
+    h = fused_linear(h, params["w1"], params["b1"], "tanh")
+    h = fused_linear(h, params["w2"], params["b2"], "tanh")
+    logits = fused_linear(h, params["w_pi"], params["b_pi"], "linear")
+    value = fused_linear(h, params["w_v"], params["b_v"], "linear")
+    return logits, value

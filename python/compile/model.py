@@ -1,0 +1,83 @@
+"""Layer-2 model: the DPUConfig actor-critic policy network in JAX.
+
+The network is deliberately small (it must run in ~20 ms on an Arm A53 in
+the paper — Fig 6): obs(22) -> whiten -> 128 tanh -> 128 tanh -> {26 logits,
+1 value}. The forward pass is built from the L1 Pallas kernels so the AOT
+artifact executed by rust contains the fused kernels themselves.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import mlp as kernels
+from .kernels import ref as kref
+
+OBS_DIM = 22  # data/feature_schema.csv
+NUM_ACTIONS = 26  # data/action_space.csv
+HIDDEN = 128
+
+
+def init_params(key: jax.Array, obs_mu=None, obs_sigma=None) -> Dict[str, jax.Array]:
+    """Scaled-normal init, matching PPO conventions: sqrt(2) gain on the
+    trunk, 0.01 on the policy head, 1.0 on the value head."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def dense(k, fan_in, fan_out, gain):
+        w = jax.random.normal(k, (fan_in, fan_out), jnp.float32)
+        w = w * (gain / math.sqrt(fan_in))
+        return w, jnp.zeros((fan_out,), jnp.float32)
+
+    w1, b1 = dense(k1, OBS_DIM, HIDDEN, math.sqrt(2.0))
+    w2, b2 = dense(k2, HIDDEN, HIDDEN, math.sqrt(2.0))
+    w_pi, b_pi = dense(k3, HIDDEN, NUM_ACTIONS, 0.01)
+    w_v, b_v = dense(k4, HIDDEN, 1, 1.0)
+    if obs_mu is None:
+        obs_mu = jnp.zeros((OBS_DIM,), jnp.float32)
+    if obs_sigma is None:
+        obs_sigma = jnp.ones((OBS_DIM,), jnp.float32)
+    return {
+        "obs_mu": jnp.asarray(obs_mu, jnp.float32),
+        "obs_sigma": jnp.asarray(obs_sigma, jnp.float32),
+        "w1": w1, "b1": b1,
+        "w2": w2, "b2": b2,
+        "w_pi": w_pi, "b_pi": b_pi,
+        "w_v": w_v, "b_v": b_v,
+    }
+
+
+def apply(params: Dict[str, jax.Array], obs: jax.Array, use_pallas: bool = True):
+    """Forward pass: (B, 22) -> (logits (B, 26), value (B, 1)).
+
+    use_pallas=True routes through the L1 kernels (what gets AOT-exported);
+    False routes through the pure-jnp reference (used for differentiable
+    training — pallas interpret-mode grads are slow, and the two paths are
+    pinned equal by python/tests/test_kernel.py).
+    """
+    obs = jnp.asarray(obs, jnp.float32)
+    squeeze = obs.ndim == 1
+    if squeeze:
+        obs = obs[None, :]
+    fwd = kernels.actor_critic_forward if use_pallas else kref.actor_critic_forward
+    logits, value = fwd(params, obs)
+    if squeeze:
+        return logits[0], value[0]
+    return logits, value
+
+
+def normalization_from_dataset(obs_batch: np.ndarray):
+    """Whitening statistics folded into the exported graph (and recorded in
+    artifacts/policy_meta.csv for the rust featurizer's reference)."""
+    mu = obs_batch.mean(axis=0)
+    sigma = obs_batch.std(axis=0)
+    sigma = np.where(sigma < 1e-6, 1.0, sigma)
+    return mu.astype(np.float32), sigma.astype(np.float32)
+
+
+def num_parameters(params: Dict[str, jax.Array]) -> int:
+    return sum(int(np.prod(v.shape)) for v in params.values())

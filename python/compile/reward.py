@@ -1,0 +1,96 @@
+"""Algorithm 1: context-aware PPW reward with blended baselines.
+
+If the FPS constraint is violated the reward is -1. Otherwise the reward is
+the relative improvement of the measured PPW over a blended baseline:
+(1-lambda)*b_local + lambda*b_global, where b_local is the running mean PPW
+of the current context bucket (workload-dependent state + model features)
+and b_global the running mean across all contexts. The result is scaled by
+alpha / max(1, |baseline|) and squashed into [-1, 1] (tanh) to bound
+outliers (paper §IV-A, refs [21]-[23]).
+
+The rust coordinator carries a semantics-identical implementation
+(rust/src/rl/reward.rs) used for online bookkeeping; both are pinned by
+data/golden_reward.csv.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+FPS_CONSTRAINT_DEFAULT = 30.0
+LAMBDA = 0.3  # blend factor between local and global baselines
+ALPHA = 1.0  # reward scale
+
+
+def context_key(
+    cpu_util: float, mem_util_gbs: float, gmac: float, model_data_mb: float
+) -> Tuple[int, int, int, int]:
+    """Bucket the workload-dependent state (Algorithm 1 line 10).
+
+    CPU utilization in 25%-wide buckets, memory traffic in 2 GB/s buckets,
+    GMACs in {small,medium,large}-ish log2 buckets, model data in log2
+    buckets — coarse enough that each bucket accumulates samples, fine
+    enough to separate the N/C/M states and the model classes.
+    """
+    cpu_b = min(3, int(cpu_util / 25.0))
+    mem_b = min(7, int(mem_util_gbs / 2.0))
+    gmac_b = min(7, max(0, int(math.log2(max(gmac, 0.125)) + 3.0)))
+    data_b = min(7, max(0, int(math.log2(max(model_data_mb, 1.0)))))
+    return (cpu_b, mem_b, gmac_b, data_b)
+
+
+@dataclass
+class RunningMean:
+    count: int = 0
+    mean: float = 0.0
+
+    def update(self, x: float) -> None:
+        self.count += 1
+        self.mean += (x - self.mean) / self.count
+
+
+@dataclass
+class RewardCalculator:
+    """Stateful Algorithm 1. Update order matters and is part of the
+    rust/python parity contract: reward is computed against the baselines
+    *before* they absorb the new sample."""
+
+    lam: float = LAMBDA
+    alpha: float = ALPHA
+    ctx_mean: Dict[Tuple[int, int, int, int], RunningMean] = field(default_factory=dict)
+    global_mean: RunningMean = field(default_factory=RunningMean)
+
+    def calculate(
+        self,
+        measured_fps: float,
+        fpga_power: float,
+        cpu_util: float,
+        mem_util_gbs: float,
+        gmac: float,
+        model_data_mb: float,
+        fps_constraint: float = FPS_CONSTRAINT_DEFAULT,
+    ) -> float:
+        ppw = measured_fps / fpga_power
+        if measured_fps < fps_constraint:
+            # constraint violation: flat penalty, baselines not updated
+            # (a violating sample is not evidence about achievable PPW)
+            return -1.0
+
+        key = context_key(cpu_util, mem_util_gbs, gmac, model_data_mb)
+        local = self.ctx_mean.get(key)
+        b_local = local.mean if local is not None and local.count > 0 else ppw
+        b_global = (
+            self.global_mean.mean if self.global_mean.count > 0 else ppw
+        )
+        baseline = (1.0 - self.lam) * b_local + self.lam * b_global
+        r = self.alpha * (ppw - baseline) / max(1.0, abs(baseline))
+        r = math.tanh(r)  # bounded reward (refs [21]-[23])
+
+        if local is None:
+            local = RunningMean()
+            self.ctx_mean[key] = local
+        local.update(ppw)
+        self.global_mean.update(ppw)
+        return r

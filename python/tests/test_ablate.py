@@ -1,0 +1,37 @@
+"""Smoke tests for the reward-design ablation harness (E3)."""
+
+import math
+
+from compile.ablate_reward import AblatedReward, VARIANTS, run
+
+
+def test_variants_cover_design_axes():
+    assert set(VARIANTS) >= {
+        "paper (blended, tanh)",
+        "absolute PPW (no baseline)",
+    }
+
+
+def test_ablated_reward_paths():
+    # contextual path
+    rc = AblatedReward()
+    assert rc.calculate(60.0, 6.0, 5.0, 0.1, 4.0, 40.0) == 0.0
+    assert rc.calculate(10.0, 6.0, 5.0, 0.1, 4.0, 40.0) == -1.0
+    # absolute path is monotone in PPW and bounded
+    rc = AblatedReward(contextual=False)
+    lo = rc.calculate(31.0, 10.0, 5.0, 0.1, 4.0, 40.0)
+    hi = rc.calculate(500.0, 5.0, 5.0, 0.1, 4.0, 40.0)
+    assert lo < hi <= 1.0
+    # no-squash path clips rather than tanh
+    rc = AblatedReward(squash=False)
+    rc.calculate(60.0, 6.0, 5.0, 0.1, 4.0, 40.0)
+    r = rc.calculate(6000.0, 6.0, 5.0, 0.1, 4.0, 40.0)
+    assert math.isfinite(r) and r <= 3.0
+
+
+def test_run_trains_every_variant_briefly():
+    rows = run(epochs=2, seed=1)
+    assert len(rows) == len(VARIANTS)
+    for _, m, avg in rows:
+        assert 0.0 < avg <= 1.0
+        assert set(m) == {"N", "C", "M"}

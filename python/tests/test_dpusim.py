@@ -1,0 +1,189 @@
+"""dpusim substrate tests: Table III anchors, paper-fact calibration
+targets (Figs 1-3, §III, §V-B), pruning laws, and the golden parity file.
+"""
+
+import csv
+import math
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dpusim
+from compile.dpusim import (
+    DpuSim,
+    ModelVariant,
+    load_action_space,
+    load_models,
+    load_variants,
+    kmeans_split,
+)
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+SIM = DpuSim()
+ACTIONS = load_action_space()
+MODELS = {m.name: m for m in load_models()}
+A = {(s, n): i for i, (s, n) in enumerate(ACTIONS)}
+
+
+def variant(name, prune=0.0):
+    return ModelVariant(MODELS[name], prune)
+
+
+class TestDataTables:
+    def test_action_space_is_26(self):
+        assert len(ACTIONS) == 26
+
+    def test_models_are_11(self):
+        assert len(MODELS) == 11
+        assert sum(m.split == "test" for m in MODELS.values()) == 3
+
+    def test_variants_are_33(self):
+        assert len(load_variants()) == 33
+
+    def test_arithmetic_intensity_matches_table_iii(self):
+        # AI = GMAC*1e3/DataIO must reproduce the paper column
+        paper_ai = {"ResNet18": 149.83, "MobileNetV2": 52.49, "ResNet152": 150.81}
+        for name, ai in paper_ai.items():
+            m = MODELS[name]
+            assert m.gmac * 1e3 / m.data_io_mb == pytest.approx(ai, rel=0.005)
+
+
+class TestAnchors:
+    def test_b4096_latency_anchor(self):
+        for m in MODELS.values():
+            r = SIM.evaluate(ModelVariant(m, 0.0), "B4096", 1, "N")
+            assert r["latency_ms"] == pytest.approx(m.latency_b4096_ms, rel=1e-9)
+
+    def test_speedup_ratios(self):
+        def ratio(name):
+            f1 = SIM.evaluate(variant(name), "B4096", 1, "N")["fps"]
+            f2 = SIM.evaluate(variant(name), "B512", 1, "N")["fps"]
+            return f1 / f2
+
+        assert 2.4 <= ratio("MobileNetV2") <= 2.8  # paper: 2.6x
+        assert 5.5 <= ratio("ResNet152") <= 6.1  # paper: 5.8x
+
+    def test_resnet152_meets_30fps_at_b4096(self):
+        f = SIM.evaluate(variant("ResNet152"), "B4096", 1, "N")["fps"]
+        assert 30.0 <= f <= 35.0
+
+
+class TestPaperFacts:
+    def test_fig1_optima(self):
+        assert SIM.optimal_action(variant("ResNet152"), "N") == A[("B4096", 1)]
+        assert SIM.optimal_action(variant("MobileNetV2"), "N") == A[("B2304", 2)]
+
+    def test_fig2_mobilenet_shifts(self):
+        assert SIM.optimal_action(variant("MobileNetV2"), "C") == A[("B1600", 2)]
+        # under M: within top-2 (knife-edge tie, DESIGN.md §7)
+        rows = SIM.sweep_variant(variant("MobileNetV2"), "M")
+        ok = sorted(
+            (r for r in rows if r["meets_constraint"]),
+            key=lambda r: -r["ppw"],
+        )
+        top2 = {int(r["action_id"]) for r in ok[:2]}
+        assert A[("B1600", 2)] in top2
+
+    def test_fig2_resnet152_m_infeasible(self):
+        rows = SIM.sweep_variant(variant("ResNet152"), "M")
+        assert all(r["meets_constraint"] == 0.0 for r in rows)
+        best = SIM.optimal_action(variant("ResNet152"), "M")
+        top2 = sorted(rows, key=lambda r: -r["ppw"])[:2]
+        assert A[("B3136", 2)] in {int(r["action_id"]) for r in top2}
+        assert best in {int(r["action_id"]) for r in top2}
+
+    def test_fig3_pruning(self):
+        v25 = variant("ResNet152", 0.25)
+        assert SIM.optimal_action(v25, "N") == A[("B3136", 1)]
+        assert v25.accuracy == pytest.approx(66.64, abs=0.05)
+        v50 = variant("ResNet152", 0.50)
+        assert v50.accuracy < 60.0
+        opt25 = SIM.sweep_variant(v25, "N")[SIM.optimal_action(v25, "N")]["ppw"]
+        opt0 = SIM.sweep_variant(variant("ResNet152"), "N")[
+            SIM.optimal_action(variant("ResNet152"), "N")
+        ]["ppw"]
+        assert opt25 > opt0
+
+    def test_constraint_violation_set(self):
+        # §V-B: violations only ResNet152 under M (PR0 + PR25) -> 16/18
+        viol = set()
+        for v in load_variants():
+            if v.base.split != "test":
+                continue
+            for st_ in ("C", "M"):
+                rows = SIM.sweep_variant(v, st_)
+                if not any(r["meets_constraint"] for r in rows):
+                    viol.add((v.base.name, v.prune, st_))
+        assert viol == {("ResNet152", 0.0, "M"), ("ResNet152", 0.25, "M")}
+
+    def test_kmeans_split_matches_paper(self):
+        split = kmeans_split(load_models())
+        assert split["RegNetX_400MF"] != split["InceptionV3"] != split["ResNet152"]
+        assert split["MobileNetV2"] == "small"
+
+
+class TestPhysicalInvariants:
+    @given(
+        name=st.sampled_from(sorted(MODELS)),
+        prune=st.sampled_from([0.0, 0.25, 0.50]),
+        aid=st.integers(0, 25),
+        state=st.sampled_from(["N", "C", "M"]),
+    )
+    def test_metrics_are_physical(self, name, prune, aid, state):
+        size, inst = ACTIONS[aid]
+        r = SIM.evaluate(ModelVariant(MODELS[name], prune), size, inst, state)
+        assert r["fps"] > 0
+        assert 0 < r["p_fpga"] < 40
+        assert 0 < r["p_arm"] < 10
+        assert r["latency_ms"] > 0
+        assert r["ppw"] == pytest.approx(r["fps"] / r["p_fpga"])
+        assert 0 <= r["mem_frac"] <= 1
+
+    @given(name=st.sampled_from(sorted(MODELS)), aid=st.integers(0, 25))
+    def test_interference_never_helps(self, name, aid):
+        size, inst = ACTIONS[aid]
+        v = variant(name)
+        fn = SIM.evaluate(v, size, inst, "N")["fps"]
+        fc = SIM.evaluate(v, size, inst, "C")["fps"]
+        fm = SIM.evaluate(v, size, inst, "M")["fps"]
+        assert fc <= fn + 1e-9
+        assert fm <= fn + 1e-9
+
+    @given(name=st.sampled_from(sorted(MODELS)), aid=st.integers(0, 25))
+    def test_pruning_never_slows(self, name, aid):
+        size, inst = ACTIONS[aid]
+        f0 = SIM.evaluate(variant(name, 0.0), size, inst, "N")["fps"]
+        f25 = SIM.evaluate(variant(name, 0.25), size, inst, "N")["fps"]
+        f50 = SIM.evaluate(variant(name, 0.50), size, inst, "N")["fps"]
+        assert f25 >= f0 - 1e-9
+        assert f50 >= f25 - 1e-9
+
+    @given(name=st.sampled_from(sorted(MODELS)), state=st.sampled_from(["N", "C", "M"]))
+    def test_observation_is_22_features(self, name, state):
+        o = SIM.observe(variant(name), state)
+        assert len(o) == 22
+        assert o[21] == dpusim.FPS_CONSTRAINT
+        assert all(math.isfinite(x) for x in o)
+
+
+class TestSweep:
+    def test_generates_2574_rows(self):
+        rows = dpusim.generate_measurements()
+        assert len(rows) == 2574
+
+    def test_golden_parity_file_is_current(self):
+        # the committed golden file must match the committed calibration —
+        # guards against editing one without regenerating the other
+        path = os.path.join(dpusim.DATA_DIR, "golden_parity.csv")
+        with open(path) as f:
+            rows = list(csv.DictReader(f))
+        assert len(rows) >= 300
+        for row in rows[:: max(1, len(rows) // 50)]:
+            v = ModelVariant(MODELS[row["model"]], float(row["prune"]))
+            size, inst = ACTIONS[int(row["action_id"])]
+            m = SIM.evaluate(v, size, inst, row["state"])
+            assert m["fps"] == pytest.approx(float(row["fps"]), rel=1e-12)
+            assert m["p_fpga"] == pytest.approx(float(row["p_fpga"]), rel=1e-12)

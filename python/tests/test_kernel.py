@@ -1,0 +1,111 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal of the build (system contract: the AOT artifact
+contains these kernels)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import mlp, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+class TestFusedLinear:
+    @given(
+        m=st.integers(1, 40),
+        k=st.integers(1, 70),
+        n=st.integers(1, 40),
+        act=st.sampled_from(["linear", "tanh", "relu"]),
+    )
+    def test_matches_ref_over_shapes(self, m, k, n, act):
+        x = rand(m * 7 + 1, (m, k))
+        w = rand(k * 13 + 2, (k, n))
+        b = rand(n * 17 + 3, (n,))
+        out = mlp.fused_linear(x, w, b, act)
+        exp = ref.fused_linear(x, w, b, act)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5, atol=1e-5)
+        assert out.shape == (m, n)
+
+    @given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16]))
+    def test_dtype_inputs_upcast(self, dtype):
+        x = rand(1, (8, 16)).astype(dtype)
+        w = rand(2, (16, 8)).astype(dtype)
+        b = rand(3, (8,)).astype(dtype)
+        out = mlp.fused_linear(x, w, b, "tanh")
+        exp = ref.fused_linear(x, w, b, "tanh")
+        assert out.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-2, atol=2e-2)
+
+    @given(bm=st.sampled_from([8, 32, 128]), bn=st.sampled_from([8, 32, 128]))
+    def test_block_shape_invariance(self, bm, bn):
+        # the BlockSpec tiling must never change the numbers
+        x, w, b = rand(4, (19, 23)), rand(5, (23, 31)), rand(6, (31,))
+        base = mlp.fused_linear(x, w, b, "relu")
+        tiled = mlp.fused_linear(x, w, b, "relu", block_m=bm, block_n=bn)
+        np.testing.assert_allclose(
+            np.asarray(base), np.asarray(tiled), rtol=1e-5, atol=1e-5
+        )
+
+    def test_exact_tile_boundary(self):
+        x, w, b = rand(7, (128, 128)), rand(8, (128, 128)), rand(9, (128,))
+        out = mlp.fused_linear(x, w, b, "linear")
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.fused_linear(x, w, b)), rtol=1e-4, atol=1e-4
+        )
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            mlp.fused_linear(rand(1, (4, 5)), rand(2, (6, 7)), rand(3, (7,)))
+        with pytest.raises(ValueError):
+            mlp.fused_linear(rand(1, (4, 5)), rand(2, (5, 7)), rand(3, (6,)))
+        with pytest.raises(ValueError):
+            mlp.fused_linear(rand(1, (4, 5)), rand(2, (5, 7)), rand(3, (7,)), "gelu")
+
+
+class TestNormalize:
+    @given(m=st.integers(1, 33))
+    def test_matches_ref(self, m):
+        x = rand(m, (m, 22), scale=10.0)
+        mu = rand(m + 1, (22,), scale=5.0)
+        sigma = jnp.abs(rand(m + 2, (22,))) + 0.5
+        out = mlp.normalize_obs(x, mu, sigma)
+        exp = ref.normalize_obs(x, mu, sigma)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-6)
+
+
+class TestActorCritic:
+    @given(batch=st.integers(1, 16), seed=st.integers(0, 5))
+    def test_pallas_path_equals_ref_path(self, batch, seed):
+        params = model.init_params(jax.random.PRNGKey(seed))
+        obs = rand(seed + 100, (batch, model.OBS_DIM), scale=3.0)
+        lp, vp = mlp.actor_critic_forward(params, obs)
+        lr, vr = ref.actor_critic_forward(params, obs)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(vp), np.asarray(vr), rtol=1e-5, atol=1e-5)
+        assert lp.shape == (batch, model.NUM_ACTIONS)
+        assert vp.shape == (batch, 1)
+
+    def test_outputs_finite_for_extreme_obs(self):
+        params = model.init_params(jax.random.PRNGKey(0))
+        obs = jnp.full((2, model.OBS_DIM), 1e6, jnp.float32)
+        logits, value = mlp.actor_critic_forward(params, obs)
+        assert np.isfinite(np.asarray(logits)).all()
+        assert np.isfinite(np.asarray(value)).all()
+
+    def test_model_apply_squeezes_single_obs(self):
+        params = model.init_params(jax.random.PRNGKey(1))
+        obs = rand(2, (model.OBS_DIM,))
+        logits, value = model.apply(params, obs)
+        assert logits.shape == (model.NUM_ACTIONS,)
+        assert value.shape == (1,)

@@ -1,0 +1,86 @@
+"""PPO training tests: environment tables, learning signal, and the
+agent-vs-baseline evaluation harness (short runs — the full 2000-epoch
+training happens in `make artifacts`)."""
+
+import numpy as np
+import pytest
+
+from compile import dpusim, model, ppo
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return ppo.build_tables()
+
+
+class TestEnvTables:
+    def test_contexts_cover_all_variant_state_pairs(self, tables):
+        assert len(tables.contexts) == 33 * 3
+        assert tables.obs.shape == (99, 22)
+        assert tables.fps.shape == (99, 26)
+
+    def test_train_test_split_counts(self, tables):
+        # 24 train / 9 test contexts per state
+        assert int(tables.is_train.sum()) == 24 * 3
+        assert int((~tables.is_train).sum()) == 9 * 3
+
+    def test_observations_distinguish_states(self, tables):
+        # same variant under N vs C must differ in the CPU features
+        by = {
+            st: i
+            for i, (v, st) in enumerate(tables.contexts)
+            if v.base.name == "ResNet18" and v.prune == 0.0
+        }
+        assert tables.obs[by["C"], 0] > tables.obs[by["N"], 0] + 10
+
+
+class TestTraining:
+    def test_short_training_beats_random(self):
+        res = ppo.train(epochs=150, batch_per_context=4, seed=3, verbose=False)
+        m = ppo.evaluate(res, states=("C",))["C"]
+        # random policy scores ~0.5 normalized ppw; 150 epochs must clear it
+        assert m["agent_norm_ppw"] > 0.75
+
+    def test_training_is_deterministic_given_seed(self):
+        r1 = ppo.train(epochs=5, seed=11, verbose=False)
+        r2 = ppo.train(epochs=5, seed=11, verbose=False)
+        for k in r1.params:
+            np.testing.assert_array_equal(
+                np.asarray(r1.params[k]), np.asarray(r2.params[k]), err_msg=k
+            )
+
+    def test_history_records_all_epochs(self):
+        res = ppo.train(epochs=7, seed=0, verbose=False)
+        assert len(res.history) == 7
+        assert {"mean_reward", "pi_loss", "v_loss", "entropy"} <= set(res.history[0])
+
+
+class TestEvaluation:
+    def test_oracle_normalization_bounds(self, tables):
+        # no policy can exceed 1.0 normalized PPW against the oracle
+        res = ppo.train(epochs=30, seed=1, verbose=False)
+        for st, m in ppo.evaluate(res, states=("N", "C", "M")).items():
+            assert 0.0 < m["agent_norm_ppw"] <= 1.0 + 1e-9, st
+            assert m["cases"] == 9
+
+    def test_maxfps_and_minpower_match_paper_direction(self):
+        res = ppo.train(epochs=1, seed=0, verbose=False)
+        m = ppo.evaluate(res, states=("C", "M"))
+        # paper Fig 5: static baselines far from optimal
+        assert m["C"]["maxfps_norm_ppw"] < 0.95
+        assert m["C"]["minpower_norm_ppw"] < 0.75
+        assert m["M"]["minpower_norm_ppw"] < 0.75
+
+
+class TestAdam:
+    def test_adam_reduces_quadratic(self):
+        import jax
+        import jax.numpy as jnp
+
+        params = {"x": jnp.array([5.0, -3.0])}
+        state = ppo.adam_init(params)
+        loss = lambda p: jnp.sum(p["x"] ** 2)
+        for _ in range(500):
+            g = jax.grad(loss)(params)
+            params, state = ppo.adam_update(params, g, state, lr=0.05)
+        assert float(loss(params)) < 1e-3

@@ -1,0 +1,95 @@
+"""Algorithm-1 reward tests: constraint penalty, context blending,
+bounding, update ordering, and the golden trace."""
+
+import csv
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dpusim
+from compile.reward import RewardCalculator, context_key
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+def calc(**kw):
+    defaults = dict(
+        measured_fps=60.0,
+        fpga_power=6.0,
+        cpu_util=50.0,
+        mem_util_gbs=3.0,
+        gmac=4.0,
+        model_data_mb=40.0,
+    )
+    defaults.update(kw)
+    return defaults
+
+
+class TestAlgorithm1:
+    def test_violation_is_minus_one(self):
+        rc = RewardCalculator()
+        assert rc.calculate(**calc(measured_fps=29.9)) == -1.0
+
+    def test_violation_does_not_update_baselines(self):
+        rc = RewardCalculator()
+        rc.calculate(**calc(measured_fps=10.0))
+        assert rc.global_mean.count == 0
+        assert len(rc.ctx_mean) == 0
+
+    def test_first_sample_scores_zero(self):
+        rc = RewardCalculator()
+        assert rc.calculate(**calc()) == 0.0
+
+    def test_improvement_positive_regression_negative(self):
+        rc = RewardCalculator()
+        rc.calculate(**calc())  # ppw 10 baseline
+        assert rc.calculate(**calc(measured_fps=90.0)) > 0
+        assert rc.calculate(**calc(measured_fps=40.0)) < 0
+
+    @given(fps=st.floats(30.0, 1e6), power=st.floats(0.1, 50.0))
+    def test_rewards_always_bounded(self, fps, power):
+        rc = RewardCalculator()
+        rc.calculate(**calc())
+        r = rc.calculate(**calc(measured_fps=fps, fpga_power=power))
+        assert -1.0 <= r <= 1.0
+
+    def test_context_blending_uses_global_fallback(self):
+        # a fresh context leans on the global mean through lambda
+        rc = RewardCalculator()
+        for _ in range(5):
+            rc.calculate(**calc())  # global ppw ~10
+        # new context (different gmac bucket), much better ppw
+        r = rc.calculate(**calc(gmac=0.3, model_data_mb=5.7, measured_fps=120.0))
+        # b_local = own ppw (fresh), b_global = 10 -> baseline < ppw -> r > 0
+        assert r > 0.0
+
+    @given(
+        cpu=st.floats(0, 100),
+        mem=st.floats(0, 16),
+        gmac=st.floats(0.05, 13),
+        data=st.floats(1, 200),
+    )
+    def test_context_key_total_and_stable(self, cpu, mem, gmac, data):
+        k1 = context_key(cpu, mem, gmac, data)
+        k2 = context_key(cpu, mem, gmac, data)
+        assert k1 == k2
+        assert all(0 <= b <= 7 for b in k1)
+
+
+class TestGoldenTrace:
+    def test_replays_exactly(self):
+        path = os.path.join(dpusim.DATA_DIR, "golden_reward.csv")
+        rc = RewardCalculator()
+        with open(path) as f:
+            for row in csv.DictReader(f):
+                r = rc.calculate(
+                    measured_fps=float(row["fps"]),
+                    fpga_power=float(row["power"]),
+                    cpu_util=float(row["cpu"]),
+                    mem_util_gbs=float(row["mem_gbs"]),
+                    gmac=float(row["gmac"]),
+                    model_data_mb=float(row["data_mb"]),
+                )
+                assert r == pytest.approx(float(row["reward"]), abs=1e-12)

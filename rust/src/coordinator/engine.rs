@@ -1,0 +1,135 @@
+//! The decision engine: telemetry + model statics -> DPU configuration.
+//!
+//! Wraps either the AOT-compiled RL policy (the DPUConfig agent proper)
+//! or one of the static baselines, behind one interface so the serving
+//! loop and the evaluation harness are policy-agnostic.
+
+use crate::data::Action;
+use crate::dpusim::DpuSim;
+use crate::models::ModelVariant;
+use crate::rl::{Baseline, Featurizer};
+use crate::runtime::{PolicyOutput, PolicyRuntime};
+use crate::telemetry::Sample;
+use crate::workload::{WorkloadState, XorShift64};
+use anyhow::Result;
+
+/// Which policy drives the decisions.
+pub enum Selector {
+    /// The trained PPO agent, running via PJRT (the paper's DPUConfig).
+    Agent(PolicyRuntime),
+    /// A static baseline (Fig 5 comparisons).
+    Static(Baseline),
+}
+
+impl Selector {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Selector::Agent(_) => "dpuconfig",
+            Selector::Static(b) => b.name(),
+        }
+    }
+}
+
+/// One decision with its provenance.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub action_id: usize,
+    /// Policy value estimate (agent only).
+    pub value: Option<f32>,
+    /// The observation that produced the decision (agent only).
+    pub obs: Option<[f32; crate::rl::features::OBS_DIM]>,
+}
+
+/// The engine: featurizer + selector (+ rng for the Random baseline).
+pub struct DecisionEngine {
+    featurizer: Featurizer,
+    selector: Selector,
+    rng: XorShift64,
+}
+
+impl DecisionEngine {
+    pub fn new(selector: Selector, seed: u64) -> Self {
+        DecisionEngine {
+            featurizer: Featurizer::new(),
+            selector,
+            rng: XorShift64::new(seed),
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.selector.name()
+    }
+
+    /// Decide a configuration for `model` given the latest telemetry.
+    /// `sim`/`state` are only consulted by the oracle baselines (they have
+    /// privileged access by definition); the agent sees telemetry only.
+    pub fn decide(
+        &mut self,
+        sample: &Sample,
+        model: &ModelVariant,
+        sim: &DpuSim,
+        state: WorkloadState,
+    ) -> Result<Decision> {
+        match &self.selector {
+            Selector::Agent(rt) => {
+                let obs = self.featurizer.observe(sample, model);
+                let out: PolicyOutput = rt.infer(&obs)?;
+                Ok(Decision {
+                    action_id: out.argmax(),
+                    value: Some(out.value),
+                    obs: Some(obs),
+                })
+            }
+            Selector::Static(b) => {
+                let action_id = b.select(sim, model, state, Some(&mut self.rng))?;
+                Ok(Decision {
+                    action_id,
+                    value: None,
+                    obs: None,
+                })
+            }
+        }
+    }
+
+    /// Resolve an action id against the action table.
+    pub fn action<'a>(&self, sim: &'a DpuSim, id: usize) -> &'a Action {
+        &sim.actions()[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_models;
+    use crate::telemetry::Sample;
+
+    fn sample() -> Sample {
+        Sample {
+            t_us: 0,
+            cpu: [5.0; 4],
+            memr: [0.0; 5],
+            memw: [0.0; 5],
+            p_fpga: 2.2,
+            p_arm: 1.5,
+        }
+    }
+
+    #[test]
+    fn static_engine_matches_baseline() {
+        let sim = DpuSim::load().unwrap();
+        let m = load_models().unwrap().into_iter().next().unwrap();
+        let v = ModelVariant::new(m, 0.0);
+        let mut eng = DecisionEngine::new(Selector::Static(Baseline::MinPower), 1);
+        let d = eng
+            .decide(&sample(), &v, &sim, WorkloadState::None)
+            .unwrap();
+        assert_eq!(sim.actions()[d.action_id].notation(), "B512_1");
+        assert!(d.value.is_none());
+    }
+
+    #[test]
+    fn engine_name_reflects_policy() {
+        let eng = DecisionEngine::new(Selector::Static(Baseline::Optimal), 1);
+        assert_eq!(eng.policy_name(), "optimal");
+    }
+}

@@ -1,0 +1,14 @@
+//! The DPUConfig framework (paper Fig 4): decision engine, FPGA
+//! reconfiguration manager, simulated-time serving loop, and a threaded
+//! decision service with dynamic micro-batching.
+
+pub mod engine;
+pub mod placement;
+pub mod reconfig;
+pub mod server;
+pub mod service;
+
+pub use engine::{DecisionEngine, Selector};
+pub use reconfig::{Overhead, ReconfigManager};
+pub use server::{Arrival, Coordinator, Event, Report, Scenario, Totals};
+pub use service::{DecisionClient, DecisionService};

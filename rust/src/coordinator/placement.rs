@@ -1,0 +1,233 @@
+//! Multi-model placement: partition the PL fabric across concurrently
+//! arriving models (paper §II's concurrent-inference motivation; the
+//! heterogeneous multi-DPU setting of Du et al. [38]).
+//!
+//! The RL agent was trained for the single-tenant decision; we reuse its
+//! logits as per-model preference rankings and resolve contention
+//! greedily: models are placed in arrival order, each taking its
+//! highest-preference configuration that still fits the remaining fabric
+//! ([`crate::runtime::PolicyOutput::argmax_masked`] does the masking).
+//! An exhaustive joint search (for ≤3 tenants) serves as the oracle the
+//! greedy router is tested against.
+
+use crate::dpusim::multi::{
+    aggregate_ppw, all_meet_constraint, evaluate_shared, fabric_cost, fits, Placement,
+};
+use crate::dpusim::DpuSim;
+use crate::models::ModelVariant;
+use crate::runtime::PolicyOutput;
+use crate::workload::WorkloadState;
+use anyhow::Result;
+
+/// Preference order over the 26 actions for one model (higher first).
+pub fn preference_order(out: &PolicyOutput) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..out.logits.len()).collect();
+    idx.sort_by(|&a, &b| out.logits[b].partial_cmp(&out.logits[a]).unwrap());
+    idx
+}
+
+/// Greedy placement: each model takes its best-preferred action that
+/// still fits the remaining fabric. Returns None if a model cannot be
+/// placed at all (fabric exhausted).
+pub fn greedy_place(
+    sim: &DpuSim,
+    requests: &[(ModelVariant, Vec<usize>)], // (model, preference order)
+) -> Result<Option<Vec<Placement>>> {
+    let mut placements: Vec<Placement> = Vec::new();
+    let mut used = 0.0;
+    for (model, prefs) in requests {
+        let mut chosen = None;
+        for &aid in prefs {
+            let action = &sim.actions()[aid];
+            let size = &sim.sizes()[&action.size];
+            let cost = action.instances as f64 * fabric_cost(size);
+            // heterogeneous slack mirrors multi::fits (homogeneous sets —
+            // including the empty fabric — get the full budget)
+            let slack = if placements.iter().any(|p| p.size != action.size) {
+                0.97
+            } else {
+                1.0
+            };
+            if used + cost <= slack + 1e-9 {
+                chosen = Some(Placement {
+                    model: model.clone(),
+                    size: action.size.clone(),
+                    instances: action.instances,
+                });
+                used += cost;
+                break;
+            }
+        }
+        match chosen {
+            Some(p) => placements.push(p),
+            None => return Ok(None),
+        }
+    }
+    // final consistency check against the authoritative predicate
+    if !fits(sim, &placements)? {
+        return Ok(None);
+    }
+    Ok(Some(placements))
+}
+
+/// Exhaustive joint placement (small tenant counts only): maximize
+/// aggregate PPW subject to every tenant meeting the constraint when any
+/// joint assignment can; fall back to best aggregate PPW otherwise.
+pub fn exhaustive_place(
+    sim: &DpuSim,
+    models: &[ModelVariant],
+    state: WorkloadState,
+) -> Result<Option<(Vec<Placement>, f64)>> {
+    anyhow::ensure!(models.len() <= 3, "exhaustive search is exponential — ≤3 tenants");
+    let n_actions = sim.actions().len();
+    let mut best: Option<(Vec<Placement>, f64, bool)> = None;
+    let mut assign = vec![0usize; models.len()];
+    loop {
+        // build placement set from the current assignment
+        let placements: Vec<Placement> = models
+            .iter()
+            .zip(&assign)
+            .map(|(m, &aid)| {
+                let a = &sim.actions()[aid];
+                Placement {
+                    model: m.clone(),
+                    size: a.size.clone(),
+                    instances: a.instances,
+                }
+            })
+            .collect();
+        if fits(sim, &placements)? {
+            let tenants = evaluate_shared(sim, &placements, state)?;
+            let ppw = aggregate_ppw(sim, &tenants);
+            let ok = all_meet_constraint(&tenants);
+            let better = match &best {
+                None => true,
+                Some((_, bppw, bok)) => (ok && !bok) || (ok == *bok && ppw > *bppw),
+            };
+            if better {
+                best = Some((placements, ppw, ok));
+            }
+        }
+        // odometer increment
+        let mut i = 0;
+        loop {
+            assign[i] += 1;
+            if assign[i] < n_actions {
+                break;
+            }
+            assign[i] = 0;
+            i += 1;
+            if i == models.len() {
+                return Ok(best.map(|(p, ppw, _)| (p, ppw)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_models;
+
+    fn sim() -> DpuSim {
+        DpuSim::load().unwrap()
+    }
+
+    fn v(name: &str) -> ModelVariant {
+        ModelVariant::new(
+            load_models().unwrap().into_iter().find(|m| m.name == name).unwrap(),
+            0.0,
+        )
+    }
+
+    /// Preference order = solo-PPW ranking (a stand-in for the agent's
+    /// logits in artifact-free tests).
+    fn solo_prefs(sim: &DpuSim, m: &ModelVariant, st: WorkloadState) -> Vec<usize> {
+        let rows = sim.sweep_variant(m, st).unwrap();
+        let mut idx: Vec<usize> = (0..rows.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let key = |i: usize| (rows[i].meets_constraint, rows[i].ppw);
+            key(b).partial_cmp(&key(a)).unwrap()
+        });
+        idx
+    }
+
+    #[test]
+    fn greedy_places_two_models() {
+        let s = sim();
+        let st = WorkloadState::None;
+        let reqs = vec![
+            (v("ResNet152"), solo_prefs(&s, &v("ResNet152"), st)),
+            (v("MobileNetV2"), solo_prefs(&s, &v("MobileNetV2"), st)),
+        ];
+        let placed = greedy_place(&s, &reqs).unwrap().expect("must fit");
+        assert_eq!(placed.len(), 2);
+        assert!(fits(&s, &placed).unwrap());
+        // first model got its solo optimum (fabric was empty)
+        assert_eq!(
+            format!("{}_{}", placed[0].size, placed[0].instances),
+            "B4096_1"
+        );
+    }
+
+    #[test]
+    fn greedy_respects_fabric_exhaustion() {
+        let s = sim();
+        let st = WorkloadState::None;
+        // three heavyweight tenants preferring B4096_3 each cannot all fit
+        let prefs: Vec<usize> = {
+            let mut p = solo_prefs(&s, &v("ResNet152"), st);
+            // force everyone to want the whole fabric first
+            let b4096_3 = s
+                .actions()
+                .iter()
+                .position(|a| a.notation() == "B4096_3")
+                .unwrap();
+            p.retain(|&x| x != b4096_3);
+            p.insert(0, b4096_3);
+            p
+        };
+        let reqs: Vec<_> = (0..3).map(|_| (v("ResNet152"), prefs.clone())).collect();
+        let placed = greedy_place(&s, &reqs).unwrap();
+        // they fit only by degrading to smaller configs — or not at all;
+        // either way the fabric predicate holds
+        if let Some(p) = placed {
+            assert!(fits(&s, &p).unwrap());
+            assert_eq!(p.len(), 3);
+        }
+    }
+
+    #[test]
+    fn greedy_within_band_of_exhaustive_for_pairs() {
+        // the router's sanity bound: on 2-tenant workloads the greedy
+        // partition reaches ≥70% of the exhaustive joint optimum's PPW
+        let s = sim();
+        let st = WorkloadState::None;
+        for pair in [
+            ("InceptionV3", "MobileNetV2"),
+            ("ResNet18", "ResNet50"),
+            ("RegNetX_400MF", "RepVGG_A0"),
+        ] {
+            let models = vec![v(pair.0), v(pair.1)];
+            let reqs: Vec<_> = models
+                .iter()
+                .map(|m| (m.clone(), solo_prefs(&s, m, st)))
+                .collect();
+            let greedy = greedy_place(&s, &reqs).unwrap().expect("fits");
+            let tenants = evaluate_shared(&s, &greedy, st).unwrap();
+            let g_ppw = aggregate_ppw(&s, &tenants);
+            let (_, e_ppw) = exhaustive_place(&s, &models, st).unwrap().expect("some fit");
+            assert!(
+                g_ppw >= 0.7 * e_ppw,
+                "{pair:?}: greedy {g_ppw:.2} vs exhaustive {e_ppw:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn exhaustive_rejects_too_many_tenants() {
+        let s = sim();
+        let ms = vec![v("ResNet18"), v("ResNet50"), v("MobileNetV2"), v("RepVGG_A0")];
+        assert!(exhaustive_place(&s, &ms, WorkloadState::None).is_err());
+    }
+}

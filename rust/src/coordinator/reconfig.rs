@@ -1,0 +1,148 @@
+//! FPGA reconfiguration manager (paper Fig 6).
+//!
+//! Tracks the currently-loaded DPU configuration and model, and charges
+//! the paper's measured overheads when the agent's decision requires a
+//! change:
+//!
+//! * telemetry collection for state observation:  88 ms
+//! * RL inference on the Arm CPU:                 20 ms
+//! * DPU reconfiguration (bitstream load):       384 ms
+//! * instruction loading (model code + weights): 507 ms
+//!
+//! "If the same DPU is reused, reconfiguration and loading are not
+//! needed" — instruction loading is still required when the *model*
+//! changes on an unchanged DPU.
+
+use crate::data::Action;
+
+/// Measured overheads on the ZCU102, in microseconds (paper Fig 6).
+pub const TELEMETRY_US: u64 = 88_000;
+pub const RL_INFERENCE_US: u64 = 20_000;
+pub const RECONFIG_US: u64 = 384_000;
+pub const INSTR_LOAD_US: u64 = 507_000;
+
+/// Breakdown of the overhead charged for one decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Overhead {
+    pub telemetry_us: u64,
+    pub rl_inference_us: u64,
+    pub reconfig_us: u64,
+    pub instr_load_us: u64,
+}
+
+impl Overhead {
+    pub fn total_us(&self) -> u64 {
+        self.telemetry_us + self.rl_inference_us + self.reconfig_us + self.instr_load_us
+    }
+}
+
+/// The reconfiguration manager: current bitstream + loaded model.
+#[derive(Debug, Default)]
+pub struct ReconfigManager {
+    current_action: Option<usize>,
+    current_model: Option<String>,
+    reconfig_count: u64,
+    instr_load_count: u64,
+}
+
+impl ReconfigManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Currently loaded configuration (action id), if any.
+    pub fn current_action(&self) -> Option<usize> {
+        self.current_action
+    }
+
+    pub fn current_model(&self) -> Option<&str> {
+        self.current_model.as_deref()
+    }
+
+    pub fn reconfig_count(&self) -> u64 {
+        self.reconfig_count
+    }
+
+    pub fn instr_load_count(&self) -> u64 {
+        self.instr_load_count
+    }
+
+    /// Apply a decision: switch to `action` for `model`, returning the
+    /// overhead the platform pays. Telemetry + RL inference are always
+    /// charged (a decision was made); the two heavy phases only when
+    /// the bitstream / model actually change.
+    pub fn apply(&mut self, action: &Action, model: &str) -> Overhead {
+        let mut ov = Overhead {
+            telemetry_us: TELEMETRY_US,
+            rl_inference_us: RL_INFERENCE_US,
+            ..Default::default()
+        };
+        let same_dpu = self.current_action == Some(action.id);
+        let same_model = self.current_model.as_deref() == Some(model);
+        if !same_dpu {
+            ov.reconfig_us = RECONFIG_US;
+            self.reconfig_count += 1;
+        }
+        if !same_dpu || !same_model {
+            ov.instr_load_us = INSTR_LOAD_US;
+            self.instr_load_count += 1;
+        }
+        self.current_action = Some(action.id);
+        self.current_model = Some(model.to_string());
+        ov
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn action(id: usize) -> Action {
+        Action {
+            id,
+            size: "B4096".into(),
+            instances: 1,
+        }
+    }
+
+    #[test]
+    fn first_decision_pays_everything() {
+        let mut m = ReconfigManager::new();
+        let ov = m.apply(&action(23), "InceptionV3");
+        assert_eq!(ov.total_us(), 88_000 + 20_000 + 384_000 + 507_000);
+        // the paper's prose says "about 1047 ms"; its own phase numbers sum
+        // to 999 ms — we reproduce the phases (the 48 ms gap is unexplained
+        // in the paper; see EXPERIMENTS.md F6 note)
+        assert_eq!(ov.total_us() / 1000, 999);
+    }
+
+    #[test]
+    fn same_dpu_same_model_skips_heavy_phases() {
+        let mut m = ReconfigManager::new();
+        m.apply(&action(23), "InceptionV3");
+        let ov = m.apply(&action(23), "InceptionV3");
+        assert_eq!(ov.reconfig_us, 0);
+        assert_eq!(ov.instr_load_us, 0);
+        assert_eq!(ov.total_us(), TELEMETRY_US + RL_INFERENCE_US);
+    }
+
+    #[test]
+    fn model_change_on_same_dpu_reloads_instructions_only() {
+        let mut m = ReconfigManager::new();
+        m.apply(&action(23), "InceptionV3");
+        let ov = m.apply(&action(23), "ResNeXt50_32x4d");
+        assert_eq!(ov.reconfig_us, 0);
+        assert_eq!(ov.instr_load_us, INSTR_LOAD_US);
+        assert_eq!(m.instr_load_count(), 2);
+        assert_eq!(m.reconfig_count(), 1);
+    }
+
+    #[test]
+    fn dpu_change_pays_reconfig_and_load() {
+        let mut m = ReconfigManager::new();
+        m.apply(&action(23), "InceptionV3");
+        let ov = m.apply(&action(17), "InceptionV3");
+        assert_eq!(ov.reconfig_us, RECONFIG_US);
+        assert_eq!(ov.instr_load_us, INSTR_LOAD_US);
+    }
+}

@@ -1,0 +1,142 @@
+//! Threaded decision service: a leader thread owning the PJRT policy
+//! executable serves concurrent decision requests over channels, with
+//! dynamic micro-batching (drain the queue up to the artifact's batch
+//! size before one PJRT call) — the std-thread analogue of a vLLM-style
+//! request router for the 20 ms RL-inference budget of Fig 6.
+
+use crate::rl::features::OBS_DIM;
+use crate::runtime::{PolicyOutput, PolicyRuntime};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A decision request: an observation plus the reply channel.
+struct Request {
+    obs: [f32; OBS_DIM],
+    reply: Sender<Result<PolicyOutput, String>>,
+}
+
+/// Handle to the running service; cloneable across client threads.
+#[derive(Clone)]
+pub struct DecisionClient {
+    tx: Sender<Request>,
+}
+
+impl DecisionClient {
+    /// Synchronous decision call (blocks until the microbatch flushes).
+    pub fn decide(&self, obs: [f32; OBS_DIM]) -> Result<PolicyOutput> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                obs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("decision service stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("decision service dropped the request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+/// The running service (leader thread + queue).
+pub struct DecisionService {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    pub batch: usize,
+}
+
+impl DecisionService {
+    /// Spawn the leader thread; the policy artifact is loaded and compiled
+    /// *inside* the thread (PJRT handles are not `Send`). `batch_window`
+    /// is how long the leader waits to fill a microbatch once at least
+    /// one request is pending. Returns once the artifact compiled (or
+    /// failed to).
+    pub fn spawn(
+        policy_path: PathBuf,
+        batch: usize,
+        batch_window: Duration,
+    ) -> Result<DecisionService> {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("dpuconfig-decider".into())
+            .spawn(move || {
+                let runtime = match PolicyRuntime::load(&policy_path, batch) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                loop {
+                    // block for the first request
+                    let first = match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => break, // all clients gone
+                    };
+                    let mut pending = vec![first];
+                    // micro-batch window: drain what arrives in time
+                    let deadline = std::time::Instant::now() + batch_window;
+                    while pending.len() < batch {
+                        let left = deadline.saturating_duration_since(std::time::Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match rx.recv_timeout(left) {
+                            Ok(r) => pending.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                    let obs: Vec<[f32; OBS_DIM]> = pending.iter().map(|r| r.obs).collect();
+                    match runtime.infer_batch(&obs) {
+                        Ok(outs) => {
+                            for (req, out) in pending.into_iter().zip(outs) {
+                                let _ = req.reply.send(Ok(out));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("policy inference failed: {e:#}");
+                            for req in pending {
+                                let _ = req.reply.send(Err(msg.clone()));
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawning decision service");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("decision service died during startup"))?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok(DecisionService {
+            tx: Some(tx),
+            worker: Some(worker),
+            batch,
+        })
+    }
+
+    pub fn client(&self) -> DecisionClient {
+        DecisionClient {
+            tx: self.tx.as_ref().expect("service running").clone(),
+        }
+    }
+}
+
+impl Drop for DecisionService {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the queue; worker exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+// Integration tests that need the artifact live in rust/tests/runtime.rs —
+// unit tests here would require `make artifacts` during `cargo test` of
+// the library alone.

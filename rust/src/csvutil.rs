@@ -1,0 +1,155 @@
+//! Minimal CSV reading/writing (the build is offline — no serde/csv crates).
+//!
+//! Handles exactly the dialect used by the files in `data/` and
+//! `artifacts/`: comma-separated, first non-comment line is the header,
+//! `#`-prefixed lines are comments, no quoting (none of our fields contain
+//! commas).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A parsed CSV table: header names plus rows of string fields.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    col: HashMap<String, usize>,
+}
+
+impl Table {
+    /// Parse CSV text (comments and blank lines skipped).
+    pub fn parse(text: &str) -> Result<Table> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header_line = lines.next().context("empty csv")?;
+        let header: Vec<String> = header_line.split(',').map(|s| s.trim().to_string()).collect();
+        let col: HashMap<String, usize> = header
+            .iter()
+            .enumerate()
+            .map(|(i, name)| (name.clone(), i))
+            .collect();
+        let mut rows = Vec::new();
+        for line in lines {
+            let fields: Vec<String> = line.split(',').map(|s| s.trim().to_string()).collect();
+            if fields.len() != header.len() {
+                bail!(
+                    "csv row has {} fields, header has {}: {line:?}",
+                    fields.len(),
+                    header.len()
+                );
+            }
+            rows.push(fields);
+        }
+        Ok(Table { header, rows, col })
+    }
+
+    /// Read and parse a CSV file.
+    pub fn read(path: &Path) -> Result<Table> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Column index for `name`.
+    pub fn col(&self, name: &str) -> Result<usize> {
+        self.col
+            .get(name)
+            .copied()
+            .with_context(|| format!("csv missing column {name:?} (have {:?})", self.header))
+    }
+
+    /// String field at (row, column-name).
+    pub fn get<'a>(&'a self, row: &'a [String], name: &str) -> Result<&'a str> {
+        Ok(&row[self.col(name)?])
+    }
+
+    /// f64 field at (row, column-name).
+    pub fn get_f64(&self, row: &[String], name: &str) -> Result<f64> {
+        let s = self.get(row, name)?;
+        s.parse::<f64>()
+            .with_context(|| format!("field {name}={s:?} is not a float"))
+    }
+
+    /// integer field at (row, column-name).
+    pub fn get_usize(&self, row: &[String], name: &str) -> Result<usize> {
+        let s = self.get(row, name)?;
+        s.parse::<usize>()
+            .with_context(|| format!("field {name}={s:?} is not an integer"))
+    }
+}
+
+/// Incremental CSV writer with full-precision floats (mirrors python's
+/// `repr(float)` so parity files round-trip bit-exactly).
+pub struct Writer {
+    out: String,
+    cols: usize,
+}
+
+impl Writer {
+    pub fn new(header: &[&str]) -> Writer {
+        Writer {
+            out: format!("{}\n", header.join(",")),
+            cols: header.len(),
+        }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        self.out.push_str(&fields.join(","));
+        self.out.push('\n');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+
+    pub fn write(self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.out).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Format an f64 with round-trip precision (shortest representation that
+/// parses back exactly — rust's `{}` for f64 already guarantees this).
+pub fn fmt_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let t = Table::parse("# comment\na,b\n1,2\n3,4\n").unwrap();
+        assert_eq!(t.header, vec!["a", "b"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.get_f64(&t.rows[1], "b").unwrap(), 4.0);
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        for &x in &[1.0, 0.1, 1e-9, 123456.789012345, f64::MIN_POSITIVE] {
+            let s = fmt_f64(x);
+            assert_eq!(s.parse::<f64>().unwrap(), x, "{s}");
+        }
+    }
+
+    #[test]
+    fn writer_roundtrip() {
+        let mut w = Writer::new(&["x", "y"]);
+        w.row(&["1".into(), "2.5".into()]);
+        let t = Table::parse(&w.finish()).unwrap();
+        assert_eq!(t.get_f64(&t.rows[0], "y").unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,241 @@
+//! Loading of the shared `data/` files — the contract between the python
+//! build path and the rust runtime (see DESIGN.md §2).
+
+use crate::csvutil::Table;
+use crate::repo_root;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// A DPUCZDX8G size variant (paper Table I row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpuSize {
+    pub name: String,
+    pub pp: u32,
+    pub icp: u32,
+    pub ocp: u32,
+    /// MAC operations per cycle (= pp*icp*ocp; 1 MAC = 2 ops, hence the
+    /// "B4096" naming for 2048 MACs/cycle).
+    pub peak_macs: u32,
+    /// How many instances fit the ZCU102 PL.
+    pub max_instances: u32,
+}
+
+/// One action of the RL agent: a (size, instance-count) pair.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Action {
+    pub id: usize,
+    pub size: String,
+    pub instances: u32,
+}
+
+impl Action {
+    /// Paper notation, e.g. `B4096_1`.
+    pub fn notation(&self) -> String {
+        format!("{}_{}", self.size, self.instances)
+    }
+}
+
+/// Static characteristics of a base (unpruned) model — paper Table III.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// "train" or "test" (k-means GMAC split, §V-A).
+    pub split: String,
+    /// Measured single-image latency on B4096_1, state N (ms) — the
+    /// calibration anchor.
+    pub latency_b4096_ms: f64,
+    /// INT8 top-1 accuracy (mAP for YOLOv5s), percent.
+    pub acc_int8: f64,
+    pub layers: u32,
+    pub gmac: f64,
+    /// DRAM<->DPU traffic per image at B4096_1 (MB).
+    pub data_io_mb: f64,
+    /// Trainable parameters (millions; ~MB of INT8 weights).
+    pub params_m: f64,
+    /// Table III measured columns kept for the Table-III bench.
+    pub paper_bw_gbs: f64,
+    pub paper_dpu_eff: f64,
+}
+
+fn data_path(name: &str) -> PathBuf {
+    repo_root().join("data").join(name)
+}
+
+/// Load Table I size variants, keyed by name.
+pub fn load_dpu_sizes() -> Result<HashMap<String, DpuSize>> {
+    let t = Table::read(&data_path("dpu_configs.csv"))?;
+    let mut out = HashMap::new();
+    for row in &t.rows {
+        let s = DpuSize {
+            name: t.get(row, "size")?.to_string(),
+            pp: t.get_usize(row, "pp")? as u32,
+            icp: t.get_usize(row, "icp")? as u32,
+            ocp: t.get_usize(row, "ocp")? as u32,
+            peak_macs: t.get_usize(row, "peak_macs")? as u32,
+            max_instances: t.get_usize(row, "max_instances")? as u32,
+        };
+        out.insert(s.name.clone(), s);
+    }
+    Ok(out)
+}
+
+/// Load the 26-action space in action-id order.
+pub fn load_action_space() -> Result<Vec<Action>> {
+    let t = Table::read(&data_path("action_space.csv"))?;
+    let mut actions = Vec::new();
+    for row in &t.rows {
+        actions.push(Action {
+            id: t.get_usize(row, "action_id")?,
+            size: t.get(row, "size")?.to_string(),
+            instances: t.get_usize(row, "instances")? as u32,
+        });
+    }
+    actions.sort_by_key(|a| a.id);
+    for (i, a) in actions.iter().enumerate() {
+        anyhow::ensure!(a.id == i, "action ids must be dense, got {} at {}", a.id, i);
+    }
+    Ok(actions)
+}
+
+/// Load Table III model specs in file order.
+pub fn load_models() -> Result<Vec<ModelSpec>> {
+    let t = Table::read(&data_path("models.csv"))?;
+    let mut out = Vec::new();
+    for row in &t.rows {
+        out.push(ModelSpec {
+            name: t.get(row, "name")?.to_string(),
+            split: t.get(row, "split")?.to_string(),
+            latency_b4096_ms: t.get_f64(row, "latency_b4096_ms")?,
+            acc_int8: t.get_f64(row, "acc_int8")?,
+            layers: t.get_usize(row, "layers")? as u32,
+            gmac: t.get_f64(row, "gmac")?,
+            data_io_mb: t.get_f64(row, "data_io_mb")?,
+            params_m: t.get_f64(row, "params_m")?,
+            paper_bw_gbs: t.get_f64(row, "paper_bw_gbs")?,
+            paper_dpu_eff: t.get_f64(row, "paper_dpu_eff")?,
+        });
+    }
+    Ok(out)
+}
+
+/// Load the fitted dpusim calibration constants (key -> value).
+pub fn load_calibration() -> Result<HashMap<String, f64>> {
+    let t = Table::read(&data_path("calibration.csv"))?;
+    let mut out = HashMap::new();
+    for row in &t.rows {
+        out.insert(t.get(row, "key")?.to_string(), t.get_f64(row, "value")?);
+    }
+    anyhow::ensure!(!out.is_empty(), "calibration.csv is empty — run python -m compile.calibrate");
+    Ok(out)
+}
+
+/// Feature schema entry (Table II ordering contract).
+#[derive(Debug, Clone)]
+pub struct Feature {
+    pub index: usize,
+    pub name: String,
+    pub kind: String,
+}
+
+/// Load the 22-feature schema in index order.
+pub fn load_feature_schema() -> Result<Vec<Feature>> {
+    let t = Table::read(&data_path("feature_schema.csv"))?;
+    let mut out = Vec::new();
+    for row in &t.rows {
+        out.push(Feature {
+            index: t.get_usize(row, "index")?,
+            name: t.get(row, "name")?.to_string(),
+            kind: t.get(row, "kind")?.to_string(),
+        });
+    }
+    out.sort_by_key(|f| f.index);
+    for (i, f) in out.iter().enumerate() {
+        anyhow::ensure!(f.index == i, "feature indices must be dense");
+    }
+    Ok(out)
+}
+
+/// Policy metadata written by aot.py (key -> string value).
+pub fn load_policy_meta() -> Result<HashMap<String, String>> {
+    let t = Table::read(&repo_root().join("artifacts").join("policy_meta.csv"))?;
+    let mut out = HashMap::new();
+    for row in &t.rows {
+        out.insert(
+            t.get(row, "key")?.to_string(),
+            t.get(row, "value")?.to_string(),
+        );
+    }
+    Ok(out)
+}
+
+/// Look up a calibration constant, with a clear error naming the key.
+pub fn cal(map: &HashMap<String, f64>, key: &str) -> Result<f64> {
+    map.get(key)
+        .copied()
+        .with_context(|| format!("calibration.csv missing key {key:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn action_space_is_26() {
+        let a = load_action_space().unwrap();
+        assert_eq!(a.len(), 26, "paper Table I: 26 selected configurations");
+        assert_eq!(a[23].notation(), "B4096_1");
+    }
+
+    #[test]
+    fn sizes_match_table_i() {
+        let s = load_dpu_sizes().unwrap();
+        assert_eq!(s.len(), 8);
+        let b4096 = &s["B4096"];
+        assert_eq!(b4096.peak_macs, 2048);
+        assert_eq!(b4096.max_instances, 3);
+        assert_eq!(
+            b4096.pp * b4096.icp * b4096.ocp,
+            b4096.peak_macs,
+            "peak MACs = PP*ICP*OCP"
+        );
+        // every size respects the PP*ICP*OCP identity
+        for size in s.values() {
+            assert_eq!(size.pp * size.icp * size.ocp, size.peak_macs, "{}", size.name);
+        }
+    }
+
+    #[test]
+    fn action_space_respects_max_instances() {
+        let sizes = load_dpu_sizes().unwrap();
+        for a in load_action_space().unwrap() {
+            let s = &sizes[&a.size];
+            assert!(
+                a.instances >= 1 && a.instances <= s.max_instances,
+                "{} exceeds max {}",
+                a.notation(),
+                s.max_instances
+            );
+        }
+    }
+
+    #[test]
+    fn models_match_table_iii() {
+        let m = load_models().unwrap();
+        assert_eq!(m.len(), 11, "paper: ten CNNs + YOLOv5s");
+        let r152 = m.iter().find(|x| x.name == "ResNet152").unwrap();
+        assert_eq!(r152.split, "test");
+        assert_eq!(r152.layers, 152);
+        assert!((r152.latency_b4096_ms - 30.81).abs() < 1e-9);
+        assert_eq!(m.iter().filter(|x| x.split == "test").count(), 3);
+    }
+
+    #[test]
+    fn feature_schema_is_22() {
+        let f = load_feature_schema().unwrap();
+        assert_eq!(f.len(), 22, "Table II: 4 CPU + 10 MEM + 2 PWR + 5 static + 1 constraint");
+        assert_eq!(f[0].name, "CPU_0");
+        assert_eq!(f[21].name, "C_PERF");
+        assert_eq!(f.iter().filter(|x| x.kind == "static").count(), 5);
+    }
+}

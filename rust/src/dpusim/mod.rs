@@ -1,0 +1,16 @@
+//! Calibrated analytical ZCU102 + DPUCZDX8G simulator — the runtime
+//! substrate standing in for the paper's physical testbed (DESIGN.md §2).
+//!
+//! Formula-identical mirror of `python/compile/dpusim.py` (f64, same
+//! expression order); the two implementations are pinned against each
+//! other by `data/golden_parity.csv` (tests in `rust/tests/parity.rs` and
+//! `python/tests/test_dpusim.py`).
+
+pub mod multi;
+pub mod perf;
+
+pub use multi::{evaluate_shared, Placement};
+pub use perf::{DpuSim, Metrics};
+
+/// The paper's FPS performance constraint (C_PERF).
+pub const FPS_CONSTRAINT: f64 = 30.0;

@@ -1,0 +1,561 @@
+//! The analytical performance + power model (DESIGN.md §7).
+//!
+//! Latency = DPU compute time (kinked power-law saturation over array
+//! size, anchored on the measured Table-III B4096_1 latency) + memory
+//! contention stretch + host coordination slice; aggregate FPS is further
+//! limited by a burst-bandwidth throttle and a sustained DDR traffic
+//! ceiling. Power = PL static + per-instance idle + energy/MAC +
+//! energy/byte. Every constant comes from `data/calibration.csv`, fitted
+//! by `python/compile/calibrate.py` against the paper's observed facts
+//! (H1..H9 in that file's docstring).
+
+use crate::data::{self, cal, Action, DpuSize};
+use crate::dpusim::FPS_CONSTRAINT;
+use crate::models::ModelVariant;
+use crate::workload::{WorkloadState, XorShift64};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// Steady-state metrics of one (variant, config, state) experiment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    /// Per-frame service latency (ms), aggregate across instances.
+    pub latency_ms: f64,
+    /// Aggregate throughput (frames/s) over all instances.
+    pub fps: f64,
+    /// FPGA (PL) power, W.
+    pub p_fpga: f64,
+    /// ARM (PS) power, W.
+    pub p_arm: f64,
+    /// Energy efficiency: fps / p_fpga (paper Algorithm 1 line 6).
+    pub ppw: f64,
+    /// Fraction of DPU time that is memory-bound.
+    pub mem_frac: f64,
+    /// Per-instance burst DDR demand while running (GB/s).
+    pub bw_demand_gbs: f64,
+    /// Host coordination slice per frame (ms).
+    pub t_host_ms: f64,
+    /// Whether the 30 FPS constraint is met.
+    pub meets_constraint: bool,
+}
+
+/// Hoisted calibration constants — `evaluate` is the crate's hottest
+/// function (the sweep and the exhaustive placement search call it in
+/// tight loops); reading ~25 string-keyed HashMap entries per call cost
+/// ~40% of its runtime (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy)]
+struct CalCache {
+    f_clk_hz: f64,
+    sat_q0: f64,
+    sat_q1: f64,
+    sat_k0: f64,
+    sat_k1: f64,
+    sat_knee: f64,
+    host_h0_ms: f64,
+    host_h1_ms: f64,
+    host_mult_c: f64,
+    host_mult_m: f64,
+    host_gamma: f64,
+    cpu_load_n: f64,
+    cpu_load_m: f64,
+    host_delay_n_ms: f64,
+    host_delay_c_ms: f64,
+    host_delay_m_ms: f64,
+    bw_total: f64,
+    bw_cap1: f64,
+    bw_ext_c: f64,
+    bw_ext_m: f64,
+    beta_mem: f64,
+    bw_dpu_n: f64,
+    bw_dpu_c: f64,
+    bw_dpu_m: f64,
+    burst_mult: f64,
+    io_growth_exp: f64,
+    emac_growth_exp: f64,
+    p_pl_static: f64,
+    p_idle0: f64,
+    p_idle1: f64,
+    e_mac_j_per_gmac: f64,
+    e_io_j_per_gb: f64,
+    p_arm_base: f64,
+    p_arm_c: f64,
+    p_arm_m: f64,
+    p_arm_host: f64,
+    cpu_util_n: f64,
+    cpu_util_c: f64,
+    cpu_util_m: f64,
+    telemetry_noise: f64,
+}
+
+impl CalCache {
+    fn from_map(m: &HashMap<String, f64>) -> Result<CalCache> {
+        Ok(CalCache {
+            f_clk_hz: cal(m, "f_clk_hz")?,
+            sat_q0: cal(m, "sat_q0")?,
+            sat_q1: cal(m, "sat_q1")?,
+            sat_k0: cal(m, "sat_k0")?,
+            sat_k1: cal(m, "sat_k1")?,
+            sat_knee: cal(m, "sat_knee")?,
+            host_h0_ms: cal(m, "host_h0_ms")?,
+            host_h1_ms: cal(m, "host_h1_ms")?,
+            host_mult_c: cal(m, "host_mult_c")?,
+            host_mult_m: cal(m, "host_mult_m")?,
+            host_gamma: cal(m, "host_gamma")?,
+            cpu_load_n: cal(m, "cpu_load_n")?,
+            cpu_load_m: cal(m, "cpu_load_m")?,
+            host_delay_n_ms: cal(m, "host_delay_n_ms")?,
+            host_delay_c_ms: cal(m, "host_delay_c_ms")?,
+            host_delay_m_ms: cal(m, "host_delay_m_ms")?,
+            bw_total: cal(m, "bw_total")?,
+            bw_cap1: cal(m, "bw_cap1")?,
+            bw_ext_c: cal(m, "bw_ext_c")?,
+            bw_ext_m: cal(m, "bw_ext_m")?,
+            beta_mem: cal(m, "beta_mem")?,
+            bw_dpu_n: cal(m, "bw_dpu_n")?,
+            bw_dpu_c: cal(m, "bw_dpu_c")?,
+            bw_dpu_m: cal(m, "bw_dpu_m")?,
+            burst_mult: cal(m, "burst_mult")?,
+            io_growth_exp: cal(m, "io_growth_exp")?,
+            emac_growth_exp: cal(m, "emac_growth_exp")?,
+            p_pl_static: cal(m, "p_pl_static")?,
+            p_idle0: cal(m, "p_idle0")?,
+            p_idle1: cal(m, "p_idle1")?,
+            e_mac_j_per_gmac: cal(m, "e_mac_j_per_gmac")?,
+            e_io_j_per_gb: cal(m, "e_io_j_per_gb")?,
+            p_arm_base: cal(m, "p_arm_base")?,
+            p_arm_c: cal(m, "p_arm_c")?,
+            p_arm_m: cal(m, "p_arm_m")?,
+            p_arm_host: cal(m, "p_arm_host")?,
+            cpu_util_n: cal(m, "cpu_util_n")?,
+            cpu_util_c: cal(m, "cpu_util_c")?,
+            cpu_util_m: cal(m, "cpu_util_m")?,
+            telemetry_noise: cal(m, "telemetry_noise")?,
+        })
+    }
+}
+
+/// The simulator: calibration constants + Table-I size table.
+pub struct DpuSim {
+    cal: HashMap<String, f64>,
+    cc: CalCache,
+    sizes: HashMap<String, DpuSize>,
+    actions: Vec<Action>,
+    p4096: f64,
+}
+
+impl DpuSim {
+    /// Load from `data/` (calibration.csv + dpu_configs.csv + action_space.csv).
+    pub fn load() -> Result<DpuSim> {
+        let cal = data::load_calibration()?;
+        let sizes = data::load_dpu_sizes()?;
+        let actions = data::load_action_space()?;
+        let p4096 = sizes
+            .get("B4096")
+            .context("dpu_configs.csv missing B4096")?
+            .peak_macs as f64;
+        let cc = CalCache::from_map(&cal)?;
+        Ok(DpuSim {
+            cal,
+            cc,
+            sizes,
+            actions,
+            p4096,
+        })
+    }
+
+    /// Build with explicit calibration constants (ablation benches).
+    pub fn with_calibration(cal: HashMap<String, f64>) -> Result<DpuSim> {
+        let sizes = data::load_dpu_sizes()?;
+        let actions = data::load_action_space()?;
+        let cc = CalCache::from_map(&cal)?;
+        Ok(DpuSim {
+            cal,
+            cc,
+            sizes,
+            actions,
+            p4096: 2048.0,
+        })
+    }
+
+    pub fn actions(&self) -> &[Action] {
+        &self.actions
+    }
+
+    pub fn sizes(&self) -> &HashMap<String, DpuSize> {
+        &self.sizes
+    }
+
+    pub fn calibration(&self) -> &HashMap<String, f64> {
+        &self.cal
+    }
+
+    // ---- host coordination time (s) -----------------------------------
+    fn host_time_s(&self, v: &ModelVariant, state: WorkloadState, instances: u32) -> f64 {
+        let base = self.cc.host_h0_ms * 1e-3 + self.cc.host_h1_ms * 1e-3 * v.layers() as f64;
+        let mult = match state {
+            WorkloadState::None => 1.0,
+            WorkloadState::Cpu => self.cc.host_mult_c,
+            WorkloadState::Mem => self.cc.host_mult_m,
+        };
+        let load = match state {
+            WorkloadState::None => self.cc.cpu_load_n,
+            WorkloadState::Cpu => 1.0,
+            WorkloadState::Mem => self.cc.cpu_load_m,
+        };
+        let contention = 1.0 + self.cc.host_gamma * (instances - 1) as f64 * load;
+        let delay = match state {
+            WorkloadState::None => self.cc.host_delay_n_ms,
+            WorkloadState::Cpu => self.cc.host_delay_c_ms,
+            WorkloadState::Mem => self.cc.host_delay_m_ms,
+        } * 1e-3;
+        base * mult * contention + delay
+    }
+
+    // ---- saturation curve ----------------------------------------------
+    /// Effective MAC-array utilization at B4096 of the *base* (unpruned)
+    /// model, derived from the Table-III latency anchor.
+    fn eff4096(&self, v: &ModelVariant) -> f64 {
+        let base_variant = ModelVariant::new(v.base.clone(), 0.0);
+        let t_dpu =
+            v.base.latency_b4096_ms * 1e-3 - self.host_time_s(&base_variant, WorkloadState::None, 1);
+        let gmac_s = v.base.gmac * 1e9 / t_dpu;
+        gmac_s / (self.p4096 * self.cc.f_clk_hz)
+    }
+
+    /// Per-instance sustained GMAC/s on `size` (state N, uncontended).
+    fn throughput_gmac_s(&self, v: &ModelVariant, size: &DpuSize) -> f64 {
+        let eff4096 = self.eff4096(v);
+        let ratio = (self.cc.sat_q0 + self.cc.sat_q1 * eff4096).clamp(1.2, 7.9);
+        let kf = (self.cc.sat_k0 + self.cc.sat_k1 * eff4096).clamp(0.1, 1.0);
+        let knee = 256.0 + (self.cc.sat_knee - 256.0) * kf;
+        let alpha = ratio.ln() / (knee / 256.0).ln();
+        let ps = size.peak_macs as f64;
+        let t4096 = eff4096 * self.p4096 * self.cc.f_clk_hz / 1e9;
+        t4096 * (ps.min(knee) / knee).powf(alpha)
+    }
+
+    // ---- end-to-end ------------------------------------------------------
+    /// Steady-state metrics of `instances` copies of `size_name` serving
+    /// `v` under workload `state`. Mirrors `dpusim.py::DpuSim.evaluate`.
+    pub fn evaluate(
+        &self,
+        v: &ModelVariant,
+        size_name: &str,
+        instances: u32,
+        state: WorkloadState,
+    ) -> Result<Metrics> {
+        self.evaluate_with_extra_traffic(v, size_name, instances, state, 0.0)
+    }
+
+    /// [`Self::evaluate`] with additional foreign DDR traffic (bytes/s)
+    /// from co-located tenants (see [`crate::dpusim::multi`]). With
+    /// `extra = 0.0` this is bit-identical to the python mirror (adding
+    /// 0.0 never perturbs f64 results).
+    pub fn evaluate_with_extra_traffic(
+        &self,
+        v: &ModelVariant,
+        size_name: &str,
+        instances: u32,
+        state: WorkloadState,
+        extra_traffic_bps: f64,
+    ) -> Result<Metrics> {
+        let size = self
+            .sizes
+            .get(size_name)
+            .with_context(|| format!("unknown DPU size {size_name:?}"))?;
+        anyhow::ensure!(
+            instances >= 1 && instances <= size.max_instances,
+            "{size_name} supports 1..{} instances, got {instances}",
+            size.max_instances
+        );
+
+        let t_gmac_s = self.throughput_gmac_s(v, size);
+        let t_dpu = v.gmac() / t_gmac_s;
+
+        // smaller arrays re-fetch more data (DESIGN.md §7)
+        let ps_ratio = self.p4096 / size.peak_macs as f64;
+        let data_b = v.data_io_mb() * 1e6 * ps_ratio.powf(self.cc.io_growth_exp);
+        let bw_demand = data_b / t_dpu;
+        let mem_frac = (bw_demand / self.cc.bw_cap1).min(1.0);
+        let ext_bw = match state {
+            WorkloadState::None => 0.0,
+            WorkloadState::Cpu => self.cc.bw_ext_c,
+            WorkloadState::Mem => self.cc.bw_ext_m,
+        };
+        let competing = (instances - 1) as f64 * bw_demand + ext_bw + extra_traffic_bps;
+        let slow = 1.0 + self.cc.beta_mem * competing / self.cc.bw_total;
+        let t_inst = t_dpu * (1.0 - mem_frac) + t_dpu * mem_frac * slow;
+
+        let t_host = self.host_time_s(v, state, instances);
+        let mut t_frame = t_inst + t_host;
+        let mut fps = instances as f64 / t_frame;
+
+        // burst throttle + sustained DDR ceiling
+        let bw_dpu = match state {
+            WorkloadState::None => self.cc.bw_dpu_n,
+            WorkloadState::Cpu => self.cc.bw_dpu_c,
+            WorkloadState::Mem => self.cc.bw_dpu_m,
+        };
+        let burst = (self.cc.burst_mult * bw_dpu
+            / (instances as f64 * bw_demand + extra_traffic_bps))
+            .min(1.0);
+        fps *= burst;
+        // foreign tenants consume part of the sustained DDR budget
+        let fps_cap = (bw_dpu - extra_traffic_bps).max(0.05 * bw_dpu) / data_b;
+        if fps > fps_cap {
+            fps = fps_cap;
+        }
+        t_frame = instances as f64 / fps;
+
+        // power
+        let mac_rate = v.gmac() * fps;
+        let io_rate = data_b * fps;
+        let p_idle = self.cc.p_idle0 + self.cc.p_idle1 * size.peak_macs as f64;
+        let e_mac = self.cc.e_mac_j_per_gmac * ps_ratio.powf(self.cc.emac_growth_exp);
+        let p_fpga = self.cc.p_pl_static
+            + instances as f64 * p_idle
+            + e_mac * mac_rate
+            + self.cc.e_io_j_per_gb * io_rate / 1e9;
+        let host_busy = (instances as f64 * t_host / t_frame).min(1.0);
+        let p_arm_ext = match state {
+            WorkloadState::None => 0.0,
+            WorkloadState::Cpu => self.cc.p_arm_c,
+            WorkloadState::Mem => self.cc.p_arm_m,
+        };
+        let p_arm = self.cc.p_arm_base + p_arm_ext + self.cc.p_arm_host * host_busy;
+
+        Ok(Metrics {
+            latency_ms: t_frame * 1e3,
+            fps,
+            p_fpga,
+            p_arm,
+            ppw: fps / p_fpga,
+            mem_frac,
+            bw_demand_gbs: bw_demand / 1e9,
+            t_host_ms: t_host * 1e3,
+            meets_constraint: fps >= FPS_CONSTRAINT,
+        })
+    }
+
+    /// Metrics for every action in the 26-action space.
+    pub fn sweep_variant(
+        &self,
+        v: &ModelVariant,
+        state: WorkloadState,
+    ) -> Result<Vec<Metrics>> {
+        self.actions
+            .iter()
+            .map(|a| self.evaluate(v, &a.size, a.instances, state))
+            .collect()
+    }
+
+    /// Oracle policy: best-PPW action meeting the FPS constraint; if none
+    /// does, best PPW unconditionally (paper §V-B, ResNet152/M).
+    pub fn optimal_action(&self, v: &ModelVariant, state: WorkloadState) -> Result<usize> {
+        let rows = self.sweep_variant(v, state)?;
+        let feasible: Vec<usize> = (0..rows.len())
+            .filter(|&i| rows[i].meets_constraint)
+            .collect();
+        let pool: Vec<usize> = if feasible.is_empty() {
+            (0..rows.len()).collect()
+        } else {
+            feasible
+        };
+        Ok(pool
+            .into_iter()
+            .max_by(|&a, &b| rows[a].ppw.partial_cmp(&rows[b].ppw).unwrap())
+            .unwrap())
+    }
+
+    /// Static baseline: the action with maximum aggregate FPS.
+    pub fn max_fps_action(&self, v: &ModelVariant, state: WorkloadState) -> Result<usize> {
+        let rows = self.sweep_variant(v, state)?;
+        Ok((0..rows.len())
+            .max_by(|&a, &b| rows[a].fps.partial_cmp(&rows[b].fps).unwrap())
+            .unwrap())
+    }
+
+    /// Static baseline: the action with minimum FPGA power.
+    pub fn min_power_action(&self, v: &ModelVariant, state: WorkloadState) -> Result<usize> {
+        let rows = self.sweep_variant(v, state)?;
+        Ok((0..rows.len())
+            .min_by(|&a, &b| rows[a].p_fpga.partial_cmp(&rows[b].p_fpga).unwrap())
+            .unwrap())
+    }
+
+    /// The Table-II observation vector (22 features) of the system with
+    /// workload `state` active and the DPU idle — what the agent sees
+    /// before acting. Mirrors `dpusim.py::DpuSim.observe`.
+    pub fn observe(
+        &self,
+        v: &ModelVariant,
+        state: WorkloadState,
+        rng: Option<&mut XorShift64>,
+    ) -> Vec<f64> {
+        let cpu = match state {
+            WorkloadState::None => self.cc.cpu_util_n,
+            WorkloadState::Cpu => self.cc.cpu_util_c,
+            WorkloadState::Mem => self.cc.cpu_util_m,
+        };
+        let ext_bw = match state {
+            WorkloadState::None => 0.0,
+            WorkloadState::Cpu => self.cc.bw_ext_c,
+            WorkloadState::Mem => self.cc.bw_ext_m,
+        };
+        let memr = ext_bw * 0.6 / 5.0 / 1e6;
+        let memw = ext_bw * 0.4 / 5.0 / 1e6;
+        let p_fpga = self.cc.p_pl_static;
+        let p_arm_ext = match state {
+            WorkloadState::None => 0.0,
+            WorkloadState::Cpu => self.cc.p_arm_c,
+            WorkloadState::Mem => self.cc.p_arm_m,
+        };
+        let p_arm = self.cc.p_arm_base + p_arm_ext;
+        let mut feats = Vec::with_capacity(22);
+        feats.extend([cpu; 4]);
+        feats.extend([memr; 5]);
+        feats.extend([memw; 5]);
+        feats.push(p_fpga);
+        feats.push(p_arm);
+        feats.extend([
+            v.gmac(),
+            v.ldfm_mb(),
+            v.ldwb_mb(),
+            v.stfm_mb(),
+            v.params_m(),
+        ]);
+        feats.push(FPS_CONSTRAINT);
+        if let Some(rng) = rng {
+            let noise = self.cc.telemetry_noise;
+            for f in feats.iter_mut() {
+                *f *= 1.0 + noise * rng.normal();
+            }
+        }
+        feats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_models;
+
+    fn sim() -> DpuSim {
+        DpuSim::load().unwrap()
+    }
+
+    fn variant(name: &str, prune: f64) -> ModelVariant {
+        let m = load_models()
+            .unwrap()
+            .into_iter()
+            .find(|m| m.name == name)
+            .unwrap();
+        ModelVariant::new(m, prune)
+    }
+
+    #[test]
+    fn anchor_latency_reproduced() {
+        // evaluate() at B4096_1/N must reproduce the Table III anchor
+        // (latency = t_dpu + t_host by construction).
+        let s = sim();
+        for m in load_models().unwrap() {
+            let v = ModelVariant::new(m.clone(), 0.0);
+            let r = s.evaluate(&v, "B4096", 1, WorkloadState::None).unwrap();
+            // burst/cap must not bind at the anchor; contention slow=1
+            let rel = (r.latency_ms - m.latency_b4096_ms).abs() / m.latency_b4096_ms;
+            assert!(rel < 1e-9, "{}: {} vs {}", m.name, r.latency_ms, m.latency_b4096_ms);
+        }
+    }
+
+    #[test]
+    fn fig1_optima() {
+        // paper Fig 1 (state N, >=30fps): ResNet152 -> B4096_1,
+        // MobileNetV2 -> B2304_2.
+        let s = sim();
+        let a = s.actions();
+        let r = s
+            .optimal_action(&variant("ResNet152", 0.0), WorkloadState::None)
+            .unwrap();
+        assert_eq!(a[r].notation(), "B4096_1");
+        let m = s
+            .optimal_action(&variant("MobileNetV2", 0.0), WorkloadState::None)
+            .unwrap();
+        assert_eq!(a[m].notation(), "B2304_2");
+    }
+
+    #[test]
+    fn fig2_interference_shifts_optimum() {
+        // paper Fig 2: MobileNetV2 optimum moves to B1600_2 under C and
+        // stays small under M; ResNet152 under M has no feasible config.
+        let s = sim();
+        let a = s.actions();
+        let mob = variant("MobileNetV2", 0.0);
+        let c = s.optimal_action(&mob, WorkloadState::Cpu).unwrap();
+        assert_eq!(a[c].notation(), "B1600_2");
+        let m = s.optimal_action(&mob, WorkloadState::Mem).unwrap();
+        // top-2 softening (DESIGN.md §7): B1600_2 is within the top two
+        let rows = s.sweep_variant(&mob, WorkloadState::Mem).unwrap();
+        let mut by_ppw: Vec<usize> = (0..rows.len()).filter(|&i| rows[i].meets_constraint).collect();
+        by_ppw.sort_by(|&x, &y| rows[y].ppw.partial_cmp(&rows[x].ppw).unwrap());
+        let b1600_2 = a.iter().position(|x| x.notation() == "B1600_2").unwrap();
+        assert!(by_ppw[..2].contains(&b1600_2), "B1600_2 not in top-2 under M (top: {})", a[m].notation());
+
+        let r152 = variant("ResNet152", 0.0);
+        let rows = s.sweep_variant(&r152, WorkloadState::Mem).unwrap();
+        assert!(
+            rows.iter().all(|r| !r.meets_constraint),
+            "ResNet152/M must violate the 30 FPS constraint everywhere (§V-B)"
+        );
+    }
+
+    #[test]
+    fn fig3_pruning_shifts_optimum() {
+        // paper Fig 3: ResNet152 PR25 optimum is B3136_1 and beats the
+        // PR0 optimum's PPW.
+        let s = sim();
+        let a = s.actions();
+        let v25 = variant("ResNet152", 0.25);
+        let opt25 = s.optimal_action(&v25, WorkloadState::None).unwrap();
+        assert_eq!(a[opt25].notation(), "B3136_1");
+        let v0 = variant("ResNet152", 0.0);
+        let opt0 = s.optimal_action(&v0, WorkloadState::None).unwrap();
+        let ppw25 = s.sweep_variant(&v25, WorkloadState::None).unwrap()[opt25].ppw;
+        let ppw0 = s.sweep_variant(&v0, WorkloadState::None).unwrap()[opt0].ppw;
+        assert!(ppw25 > ppw0, "pruning must radically improve PPW");
+    }
+
+    #[test]
+    fn speedup_ratios_match_section_iii() {
+        // §III-A: B4096_1 vs B512_1 speedup: MobileNetV2 ~2.6x, ResNet152 ~5.8x
+        let s = sim();
+        let f = |name: &str, size: &str| {
+            s.evaluate(&variant(name, 0.0), size, 1, WorkloadState::None)
+                .unwrap()
+                .fps
+        };
+        let mob = f("MobileNetV2", "B4096") / f("MobileNetV2", "B512");
+        let r152 = f("ResNet152", "B4096") / f("ResNet152", "B512");
+        assert!((2.4..=2.8).contains(&mob), "MobileNetV2 speedup {mob}");
+        assert!((5.5..=6.1).contains(&r152), "ResNet152 speedup {r152}");
+    }
+
+    #[test]
+    fn observation_shape_and_constraint() {
+        let s = sim();
+        let v = variant("InceptionV3", 0.0);
+        let o = s.observe(&v, WorkloadState::Cpu, None);
+        assert_eq!(o.len(), 22);
+        assert_eq!(o[21], FPS_CONSTRAINT);
+        // C state: high CPU utilization visible to the agent
+        assert!(o[0] > 80.0);
+    }
+
+    #[test]
+    fn instance_bounds_enforced() {
+        let s = sim();
+        let v = variant("ResNet18", 0.0);
+        assert!(s.evaluate(&v, "B4096", 4, WorkloadState::None).is_err());
+        assert!(s.evaluate(&v, "B4096", 0, WorkloadState::None).is_err());
+        assert!(s.evaluate(&v, "B9999", 1, WorkloadState::None).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Fig 5: normalized PPW of the agent vs Optimal / MaxFPS / MinPower on
+//! the held-out test models under workload states C and M.
+
+use crate::coordinator::engine::DecisionEngine;
+use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
+use crate::models::{load_variants, ModelVariant};
+use crate::rl::Baseline;
+use crate::telemetry::{PlatformState, Sampler};
+use crate::workload::WorkloadState;
+use anyhow::Result;
+
+/// One Fig-5 bar: a test variant's normalized PPW per policy.
+#[derive(Debug, Clone)]
+pub struct Fig5Case {
+    pub model: String,
+    pub state: &'static str,
+    pub agent_norm: f64,
+    pub maxfps_norm: f64,
+    pub minpower_norm: f64,
+    pub agent_action: String,
+    pub optimal_action: String,
+    pub agent_meets_constraint: bool,
+    /// Whether any configuration meets the constraint for this case.
+    pub feasible: bool,
+}
+
+/// Aggregates per workload state.
+#[derive(Debug, Clone)]
+pub struct Fig5Summary {
+    pub state: &'static str,
+    pub agent_avg: f64,
+    pub maxfps_avg: f64,
+    pub minpower_avg: f64,
+    pub exact_matches: usize,
+    pub cases: usize,
+    pub constraint_met: usize,
+}
+
+/// The test-split variants (9: RegNetX/InceptionV3/ResNet152 x PR0/25/50).
+pub fn test_variants() -> Result<Vec<ModelVariant>> {
+    Ok(load_variants()?
+        .into_iter()
+        .filter(|v| v.base.split == "test")
+        .collect())
+}
+
+/// Run Fig 5 for one policy engine across states.
+pub fn run(
+    sim: &DpuSim,
+    engine: &mut DecisionEngine,
+    states: &[WorkloadState],
+    seed: u64,
+) -> Result<(Vec<Fig5Case>, Vec<Fig5Summary>)> {
+    let mut sampler = Sampler::from_calibration(seed, sim.calibration());
+    let mut cases = Vec::new();
+    let mut summaries = Vec::new();
+    for &st in states {
+        let mut agent_sum = 0.0;
+        let mut maxf_sum = 0.0;
+        let mut minp_sum = 0.0;
+        let mut exact = 0;
+        let mut met = 0;
+        let variants = test_variants()?;
+        for v in &variants {
+            let platform = PlatformState {
+                workload: st,
+                dpu_traffic_bps: 0.0,
+                host_cpu_util: 0.0,
+                p_fpga: sim.calibration().get("p_pl_static").copied().unwrap_or(2.2),
+                p_arm: sim.calibration().get("p_arm_base").copied().unwrap_or(1.5),
+            };
+            let sample = sampler.sample(0, &platform);
+            let rows = sim.sweep_variant(v, st)?;
+            let a_opt = sim.optimal_action(v, st)?;
+            let a_agent = engine.decide(&sample, v, sim, st)?.action_id;
+            let a_maxf = Baseline::MaxFps.select(sim, v, st, None)?;
+            let a_minp = Baseline::MinPower.select(sim, v, st, None)?;
+            let norm = |a: usize| rows[a].ppw / rows[a_opt].ppw;
+            let case = Fig5Case {
+                model: v.name(),
+                state: st.letter(),
+                agent_norm: norm(a_agent),
+                maxfps_norm: norm(a_maxf),
+                minpower_norm: norm(a_minp),
+                agent_action: sim.actions()[a_agent].notation(),
+                optimal_action: sim.actions()[a_opt].notation(),
+                agent_meets_constraint: rows[a_agent].fps >= FPS_CONSTRAINT,
+                feasible: rows.iter().any(|r| r.meets_constraint),
+            };
+            agent_sum += case.agent_norm;
+            maxf_sum += case.maxfps_norm;
+            minp_sum += case.minpower_norm;
+            exact += (a_agent == a_opt) as usize;
+            met += case.agent_meets_constraint as usize;
+            cases.push(case);
+        }
+        let n = variants.len() as f64;
+        summaries.push(Fig5Summary {
+            state: st.letter(),
+            agent_avg: agent_sum / n,
+            maxfps_avg: maxf_sum / n,
+            minpower_avg: minp_sum / n,
+            exact_matches: exact,
+            cases: variants.len(),
+            constraint_met: met,
+        });
+    }
+    Ok((cases, summaries))
+}
+
+/// Render Fig 5 as a text report.
+pub fn render(cases: &[Fig5Case], summaries: &[Fig5Summary]) -> String {
+    let mut out = String::from(
+        "=== Fig 5 — normalized PPW on the test split (1.0 = optimal)\n\
+         model                 st  agent  maxFPS  minPWR  agent->   optimal   meets30\n",
+    );
+    for c in cases {
+        out.push_str(&format!(
+            "{:<21} {:<3} {:5.3}  {:5.3}   {:5.3}  {:<9} {:<9} {}\n",
+            c.model,
+            c.state,
+            c.agent_norm,
+            c.maxfps_norm,
+            c.minpower_norm,
+            c.agent_action,
+            c.optimal_action,
+            if c.agent_meets_constraint {
+                "yes"
+            } else if c.feasible {
+                "NO"
+            } else {
+                "no (infeasible)"
+            },
+        ));
+    }
+    out.push('\n');
+    for s in summaries {
+        out.push_str(&format!(
+            "[{}] agent {:.1}% of optimal (paper: ~95-97%) | maxFPS {:.1}% (paper ~{}%) | minPWR {:.1}% | exact {} / {} | constraint met {}/{}\n",
+            s.state,
+            s.agent_avg * 100.0,
+            s.maxfps_avg * 100.0,
+            if s.state == "C" { 47 } else { 35 },
+            s.minpower_avg * 100.0,
+            s.exact_matches,
+            s.cases,
+            s.constraint_met,
+            s.cases,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Selector;
+
+    #[test]
+    fn nine_test_variants() {
+        let v = test_variants().unwrap();
+        assert_eq!(v.len(), 9, "paper §V-A: 9 test models");
+        assert!(v.iter().all(|x| {
+            ["RegNetX_400MF", "InceptionV3", "ResNet152"].contains(&x.base.name.as_str())
+        }));
+    }
+
+    #[test]
+    fn oracle_engine_scores_one() {
+        // running Fig 5 with the Optimal baseline as the "agent" must give
+        // normalized PPW exactly 1.0 — the harness's self-check
+        let sim = DpuSim::load().unwrap();
+        let mut eng = DecisionEngine::new(Selector::Static(Baseline::Optimal), 3);
+        let (_, summaries) = run(
+            &sim,
+            &mut eng,
+            &[WorkloadState::Cpu, WorkloadState::Mem],
+            3,
+        )
+        .unwrap();
+        for s in &summaries {
+            assert!((s.agent_avg - 1.0).abs() < 1e-12);
+            assert_eq!(s.exact_matches, s.cases);
+        }
+    }
+
+    #[test]
+    fn static_baselines_fall_short_of_optimal() {
+        // paper §V-B: neither extreme is efficient
+        let sim = DpuSim::load().unwrap();
+        let mut eng = DecisionEngine::new(Selector::Static(Baseline::Optimal), 3);
+        let (_, summaries) = run(
+            &sim,
+            &mut eng,
+            &[WorkloadState::Cpu, WorkloadState::Mem],
+            3,
+        )
+        .unwrap();
+        for s in &summaries {
+            assert!(s.maxfps_avg < 0.95, "[{}] maxfps {}", s.state, s.maxfps_avg);
+            assert!(s.minpower_avg < 0.75, "[{}] minpower {}", s.state, s.minpower_avg);
+        }
+    }
+
+    #[test]
+    fn constraint_violations_only_resnet152_under_m() {
+        // paper §V-B: 89% satisfaction, violations only ResNet152/M
+        let sim = DpuSim::load().unwrap();
+        let mut eng = DecisionEngine::new(Selector::Static(Baseline::Optimal), 3);
+        let (cases, _) = run(
+            &sim,
+            &mut eng,
+            &[WorkloadState::Cpu, WorkloadState::Mem],
+            3,
+        )
+        .unwrap();
+        let infeasible: Vec<_> = cases.iter().filter(|c| !c.feasible).collect();
+        assert_eq!(infeasible.len(), 2, "{infeasible:?}");
+        assert!(infeasible
+            .iter()
+            .all(|c| c.model.starts_with("ResNet152") && c.state == "M"));
+        let met = cases.iter().filter(|c| c.agent_meets_constraint).count();
+        assert_eq!(met, 16, "16/18 = 89% as in the paper");
+    }
+}

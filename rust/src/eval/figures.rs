@@ -1,0 +1,185 @@
+//! Characterization reproductions: Fig 1 (PPW/FPS across configs per
+//! model), Fig 2 (under N/C/M interference), Fig 3 (pruning ratios), and
+//! the derived columns of Table III.
+
+use crate::data::load_models;
+use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
+use crate::models::ModelVariant;
+use crate::workload::WorkloadState;
+use anyhow::Result;
+
+/// One bar of Fig 1/2/3: a configuration's PPW + FPS for a model/state.
+#[derive(Debug, Clone)]
+pub struct Bar {
+    pub notation: String,
+    pub ppw: f64,
+    pub fps: f64,
+    pub feasible: bool,
+    /// The dark bar of the figures: best PPW subject to >= 30 fps.
+    pub is_best: bool,
+}
+
+/// All 26 bars for (model, state), with the figure's "best" marking.
+pub fn bars(sim: &DpuSim, v: &ModelVariant, state: WorkloadState) -> Result<Vec<Bar>> {
+    let rows = sim.sweep_variant(v, state)?;
+    let best = sim.optimal_action(v, state)?;
+    Ok(rows
+        .iter()
+        .enumerate()
+        .map(|(i, m)| Bar {
+            notation: sim.actions()[i].notation(),
+            ppw: m.ppw,
+            fps: m.fps,
+            feasible: m.meets_constraint,
+            is_best: i == best,
+        })
+        .collect())
+}
+
+/// Render a Fig-1/2-style text chart.
+pub fn render_bars(title: &str, bars: &[Bar]) -> String {
+    let max_ppw = bars.iter().map(|b| b.ppw).fold(0.0, f64::max);
+    let mut out = format!("=== {title} (PPW bars, fps points; * = best >= {FPS_CONSTRAINT} fps)\n");
+    for b in bars {
+        let w = ((b.ppw / max_ppw) * 40.0).round() as usize;
+        out.push_str(&format!(
+            "{:>9} |{:<40}| ppw={:6.2} fps={:8.1}{}{}\n",
+            b.notation,
+            "#".repeat(w),
+            b.ppw,
+            b.fps,
+            if b.feasible { "" } else { "  (<30fps)" },
+            if b.is_best { "  *BEST*" } else { "" },
+        ));
+    }
+    out
+}
+
+/// A reproduced Table III row (derived columns vs the paper's measured).
+#[derive(Debug, Clone)]
+pub struct TableIiiRow {
+    pub model: String,
+    pub split: String,
+    pub latency_ms: f64,
+    pub acc: f64,
+    pub layers: u32,
+    pub gmac: f64,
+    pub data_io_mb: f64,
+    pub bw_gbs: f64,
+    pub paper_bw_gbs: f64,
+    pub arith_intensity: f64,
+    pub dpu_eff: f64,
+    pub paper_dpu_eff: f64,
+}
+
+/// Reproduce Table III from the calibrated model (B4096_1, state N).
+pub fn table_iii(sim: &DpuSim) -> Result<Vec<TableIiiRow>> {
+    let mut out = Vec::new();
+    for m in load_models()? {
+        let v = ModelVariant::new(m.clone(), 0.0);
+        let r = sim.evaluate(&v, "B4096", 1, WorkloadState::None)?;
+        // derived columns exactly as the paper defines them
+        let bw_gbs = m.data_io_mb / r.latency_ms; // MB per ms == GB/s
+        let ai = m.gmac * 1e3 / m.data_io_mb; // MACs per byte
+        let peak_gmacs = 2048.0 * 300e6 / 1e9; // B4096 at the DPU clock
+        let dpu_eff = (m.gmac / (r.latency_ms * 1e-3)) / peak_gmacs;
+        out.push(TableIiiRow {
+            model: m.name.clone(),
+            split: m.split.clone(),
+            latency_ms: r.latency_ms,
+            acc: m.acc_int8,
+            layers: m.layers,
+            gmac: m.gmac,
+            data_io_mb: m.data_io_mb,
+            bw_gbs,
+            paper_bw_gbs: m.paper_bw_gbs,
+            arith_intensity: ai,
+            dpu_eff,
+            paper_dpu_eff: m.paper_dpu_eff,
+        });
+    }
+    Ok(out)
+}
+
+/// Render the Table III reproduction.
+pub fn render_table_iii(rows: &[TableIiiRow]) -> String {
+    let mut out = String::from(
+        "=== Table III (B4096_1, state N) — derived vs paper columns\n\
+         model                 split  lat(ms)  acc%%   lyr   GMAC   IO(MB)  BW(GB/s) [paper]  AI(MAC/B)  eff    [paper]\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<21} {:<6} {:7.2}  {:5.2}  {:4}  {:5.2}  {:7.2}  {:7.2} [{:5.2}]  {:8.2}  {:5.3} [{:5.3}]\n",
+            r.model,
+            r.split,
+            r.latency_ms,
+            r.acc,
+            r.layers,
+            r.gmac,
+            r.data_io_mb,
+            r.bw_gbs,
+            r.paper_bw_gbs,
+            r.arith_intensity,
+            r.dpu_eff,
+            r.paper_dpu_eff,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_models;
+
+    fn variant(name: &str, p: f64) -> ModelVariant {
+        ModelVariant::new(
+            load_models()
+                .unwrap()
+                .into_iter()
+                .find(|m| m.name == name)
+                .unwrap(),
+            p,
+        )
+    }
+
+    #[test]
+    fn fig1_best_bars_match_paper() {
+        let sim = DpuSim::load().unwrap();
+        let b = bars(&sim, &variant("ResNet152", 0.0), WorkloadState::None).unwrap();
+        let best: Vec<_> = b.iter().filter(|x| x.is_best).collect();
+        assert_eq!(best.len(), 1);
+        assert_eq!(best[0].notation, "B4096_1");
+        let b = bars(&sim, &variant("MobileNetV2", 0.0), WorkloadState::None).unwrap();
+        assert_eq!(b.iter().find(|x| x.is_best).unwrap().notation, "B2304_2");
+    }
+
+    #[test]
+    fn table_iii_derived_columns_close_to_paper() {
+        // arithmetic intensity is exact by construction; the derived
+        // bandwidth and efficiency columns track the paper's measured
+        // values in *ranking* (the paper's BW column is an average over
+        // the run, ours is per-frame — see DESIGN.md §7).
+        let sim = DpuSim::load().unwrap();
+        let rows = table_iii(&sim).unwrap();
+        let r18 = rows.iter().find(|r| r.model == "ResNet18").unwrap();
+        assert!((r18.arith_intensity - 149.83).abs() < 0.5, "{}", r18.arith_intensity);
+        // efficiency: within 15% relative of the paper's column for the
+        // dense models (the column is noisy, §DESIGN 7)
+        for r in &rows {
+            let rel = (r.dpu_eff - r.paper_dpu_eff).abs() / r.paper_dpu_eff;
+            assert!(rel < 0.15, "{}: eff {} vs paper {}", r.model, r.dpu_eff, r.paper_dpu_eff);
+        }
+    }
+
+    #[test]
+    fn render_smoke() {
+        let sim = DpuSim::load().unwrap();
+        let b = bars(&sim, &variant("ResNet152", 0.0), WorkloadState::None).unwrap();
+        let txt = render_bars("test", &b);
+        assert!(txt.contains("B4096_1"));
+        assert!(txt.contains("*BEST*"));
+        let t3 = render_table_iii(&table_iii(&sim).unwrap());
+        assert!(t3.contains("ResNet152"));
+    }
+}

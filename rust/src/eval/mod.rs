@@ -1,0 +1,6 @@
+//! Reproduction harnesses for every table and figure of the paper's
+//! evaluation (DESIGN.md §4 experiment index).
+
+pub mod fig5;
+pub mod figures;
+pub mod timeline;

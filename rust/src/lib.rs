@@ -1,0 +1,51 @@
+//! # dpuconfig — RL-driven DPU configuration selection (paper reproduction)
+//!
+//! Reproduction of "DPUConfig: Optimizing ML Inference in FPGAs Using
+//! Reinforcement Learning" (Patras et al.). The crate is the Layer-3 rust
+//! coordinator of a three-layer rust+JAX stack:
+//!
+//! * [`runtime`] loads the AOT-compiled PPO policy (HLO text produced by
+//!   `python/compile/aot.py`) and executes it via the PJRT CPU client —
+//!   python never runs on the request path.
+//! * [`coordinator`] is the DPUConfig framework itself (paper Fig 4):
+//!   telemetry-driven decision engine, FPGA reconfiguration manager with
+//!   the paper's measured overheads, and an inference-serving loop.
+//! * [`dpusim`], [`models`], [`workload`], [`telemetry`] are the substrate:
+//!   a calibrated analytical simulator of the ZCU102 + DPUCZDX8G testbed
+//!   (see DESIGN.md §2 for the substitution rationale and §7 for the
+//!   calibration).
+//! * [`rl`] carries the environment-side RL pieces: Table-II state
+//!   featurization, Algorithm-1 reward bookkeeping, and the static
+//!   baseline policies of Fig 5.
+//! * [`sweep`] regenerates the paper's 2574-experiment measurement table;
+//!   [`eval`] reproduces the evaluation figures.
+
+pub mod cli;
+pub mod coordinator;
+pub mod csvutil;
+pub mod data;
+pub mod dpusim;
+pub mod eval;
+pub mod models;
+pub mod rl;
+pub mod runtime;
+pub mod sweep;
+pub mod telemetry;
+pub mod testutil;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Root of the repository (directory containing `data/` and `artifacts/`).
+///
+/// Resolution order: `$DPUCONFIG_ROOT`, then the crate manifest directory
+/// (the repo root — the crate keeps `Cargo.toml` at top level).
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(root) = std::env::var("DPUCONFIG_ROOT") {
+        return root.into();
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}

@@ -1,0 +1,384 @@
+//! dpuconfig CLI — the leader entrypoint of the DPUConfig framework.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md §4):
+//!
+//! ```text
+//! dpuconfig sweep   [--out data.csv]            # §V-A: 2574 experiments
+//! dpuconfig tables  [--table 1|2|3]             # Tables I-III
+//! dpuconfig fig1 | fig2 | fig3                  # characterization figures
+//! dpuconfig fig5    [--policy dpuconfig|optimal|max_fps|min_power|random]
+//! dpuconfig fig6    [--dwell 30]                # reconfiguration timeline
+//! dpuconfig serve   [--requests 64]             # threaded decision service
+//! dpuconfig decide  --model ResNet152 --state M # one decision, verbose
+//! ```
+
+use anyhow::{bail, Context, Result};
+use dpuconfig::cli::Args;
+use dpuconfig::coordinator::{DecisionService, Selector};
+use dpuconfig::data::{load_action_space, load_feature_schema, load_models};
+use dpuconfig::dpusim::DpuSim;
+use dpuconfig::eval::{fig5, figures, timeline};
+use dpuconfig::models::{kmeans_split, ModelVariant};
+use dpuconfig::rl::{Baseline, Featurizer};
+use dpuconfig::runtime::{default_policy_path, PolicyRuntime};
+use dpuconfig::telemetry::{PlatformState, Sampler};
+use dpuconfig::workload::WorkloadState;
+use dpuconfig::{repo_root, sweep};
+use std::time::Duration;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn selector_from(name: &str) -> Result<Selector> {
+    Ok(match name {
+        "dpuconfig" | "agent" => {
+            let rt = PolicyRuntime::load(&default_policy_path(1), 1)?;
+            Selector::Agent(rt)
+        }
+        "optimal" => Selector::Static(Baseline::Optimal),
+        "max_fps" => Selector::Static(Baseline::MaxFps),
+        "min_power" => Selector::Static(Baseline::MinPower),
+        "random" => Selector::Static(Baseline::Random),
+        other => bail!("unknown policy {other:?}"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.command.as_deref().unwrap_or("help");
+    match cmd {
+        "sweep" => {
+            let sim = DpuSim::load()?;
+            let rows = sweep::run(&sim)?;
+            let out = args.opt_or("out", "artifacts/measurements_rust.csv").to_string();
+            let path = repo_root().join(&out);
+            sweep::write_csv(&rows, &path)?;
+            println!("wrote {} rows to {}", rows.len(), path.display());
+        }
+        "tables" => {
+            let which = args.opt_or("table", "3");
+            match which {
+                "1" => print_table1()?,
+                "2" => print_table2()?,
+                "3" => {
+                    let sim = DpuSim::load()?;
+                    print!("{}", figures::render_table_iii(&figures::table_iii(&sim)?));
+                }
+                other => bail!("--table must be 1, 2 or 3 (got {other})"),
+            }
+        }
+        "fig1" => {
+            let sim = DpuSim::load()?;
+            for name in ["ResNet152", "MobileNetV2"] {
+                let v = find_variant(name, 0.0)?;
+                let b = figures::bars(&sim, &v, WorkloadState::None)?;
+                print!("{}", figures::render_bars(&format!("Fig1 {name} [N]"), &b));
+            }
+        }
+        "fig2" => {
+            let sim = DpuSim::load()?;
+            for name in ["MobileNetV2", "ResNet152"] {
+                for st in [WorkloadState::None, WorkloadState::Cpu, WorkloadState::Mem] {
+                    let v = find_variant(name, 0.0)?;
+                    let b = figures::bars(&sim, &v, st)?;
+                    print!(
+                        "{}",
+                        figures::render_bars(&format!("Fig2 {name} [{st}]"), &b)
+                    );
+                }
+            }
+        }
+        "fig3" => {
+            let sim = DpuSim::load()?;
+            for prune in [0.0, 0.25, 0.50] {
+                let v = find_variant("ResNet152", prune)?;
+                let b = figures::bars(&sim, &v, WorkloadState::None)?;
+                print!(
+                    "{}",
+                    figures::render_bars(
+                        &format!("Fig3 ResNet152 PR{} (acc {:.2}%)", (prune * 100.0) as u32, v.accuracy()),
+                        &b
+                    )
+                );
+            }
+        }
+        "fig5" => {
+            let sim = DpuSim::load()?;
+            let policy = args.opt_or("policy", "dpuconfig");
+            let mut engine =
+                dpuconfig::coordinator::DecisionEngine::new(selector_from(policy)?, 5);
+            let (cases, summaries) = fig5::run(
+                &sim,
+                &mut engine,
+                &[WorkloadState::Cpu, WorkloadState::Mem],
+                5,
+            )?;
+            print!("{}", fig5::render(&cases, &summaries));
+        }
+        "fig6" => {
+            let dwell = args.opt_f64("dwell", 30.0)?;
+            let policy = args.opt_or("policy", "dpuconfig");
+            let report = timeline::run(selector_from(policy)?, dwell)?;
+            print!("{}", timeline::render(&report));
+        }
+        "serve" => {
+            let n = args.opt_usize("requests", 64)?;
+            serve_demo(n)?;
+        }
+        "colocate" => {
+            // multi-tenant placement: agent-ranked greedy partition vs the
+            // exhaustive joint optimum (extension experiment E1)
+            let state: WorkloadState = args.opt_or("state", "N").parse()?;
+            colocate_demo(args.positional.clone(), state)?;
+        }
+        "metrics" => {
+            // serve the telemetry endpoint for a few seconds (demo)
+            let port = args.opt_u64("port", 0)? as u16;
+            let secs = args.opt_u64("secs", 5)?;
+            metrics_demo(port, secs)?;
+        }
+        "profile" => {
+            // vaitrace-style layer profile on a given configuration
+            let sim = DpuSim::load()?;
+            let v = find_variant(args.opt_or("model", "ResNet152"), args.opt_f64("prune", 0.0)?)?;
+            let size_name = args.opt_or("size", "B4096").to_string();
+            let state: WorkloadState = args.opt_or("state", "N").parse()?;
+            let size = sim
+                .sizes()
+                .get(&size_name)
+                .with_context(|| format!("unknown size {size_name}"))?
+                .clone();
+            let trace = dpuconfig::models::layers::profile(&sim, &v, &size, state)?;
+            print!(
+                "{}",
+                dpuconfig::models::layers::render(&v.name(), &format!("{size_name}_1 [{state}]"), &trace)
+            );
+        }
+        "decide" => {
+            decide_verbose(
+                args.opt_or("model", "ResNet152"),
+                args.opt_f64("prune", 0.0)?,
+                args.opt_or("state", "N").parse()?,
+            )?;
+        }
+        "help" | _ => {
+            println!("dpuconfig {} — see module docs / README", dpuconfig::version());
+            println!("subcommands: sweep tables fig1 fig2 fig3 fig5 fig6 serve decide colocate metrics profile");
+        }
+    }
+    Ok(())
+}
+
+fn colocate_demo(mut names: Vec<String>, state: WorkloadState) -> Result<()> {
+    use dpuconfig::coordinator::placement;
+    use dpuconfig::dpusim::multi;
+    if names.is_empty() {
+        names = vec!["InceptionV3".into(), "MobileNetV2".into()];
+    }
+    anyhow::ensure!(names.len() <= 3, "colocate supports up to 3 tenants");
+    let sim = DpuSim::load()?;
+    let rt = PolicyRuntime::load(&default_policy_path(1), 1)?;
+    let featurizer = Featurizer::new();
+    let mut sampler = Sampler::from_calibration(21, sim.calibration());
+    let platform = PlatformState {
+        workload: state,
+        dpu_traffic_bps: 0.0,
+        host_cpu_util: 0.0,
+        p_fpga: 2.2,
+        p_arm: 1.5,
+    };
+    let mut requests = Vec::new();
+    let mut models = Vec::new();
+    for n in &names {
+        let v = find_variant(n, 0.0)?;
+        let obs = featurizer.observe(&sampler.sample(0, &platform), &v);
+        let prefs = placement::preference_order(&rt.infer(&obs)?);
+        requests.push((v.clone(), prefs));
+        models.push(v);
+    }
+    let placed = placement::greedy_place(&sim, &requests)?
+        .context("models do not fit the fabric together")?;
+    let tenants = multi::evaluate_shared(&sim, &placed, state)?;
+    println!("agent-ranked greedy placement [{}]:", state);
+    for (p, m) in placed.iter().zip(&tenants) {
+        println!(
+            "  {:<40} {:>7.1} fps  {:>5.2} W  {}",
+            p.notation(),
+            m.fps,
+            m.p_fpga,
+            if m.meets_constraint { "ok" } else { "<30fps" }
+        );
+    }
+    let g_ppw = multi::aggregate_ppw(&sim, &tenants);
+    println!("aggregate: {:.2} fps/W", g_ppw);
+    if models.len() <= 2 {
+        if let Some((best, e_ppw)) = placement::exhaustive_place(&sim, &models, state)? {
+            let names: Vec<String> = best.iter().map(|p| p.notation()).collect();
+            println!(
+                "exhaustive joint optimum: {:.2} fps/W via {} (greedy at {:.1}%)",
+                e_ppw,
+                names.join(" + "),
+                100.0 * g_ppw / e_ppw
+            );
+        }
+    }
+    Ok(())
+}
+
+fn metrics_demo(port: u16, secs: u64) -> Result<()> {
+    use dpuconfig::telemetry::Exporter;
+    let sim = DpuSim::load()?;
+    let exporter = Exporter::spawn(port)?;
+    println!("serving http://{}/metrics for {secs}s", exporter.addr);
+    let mut sampler = Sampler::from_calibration(1, sim.calibration());
+    let slot = exporter.slot();
+    let t0 = std::time::Instant::now();
+    let mut i = 0u64;
+    while t0.elapsed().as_secs() < secs {
+        let st = [WorkloadState::None, WorkloadState::Cpu, WorkloadState::Mem][(i / 9) as usize % 3];
+        let p = PlatformState {
+            workload: st,
+            dpu_traffic_bps: 1e9,
+            host_cpu_util: 5.0,
+            p_fpga: 6.0,
+            p_arm: 2.0,
+        };
+        slot.publish(sampler.sample(i * 333_000, &p));
+        i += 1;
+        std::thread::sleep(Duration::from_millis(333)); // 3 Hz, as in the paper
+    }
+    Ok(())
+}
+
+fn find_variant(name: &str, prune: f64) -> Result<ModelVariant> {
+    let m = load_models()?
+        .into_iter()
+        .find(|m| m.name == name)
+        .with_context(|| format!("unknown model {name}"))?;
+    Ok(ModelVariant::new(m, prune))
+}
+
+fn print_table1() -> Result<()> {
+    println!("=== Table I — DPU configurations and the 26-action space");
+    let sizes = dpuconfig::data::load_dpu_sizes()?;
+    let actions = load_action_space()?;
+    let mut names: Vec<_> = sizes.values().collect();
+    names.sort_by_key(|s| s.peak_macs);
+    for s in names {
+        let selected: Vec<String> = actions
+            .iter()
+            .filter(|a| a.size == s.name)
+            .map(|a| a.instances.to_string())
+            .collect();
+        println!(
+            "{:>6} ({}x{}x{})  max {}  selected instances: {{{}}}",
+            s.name,
+            s.pp,
+            s.icp,
+            s.ocp,
+            s.max_instances,
+            selected.join(",")
+        );
+    }
+    println!("total actions: {}", actions.len());
+    Ok(())
+}
+
+fn print_table2() -> Result<()> {
+    println!("=== Table II — state features");
+    for f in load_feature_schema()? {
+        println!("{:>2}  {:<8} {}", f.index, f.kind, f.name);
+    }
+    let models = load_models()?;
+    println!("\nk-means GMAC split (paper §V-A):");
+    for (name, cluster) in kmeans_split(&models) {
+        let split = models.iter().find(|m| m.name == name).unwrap().split.clone();
+        println!("{name:<18} {cluster:<7} ({split})");
+    }
+    Ok(())
+}
+
+fn serve_demo(n: usize) -> Result<()> {
+    let service = DecisionService::spawn(default_policy_path(8), 8, Duration::from_millis(2))?;
+    println!("decision service up (microbatch {})", service.batch);
+    let sim = DpuSim::load()?;
+    let mut sampler = Sampler::from_calibration(11, sim.calibration());
+    let featurizer = Featurizer::new();
+    let variants = dpuconfig::models::load_variants()?;
+    let start = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let v = variants[i % variants.len()].clone();
+        let st = [WorkloadState::None, WorkloadState::Cpu, WorkloadState::Mem][i % 3];
+        let platform = PlatformState {
+            workload: st,
+            dpu_traffic_bps: 0.0,
+            host_cpu_util: 0.0,
+            p_fpga: 2.2,
+            p_arm: 1.5,
+        };
+        let obs = featurizer.observe(&sampler.sample(0, &platform), &v);
+        let client = service.client();
+        handles.push(std::thread::spawn(move || {
+            client.decide(obs).map(|o| o.argmax())
+        }));
+    }
+    let actions = load_action_space()?;
+    let mut counts = vec![0usize; actions.len()];
+    for h in handles {
+        let a = h.join().unwrap()?;
+        counts[a] += 1;
+    }
+    let dt = start.elapsed();
+    println!(
+        "{n} decisions in {:?} ({:.1} decisions/s, microbatch {})",
+        dt,
+        n as f64 / dt.as_secs_f64(),
+        service.batch
+    );
+    for (i, c) in counts.iter().enumerate() {
+        if *c > 0 {
+            println!("{:>9}: {}", actions[i].notation(), c);
+        }
+    }
+    Ok(())
+}
+
+fn decide_verbose(model: &str, prune: f64, state: WorkloadState) -> Result<()> {
+    let sim = DpuSim::load()?;
+    let v = find_variant(model, prune)?;
+    let rt = PolicyRuntime::load(&default_policy_path(1), 1)?;
+    let mut sampler = Sampler::from_calibration(1, sim.calibration());
+    let platform = PlatformState {
+        workload: state,
+        dpu_traffic_bps: 0.0,
+        host_cpu_util: 0.0,
+        p_fpga: 2.2,
+        p_arm: 1.5,
+    };
+    let obs = Featurizer::new().observe(&sampler.sample(0, &platform), &v);
+    let out = rt.infer(&obs)?;
+    let a = out.argmax();
+    let opt = sim.optimal_action(&v, state)?;
+    let rows = sim.sweep_variant(&v, state)?;
+    println!("model {} [{}]", v.name(), state);
+    println!(
+        "agent:   {} (value {:.3})  -> fps {:.1}, ppw {:.2}",
+        sim.actions()[a].notation(),
+        out.value,
+        rows[a].fps,
+        rows[a].ppw
+    );
+    println!(
+        "optimal: {}              -> fps {:.1}, ppw {:.2}  (agent at {:.1}% of optimal)",
+        sim.actions()[opt].notation(),
+        rows[opt].fps,
+        rows[opt].ppw,
+        100.0 * rows[a].ppw / rows[opt].ppw
+    );
+    Ok(())
+}

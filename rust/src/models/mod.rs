@@ -1,0 +1,109 @@
+//! Model zoo: Table III base models, pruned variants, and the k-means
+//! GMAC train/test split of §V-A.
+
+pub mod layers;
+pub mod pruning;
+
+use crate::data::{load_models, ModelSpec};
+use anyhow::Result;
+
+pub use pruning::{ModelVariant, PRUNE_RATIOS};
+
+/// All 33 model variants (11 base models x 3 pruning ratios), base-model
+/// file order, prune-ratio minor.
+pub fn load_variants() -> Result<Vec<ModelVariant>> {
+    let mut out = Vec::new();
+    for base in load_models()? {
+        for &p in PRUNE_RATIOS {
+            out.push(ModelVariant::new(base.clone(), p));
+        }
+    }
+    Ok(out)
+}
+
+/// k-means (k=3) over GMAC -> "small" / "medium" / "large" clusters.
+/// Deterministic: centroids start at min/median/max, exactly mirroring
+/// `python/compile/dpusim.py::kmeans_split`.
+pub fn kmeans_split(models: &[ModelSpec]) -> Vec<(String, &'static str)> {
+    let mut g: Vec<f64> = models.iter().map(|m| m.gmac).collect();
+    g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut cents = [g[0], g[g.len() / 2], g[g.len() - 1]];
+    for _ in 0..50 {
+        let mut buckets: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for &x in &g {
+            let i = nearest(&cents, x);
+            buckets[i].push(x);
+        }
+        let new: Vec<f64> = buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                if b.is_empty() {
+                    cents[i]
+                } else {
+                    b.iter().sum::<f64>() / b.len() as f64
+                }
+            })
+            .collect();
+        let converged = new
+            .iter()
+            .zip(cents.iter())
+            .all(|(a, b)| (a - b).abs() < 1e-12);
+        cents.copy_from_slice(&new);
+        if converged {
+            break;
+        }
+    }
+    // rank clusters by centroid -> small/medium/large
+    let mut order: Vec<usize> = (0..3).collect();
+    order.sort_by(|&a, &b| cents[a].partial_cmp(&cents[b]).unwrap());
+    let names = ["small", "medium", "large"];
+    let mut rank = ["", "", ""];
+    for (i, &c) in order.iter().enumerate() {
+        rank[c] = names[i];
+    }
+    models
+        .iter()
+        .map(|m| (m.name.clone(), rank[nearest(&cents, m.gmac)]))
+        .collect()
+}
+
+fn nearest(cents: &[f64; 3], x: f64) -> usize {
+    let mut best = 0;
+    for i in 1..3 {
+        if (x - cents[i]).abs() < (x - cents[best]).abs() {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_count_is_33() {
+        assert_eq!(load_variants().unwrap().len(), 33);
+    }
+
+    #[test]
+    fn kmeans_puts_one_test_model_per_cluster() {
+        // paper §V-A: the test set holds one representative per cluster —
+        // RegNetX (small), InceptionV3 (medium), ResNet152 (large).
+        let models = load_models().unwrap();
+        let split = kmeans_split(&models);
+        let get = |name: &str| split.iter().find(|(n, _)| n == name).unwrap().1;
+        let (a, b, c) = (
+            get("RegNetX_400MF"),
+            get("InceptionV3"),
+            get("ResNet152"),
+        );
+        // the three held-out models land in three distinct clusters
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_ne!(a, c);
+        assert_eq!(get("MobileNetV2"), "small");
+        assert_eq!(get("InceptionV4"), "large");
+    }
+}

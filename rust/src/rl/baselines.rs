@@ -1,0 +1,136 @@
+//! Static baseline policies of the paper's Fig 5, plus Random for
+//! ablation: Optimal (oracle over the exhaustive sweep), MaxFPS
+//! ("typically B4096_1"), MinPower (B512_1).
+
+use crate::dpusim::DpuSim;
+use crate::models::ModelVariant;
+use crate::workload::{WorkloadState, XorShift64};
+use anyhow::Result;
+
+/// A configuration-selection policy that does not use the RL agent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// Oracle: best PPW subject to the FPS constraint (fallback:
+    /// unconditional best PPW — paper §V-B).
+    Optimal,
+    /// The configuration with the maximum aggregate FPS.
+    MaxFps,
+    /// The configuration with the minimum FPGA power.
+    MinPower,
+    /// Uniformly random action (sanity floor, not in the paper).
+    Random,
+}
+
+pub const FIG5_BASELINES: [Baseline; 3] =
+    [Baseline::Optimal, Baseline::MaxFps, Baseline::MinPower];
+
+impl Baseline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::Optimal => "optimal",
+            Baseline::MaxFps => "max_fps",
+            Baseline::MinPower => "min_power",
+            Baseline::Random => "random",
+        }
+    }
+
+    /// Select an action id for (model, state).
+    pub fn select(
+        &self,
+        sim: &DpuSim,
+        v: &ModelVariant,
+        state: WorkloadState,
+        rng: Option<&mut XorShift64>,
+    ) -> Result<usize> {
+        match self {
+            Baseline::Optimal => sim.optimal_action(v, state),
+            Baseline::MaxFps => sim.max_fps_action(v, state),
+            Baseline::MinPower => sim.min_power_action(v, state),
+            Baseline::Random => {
+                let n = sim.actions().len();
+                let rng = rng.expect("Random baseline needs an rng");
+                Ok(rng.below(n))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_models;
+
+    fn sim() -> DpuSim {
+        DpuSim::load().unwrap()
+    }
+
+    fn variant(name: &str) -> ModelVariant {
+        let m = load_models()
+            .unwrap()
+            .into_iter()
+            .find(|m| m.name == name)
+            .unwrap();
+        ModelVariant::new(m, 0.0)
+    }
+
+    #[test]
+    fn min_power_is_b512_1() {
+        // paper §V-B: "the minimum-power configuration (B512_1)"
+        let s = sim();
+        for st in crate::workload::ALL_STATES {
+            for name in ["MobileNetV2", "ResNet152", "InceptionV3"] {
+                let a = Baseline::MinPower
+                    .select(&s, &variant(name), st, None)
+                    .unwrap();
+                assert_eq!(s.actions()[a].notation(), "B512_1", "{name}/{st}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_fps_is_large_dpu() {
+        let s = sim();
+        let a = Baseline::MaxFps
+            .select(&s, &variant("ResNet152"), WorkloadState::None, None)
+            .unwrap();
+        let act = &s.actions()[a];
+        assert_eq!(act.size, "B4096", "max-FPS should be a B4096 config, got {}", act.notation());
+    }
+
+    #[test]
+    fn optimal_beats_static_baselines_on_ppw() {
+        let s = sim();
+        let v = variant("InceptionV3");
+        for st in crate::workload::ALL_STATES {
+            let rows = s.sweep_variant(&v, st).unwrap();
+            let opt = Baseline::Optimal.select(&s, &v, st, None).unwrap();
+            for b in [Baseline::MaxFps, Baseline::MinPower] {
+                let a = b.select(&s, &v, st, None).unwrap();
+                assert!(
+                    rows[opt].ppw >= rows[a].ppw - 1e-12,
+                    "{}: optimal {} < {} {}",
+                    st,
+                    rows[opt].ppw,
+                    b.name(),
+                    rows[a].ppw
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_is_uniformish() {
+        let s = sim();
+        let v = variant("ResNet18");
+        let mut rng = XorShift64::new(9);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            seen.insert(
+                Baseline::Random
+                    .select(&s, &v, WorkloadState::None, Some(&mut rng))
+                    .unwrap(),
+            );
+        }
+        assert!(seen.len() > 20, "random policy must cover the action space");
+    }
+}

@@ -1,0 +1,89 @@
+//! Table-II state featurization: telemetry sample + model statics ->
+//! the 22-feature observation consumed by the policy network.
+//!
+//! The feature ordering is the `data/feature_schema.csv` contract shared
+//! with the python training path — the exported policy was trained on
+//! exactly this layout (whitening statistics are folded into the HLO).
+
+use crate::dpusim::FPS_CONSTRAINT;
+use crate::models::ModelVariant;
+use crate::telemetry::Sample;
+
+/// Number of state features (Table II).
+pub const OBS_DIM: usize = 22;
+
+/// Assembles observations in schema order.
+#[derive(Debug, Default, Clone)]
+pub struct Featurizer;
+
+impl Featurizer {
+    pub fn new() -> Self {
+        Featurizer
+    }
+
+    /// Build the observation for deciding a configuration for `model`
+    /// given the latest telemetry `sample`.
+    pub fn observe(&self, sample: &Sample, model: &ModelVariant) -> [f32; OBS_DIM] {
+        let mut o = [0f32; OBS_DIM];
+        for i in 0..4 {
+            o[i] = sample.cpu[i] as f32;
+        }
+        for i in 0..5 {
+            o[4 + i] = sample.memr[i] as f32;
+            o[9 + i] = sample.memw[i] as f32;
+        }
+        o[14] = sample.p_fpga as f32;
+        o[15] = sample.p_arm as f32;
+        o[16] = model.gmac() as f32;
+        o[17] = model.ldfm_mb() as f32;
+        o[18] = model.ldwb_mb() as f32;
+        o[19] = model.stfm_mb() as f32;
+        o[20] = model.params_m() as f32;
+        o[21] = FPS_CONSTRAINT as f32;
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_models;
+    use crate::models::ModelVariant;
+
+    fn sample() -> Sample {
+        Sample {
+            t_us: 0,
+            cpu: [10.0, 20.0, 30.0, 40.0],
+            memr: [1.0, 2.0, 3.0, 4.0, 5.0],
+            memw: [6.0, 7.0, 8.0, 9.0, 10.0],
+            p_fpga: 7.5,
+            p_arm: 2.5,
+        }
+    }
+
+    #[test]
+    fn layout_matches_schema() {
+        let m = load_models().unwrap().into_iter().next().unwrap();
+        let v = ModelVariant::new(m, 0.0);
+        let o = Featurizer::new().observe(&sample(), &v);
+        assert_eq!(o[0], 10.0);
+        assert_eq!(o[3], 40.0);
+        assert_eq!(o[4], 1.0);
+        assert_eq!(o[9], 6.0);
+        assert_eq!(o[14], 7.5);
+        assert_eq!(o[15], 2.5);
+        assert!((o[16] - v.gmac() as f32).abs() < 1e-6);
+        assert_eq!(o[21], 30.0);
+    }
+
+    #[test]
+    fn static_features_respond_to_pruning() {
+        let m = load_models().unwrap().into_iter().next().unwrap();
+        let f = Featurizer::new();
+        let o0 = f.observe(&sample(), &ModelVariant::new(m.clone(), 0.0));
+        let o50 = f.observe(&sample(), &ModelVariant::new(m, 0.5));
+        assert!(o50[16] < o0[16]); // GMAC shrinks
+        assert!(o50[20] < o0[20]); // params shrink
+        assert_eq!(o50[0], o0[0]); // dynamic features unchanged
+    }
+}

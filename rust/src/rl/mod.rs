@@ -1,0 +1,10 @@
+//! Environment-side RL pieces: Table-II featurization, Algorithm-1 reward
+//! bookkeeping, and the static baseline policies of Fig 5.
+
+pub mod baselines;
+pub mod features;
+pub mod reward;
+
+pub use baselines::Baseline;
+pub use features::Featurizer;
+pub use reward::RewardCalculator;

@@ -1,0 +1,171 @@
+//! Algorithm 1: context-aware PPW reward with blended baselines.
+//!
+//! Semantics-identical mirror of `python/compile/reward.py` (same bucket
+//! boundaries, same update order: reward is computed against the baselines
+//! *before* they absorb the new sample); pinned by
+//! `data/golden_reward.csv` from both test suites.
+
+use std::collections::HashMap;
+
+/// Default FPS constraint (C_PERF).
+pub const FPS_CONSTRAINT_DEFAULT: f64 = 30.0;
+/// Blend factor between local and global baselines.
+pub const LAMBDA: f64 = 0.3;
+/// Reward scale.
+pub const ALPHA: f64 = 1.0;
+
+/// Context bucket key (Algorithm 1 line 10).
+pub type ContextKey = (u8, u8, u8, u8);
+
+/// Bucket the workload-dependent state: CPU util in 25% buckets, memory
+/// traffic in 2 GB/s buckets, GMACs and model data in log2 buckets.
+pub fn context_key(cpu_util: f64, mem_util_gbs: f64, gmac: f64, model_data_mb: f64) -> ContextKey {
+    let cpu_b = ((cpu_util / 25.0) as i64).clamp(0, 3) as u8;
+    let mem_b = ((mem_util_gbs / 2.0) as i64).clamp(0, 7) as u8;
+    let gmac_b = ((gmac.max(0.125).log2() + 3.0).floor() as i64).clamp(0, 7) as u8;
+    let data_b = (model_data_mb.max(1.0).log2().floor() as i64).clamp(0, 7) as u8;
+    (cpu_b, mem_b, gmac_b, data_b)
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct RunningMean {
+    count: u64,
+    mean: f64,
+}
+
+impl RunningMean {
+    fn update(&mut self, x: f64) {
+        self.count += 1;
+        self.mean += (x - self.mean) / self.count as f64;
+    }
+}
+
+/// Stateful Algorithm 1.
+#[derive(Debug, Default)]
+pub struct RewardCalculator {
+    ctx_mean: HashMap<ContextKey, RunningMean>,
+    global_mean: RunningMean,
+}
+
+/// The measured sample fed to the reward (Algorithm 1 inputs).
+#[derive(Debug, Clone, Copy)]
+pub struct Outcome {
+    pub measured_fps: f64,
+    pub fpga_power: f64,
+    pub cpu_util: f64,
+    pub mem_util_gbs: f64,
+    pub gmac: f64,
+    pub model_data_mb: f64,
+    pub fps_constraint: f64,
+}
+
+impl RewardCalculator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of context buckets populated so far.
+    pub fn contexts(&self) -> usize {
+        self.ctx_mean.len()
+    }
+
+    /// Global mean PPW over all constraint-meeting samples.
+    pub fn global_mean_ppw(&self) -> f64 {
+        self.global_mean.mean
+    }
+
+    /// Algorithm 1 (CalculateReward).
+    pub fn calculate(&mut self, o: &Outcome) -> f64 {
+        let ppw = o.measured_fps / o.fpga_power;
+        if o.measured_fps < o.fps_constraint {
+            // constraint violation: flat penalty, baselines untouched
+            return -1.0;
+        }
+        let key = context_key(o.cpu_util, o.mem_util_gbs, o.gmac, o.model_data_mb);
+        let b_local = match self.ctx_mean.get(&key) {
+            Some(m) if m.count > 0 => m.mean,
+            _ => ppw,
+        };
+        let b_global = if self.global_mean.count > 0 {
+            self.global_mean.mean
+        } else {
+            ppw
+        };
+        let baseline = (1.0 - LAMBDA) * b_local + LAMBDA * b_global;
+        let r = ALPHA * (ppw - baseline) / baseline.abs().max(1.0);
+        let r = r.tanh(); // bounded reward (paper refs [21]-[23])
+
+        self.ctx_mean.entry(key).or_default().update(ppw);
+        self.global_mean.update(ppw);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(fps: f64, power: f64) -> Outcome {
+        Outcome {
+            measured_fps: fps,
+            fpga_power: power,
+            cpu_util: 50.0,
+            mem_util_gbs: 3.0,
+            gmac: 4.0,
+            model_data_mb: 40.0,
+            fps_constraint: FPS_CONSTRAINT_DEFAULT,
+        }
+    }
+
+    #[test]
+    fn violation_returns_minus_one_and_keeps_baselines() {
+        let mut rc = RewardCalculator::new();
+        assert_eq!(rc.calculate(&outcome(10.0, 5.0)), -1.0);
+        assert_eq!(rc.contexts(), 0, "violations must not update baselines");
+    }
+
+    #[test]
+    fn first_sample_in_context_is_zero_reward() {
+        // baseline == ppw on the very first sample -> r = tanh(0) = 0
+        let mut rc = RewardCalculator::new();
+        assert_eq!(rc.calculate(&outcome(60.0, 6.0)), 0.0);
+        assert_eq!(rc.contexts(), 1);
+    }
+
+    #[test]
+    fn better_than_baseline_is_positive_worse_is_negative() {
+        let mut rc = RewardCalculator::new();
+        rc.calculate(&outcome(60.0, 6.0)); // establish baseline ppw=10
+        let up = rc.calculate(&outcome(90.0, 6.0)); // ppw 15
+        assert!(up > 0.0, "{up}");
+        let down = rc.calculate(&outcome(40.0, 6.0)); // ppw ~6.7 < mean
+        assert!(down < 0.0, "{down}");
+    }
+
+    #[test]
+    fn rewards_are_bounded() {
+        let mut rc = RewardCalculator::new();
+        rc.calculate(&outcome(31.0, 31.0)); // ppw = 1
+        let r = rc.calculate(&outcome(1e6, 0.1)); // absurd outlier
+        assert!(r <= 1.0 && r > 0.9, "squashed but near 1: {r}");
+    }
+
+    #[test]
+    fn context_buckets_separate_states() {
+        // N-state (low cpu, low mem) and C-state (high cpu) must land in
+        // different buckets for the same model
+        let a = context_key(5.0, 0.1, 4.0, 40.0);
+        let b = context_key(95.0, 0.1, 4.0, 40.0);
+        let c = context_key(60.0, 8.0, 4.0, 40.0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn small_and_large_models_bucket_apart() {
+        let small = context_key(5.0, 0.1, 0.3, 5.74); // MobileNetV2
+        let large = context_key(5.0, 0.1, 11.54, 76.52); // ResNet152
+        assert_ne!(small, large);
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime: load the AOT-compiled policy (HLO text) and execute it —
+//! the only place the crate touches XLA. Python is never on this path;
+//! the artifact was produced once by `make artifacts`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
+//! -> XlaComputation -> PjRtClient::cpu().compile -> execute.
+
+use crate::rl::features::OBS_DIM;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Number of policy outputs (actions) — must match data/action_space.csv.
+pub const NUM_ACTIONS: usize = 26;
+
+/// A compiled policy executable bound to a PJRT client.
+pub struct PolicyRuntime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+/// One policy inference result for a single observation.
+#[derive(Debug, Clone)]
+pub struct PolicyOutput {
+    /// Unnormalized action preferences (26).
+    pub logits: Vec<f32>,
+    /// State-value estimate.
+    pub value: f32,
+}
+
+impl PolicyOutput {
+    /// Greedy action (argmax over logits).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for i in 1..self.logits.len() {
+            if self.logits[i] > self.logits[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Greedy action restricted to `allowed` (used when the reconfig
+    /// manager masks configurations, e.g. during partial-bitstream locks).
+    pub fn argmax_masked(&self, allowed: &[bool]) -> Option<usize> {
+        assert_eq!(allowed.len(), self.logits.len());
+        let mut best: Option<usize> = None;
+        for i in 0..self.logits.len() {
+            if allowed[i] && best.map_or(true, |b| self.logits[i] > self.logits[b]) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Softmax probabilities (diagnostics / stochastic serving).
+    pub fn probs(&self) -> Vec<f32> {
+        let m = self.logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = self.logits.iter().map(|&l| (l - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        exps.into_iter().map(|e| e / z).collect()
+    }
+}
+
+impl PolicyRuntime {
+    /// Load + compile a policy artifact produced by `python/compile/aot.py`.
+    /// `batch` must match the batch dimension the artifact was lowered with
+    /// (policy.hlo.txt -> 1, policy_b8.hlo.txt -> 8).
+    pub fn load(path: &Path, batch: usize) -> Result<PolicyRuntime> {
+        anyhow::ensure!(
+            path.exists(),
+            "policy artifact {} not found — run `make artifacts` first",
+            path.display()
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling policy HLO")?;
+        Ok(PolicyRuntime { client, exe, batch })
+    }
+
+    /// The artifact's fixed batch size.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run the policy on a batch of observations (rows of OBS_DIM f32).
+    /// `obs.len()` must be <= batch; short batches are zero-padded.
+    pub fn infer_batch(&self, obs: &[[f32; OBS_DIM]]) -> Result<Vec<PolicyOutput>> {
+        anyhow::ensure!(
+            !obs.is_empty() && obs.len() <= self.batch,
+            "batch must be 1..={}, got {}",
+            self.batch,
+            obs.len()
+        );
+        let mut flat = vec![0f32; self.batch * OBS_DIM];
+        for (i, row) in obs.iter().enumerate() {
+            flat[i * OBS_DIM..(i + 1) * OBS_DIM].copy_from_slice(row);
+        }
+        // build the (batch, OBS_DIM) literal in one step — vec1+reshape
+        // allocates and copies twice (EXPERIMENTS.md §Perf)
+        let bytes = unsafe {
+            std::slice::from_raw_parts(flat.as_ptr() as *const u8, flat.len() * 4)
+        };
+        let input = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[self.batch, OBS_DIM],
+            bytes,
+        )
+        .context("creating observation literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()
+            .context("fetching policy output")?;
+        // aot.py lowers with return_tuple=True: (logits, value)
+        let (logits_lit, value_lit) = result.to_tuple2().context("unpacking policy tuple")?;
+        let logits = logits_lit.to_vec::<f32>()?;
+        let values = value_lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            logits.len() == self.batch * NUM_ACTIONS && values.len() == self.batch,
+            "unexpected policy output shape: {} logits, {} values",
+            logits.len(),
+            values.len()
+        );
+        Ok(obs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| PolicyOutput {
+                logits: logits[i * NUM_ACTIONS..(i + 1) * NUM_ACTIONS].to_vec(),
+                value: values[i],
+            })
+            .collect())
+    }
+
+    /// Single-observation convenience wrapper.
+    pub fn infer(&self, obs: &[f32; OBS_DIM]) -> Result<PolicyOutput> {
+        Ok(self.infer_batch(std::slice::from_ref(obs))?.remove(0))
+    }
+}
+
+/// Default artifact location for a given batch size.
+pub fn default_policy_path(batch: usize) -> std::path::PathBuf {
+    let name = if batch == 1 {
+        "policy.hlo.txt".to_string()
+    } else {
+        format!("policy_b{batch}.hlo.txt")
+    };
+    crate::repo_root().join("artifacts").join(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_mask() {
+        let out = PolicyOutput {
+            logits: vec![0.1, 2.0, -1.0, 2.0],
+            value: 0.0,
+        };
+        assert_eq!(out.argmax(), 1, "first max wins on ties");
+        let masked = out.argmax_masked(&[true, false, true, false]);
+        assert_eq!(masked, Some(0));
+        assert_eq!(out.argmax_masked(&[false; 4]), None);
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        let out = PolicyOutput {
+            logits: vec![1.0, 2.0, 3.0],
+            value: 0.0,
+        };
+        let p = out.probs();
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+}

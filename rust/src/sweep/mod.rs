@@ -1,0 +1,118 @@
+//! The exhaustive measurement sweep of §V-A: 26 configs x 11 models x 3
+//! pruning ratios x 3 workload states = 2574 experiments. This is what
+//! the paper ran on hardware for days and what the PPO agent trains on;
+//! here it regenerates from the calibrated substrate in milliseconds.
+
+use crate::csvutil::{fmt_f64, Writer};
+use crate::dpusim::DpuSim;
+use crate::models::load_variants;
+use crate::workload::ALL_STATES;
+use anyhow::Result;
+use std::path::Path;
+
+/// One sweep row.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub model: String,
+    pub prune: f64,
+    pub state: &'static str,
+    pub action_id: usize,
+    pub notation: String,
+    pub latency_ms: f64,
+    pub fps: f64,
+    pub p_fpga: f64,
+    pub p_arm: f64,
+    pub ppw: f64,
+    pub meets_constraint: bool,
+}
+
+/// Run the full 2574-experiment sweep.
+pub fn run(sim: &DpuSim) -> Result<Vec<SweepRow>> {
+    let mut rows = Vec::with_capacity(2574);
+    for v in load_variants()? {
+        for st in ALL_STATES {
+            for a in sim.actions() {
+                let m = sim.evaluate(&v, &a.size, a.instances, st)?;
+                rows.push(SweepRow {
+                    model: v.base.name.clone(),
+                    prune: v.prune,
+                    state: st.letter(),
+                    action_id: a.id,
+                    notation: a.notation(),
+                    latency_ms: m.latency_ms,
+                    fps: m.fps,
+                    p_fpga: m.p_fpga,
+                    p_arm: m.p_arm,
+                    ppw: m.ppw,
+                    meets_constraint: m.meets_constraint,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Write the sweep as CSV (same columns as the python generator).
+pub fn write_csv(rows: &[SweepRow], path: &Path) -> Result<()> {
+    let mut w = Writer::new(&[
+        "model",
+        "prune",
+        "state",
+        "action_id",
+        "notation",
+        "latency_ms",
+        "fps",
+        "p_fpga",
+        "p_arm",
+        "ppw",
+        "meets_constraint",
+    ]);
+    for r in rows {
+        w.row(&[
+            r.model.clone(),
+            fmt_f64(r.prune),
+            r.state.to_string(),
+            r.action_id.to_string(),
+            r.notation.clone(),
+            fmt_f64(r.latency_ms),
+            fmt_f64(r.fps),
+            fmt_f64(r.p_fpga),
+            fmt_f64(r.p_arm),
+            fmt_f64(r.ppw),
+            (r.meets_constraint as u8).to_string(),
+        ]);
+    }
+    w.write(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_exactly_2574_experiments() {
+        // paper §V-A: "In total, 2574 experiments were executed"
+        let sim = DpuSim::load().unwrap();
+        let rows = run(&sim).unwrap();
+        assert_eq!(rows.len(), 2574);
+        // 26 x 33 x 3 decomposition
+        assert_eq!(rows.iter().filter(|r| r.state == "N").count(), 858);
+        assert_eq!(
+            rows.iter()
+                .filter(|r| r.model == "ResNet152" && r.prune == 0.0)
+                .count(),
+            78
+        );
+    }
+
+    #[test]
+    fn all_rows_physical() {
+        let sim = DpuSim::load().unwrap();
+        for r in run(&sim).unwrap() {
+            assert!(r.fps > 0.0, "{r:?}");
+            assert!(r.p_fpga > 0.0 && r.p_fpga < 40.0, "implausible power {r:?}");
+            assert!(r.latency_ms > 0.0);
+            assert!((r.ppw - r.fps / r.p_fpga).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Prometheus exposition endpoint — the stand-in for the node-exporter
+//! instance the paper runs on the ZCU102 (§V-A). Serves the latest
+//! telemetry sample over HTTP on a background thread; scrape with
+//! `curl http://127.0.0.1:<port>/metrics`.
+
+use crate::telemetry::{prometheus_text, Sample};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Shared slot the sampler publishes into.
+#[derive(Clone, Default)]
+pub struct MetricsSlot(Arc<Mutex<Option<Sample>>>);
+
+impl MetricsSlot {
+    pub fn publish(&self, s: Sample) {
+        *self.0.lock().unwrap() = Some(s);
+    }
+
+    pub fn latest(&self) -> Option<Sample> {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// A running exporter endpoint.
+pub struct Exporter {
+    pub addr: std::net::SocketAddr,
+    slot: MetricsSlot,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Exporter {
+    /// Bind on 127.0.0.1:`port` (0 = ephemeral) and serve `/metrics`.
+    pub fn spawn(port: u16) -> Result<Exporter> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", port)).context("binding exporter port")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let slot = MetricsSlot::default();
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let worker = {
+            let slot = slot.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("metrics-exporter".into())
+                .spawn(move || {
+                    while !shutdown.load(std::sync::atomic::Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let _ = handle(stream, &slot);
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(std::time::Duration::from_millis(5));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })?
+        };
+        Ok(Exporter {
+            addr,
+            slot,
+            shutdown,
+            worker: Some(worker),
+        })
+    }
+
+    /// The slot the telemetry loop publishes samples into.
+    pub fn slot(&self) -> MetricsSlot {
+        self.slot.clone()
+    }
+}
+
+impl Drop for Exporter {
+    fn drop(&mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream, slot: &MetricsSlot) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let (status, body) = if req.starts_with("GET /metrics") {
+        match slot.latest() {
+            Some(s) => ("200 OK", prometheus_text(&s)),
+            None => ("200 OK", String::from("# no samples yet\n")),
+        }
+    } else if req.starts_with("GET /healthz") {
+        ("200 OK", String::from("ok\n"))
+    } else {
+        ("404 Not Found", String::from("not found\n"))
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Sample {
+        Sample {
+            t_us: 1,
+            cpu: [10.0; 4],
+            memr: [1.0; 5],
+            memw: [2.0; 5],
+            p_fpga: 8.0,
+            p_arm: 2.0,
+        }
+    }
+
+    fn get(addr: std::net::SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_health() {
+        let exp = Exporter::spawn(0).unwrap();
+        let resp = get(exp.addr, "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200"));
+        assert!(resp.contains("# no samples yet"));
+
+        exp.slot().publish(sample());
+        let resp = get(exp.addr, "/metrics");
+        assert!(resp.contains("zcu102_power_watts{rail=\"fpga\"} 8"));
+
+        assert!(get(exp.addr, "/healthz").contains("ok"));
+        assert!(get(exp.addr, "/nope").starts_with("HTTP/1.1 404"));
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let exp = Exporter::spawn(0).unwrap();
+        let addr = exp.addr;
+        drop(exp);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // after drop, connections fail (listener closed)
+        assert!(TcpStream::connect_timeout(&addr, std::time::Duration::from_millis(100)).is_err());
+    }
+}

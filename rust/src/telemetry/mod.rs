@@ -1,0 +1,272 @@
+//! Telemetry subsystem — the stand-in for the paper's Prometheus node
+//! exporter + OpenTelemetry collector (§V-A: metrics sampled at 3 Hz).
+//!
+//! [`Sampler`] produces [`Sample`]s of the Table-II dynamic features from
+//! the simulated platform state; [`RingBuffer`] retains a bounded history;
+//! [`prometheus_text`] renders the current sample in Prometheus exposition
+//! format (what the real node exporter would serve on `/metrics`).
+
+pub mod exporter;
+
+pub use exporter::{Exporter, MetricsSlot};
+
+use crate::workload::{WorkloadState, XorShift64};
+use std::collections::VecDeque;
+
+/// The paper's telemetry sampling period (3 Hz).
+pub const SAMPLE_PERIOD_MS: u64 = 333;
+/// Telemetry collection latency charged per decision (paper Fig 6: 88 ms).
+pub const COLLECTION_OVERHEAD_MS: u64 = 88;
+
+/// One telemetry sample: the dynamic-feature half of Table II.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Simulated timestamp (µs since scenario start).
+    pub t_us: u64,
+    /// Per-core CPU utilization, percent (4 x A53).
+    pub cpu: [f64; 4],
+    /// Memory read bandwidth per HP port, MB/s (5 ports).
+    pub memr: [f64; 5],
+    /// Memory write bandwidth per HP port, MB/s (5 ports).
+    pub memw: [f64; 5],
+    /// FPGA (PL) power, W.
+    pub p_fpga: f64,
+    /// CPU (PS) power, W.
+    pub p_arm: f64,
+}
+
+impl Sample {
+    /// Total memory traffic across all ports, GB/s.
+    pub fn mem_total_gbs(&self) -> f64 {
+        (self.memr.iter().sum::<f64>() + self.memw.iter().sum::<f64>()) / 1e3
+    }
+
+    /// Mean CPU utilization across the 4 cores, percent.
+    pub fn cpu_mean(&self) -> f64 {
+        self.cpu.iter().sum::<f64>() / 4.0
+    }
+}
+
+/// Platform-state inputs the sampler reads (what the node exporter would
+/// measure on real hardware).
+#[derive(Debug, Clone, Copy)]
+pub struct PlatformState {
+    pub workload: WorkloadState,
+    /// Extra DDR traffic from the running DPUs (bytes/s).
+    pub dpu_traffic_bps: f64,
+    /// Extra CPU utilization from DPU-coordination threads (0..100).
+    pub host_cpu_util: f64,
+    /// Current FPGA power (W) — from the power model.
+    pub p_fpga: f64,
+    /// Current ARM power (W).
+    pub p_arm: f64,
+}
+
+/// Samples the simulated platform at 3 Hz with realistic telemetry noise.
+pub struct Sampler {
+    rng: XorShift64,
+    noise: f64,
+    ext_cpu: fn(WorkloadState) -> f64,
+    bw_ext: Box<dyn Fn(WorkloadState) -> f64 + Send>,
+}
+
+fn default_ext_cpu(w: WorkloadState) -> f64 {
+    match w {
+        WorkloadState::None => 5.0,
+        WorkloadState::Cpu => 95.0,
+        WorkloadState::Mem => 60.0,
+    }
+}
+
+impl Sampler {
+    /// `noise` is the multiplicative telemetry jitter (calibration key
+    /// `telemetry_noise`); `bw_ext` maps workload -> external DDR traffic
+    /// (bytes/s), usually from calibration keys `bw_ext_c` / `bw_ext_m`.
+    pub fn new(seed: u64, noise: f64, bw_ext: Box<dyn Fn(WorkloadState) -> f64 + Send>) -> Self {
+        Sampler {
+            rng: XorShift64::new(seed),
+            noise,
+            ext_cpu: default_ext_cpu,
+            bw_ext,
+        }
+    }
+
+    /// From the calibration table (the usual constructor).
+    pub fn from_calibration(
+        seed: u64,
+        cal: &std::collections::HashMap<String, f64>,
+    ) -> Self {
+        let c = cal.get("bw_ext_c").copied().unwrap_or(0.5e9);
+        let m = cal.get("bw_ext_m").copied().unwrap_or(8e9);
+        let noise = cal.get("telemetry_noise").copied().unwrap_or(0.02);
+        Sampler::new(
+            seed,
+            noise,
+            Box::new(move |w| match w {
+                WorkloadState::None => 0.0,
+                WorkloadState::Cpu => c,
+                WorkloadState::Mem => m,
+            }),
+        )
+    }
+
+    /// Take one sample at simulated time `t_us`.
+    pub fn sample(&mut self, t_us: u64, st: &PlatformState) -> Sample {
+        let ext_bw = (self.bw_ext)(st.workload);
+        let total_bps = ext_bw + st.dpu_traffic_bps;
+        // external stress + DPU traffic spread over the 5 HP ports
+        let memr_base = total_bps * 0.6 / 5.0 / 1e6;
+        let memw_base = total_bps * 0.4 / 5.0 / 1e6;
+        let cpu_base = ((self.ext_cpu)(st.workload) + st.host_cpu_util).min(100.0);
+        let mut jitter = |x: f64| (x * (1.0 + self.noise * self.rng.normal())).max(0.0);
+        Sample {
+            t_us,
+            cpu: [
+                jitter(cpu_base).min(100.0),
+                jitter(cpu_base).min(100.0),
+                jitter(cpu_base).min(100.0),
+                jitter(cpu_base).min(100.0),
+            ],
+            memr: [0; 5].map(|_| jitter(memr_base)),
+            memw: [0; 5].map(|_| jitter(memw_base)),
+            p_fpga: jitter(st.p_fpga),
+            p_arm: jitter(st.p_arm),
+        }
+    }
+}
+
+/// Bounded history of samples (the collector's retention window).
+pub struct RingBuffer {
+    buf: VecDeque<Sample>,
+    cap: usize,
+}
+
+impl RingBuffer {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        RingBuffer {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+        }
+    }
+
+    pub fn push(&mut self, s: Sample) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(s);
+    }
+
+    pub fn latest(&self) -> Option<&Sample> {
+        self.buf.back()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Mean of `f` over the most recent `n` samples.
+    pub fn mean_over(&self, n: usize, f: impl Fn(&Sample) -> f64) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let take = n.min(self.buf.len());
+        let sum: f64 = self.buf.iter().rev().take(take).map(f).sum();
+        Some(sum / take as f64)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Sample> {
+        self.buf.iter()
+    }
+}
+
+/// Render a sample in Prometheus text exposition format — byte-compatible
+/// with what a node-exporter scrape of the real board would look like.
+pub fn prometheus_text(s: &Sample) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str("# TYPE zcu102_cpu_utilization gauge\n");
+    for (i, c) in s.cpu.iter().enumerate() {
+        out.push_str(&format!("zcu102_cpu_utilization{{core=\"{i}\"}} {c}\n"));
+    }
+    out.push_str("# TYPE zcu102_mem_read_mbps gauge\n");
+    for (i, m) in s.memr.iter().enumerate() {
+        out.push_str(&format!("zcu102_mem_read_mbps{{port=\"{i}\"}} {m}\n"));
+    }
+    out.push_str("# TYPE zcu102_mem_write_mbps gauge\n");
+    for (i, m) in s.memw.iter().enumerate() {
+        out.push_str(&format!("zcu102_mem_write_mbps{{port=\"{i}\"}} {m}\n"));
+    }
+    out.push_str("# TYPE zcu102_power_watts gauge\n");
+    out.push_str(&format!("zcu102_power_watts{{rail=\"fpga\"}} {}\n", s.p_fpga));
+    out.push_str(&format!("zcu102_power_watts{{rail=\"arm\"}} {}\n", s.p_arm));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(w: WorkloadState) -> PlatformState {
+        PlatformState {
+            workload: w,
+            dpu_traffic_bps: 1e9,
+            host_cpu_util: 10.0,
+            p_fpga: 8.0,
+            p_arm: 2.0,
+        }
+    }
+
+    fn sampler() -> Sampler {
+        Sampler::new(
+            1,
+            0.02,
+            Box::new(|w| match w {
+                WorkloadState::None => 0.0,
+                WorkloadState::Cpu => 0.5e9,
+                WorkloadState::Mem => 8e9,
+            }),
+        )
+    }
+
+    #[test]
+    fn m_state_shows_high_memory_traffic() {
+        let mut s = sampler();
+        let n = s.sample(0, &state(WorkloadState::None));
+        let m = s.sample(0, &state(WorkloadState::Mem));
+        assert!(m.mem_total_gbs() > 3.0 * n.mem_total_gbs());
+    }
+
+    #[test]
+    fn c_state_shows_high_cpu() {
+        let mut s = sampler();
+        let c = s.sample(0, &state(WorkloadState::Cpu));
+        assert!(c.cpu_mean() > 80.0);
+        assert!(c.cpu.iter().all(|&x| x <= 100.0));
+    }
+
+    #[test]
+    fn ring_buffer_bounds_and_means() {
+        let mut rb = RingBuffer::new(3);
+        let mut s = sampler();
+        for t in 0..10 {
+            rb.push(s.sample(t, &state(WorkloadState::None)));
+        }
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.latest().unwrap().t_us, 9);
+        let mean_t = rb.mean_over(3, |x| x.t_us as f64).unwrap();
+        assert_eq!(mean_t, 8.0);
+    }
+
+    #[test]
+    fn prometheus_format_smoke() {
+        let mut s = sampler();
+        let text = prometheus_text(&s.sample(0, &state(WorkloadState::Mem)));
+        assert!(text.contains("zcu102_cpu_utilization{core=\"3\"}"));
+        assert!(text.contains("rail=\"fpga\""));
+        assert_eq!(text.matches("gauge").count(), 4);
+    }
+}

@@ -1,0 +1,185 @@
+//! External co-running workloads (paper §III-B).
+//!
+//! The paper stresses the ZCU102's A53 cluster with `stress-ng` to create
+//! three system states: N (none), C (cpu-intensive, minimal memory), and
+//! M (memory-intensive, sustained DDR pressure). This module is the
+//! simulator-side stand-in: each state maps to the CPU-load / DDR-pressure
+//! terms consumed by [`crate::dpusim`], plus a small stochastic jitter
+//! model standing in for real co-runner variability.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// The three co-running workload states of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadState {
+    /// No additional workload.
+    None,
+    /// Computation-intensive, minimal memory bandwidth.
+    Cpu,
+    /// Memory-intensive, sustained high DDR bandwidth utilization.
+    Mem,
+}
+
+pub const ALL_STATES: [WorkloadState; 3] =
+    [WorkloadState::None, WorkloadState::Cpu, WorkloadState::Mem];
+
+impl WorkloadState {
+    /// Single-letter paper notation: N / C / M.
+    pub fn letter(&self) -> &'static str {
+        match self {
+            WorkloadState::None => "N",
+            WorkloadState::Cpu => "C",
+            WorkloadState::Mem => "M",
+        }
+    }
+}
+
+impl fmt::Display for WorkloadState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.letter())
+    }
+}
+
+impl FromStr for WorkloadState {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "N" | "n" | "none" => Ok(WorkloadState::None),
+            "C" | "c" | "cpu" => Ok(WorkloadState::Cpu),
+            "M" | "m" | "mem" => Ok(WorkloadState::Mem),
+            other => anyhow::bail!("unknown workload state {other:?} (want N|C|M)"),
+        }
+    }
+}
+
+/// Deterministic xorshift64* PRNG — the crate-wide randomness source
+/// (no `rand` crate in the offline vendor set). Passes the usual
+/// smoke-statistics; good enough for jitter + property tests.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        XorShift64 {
+            state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15),
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal (Box-Muller).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// A generator of workload-state schedules for long-running scenarios
+/// (examples + Fig 6 timeline): dwell in a state for a while, then switch.
+#[derive(Debug)]
+pub struct WorkloadSchedule {
+    rng: XorShift64,
+    current: WorkloadState,
+    /// Remaining dwell time (simulated seconds).
+    remaining_s: f64,
+    dwell_min_s: f64,
+    dwell_max_s: f64,
+}
+
+impl WorkloadSchedule {
+    pub fn new(seed: u64, dwell_min_s: f64, dwell_max_s: f64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let dwell = rng.range_f64(dwell_min_s, dwell_max_s);
+        WorkloadSchedule {
+            rng,
+            current: WorkloadState::None,
+            remaining_s: dwell,
+            dwell_min_s,
+            dwell_max_s,
+        }
+    }
+
+    pub fn current(&self) -> WorkloadState {
+        self.current
+    }
+
+    /// Advance simulated time; returns the (possibly new) state.
+    pub fn advance(&mut self, dt_s: f64) -> WorkloadState {
+        self.remaining_s -= dt_s;
+        while self.remaining_s <= 0.0 {
+            self.current = ALL_STATES[self.rng.below(3)];
+            self.remaining_s += self.rng.range_f64(self.dwell_min_s, self.dwell_max_s);
+        }
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn letters_roundtrip() {
+        for st in ALL_STATES {
+            assert_eq!(st.letter().parse::<WorkloadState>().unwrap(), st);
+        }
+    }
+
+    #[test]
+    fn xorshift_is_deterministic_and_spread() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        let xs: Vec<f64> = (0..1000).map(|_| a.next_f64()).collect();
+        let ys: Vec<f64> = (0..1000).map(|_| b.next_f64()).collect();
+        assert_eq!(xs, ys);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.05, "mean {mean}");
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = XorShift64::new(7);
+        let xs: Vec<f64> = (0..20000).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn schedule_visits_all_states() {
+        let mut sched = WorkloadSchedule::new(3, 1.0, 2.0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(sched.advance(1.0));
+        }
+        assert_eq!(seen.len(), 3, "long schedule must visit N, C and M");
+    }
+}

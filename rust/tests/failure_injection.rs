@@ -1,0 +1,76 @@
+//! Failure-injection tests: the system must fail loudly and precisely,
+//! never with a panic or a silent zero.
+
+use dpuconfig::csvutil::Table;
+use dpuconfig::dpusim::DpuSim;
+use dpuconfig::models::ModelVariant;
+use dpuconfig::runtime::PolicyRuntime;
+use dpuconfig::workload::WorkloadState;
+use std::collections::HashMap;
+
+#[test]
+fn missing_artifact_names_the_fix() {
+    let err = match PolicyRuntime::load(std::path::Path::new("/nonexistent/policy.hlo.txt"), 1) {
+        Ok(_) => panic!("load of a missing artifact must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+}
+
+#[test]
+fn malformed_hlo_is_an_error_not_a_crash() {
+    let dir = std::env::temp_dir().join("dpuconfig_bad_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.hlo.txt");
+    std::fs::write(&p, "HloModule garbage\nENTRY main { this is not hlo }").unwrap();
+    assert!(PolicyRuntime::load(&p, 1).is_err());
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn calibration_missing_key_is_reported_by_name() {
+    let mut cal: HashMap<String, f64> = dpuconfig::data::load_calibration().unwrap();
+    cal.remove("beta_mem");
+    let err = match DpuSim::with_calibration(cal) {
+        Ok(_) => panic!("missing calibration key must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("beta_mem"), "error must name the key: {err}");
+}
+
+#[test]
+fn csv_failures_are_descriptive() {
+    let err = Table::parse("").unwrap_err().to_string();
+    assert!(err.contains("empty"));
+    let t = Table::parse("a,b\n1,2\n").unwrap();
+    let err = t.col("zzz").unwrap_err().to_string();
+    assert!(err.contains("zzz"));
+    let err = t.get_f64(&t.rows[0], "a").is_ok();
+    assert!(err);
+    let bad = Table::parse("a\nxyz\n").unwrap();
+    assert!(bad.get_f64(&bad.rows[0], "a").is_err());
+}
+
+#[test]
+fn evaluate_rejects_unknown_model_gracefully() {
+    // unknown size names and out-of-range instances error with context
+    let sim = DpuSim::load().unwrap();
+    let m = dpuconfig::data::load_models().unwrap().remove(0);
+    let v = ModelVariant::new(m, 0.0);
+    let err = sim
+        .evaluate(&v, "B777", 1, WorkloadState::None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("B777"));
+    let err = sim
+        .evaluate(&v, "B512", 99, WorkloadState::None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("99"));
+}
+
+#[test]
+fn workload_parse_rejects_junk() {
+    assert!("Q".parse::<WorkloadState>().is_err());
+    assert!("".parse::<WorkloadState>().is_err());
+}

@@ -1,0 +1,148 @@
+//! Cross-module integration tests: substrate -> featurizer -> baselines ->
+//! coordinator -> sweep/eval, without the PJRT artifact (runtime_e2e.rs
+//! covers the artifact path).
+
+use dpuconfig::coordinator::{Arrival, Coordinator, Event, Scenario, Selector};
+use dpuconfig::data::{load_action_space, load_models};
+use dpuconfig::dpusim::{DpuSim, FPS_CONSTRAINT};
+use dpuconfig::eval::{fig5, figures, timeline};
+use dpuconfig::models::{load_variants, ModelVariant};
+use dpuconfig::rl::Baseline;
+use dpuconfig::workload::{WorkloadState, ALL_STATES};
+
+#[test]
+fn sweep_csv_roundtrips() {
+    let sim = DpuSim::load().unwrap();
+    let rows = dpuconfig::sweep::run(&sim).unwrap();
+    let path = std::env::temp_dir().join("dpuconfig_sweep_test.csv");
+    dpuconfig::sweep::write_csv(&rows, &path).unwrap();
+    let t = dpuconfig::csvutil::Table::read(&path).unwrap();
+    assert_eq!(t.rows.len(), 2574);
+    // spot-check a row round-trips numerically
+    let r0 = &t.rows[0];
+    assert_eq!(t.get(r0, "model").unwrap(), rows[0].model);
+    assert_eq!(t.get_f64(r0, "fps").unwrap(), rows[0].fps);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn paper_headline_facts_hold_end_to_end() {
+    // one test walking the whole §III narrative through the public API
+    let sim = DpuSim::load().unwrap();
+    let models = load_models().unwrap();
+    let m = |n: &str| models.iter().find(|m| m.name == n).unwrap().clone();
+
+    // III-A: optimal depends on the model
+    let r152 = ModelVariant::new(m("ResNet152"), 0.0);
+    let mob = ModelVariant::new(m("MobileNetV2"), 0.0);
+    let a1 = sim.optimal_action(&r152, WorkloadState::None).unwrap();
+    let a2 = sim.optimal_action(&mob, WorkloadState::None).unwrap();
+    assert_ne!(a1, a2, "different models must prefer different configs");
+
+    // III-B: interference changes the optimum for MobileNetV2
+    let a3 = sim.optimal_action(&mob, WorkloadState::Cpu).unwrap();
+    assert_ne!(a2, a3, "CPU interference must shift the optimum");
+
+    // III-C: pruning changes the optimum for ResNet152
+    let r152_25 = ModelVariant::new(m("ResNet152"), 0.25);
+    let a4 = sim.optimal_action(&r152_25, WorkloadState::None).unwrap();
+    assert_ne!(a1, a4, "pruning must shift the optimum");
+}
+
+#[test]
+fn fig5_oracle_vs_static_full_run() {
+    let sim = DpuSim::load().unwrap();
+    let mut eng = dpuconfig::coordinator::DecisionEngine::new(
+        Selector::Static(Baseline::Optimal),
+        9,
+    );
+    let (cases, summaries) =
+        fig5::run(&sim, &mut eng, &[WorkloadState::Cpu, WorkloadState::Mem], 9).unwrap();
+    assert_eq!(cases.len(), 18);
+    assert_eq!(summaries.len(), 2);
+    let txt = fig5::render(&cases, &summaries);
+    assert!(txt.contains("ResNet152_PR0"));
+    assert!(txt.contains("infeasible"));
+}
+
+#[test]
+fn timeline_reconfigures_between_different_optima() {
+    // build a scenario whose two models provably have different optima,
+    // then check the coordinator actually reconfigures between them
+    let sim = DpuSim::load().unwrap();
+    let variants = load_variants().unwrap();
+    let st = WorkloadState::None;
+    let mut pair = None;
+    'outer: for a in &variants {
+        for b in &variants {
+            let oa = sim.optimal_action(a, st).unwrap();
+            let ob = sim.optimal_action(b, st).unwrap();
+            if oa != ob {
+                pair = Some((a.clone(), b.clone()));
+                break 'outer;
+            }
+        }
+    }
+    let (a, b) = pair.expect("some pair of models must differ in optimum");
+    let scenario = Scenario {
+        arrivals: vec![
+            Arrival { model: a, at_s: 0.0, duration_s: 10.0 },
+            Arrival { model: b, at_s: 10.0, duration_s: 10.0 },
+        ],
+        workload: vec![(0.0, st)],
+        seed: 2,
+    };
+    let mut c = Coordinator::new(Selector::Static(Baseline::Optimal), 2).unwrap();
+    let r = c.run_scenario(&scenario).unwrap();
+    assert_eq!(r.totals.reconfigs, 2, "initial load + one switch");
+    // the switch decision must carry the full heavy overhead
+    let last_decision = r
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Decision { overhead, .. } => Some(overhead),
+            _ => None,
+        })
+        .last()
+        .unwrap();
+    assert_eq!(last_decision.total_us() / 1000, 999);
+}
+
+#[test]
+fn fig6_default_scenario_smoke() {
+    let r = timeline::run(Selector::Static(Baseline::MinPower), 15.0).unwrap();
+    let txt = timeline::render(&r);
+    assert!(txt.contains("InceptionV3"));
+    assert!(txt.contains("ResNeXt50"));
+}
+
+#[test]
+fn characterization_tables_cover_every_config_and_model() {
+    let sim = DpuSim::load().unwrap();
+    let t3 = figures::table_iii(&sim).unwrap();
+    assert_eq!(t3.len(), 11);
+    for v in load_variants().unwrap() {
+        for st in ALL_STATES {
+            let bars = figures::bars(&sim, &v, st).unwrap();
+            assert_eq!(bars.len(), 26);
+            assert_eq!(bars.iter().filter(|b| b.is_best).count(), 1);
+            // the best bar respects the constraint when feasible
+            let any = bars.iter().any(|b| b.feasible);
+            let best = bars.iter().find(|b| b.is_best).unwrap();
+            if any {
+                assert!(best.feasible, "{} [{}]", v.name(), st.letter());
+                assert!(best.fps >= FPS_CONSTRAINT);
+            }
+        }
+    }
+}
+
+#[test]
+fn action_notations_are_unique_and_well_formed() {
+    let actions = load_action_space().unwrap();
+    let mut seen = std::collections::HashSet::new();
+    for a in &actions {
+        assert!(seen.insert(a.notation()), "duplicate {}", a.notation());
+        assert!(a.notation().starts_with('B'));
+    }
+}

@@ -1,0 +1,66 @@
+//! Rust <-> python parity: the rust dpusim and reward implementations must
+//! reproduce the python-generated golden vectors bit-for-bit (within 1e-9
+//! relative — both sides are f64 with identical expression order).
+
+use dpuconfig::csvutil::Table;
+use dpuconfig::data::load_models;
+use dpuconfig::dpusim::DpuSim;
+use dpuconfig::models::ModelVariant;
+use dpuconfig::rl::reward::{Outcome, RewardCalculator};
+use dpuconfig::workload::WorkloadState;
+
+fn rel_close(a: f64, b: f64, what: &str) {
+    let denom = b.abs().max(1e-30);
+    let rel = (a - b).abs() / denom;
+    assert!(rel < 1e-9, "{what}: rust {a} vs python {b} (rel {rel:e})");
+}
+
+#[test]
+fn dpusim_matches_python_golden() {
+    let sim = DpuSim::load().unwrap();
+    let models = load_models().unwrap();
+    let path = dpuconfig::repo_root().join("data").join("golden_parity.csv");
+    let t = Table::read(&path).unwrap();
+    assert!(t.rows.len() >= 300, "golden grid should be substantial");
+    let actions = sim.actions();
+    for row in &t.rows {
+        let model_name = t.get(row, "model").unwrap();
+        let prune = t.get_f64(row, "prune").unwrap();
+        let state: WorkloadState = t.get(row, "state").unwrap().parse().unwrap();
+        let aid = t.get_usize(row, "action_id").unwrap();
+        let base = models.iter().find(|m| m.name == model_name).unwrap();
+        let v = ModelVariant::new(base.clone(), prune);
+        let a = &actions[aid];
+        let m = sim.evaluate(&v, &a.size, a.instances, state).unwrap();
+        let ctx = format!("{model_name} PR{} {} {}", prune * 100.0, state, a.notation());
+        rel_close(m.latency_ms, t.get_f64(row, "latency_ms").unwrap(), &format!("{ctx} latency"));
+        rel_close(m.fps, t.get_f64(row, "fps").unwrap(), &format!("{ctx} fps"));
+        rel_close(m.p_fpga, t.get_f64(row, "p_fpga").unwrap(), &format!("{ctx} p_fpga"));
+        rel_close(m.p_arm, t.get_f64(row, "p_arm").unwrap(), &format!("{ctx} p_arm"));
+        rel_close(m.ppw, t.get_f64(row, "ppw").unwrap(), &format!("{ctx} ppw"));
+    }
+}
+
+#[test]
+fn reward_matches_python_golden() {
+    let path = dpuconfig::repo_root().join("data").join("golden_reward.csv");
+    let t = Table::read(&path).unwrap();
+    let mut rc = RewardCalculator::new();
+    for (i, row) in t.rows.iter().enumerate() {
+        let r = rc.calculate(&Outcome {
+            measured_fps: t.get_f64(row, "fps").unwrap(),
+            fpga_power: t.get_f64(row, "power").unwrap(),
+            cpu_util: t.get_f64(row, "cpu").unwrap(),
+            mem_util_gbs: t.get_f64(row, "mem_gbs").unwrap(),
+            gmac: t.get_f64(row, "gmac").unwrap(),
+            model_data_mb: t.get_f64(row, "data_mb").unwrap(),
+            fps_constraint: 30.0,
+        });
+        let expected = t.get_f64(row, "reward").unwrap();
+        let diff = (r - expected).abs();
+        assert!(
+            diff < 1e-12,
+            "reward step {i}: rust {r} vs python {expected}"
+        );
+    }
+}

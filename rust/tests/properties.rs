@@ -1,0 +1,255 @@
+//! Property-based tests (mini-proptest harness, rust/src/testutil.rs) on
+//! the coordinator's invariants: decision routing, reconfiguration state,
+//! scenario time accounting, reward bounds, and dpusim physical laws.
+
+use dpuconfig::coordinator::{Arrival, Coordinator, Event, ReconfigManager, Scenario, Selector};
+use dpuconfig::dpusim::{DpuSim, FPS_CONSTRAINT};
+use dpuconfig::rl::reward::{Outcome, RewardCalculator};
+use dpuconfig::rl::{Baseline, Featurizer};
+use dpuconfig::telemetry::{PlatformState, Sampler};
+use dpuconfig::testutil::forall;
+use dpuconfig::workload::WorkloadState;
+
+#[test]
+fn prop_optimal_action_is_feasible_when_anything_is() {
+    let sim = DpuSim::load().unwrap();
+    forall(101, 150, |g, _| {
+        let v = g.variant();
+        let st = g.state();
+        let rows = sim.sweep_variant(&v, st).unwrap();
+        let opt = sim.optimal_action(&v, st).unwrap();
+        let any_feasible = rows.iter().any(|r| r.meets_constraint);
+        if any_feasible {
+            assert!(
+                rows[opt].meets_constraint,
+                "{} [{st}]: optimal {} violates the constraint while feasible configs exist",
+                v.name(),
+                sim.actions()[opt].notation()
+            );
+        }
+        // optimal dominates every same-feasibility row on PPW
+        for (i, r) in rows.iter().enumerate() {
+            if r.meets_constraint == rows[opt].meets_constraint || !any_feasible {
+                assert!(rows[opt].ppw >= r.ppw - 1e-12, "action {i} beats optimal");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_more_instances_more_power() {
+    // power must be monotone in instance count (same size, model, state)
+    let sim = DpuSim::load().unwrap();
+    forall(102, 150, |g, _| {
+        let v = g.variant();
+        let st = g.state();
+        let sizes = sim.sizes();
+        let size = {
+            let names: Vec<&String> = sizes.keys().collect();
+            names[g.usize(names.len())].clone()
+        };
+        let max_n = sizes[&size].max_instances;
+        let mut prev = 0.0;
+        for n in 1..=max_n {
+            let m = sim.evaluate(&v, &size, n, st).unwrap();
+            assert!(
+                m.p_fpga > prev,
+                "{} {}x{n} [{st}]: power {} not > {prev}",
+                v.name(),
+                size,
+                m.p_fpga
+            );
+            prev = m.p_fpga;
+        }
+    });
+}
+
+#[test]
+fn prop_aggregate_fps_bounded_by_linear_scaling() {
+    // aggregate fps never exceeds n x single-instance (no free lunch);
+    // it CAN drop below a single instance under heavy burst contention
+    // (DDR thrashing with 4+ big DPUs), so only the upper bound and
+    // positivity are invariant.
+    let sim = DpuSim::load().unwrap();
+    forall(103, 150, |g, _| {
+        let v = g.variant();
+        let st = g.state();
+        let a = g.action();
+        let f1 = sim.evaluate(&v, &a.size, 1, st).unwrap().fps;
+        let fn_ = sim.evaluate(&v, &a.size, a.instances, st).unwrap().fps;
+        assert!(fn_ <= a.instances as f64 * f1 + 1e-9, "{} {}", v.name(), a.notation());
+        assert!(fn_ > 0.0, "{} {}", v.name(), a.notation());
+    });
+}
+
+#[test]
+fn prop_extra_traffic_zero_is_identity() {
+    // the multi-tenant entry point with zero foreign traffic must be
+    // bit-identical to the single-tenant evaluate (python-parity safety)
+    let sim = DpuSim::load().unwrap();
+    forall(110, 150, |g, _| {
+        let v = g.variant();
+        let st = g.state();
+        let a = g.action();
+        let m1 = sim.evaluate(&v, &a.size, a.instances, st).unwrap();
+        let m2 = sim
+            .evaluate_with_extra_traffic(&v, &a.size, a.instances, st, 0.0)
+            .unwrap();
+        assert_eq!(m1, m2, "{} {}", v.name(), a.notation());
+    });
+}
+
+#[test]
+fn prop_foreign_traffic_monotonically_hurts() {
+    let sim = DpuSim::load().unwrap();
+    forall(111, 150, |g, _| {
+        let v = g.variant();
+        let st = g.state();
+        let a = g.action();
+        let mut prev = f64::INFINITY;
+        for extra in [0.0, 1e9, 3e9, 6e9] {
+            let m = sim
+                .evaluate_with_extra_traffic(&v, &a.size, a.instances, st, extra)
+                .unwrap();
+            assert!(
+                m.fps <= prev + 1e-9,
+                "{} {} extra={extra}: fps {} > prev {prev}",
+                v.name(),
+                a.notation(),
+                m.fps
+            );
+            prev = m.fps;
+        }
+    });
+}
+
+#[test]
+fn prop_reward_always_in_unit_interval() {
+    forall(104, 300, |g, _| {
+        let mut rc = RewardCalculator::new();
+        for _ in 0..20 {
+            let r = rc.calculate(&Outcome {
+                measured_fps: g.f64(1.0, 2000.0),
+                fpga_power: g.f64(0.5, 30.0),
+                cpu_util: g.f64(0.0, 100.0),
+                mem_util_gbs: g.f64(0.0, 15.0),
+                gmac: g.f64(0.05, 13.0),
+                model_data_mb: g.f64(1.0, 200.0),
+                fps_constraint: FPS_CONSTRAINT,
+            });
+            assert!((-1.0..=1.0).contains(&r), "reward {r} out of bounds");
+        }
+    });
+}
+
+#[test]
+fn prop_reconfig_charges_iff_state_changes() {
+    // ReconfigManager: heavy phases charged exactly when (dpu, model) change
+    let sim = DpuSim::load().unwrap();
+    forall(105, 200, |g, _| {
+        let mut mgr = ReconfigManager::new();
+        let mut last: Option<(usize, String)> = None;
+        for _ in 0..12 {
+            let a = g.action();
+            let v = g.variant();
+            let ov = mgr.apply(&sim.actions()[a.id], &v.name());
+            match &last {
+                None => {
+                    assert!(ov.reconfig_us > 0 && ov.instr_load_us > 0);
+                }
+                Some((la, lm)) => {
+                    assert_eq!(ov.reconfig_us > 0, *la != a.id);
+                    assert_eq!(ov.instr_load_us > 0, *la != a.id || *lm != v.name());
+                }
+            }
+            // telemetry + RL inference always charged
+            assert_eq!(ov.telemetry_us, 88_000);
+            assert_eq!(ov.rl_inference_us, 20_000);
+            last = Some((a.id, v.name()));
+        }
+    });
+}
+
+#[test]
+fn prop_scenario_time_is_conserved() {
+    // busy + overhead == wall time of the scenario (up to the final
+    // overhead possibly spilling past the end)
+    forall(106, 40, |g, _| {
+        let dur = g.f64(5.0, 30.0);
+        let n_models = 1 + g.usize(3);
+        let mut arrivals = Vec::new();
+        for i in 0..n_models {
+            arrivals.push(Arrival {
+                model: g.variant(),
+                at_s: i as f64 * dur,
+                duration_s: dur,
+            });
+        }
+        let wall = n_models as f64 * dur;
+        let scenario = Scenario {
+            arrivals,
+            workload: vec![
+                (0.0, WorkloadState::None),
+                (g.f64(1.0, wall.max(2.0)), g.state()),
+            ],
+            seed: 1,
+        };
+        let mut c = Coordinator::new(Selector::Static(Baseline::Optimal), 1).unwrap();
+        let r = c.run_scenario(&scenario).unwrap();
+        let covered = r.totals.busy_s + r.totals.overhead_s;
+        assert!(
+            (covered - wall).abs() < 1.1,
+            "covered {covered} vs wall {wall}"
+        );
+        // events are time-ordered
+        let mut last_t = -1.0;
+        for e in &r.events {
+            let t = match e {
+                Event::Decision { t_s, .. } => *t_s,
+                Event::Serve { t_s, .. } => *t_s,
+            };
+            assert!(t >= last_t - 1e-9, "events out of order");
+            last_t = t;
+        }
+    });
+}
+
+#[test]
+fn prop_featurizer_is_pure() {
+    // same sample + model => identical observation (no hidden state)
+    let f = Featurizer::new();
+    let sim = DpuSim::load().unwrap();
+    forall(107, 100, |g, _| {
+        let v = g.variant();
+        let st = g.state();
+        let mut sampler = Sampler::from_calibration(9, sim.calibration());
+        let p = PlatformState {
+            workload: st,
+            dpu_traffic_bps: g.f64(0.0, 5e9),
+            host_cpu_util: g.f64(0.0, 50.0),
+            p_fpga: g.f64(2.0, 15.0),
+            p_arm: g.f64(1.0, 5.0),
+        };
+        let s = sampler.sample(0, &p);
+        let o1 = f.observe(&s, &v);
+        let o2 = f.observe(&s, &v);
+        assert_eq!(o1, o2);
+        assert!(o1.iter().all(|x| x.is_finite()));
+    });
+}
+
+#[test]
+fn prop_baselines_agree_with_sweep_extremes() {
+    let sim = DpuSim::load().unwrap();
+    forall(108, 100, |g, _| {
+        let v = g.variant();
+        let st = g.state();
+        let rows = sim.sweep_variant(&v, st).unwrap();
+        let maxf = Baseline::MaxFps.select(&sim, &v, st, None).unwrap();
+        let minp = Baseline::MinPower.select(&sim, &v, st, None).unwrap();
+        for r in &rows {
+            assert!(rows[maxf].fps >= r.fps - 1e-12);
+            assert!(rows[minp].p_fpga <= r.p_fpga + 1e-12);
+        }
+    });
+}
