@@ -1,0 +1,30 @@
+# Build entry points. The rust crate needs only the committed data/
+# files; `make artifacts` additionally trains the PPO policy and exports
+# the AOT HLO artifacts the PJRT runtime loads (requires jax).
+
+PY := python3
+
+.PHONY: artifacts data test rust-test py-test clean
+
+# Train the agent and export artifacts/policy.hlo.txt (+ batched b8,
+# metadata, and the full measurement table).
+artifacts:
+	cd python && $(PY) -m compile.aot
+
+# Regenerate the committed calibration + golden parity files after a
+# model-table or simulator change (slow: runs the calibration search).
+data:
+	cd python && $(PY) -m compile.calibrate
+	cd python && $(PY) -m compile.golden
+
+test: rust-test py-test
+
+rust-test:
+	cargo build --release
+	cargo test -q
+
+py-test:
+	cd python && $(PY) -m pytest tests -q
+
+clean:
+	rm -rf target artifacts

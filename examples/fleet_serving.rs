@@ -1,0 +1,105 @@
+//! Fleet-scale serving: a 4-board ZCU102 rack behind the fleet
+//! coordinator, driven through three traffic regimes (diurnal, bursty,
+//! steady-with-correlated-interference).
+//!
+//! For every scenario the fleet runs twice:
+//!
+//! * **managed** — energy-aware routing, idle boards sleep
+//!   (arXiv:2407.12027), per-board configurations picked by the
+//!   DPUConfig policy (the AOT agent when `make artifacts` has run,
+//!   otherwise the oracle), decisions batched across boards into one
+//!   forward pass per tick;
+//! * **static-best baseline** — round-robin routing, sleep disabled, and
+//!   the max-FPS static configuration on every board (the classic
+//!   "provision for peak" deployment).
+//!
+//! and prints per-board accounting plus the aggregate energy-efficiency
+//! comparison.
+//!
+//! ```bash
+//! cargo run --release --example fleet_serving
+//! ```
+
+use dpuconfig::coordinator::{
+    FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+};
+use dpuconfig::rl::Baseline;
+use dpuconfig::runtime::{default_policy_path, PolicyRuntime};
+use dpuconfig::workload::traffic::ArrivalPattern;
+
+const BOARDS: usize = 4;
+const HORIZON_S: f64 = 240.0;
+
+fn managed_policy() -> anyhow::Result<FleetPolicy> {
+    let path = default_policy_path(8);
+    if path.exists() {
+        let rt = PolicyRuntime::load(&path, 8)?;
+        println!("policy: AOT PPO agent (batched x8 through PJRT)");
+        Ok(FleetPolicy::Agent(rt))
+    } else {
+        println!("policy: oracle (artifacts/policy_b8.hlo.txt missing — run `make artifacts` for the agent)");
+        Ok(FleetPolicy::Static(Baseline::Optimal))
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // (pattern, mean arrival rate, cross-board interference correlation)
+    let scenarios = [
+        (ArrivalPattern::Diurnal, 0.6, 0.7),
+        (ArrivalPattern::Bursty, 0.6, 0.7),
+        (ArrivalPattern::Steady, 0.4, 1.0),
+    ];
+
+    for (pattern, rate, correlation) in scenarios {
+        let scenario = FleetScenario::generate(
+            pattern, BOARDS, HORIZON_S, rate, 10.0, correlation, 42,
+        )?;
+        println!(
+            "\n================ scenario {} — {} jobs over {HORIZON_S}s, correlation {correlation}",
+            pattern.name(),
+            scenario.jobs.len()
+        );
+
+        // managed fleet: energy-aware routing + sleep states + RL policy
+        let managed_cfg = FleetConfig {
+            boards: BOARDS,
+            routing: RoutingPolicy::EnergyAware,
+            seed: 42,
+            ..FleetConfig::default()
+        };
+        let mut managed = FleetCoordinator::new(managed_cfg, managed_policy()?)?;
+        let managed_report = managed.run(&scenario)?;
+        print!("{}", managed_report.render());
+
+        // static-best baseline: provision for peak, never sleep
+        let baseline_cfg = FleetConfig {
+            boards: BOARDS,
+            routing: RoutingPolicy::RoundRobin,
+            idle_to_sleep_s: f64::INFINITY,
+            seed: 42,
+            ..FleetConfig::default()
+        };
+        let mut baseline =
+            FleetCoordinator::new(baseline_cfg, FleetPolicy::Static(Baseline::MaxFps))?;
+        let baseline_report = baseline.run(&scenario)?;
+        print!("{}", baseline_report.render());
+
+        let m = managed_report.fleet_ppw();
+        let b = baseline_report.fleet_ppw();
+        println!(
+            "aggregate energy efficiency [{}]: managed {:.2} fps/W vs static-best {:.2} fps/W ({:+.1}%)",
+            pattern.name(),
+            m,
+            b,
+            100.0 * (m / b - 1.0),
+        );
+        println!(
+            "policy invocations: managed {} passes for {} decisions (batched) vs baseline {}/{}",
+            managed_report.decision_batches,
+            managed_report.decisions,
+            baseline_report.decision_batches,
+            baseline_report.decisions,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""Test-session bootstrap.
+
+1. Puts `python/` on sys.path so `from compile import ...` works no
+   matter where pytest is invoked from.
+2. Provides a minimal stand-in for `hypothesis` when the real package is
+   absent (the offline image ships pytest but not hypothesis; the seed
+   suites import it at module scope, which otherwise turns entire files
+   into collection errors). The stand-in implements the tiny subset the
+   suites use — `given` (runs the test over deterministic pseudo-random
+   draws), `settings` profiles, and the `integers` / `sampled_from` /
+   `floats` / `booleans` strategies. With the real hypothesis installed
+   the stand-in steps aside.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import sys
+import zlib
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # pragma: no cover - prefer the real package when present
+    import hypothesis  # noqa: F401
+except ImportError:  # build the stand-in
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    class settings:
+        _profiles: dict = {}
+        _current = {"max_examples": 25}
+
+        def __init__(self, max_examples=25, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._hyp_max_examples = self.max_examples
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, max_examples=25, deadline=None, **_kw):
+            cls._profiles[name] = {"max_examples": max_examples}
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._current = cls._profiles.get(name, cls._current)
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying __wrapped__ would make
+            # pytest unwrap to the original signature and hunt for
+            # fixtures named like the strategy parameters
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_hyp_max_examples", None) or settings._current[
+                    "max_examples"
+                ]
+                # stable digest (str hash is salted per process)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for case in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # noqa: BLE001
+                        raise AssertionError(
+                            f"property case {case} failed with draws {drawn}: {e}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.sampled_from = sampled_from
+    st_mod.floats = floats
+    st_mod.booleans = booleans
+    hyp.strategies = st_mod
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

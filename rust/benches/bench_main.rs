@@ -266,6 +266,73 @@ fn main() -> anyhow::Result<()> {
         results.push(bench("ablation_baseline", 20, || optima(&sim)));
     }
 
+    // ---- fleet: full multi-board tick loop (artifact-free) -----------------
+    if wants("fleet_tick") {
+        use dpuconfig::coordinator::fleet::{
+            FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+        };
+        use dpuconfig::workload::traffic::ArrivalPattern;
+        let scenario =
+            FleetScenario::generate(ArrivalPattern::Diurnal, 8, 120.0, 1.0, 8.0, 0.7, 3)?;
+        results.push(bench("fleet_tick_8_boards", 20, || {
+            let cfg = FleetConfig {
+                boards: 8,
+                routing: RoutingPolicy::EnergyAware,
+                seed: 3,
+                ..FleetConfig::default()
+            };
+            let mut fleet =
+                FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+            let r = fleet.run(&scenario).unwrap();
+            format!(
+                "{} jobs, {:.2} fps/W fleet, {} decisions",
+                r.jobs_done(),
+                r.fleet_ppw(),
+                r.decisions
+            )
+        }));
+    }
+
+    // ---- fleet hot path: batched vs sequential policy invocation -----------
+    // (the tentpole speedup: one PJRT forward pass per decision tick
+    // instead of N sequential calls)
+    if wants("fleet_decide") && default_policy_path(1).exists() && default_policy_path(8).exists()
+    {
+        let rt1 = PolicyRuntime::load(&default_policy_path(1), 1)?;
+        let rt8 = PolicyRuntime::load(&default_policy_path(8), 8)?;
+        let featurizer = Featurizer::new();
+        let mut sampler = Sampler::from_calibration(13, sim.calibration());
+        let variants = dpuconfig::models::load_variants()?;
+        let obs: Vec<[f32; 22]> = (0..16)
+            .map(|i| {
+                let p = PlatformState {
+                    workload: ALL_STATES[i % 3],
+                    dpu_traffic_bps: 0.0,
+                    host_cpu_util: 0.0,
+                    p_fpga: 2.2,
+                    p_arm: 1.5,
+                };
+                featurizer.observe(&sampler.sample(0, &p), &variants[i % variants.len()])
+            })
+            .collect();
+        results.push(bench("fleet_decide_sequential_16", 500, || {
+            let mut sum = 0usize;
+            for o in &obs {
+                sum += rt1.infer(o).unwrap().argmax();
+            }
+            format!("checksum {sum}")
+        }));
+        results.push(bench("fleet_decide_batched_16", 500, || {
+            let mut sum = 0usize;
+            for chunk in obs.chunks(8) {
+                for out in rt8.infer_batch(chunk).unwrap() {
+                    sum += out.argmax();
+                }
+            }
+            format!("checksum {sum} (2 passes)")
+        }));
+    }
+
     // ---- report -------------------------------------------------------------
     println!("\n{:-^100}", " dpuconfig bench results ");
     println!(

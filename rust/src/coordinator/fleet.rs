@@ -1,0 +1,955 @@
+//! Fleet coordinator: N ZCU102 boards behind one admission/routing layer
+//! (DESIGN.md §8).
+//!
+//! The single-board [`crate::coordinator::Coordinator`] manages one
+//! platform; production serving runs *racks* of them. This module scales
+//! the same decision machinery out:
+//!
+//! * a global arrival stream ([`FleetScenario`]) is routed to boards by a
+//!   pluggable [`RoutingPolicy`] (round-robin, least-loaded,
+//!   energy-aware),
+//! * every board runs the existing per-board pieces — a
+//!   [`ReconfigManager`] with the paper's measured overheads, a telemetry
+//!   [`Sampler`], Algorithm-1 reward bookkeeping,
+//! * boards with an empty queue go **idle**, and after
+//!   [`FleetConfig::idle_to_sleep_s`] drop into a low-power **sleep**
+//!   state whose exit pays a wake-up latency *and* a full
+//!   reconfiguration (the bitstream is lost — "Idle is the New Sleep",
+//!   arXiv:2407.12027),
+//! * RL policy invocations are **batched across boards**: each decision
+//!   tick stacks every pending observation and runs one PJRT forward
+//!   pass per chunk of the artifact's batch size instead of N sequential
+//!   calls (the fleet hot path; see `fleet_batched` in the bench
+//!   harness).
+//!
+//! Time is simulated, like the single-board serving loop: the fleet
+//! advances in decision ticks of [`FleetConfig::tick_s`] seconds.
+//!
+//! ```
+//! use dpuconfig::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario};
+//! use dpuconfig::rl::Baseline;
+//! use dpuconfig::workload::traffic::ArrivalPattern;
+//!
+//! let cfg = FleetConfig { boards: 2, ..FleetConfig::default() };
+//! let scenario =
+//!     FleetScenario::generate(ArrivalPattern::Steady, 2, 30.0, 0.2, 8.0, 0.5, 7).unwrap();
+//! let mut fleet = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+//! let report = fleet.run(&scenario).unwrap();
+//! assert_eq!(report.boards.len(), 2);
+//! assert!(report.fleet_ppw() >= 0.0);
+//! ```
+
+use crate::coordinator::reconfig::ReconfigManager;
+use crate::dpusim::energy::{idle_power_w, sleep_power_w, EnergyMeter};
+use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
+use crate::models::{load_variants, ModelVariant};
+use crate::rl::features::OBS_DIM;
+use crate::rl::reward::{Outcome, RewardCalculator};
+use crate::rl::{Baseline, Featurizer};
+use crate::runtime::PolicyRuntime;
+use crate::telemetry::{PlatformState, Sampler};
+use crate::workload::traffic::{arrival_times, correlated_schedules, state_at, ArrivalPattern};
+use crate::workload::{WorkloadState, XorShift64};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+use super::server::Totals;
+
+/// How the admission layer maps arriving jobs to boards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through boards regardless of state (spreads load, keeps
+    /// every board awake).
+    RoundRobin,
+    /// Shortest queue first (classic join-shortest-queue admission).
+    LeastLoaded,
+    /// Least-loaded among *awake* boards; a sleeping board is woken only
+    /// when every awake board is backlogged past
+    /// [`FleetConfig::wake_backlog`] (load consolidation, so troughs let
+    /// boards nap — arXiv:2407.12027's configuration-aware idling).
+    EnergyAware,
+}
+
+impl RoutingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round_robin",
+            RoutingPolicy::LeastLoaded => "least_loaded",
+            RoutingPolicy::EnergyAware => "energy_aware",
+        }
+    }
+}
+
+impl std::str::FromStr for RoutingPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "round_robin" | "rr" => Ok(RoutingPolicy::RoundRobin),
+            "least_loaded" | "ll" => Ok(RoutingPolicy::LeastLoaded),
+            "energy_aware" | "ea" => Ok(RoutingPolicy::EnergyAware),
+            other => anyhow::bail!(
+                "unknown routing policy {other:?} (want round_robin|least_loaded|energy_aware)"
+            ),
+        }
+    }
+}
+
+/// Which policy produces per-board configuration decisions.
+pub enum FleetPolicy {
+    /// The AOT PPO agent; observations from all deciding boards are
+    /// stacked into `PolicyRuntime::infer_batch` calls.
+    Agent(PolicyRuntime),
+    /// A static baseline applied per board (no batching possible — there
+    /// is no forward pass).
+    Static(Baseline),
+}
+
+impl FleetPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetPolicy::Agent(_) => "dpuconfig",
+            FleetPolicy::Static(b) => b.name(),
+        }
+    }
+}
+
+/// Power regime of one board (arXiv:2407.12027 state machine).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PowerState {
+    /// Serving (or paying decision/reconfiguration overhead).
+    Active,
+    /// Awake, bitstream retained, queue empty since `since_s`.
+    Idle { since_s: f64 },
+    /// Low-power state; exit pays wake latency + full reconfiguration.
+    Sleep,
+}
+
+/// Fleet shape + power-state policy.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    pub boards: usize,
+    /// Decision-tick length (simulated seconds).
+    pub tick_s: f64,
+    /// Idle dwell before a board drops to sleep; `f64::INFINITY`
+    /// disables the sleep state.
+    pub idle_to_sleep_s: f64,
+    /// Power-state exit latency charged when a sleeping board is woken
+    /// (the subsequent bitstream + instruction reload is charged by the
+    /// reconfiguration manager as usual, because sleep loses the PL
+    /// configuration).
+    pub wake_penalty_s: f64,
+    /// EnergyAware: queue depth on every awake board that justifies
+    /// waking a sleeper.
+    pub wake_backlog: usize,
+    pub routing: RoutingPolicy,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            boards: 4,
+            tick_s: 1.0,
+            idle_to_sleep_s: 10.0,
+            wake_penalty_s: 0.1,
+            wake_backlog: 2,
+            routing: RoutingPolicy::EnergyAware,
+            seed: 1,
+        }
+    }
+}
+
+/// One job in the global arrival stream: serve `model` for
+/// `duration_s` seconds of *serving demand* (overheads delay completion,
+/// they do not shrink it).
+#[derive(Debug, Clone)]
+pub struct FleetJob {
+    pub model: ModelVariant,
+    pub at_s: f64,
+    pub duration_s: f64,
+}
+
+/// A fleet-scale scenario: the global job stream plus one co-runner
+/// interference schedule per board.
+#[derive(Debug, Clone)]
+pub struct FleetScenario {
+    /// Jobs sorted by arrival time.
+    pub jobs: Vec<FleetJob>,
+    /// Per-board workload step functions (len == boards).
+    pub schedules: Vec<Vec<(f64, WorkloadState)>>,
+    pub horizon_s: f64,
+}
+
+impl FleetScenario {
+    /// Generate a scenario: `pattern` arrivals at `mean_rate` jobs/s over
+    /// `horizon_s`, serving demands exponential around `mean_duration_s`,
+    /// co-runner schedules correlated across boards with probability
+    /// `correlation`. Deterministic in `seed`.
+    pub fn generate(
+        pattern: ArrivalPattern,
+        boards: usize,
+        horizon_s: f64,
+        mean_rate: f64,
+        mean_duration_s: f64,
+        correlation: f64,
+        seed: u64,
+    ) -> Result<FleetScenario> {
+        anyhow::ensure!(boards > 0, "fleet needs at least one board");
+        let variants = load_variants()?;
+        let mut rng = XorShift64::new(seed ^ 0xf1ee7);
+        let jobs = arrival_times(pattern, seed, horizon_s, mean_rate)
+            .into_iter()
+            .map(|at_s| {
+                let model = variants[rng.below(variants.len())].clone();
+                let duration_s =
+                    (-rng.next_f64().max(1e-12).ln() * mean_duration_s).clamp(2.0, 60.0);
+                FleetJob {
+                    model,
+                    at_s,
+                    duration_s,
+                }
+            })
+            .collect();
+        let schedules = correlated_schedules(seed, boards, horizon_s, 20.0, correlation);
+        Ok(FleetScenario {
+            jobs,
+            schedules,
+            horizon_s,
+        })
+    }
+}
+
+/// A board's queued job (head of queue = currently served).
+#[derive(Debug, Clone)]
+struct ActiveJob {
+    model: ModelVariant,
+    remaining_s: f64,
+}
+
+/// One board: the per-board halves of the single-board coordinator plus
+/// the fleet power-state machine.
+struct Board {
+    reconfig: ReconfigManager,
+    sampler: Sampler,
+    rewards: RewardCalculator,
+    power: PowerState,
+    queue: VecDeque<ActiveJob>,
+    /// Chosen action for (head model, state), if still valid.
+    decided: Option<(usize, String, WorkloadState)>,
+    /// Reconfiguration/decision overhead still to pay (s).
+    pending_overhead_s: f64,
+    /// Wake-up latency still to pay (s).
+    pending_wake_s: f64,
+    /// Telemetry snapshot at the last decision (for reward bookkeeping).
+    last_cpu: f64,
+    last_mem_gbs: f64,
+    // accounting
+    totals: Totals,
+    energy: EnergyMeter,
+    wakes: u64,
+    jobs_done: u64,
+    reward_sum: f64,
+    reward_n: u64,
+}
+
+/// Per-board slice of the fleet report.
+pub struct BoardReport {
+    pub board: usize,
+    pub totals: Totals,
+    pub energy: EnergyMeter,
+    pub wakes: u64,
+    pub jobs_done: u64,
+    pub queue_left: usize,
+}
+
+/// Fleet run outcome: per-board reports + fleet-level counters.
+pub struct FleetReport {
+    pub policy: &'static str,
+    pub routing: RoutingPolicy,
+    pub boards: Vec<BoardReport>,
+    pub ticks: u64,
+    /// Total configuration decisions made.
+    pub decisions: u64,
+    /// Policy forward passes (or baseline selections) executed; with the
+    /// batched agent this is ~decisions / batch, the fleet speedup.
+    pub decision_batches: u64,
+    pub jobs_total: usize,
+}
+
+impl FleetReport {
+    pub fn total_frames(&self) -> f64 {
+        self.boards.iter().map(|b| b.totals.frames).sum()
+    }
+
+    /// Serving-only energy (comparable to the single-board coordinator's
+    /// `Totals::energy_fpga_j`).
+    pub fn serving_energy_j(&self) -> f64 {
+        self.boards.iter().map(|b| b.totals.energy_fpga_j).sum()
+    }
+
+    /// Per-board meters rolled into the fleet-level accumulator.
+    pub fn energy(&self) -> crate::dpusim::FleetEnergy {
+        crate::dpusim::FleetEnergy {
+            boards: self.boards.iter().map(|b| b.energy).collect(),
+        }
+    }
+
+    /// Wall-plug PL energy: serving + overheads + idle + sleep + wake.
+    pub fn total_energy_j(&self) -> f64 {
+        self.energy().total_j()
+    }
+
+    /// Fleet energy efficiency including idle/sleep energy (frames/J).
+    pub fn fleet_ppw(&self) -> f64 {
+        self.energy().fleet_ppw(self.total_frames())
+    }
+
+    /// Serving-only efficiency (frames per serving joule) — the number to
+    /// compare against N independent single-board runs.
+    pub fn serving_ppw(&self) -> f64 {
+        let e = self.serving_energy_j();
+        if e > 0.0 {
+            self.total_frames() / e
+        } else {
+            0.0
+        }
+    }
+
+    pub fn jobs_done(&self) -> u64 {
+        self.boards.iter().map(|b| b.jobs_done).sum()
+    }
+
+    /// Render a compact fleet table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "=== fleet report — policy {} / routing {} ({} boards, {} ticks)\n\
+             board   frames   busy_s   idle_s  sleep_s  wakes  jobs  serve_J  total_J  fps/J\n",
+            self.policy,
+            self.routing.name(),
+            self.boards.len(),
+            self.ticks
+        );
+        for b in &self.boards {
+            let ppw = if b.energy.total_j() > 0.0 {
+                b.totals.frames / b.energy.total_j()
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:>5} {:>8.0} {:>8.1} {:>8.1} {:>8.1} {:>6} {:>5} {:>8.0} {:>8.0} {:>6.2}\n",
+                b.board,
+                b.totals.frames,
+                b.totals.busy_s,
+                b.energy.idle_s,
+                b.energy.sleep_s,
+                b.wakes,
+                b.jobs_done,
+                b.totals.energy_fpga_j,
+                b.energy.total_j(),
+                ppw,
+            ));
+        }
+        out.push_str(&format!(
+            "fleet: {:.0} frames / {:.0} J = {:.2} fps/W (serving-only {:.2}); \
+             {} decisions in {} policy passes\n",
+            self.total_frames(),
+            self.total_energy_j(),
+            self.fleet_ppw(),
+            self.serving_ppw(),
+            self.decisions,
+            self.decision_batches,
+        ));
+        out
+    }
+}
+
+/// The fleet coordinator itself.
+pub struct FleetCoordinator {
+    sim: DpuSim,
+    policy: FleetPolicy,
+    config: FleetConfig,
+    featurizer: Featurizer,
+    rng: XorShift64,
+    rr_cursor: usize,
+}
+
+impl FleetCoordinator {
+    pub fn new(config: FleetConfig, policy: FleetPolicy) -> Result<FleetCoordinator> {
+        anyhow::ensure!(config.boards > 0, "fleet needs at least one board");
+        anyhow::ensure!(config.tick_s > 0.0, "tick must be positive");
+        Ok(FleetCoordinator {
+            sim: DpuSim::load()?,
+            policy,
+            config,
+            featurizer: Featurizer::new(),
+            rng: XorShift64::new(config.seed ^ 0xf1ee7c0de),
+            rr_cursor: 0,
+        })
+    }
+
+    pub fn sim(&self) -> &DpuSim {
+        &self.sim
+    }
+
+    /// Pick the target board for a newly arrived job.
+    fn route(&mut self, boards: &[Board]) -> usize {
+        let n = boards.len();
+        let queue_len = |b: &Board| b.queue.len();
+        // backlog = outstanding serving demand, the join-shortest-queue key
+        let backlog = |b: &Board| b.queue.iter().map(|j| j.remaining_s).sum::<f64>();
+        match self.config.routing {
+            RoutingPolicy::RoundRobin => {
+                let i = self.rr_cursor % n;
+                self.rr_cursor += 1;
+                i
+            }
+            RoutingPolicy::LeastLoaded => (0..n)
+                .min_by(|&a, &b| {
+                    backlog(&boards[a])
+                        .partial_cmp(&backlog(&boards[b]))
+                        .unwrap()
+                        .then(a.cmp(&b))
+                })
+                .unwrap(),
+            RoutingPolicy::EnergyAware => {
+                let awake: Vec<usize> = (0..n)
+                    .filter(|&i| boards[i].power != PowerState::Sleep)
+                    .collect();
+                // 1. an awake board with an empty queue
+                if let Some(&i) = awake.iter().find(|&&i| boards[i].queue.is_empty()) {
+                    return i;
+                }
+                // 2. the least-backlogged awake board, if acceptable
+                if let Some(&i) = awake
+                    .iter()
+                    .min_by_key(|&&i| (queue_len(&boards[i]), i))
+                {
+                    if queue_len(&boards[i]) < self.config.wake_backlog {
+                        return i;
+                    }
+                }
+                // 3. wake a sleeper
+                if let Some(i) = (0..n).find(|&i| boards[i].power == PowerState::Sleep) {
+                    return i;
+                }
+                // 4. everyone is awake and backlogged: shortest queue
+                (0..n).min_by_key(|&i| (queue_len(&boards[i]), i)).unwrap()
+            }
+        }
+    }
+
+    /// Decide configurations for all pending boards in one tick. Returns
+    /// (action ids aligned with `pending`, forward passes used).
+    fn decide_batch(
+        &mut self,
+        requests: &[(usize, [f32; OBS_DIM], WorkloadState)],
+        boards: &[Board],
+    ) -> Result<(Vec<usize>, u64)> {
+        if requests.is_empty() {
+            return Ok((Vec::new(), 0));
+        }
+        match &self.policy {
+            FleetPolicy::Agent(rt) => {
+                let mut actions = Vec::with_capacity(requests.len());
+                let mut passes = 0u64;
+                for chunk in requests.chunks(rt.batch().max(1)) {
+                    let obs: Vec<[f32; OBS_DIM]> = chunk.iter().map(|r| r.1).collect();
+                    let outs = rt.infer_batch(&obs)?;
+                    passes += 1;
+                    actions.extend(outs.iter().map(|o| o.argmax()));
+                }
+                Ok((actions, passes))
+            }
+            FleetPolicy::Static(b) => {
+                let baseline = *b;
+                let mut actions = Vec::with_capacity(requests.len());
+                for &(board, _, state) in requests {
+                    let head = boards[board]
+                        .queue
+                        .front()
+                        .expect("pending board has a head job");
+                    actions.push(baseline.select(
+                        &self.sim,
+                        &head.model,
+                        state,
+                        Some(&mut self.rng),
+                    )?);
+                }
+                let passes = requests.len() as u64;
+                Ok((actions, passes))
+            }
+        }
+    }
+
+    /// Run a fleet scenario to completion (all routed jobs drained).
+    pub fn run(&mut self, scenario: &FleetScenario) -> Result<FleetReport> {
+        anyhow::ensure!(
+            scenario.schedules.len() == self.config.boards,
+            "scenario has {} board schedules, fleet has {} boards",
+            scenario.schedules.len(),
+            self.config.boards
+        );
+        let cal_sleep_w = sleep_power_w(self.sim.calibration());
+        let p_static = self
+            .sim
+            .calibration()
+            .get("p_pl_static")
+            .copied()
+            .unwrap_or(3.0);
+        let p_arm_base = self
+            .sim
+            .calibration()
+            .get("p_arm_base")
+            .copied()
+            .unwrap_or(1.5);
+
+        let mut boards: Vec<Board> = (0..self.config.boards)
+            .map(|i| Board {
+                reconfig: ReconfigManager::new(),
+                sampler: Sampler::from_calibration(
+                    self.config.seed ^ (0xb0a2d + i as u64),
+                    self.sim.calibration(),
+                ),
+                rewards: RewardCalculator::new(),
+                power: PowerState::Idle { since_s: 0.0 },
+                queue: VecDeque::new(),
+                decided: None,
+                pending_overhead_s: 0.0,
+                pending_wake_s: 0.0,
+                last_cpu: 0.0,
+                last_mem_gbs: 0.0,
+                totals: Totals::default(),
+                energy: EnergyMeter::new(),
+                wakes: 0,
+                jobs_done: 0,
+                reward_sum: 0.0,
+                reward_n: 0,
+            })
+            .collect();
+
+        let tick = self.config.tick_s;
+        let mut decisions = 0u64;
+        let mut decision_batches = 0u64;
+        let mut next_job = 0usize;
+        let mut t = 0.0f64;
+        let mut ticks = 0u64;
+        // hard stop: the horizon plus a generous drain allowance
+        let max_ticks =
+            ((scenario.horizon_s / tick).ceil() as u64 + 1).saturating_mul(64).max(4096);
+
+        loop {
+            // run to the scenario horizon (idle/sleep energy is part of the
+            // fleet bill), then keep going until every queue drains
+            let drained = t >= scenario.horizon_s - 1e-9
+                && next_job >= scenario.jobs.len()
+                && boards.iter().all(|b| b.queue.is_empty());
+            if drained || ticks >= max_ticks {
+                break;
+            }
+            ticks += 1;
+
+            // 1. admit jobs arriving inside this tick
+            while next_job < scenario.jobs.len() && scenario.jobs[next_job].at_s < t + tick {
+                let job = &scenario.jobs[next_job];
+                let target = self.route(&boards);
+                let b = &mut boards[target];
+                if b.power == PowerState::Sleep {
+                    // wake: pay exit latency now, full reconfiguration later
+                    b.pending_wake_s += self.config.wake_penalty_s;
+                    b.reconfig = ReconfigManager::new();
+                    b.decided = None;
+                    b.wakes += 1;
+                }
+                b.power = PowerState::Active;
+                b.queue.push_back(ActiveJob {
+                    model: job.model.clone(),
+                    remaining_s: job.duration_s,
+                });
+                next_job += 1;
+            }
+
+            // 2. collect decision requests (head job or workload changed)
+            let mut requests: Vec<(usize, [f32; OBS_DIM], WorkloadState)> = Vec::new();
+            for (i, b) in boards.iter_mut().enumerate() {
+                let Some(head) = b.queue.front() else { continue };
+                let state = state_at(&scenario.schedules[i], t);
+                let valid = matches!(
+                    &b.decided,
+                    Some((_, m, s)) if *m == head.model.name() && *s == state
+                );
+                if !valid {
+                    let platform = PlatformState {
+                        workload: state,
+                        dpu_traffic_bps: 0.0,
+                        host_cpu_util: 0.0,
+                        p_fpga: p_static,
+                        p_arm: p_arm_base,
+                    };
+                    let sample = b.sampler.sample((t * 1e6) as u64, &platform);
+                    b.last_cpu = sample.cpu_mean();
+                    b.last_mem_gbs = sample.mem_total_gbs();
+                    let obs = self.featurizer.observe(&sample, &head.model);
+                    requests.push((i, obs, state));
+                }
+            }
+
+            // 3. one batched policy invocation for the whole tick
+            let (chosen, passes) = self.decide_batch(&requests, &boards)?;
+            decision_batches += passes;
+            for (&(i, _, state), &action_id) in requests.iter().zip(&chosen) {
+                let b = &mut boards[i];
+                let head_name = b.queue.front().expect("still queued").model.name();
+                let action = &self.sim.actions()[action_id];
+                let overhead = b.reconfig.apply(action, &head_name);
+                b.pending_overhead_s += overhead.total_us() as f64 * 1e-6;
+                b.totals.decisions += 1;
+                decisions += 1;
+                if overhead.reconfig_us > 0 {
+                    b.totals.reconfigs += 1;
+                }
+                b.decided = Some((action_id, head_name, state));
+            }
+
+            // 4. advance every board by one tick
+            for (i, b) in boards.iter_mut().enumerate() {
+                let state = state_at(&scenario.schedules[i], t);
+                let mut remaining = tick;
+
+                // wake latency (PL held at static power, metered as wake)
+                if b.pending_wake_s > 0.0 {
+                    let dt = b.pending_wake_s.min(remaining);
+                    b.pending_wake_s -= dt;
+                    remaining -= dt;
+                    b.totals.overhead_s += dt;
+                    b.energy.add_wake(p_static * dt);
+                }
+                // reconfiguration/decision overhead
+                if b.pending_overhead_s > 0.0 && remaining > 0.0 {
+                    let dt = b.pending_overhead_s.min(remaining);
+                    let loaded = b.decided.as_ref().map(|d| &self.sim.actions()[d.0]);
+                    b.pending_overhead_s -= dt;
+                    remaining -= dt;
+                    b.totals.overhead_s += dt;
+                    b.energy.add_active(idle_power_w(&self.sim, loaded), dt);
+                }
+
+                // serve the head job for whatever is left of the tick
+                while remaining > 1e-9 {
+                    let Some((action_id, decided_state)) =
+                        b.decided.as_ref().map(|d| (d.0, d.2))
+                    else {
+                        break;
+                    };
+                    let Some(head) = b.queue.front_mut() else { break };
+                    if decided_state != state {
+                        // workload changed mid-tick window; re-decide next tick
+                        break;
+                    }
+                    let dur = remaining.min(head.remaining_s);
+                    let action = &self.sim.actions()[action_id];
+                    let m = self
+                        .sim
+                        .evaluate(&head.model, &action.size, action.instances, state)?;
+                    b.totals.frames += m.fps * dur;
+                    b.totals.busy_s += dur;
+                    b.totals.energy_fpga_j += m.p_fpga * dur;
+                    b.energy.add_active(m.p_fpga, dur);
+                    if !m.meets_constraint {
+                        b.totals.constraint_violation_s += dur;
+                    }
+                    let r = b.rewards.calculate(&Outcome {
+                        measured_fps: m.fps,
+                        fpga_power: m.p_fpga,
+                        cpu_util: b.last_cpu,
+                        mem_util_gbs: b.last_mem_gbs,
+                        gmac: head.model.gmac(),
+                        model_data_mb: head.model.data_io_mb(),
+                        fps_constraint: FPS_CONSTRAINT,
+                    });
+                    b.reward_sum += r;
+                    b.reward_n += 1;
+                    head.remaining_s -= dur;
+                    remaining -= dur;
+                    if head.remaining_s <= 1e-9 {
+                        b.queue.pop_front();
+                        b.jobs_done += 1;
+                        b.decided = None;
+                        if b.queue.is_empty() {
+                            b.power = PowerState::Idle {
+                                since_s: t + (tick - remaining),
+                            };
+                        }
+                        // the next job needs a fresh (batched) decision
+                        break;
+                    }
+                }
+
+                // idle / sleep accounting for the rest of the tick
+                if remaining > 1e-9 && b.queue.is_empty() {
+                    if b.power == PowerState::Sleep {
+                        b.energy.add_sleep(cal_sleep_w, remaining);
+                    } else {
+                        let since = match b.power {
+                            PowerState::Idle { since_s } => since_s,
+                            _ => t + (tick - remaining),
+                        };
+                        let loaded = b.reconfig.current_action().map(|aid| &self.sim.actions()[aid]);
+                        b.energy.add_idle(idle_power_w(&self.sim, loaded), remaining);
+                        // deep-sleep transition once the dwell expires
+                        if (t + tick) - since >= self.config.idle_to_sleep_s {
+                            b.power = PowerState::Sleep;
+                        } else {
+                            b.power = PowerState::Idle { since_s: since };
+                        }
+                    }
+                } else if remaining > 1e-9 {
+                    // queued but waiting on a decision (next tick):
+                    // board is awake, holding its configuration
+                    let loaded = b.reconfig.current_action().map(|aid| &self.sim.actions()[aid]);
+                    b.energy.add_idle(idle_power_w(&self.sim, loaded), remaining);
+                }
+            }
+            t += tick;
+        }
+
+        let boards_out = boards
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut b)| {
+                if b.reward_n > 0 {
+                    b.totals.mean_reward = b.reward_sum / b.reward_n as f64;
+                }
+                BoardReport {
+                    board: i,
+                    queue_left: b.queue.len(),
+                    totals: b.totals,
+                    energy: b.energy,
+                    wakes: b.wakes,
+                    jobs_done: b.jobs_done,
+                }
+            })
+            .collect();
+        Ok(FleetReport {
+            policy: self.policy.name(),
+            routing: self.config.routing,
+            boards: boards_out,
+            ticks,
+            decisions,
+            decision_batches,
+            jobs_total: scenario.jobs.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_models;
+
+    fn variant(name: &str) -> ModelVariant {
+        ModelVariant::new(
+            load_models()
+                .unwrap()
+                .into_iter()
+                .find(|m| m.name == name)
+                .unwrap(),
+            0.0,
+        )
+    }
+
+    fn steady_schedules(boards: usize) -> Vec<Vec<(f64, WorkloadState)>> {
+        vec![vec![(0.0, WorkloadState::None)]; boards]
+    }
+
+    fn job(name: &str, at: f64, dur: f64) -> FleetJob {
+        FleetJob {
+            model: variant(name),
+            at_s: at,
+            duration_s: dur,
+        }
+    }
+
+    fn config(routing: RoutingPolicy, boards: usize) -> FleetConfig {
+        FleetConfig {
+            boards,
+            routing,
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_boards() {
+        let cfg = config(RoutingPolicy::RoundRobin, 3);
+        let mut fleet =
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let scenario = FleetScenario {
+            jobs: (0..6).map(|i| job("ResNet18", i as f64 * 0.1, 4.0)).collect(),
+            schedules: steady_schedules(3),
+            horizon_s: 30.0,
+        };
+        let r = fleet.run(&scenario).unwrap();
+        assert_eq!(r.jobs_done(), 6);
+        for b in &r.boards {
+            assert_eq!(b.jobs_done, 2, "round robin spreads 6 jobs over 3 boards");
+        }
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_boards() {
+        let cfg = config(RoutingPolicy::LeastLoaded, 2);
+        let mut fleet =
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        // two long jobs at t=0: one per board; a third arrives while both
+        // are busy and lands on the shorter queue
+        let scenario = FleetScenario {
+            jobs: vec![
+                job("InceptionV3", 0.0, 20.0),
+                job("ResNet18", 0.0, 4.0),
+                job("MobileNetV2", 1.0, 4.0),
+            ],
+            schedules: steady_schedules(2),
+            horizon_s: 40.0,
+        };
+        let r = fleet.run(&scenario).unwrap();
+        assert_eq!(r.jobs_done(), 3);
+        // board 0 got the 20 s job; boards 1 got the two short ones
+        assert_eq!(r.boards[0].jobs_done, 1);
+        assert_eq!(r.boards[1].jobs_done, 2);
+    }
+
+    #[test]
+    fn energy_aware_consolidates_and_sleeps_spare_boards() {
+        let mut cfg = config(RoutingPolicy::EnergyAware, 4);
+        cfg.idle_to_sleep_s = 2.0;
+        let mut fleet =
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        // a thin trickle one board can absorb
+        let scenario = FleetScenario {
+            jobs: (0..8).map(|i| job("MobileNetV2", i as f64 * 8.0, 6.0)).collect(),
+            schedules: steady_schedules(4),
+            horizon_s: 70.0,
+        };
+        let r = fleet.run(&scenario).unwrap();
+        assert_eq!(r.jobs_done(), 8);
+        // the trickle consolidates onto board 0
+        assert_eq!(r.boards[0].jobs_done, 8);
+        // spare boards spent essentially the whole run asleep
+        for b in &r.boards[1..] {
+            assert_eq!(b.jobs_done, 0);
+            assert!(
+                b.energy.sleep_s > 50.0,
+                "board {} slept only {:.1}s",
+                b.board,
+                b.energy.sleep_s
+            );
+        }
+    }
+
+    #[test]
+    fn wake_charges_latency_and_full_reconfiguration() {
+        let mut cfg = config(RoutingPolicy::RoundRobin, 1);
+        cfg.idle_to_sleep_s = 1.0;
+        let mut fleet =
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        // same model twice with a long gap: the board sleeps in between,
+        // so the second job must pay reconfig despite the same (model,
+        // config) pair
+        let scenario = FleetScenario {
+            jobs: vec![job("ResNet18", 0.0, 4.0), job("ResNet18", 30.0, 4.0)],
+            schedules: steady_schedules(1),
+            horizon_s: 60.0,
+        };
+        let r = fleet.run(&scenario).unwrap();
+        let b = &r.boards[0];
+        assert_eq!(b.jobs_done, 2);
+        assert_eq!(b.wakes, 1, "one sleep->active transition");
+        assert!(b.energy.wake_j > 0.0);
+        assert!(b.energy.sleep_s > 10.0);
+        assert_eq!(
+            b.totals.reconfigs, 2,
+            "sleep loses the bitstream: the repeat job reconfigures again"
+        );
+    }
+
+    #[test]
+    fn sleep_disabled_keeps_boards_idle() {
+        let mut cfg = config(RoutingPolicy::RoundRobin, 2);
+        cfg.idle_to_sleep_s = f64::INFINITY;
+        let mut fleet =
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let scenario = FleetScenario {
+            jobs: vec![job("ResNet18", 0.0, 4.0)],
+            schedules: steady_schedules(2),
+            horizon_s: 30.0,
+        };
+        let r = fleet.run(&scenario).unwrap();
+        assert!(r.boards[1].energy.sleep_s == 0.0);
+        assert!(r.boards[1].energy.idle_s > 20.0);
+        // and idling burns more than sleeping would have
+        let sim = DpuSim::load().unwrap();
+        assert!(
+            r.boards[1].energy.idle_j
+                > sleep_power_w(sim.calibration()) * r.boards[1].energy.idle_s
+        );
+    }
+
+    #[test]
+    fn fleet_time_and_energy_are_conserved() {
+        let cfg = config(RoutingPolicy::LeastLoaded, 2);
+        let mut fleet =
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::MaxFps)).unwrap();
+        let scenario = FleetScenario {
+            jobs: vec![
+                job("ResNet50", 0.0, 10.0),
+                job("MobileNetV2", 0.0, 10.0),
+                job("InceptionV3", 12.0, 8.0),
+            ],
+            schedules: steady_schedules(2),
+            horizon_s: 40.0,
+        };
+        let r = fleet.run(&scenario).unwrap();
+        for b in &r.boards {
+            let accounted =
+                b.totals.busy_s + b.totals.overhead_s + b.energy.idle_s + b.energy.sleep_s;
+            let wall = r.ticks as f64 * 1.0;
+            assert!(
+                (accounted - wall).abs() < 1e-6,
+                "board {}: accounted {accounted} vs wall {wall}",
+                b.board
+            );
+            assert!(b.energy.total_j() >= b.totals.energy_fpga_j - 1e-9);
+        }
+        assert!(r.fleet_ppw() > 0.0 && r.fleet_ppw() <= r.serving_ppw() + 1e-12);
+    }
+
+    #[test]
+    fn workload_change_triggers_redecision_per_board() {
+        let cfg = config(RoutingPolicy::RoundRobin, 1);
+        let mut fleet =
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let scenario = FleetScenario {
+            jobs: vec![job("InceptionV3", 0.0, 20.0)],
+            schedules: vec![vec![
+                (0.0, WorkloadState::None),
+                (10.0, WorkloadState::Mem),
+            ]],
+            horizon_s: 40.0,
+        };
+        let r = fleet.run(&scenario).unwrap();
+        assert!(
+            r.boards[0].totals.decisions >= 2,
+            "arrival + workload flip must both decide (got {})",
+            r.boards[0].totals.decisions
+        );
+    }
+
+    #[test]
+    fn generated_scenarios_shape_up() {
+        let s =
+            FleetScenario::generate(ArrivalPattern::Bursty, 4, 100.0, 0.5, 10.0, 0.7, 11).unwrap();
+        assert_eq!(s.schedules.len(), 4);
+        assert!(!s.jobs.is_empty());
+        assert!(s.jobs.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        assert!(s.jobs.iter().all(|j| (2.0..=60.0).contains(&j.duration_s)));
+    }
+}

@@ -1,14 +1,19 @@
 //! The DPUConfig framework (paper Fig 4): decision engine, FPGA
-//! reconfiguration manager, simulated-time serving loop, and a threaded
-//! decision service with dynamic micro-batching.
+//! reconfiguration manager, simulated-time serving loop, a threaded
+//! decision service with dynamic micro-batching, and the multi-board
+//! fleet coordinator (DESIGN.md §8).
 
 pub mod engine;
+pub mod fleet;
 pub mod placement;
 pub mod reconfig;
 pub mod server;
 pub mod service;
 
 pub use engine::{DecisionEngine, Selector};
+pub use fleet::{
+    FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetScenario, RoutingPolicy,
+};
 pub use reconfig::{Overhead, ReconfigManager};
 pub use server::{Arrival, Coordinator, Event, Report, Scenario, Totals};
 pub use service::{DecisionClient, DecisionService};

@@ -33,17 +33,49 @@ pub struct Scenario {
 }
 
 impl Scenario {
+    /// Build a single-board scenario from a fleet-scale arrival process
+    /// (see [`crate::workload::traffic`]): arrivals are drawn from
+    /// `pattern` at `mean_rate` jobs/s over `horizon_s`, serialized onto
+    /// the one platform (a job arriving while another is being served
+    /// starts when the board frees up), with an interference schedule
+    /// drawn at `dwell_s` granularity. Deterministic in `seed`.
+    pub fn from_traffic(
+        pattern: crate::workload::traffic::ArrivalPattern,
+        horizon_s: f64,
+        mean_rate: f64,
+        mean_duration_s: f64,
+        dwell_s: f64,
+        seed: u64,
+    ) -> Result<Scenario> {
+        use crate::workload::traffic::{arrival_times, correlated_schedules};
+        let variants = crate::models::load_variants()?;
+        let mut rng = crate::workload::XorShift64::new(seed ^ 0x5ce9a210);
+        let mut arrivals = Vec::new();
+        let mut free_at = 0.0f64;
+        for at in arrival_times(pattern, seed, horizon_s, mean_rate) {
+            let start = at.max(free_at);
+            let duration_s =
+                (-rng.next_f64().max(1e-12).ln() * mean_duration_s).clamp(2.0, 60.0);
+            let model = variants[rng.below(variants.len())].clone();
+            arrivals.push(Arrival {
+                model,
+                at_s: start,
+                duration_s,
+            });
+            free_at = start + duration_s;
+        }
+        let workload = correlated_schedules(seed, 1, horizon_s.max(free_at), dwell_s, 1.0)
+            .remove(0);
+        Ok(Scenario {
+            arrivals,
+            workload,
+            seed,
+        })
+    }
+
     /// Workload state active at time `t`.
     pub fn state_at(&self, t: f64) -> WorkloadState {
-        let mut cur = WorkloadState::None;
-        for &(start, st) in &self.workload {
-            if start <= t {
-                cur = st;
-            } else {
-                break;
-            }
-        }
-        cur
+        crate::workload::traffic::state_at(&self.workload, t)
     }
 
     /// The next workload-change strictly after `t`, if any.
@@ -305,6 +337,22 @@ mod tests {
         assert_eq!(decisions.len(), 3);
         assert_eq!(decisions[2].1, WorkloadState::Mem);
         assert!(decisions[2].0 >= 15.0);
+    }
+
+    #[test]
+    fn from_traffic_serializes_overlapping_jobs() {
+        use crate::workload::traffic::ArrivalPattern;
+        let s = Scenario::from_traffic(ArrivalPattern::Bursty, 60.0, 0.5, 6.0, 15.0, 3).unwrap();
+        assert!(!s.arrivals.is_empty());
+        for w in s.arrivals.windows(2) {
+            assert!(
+                w[1].at_s >= w[0].at_s + w[0].duration_s - 1e-9,
+                "arrivals must not overlap on a single board"
+            );
+        }
+        let mut c = Coordinator::new(Selector::Static(Baseline::MinPower), 3).unwrap();
+        let r = c.run_scenario(&s).unwrap();
+        assert!(r.totals.frames > 0.0);
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Multi-board energy accounting (fleet layer, DESIGN.md §8).
+//!
+//! The single-board simulator reports instantaneous PL power while a
+//! configuration is serving; a fleet additionally spends energy while
+//! boards sit *idle* (bitstream loaded, no frames moving) and — following
+//! "Idle is the New Sleep" (arXiv:2407.12027) — can drop idle boards into
+//! a low-power sleep state whose exit requires a full reconfiguration.
+//! [`EnergyMeter`] integrates one board's energy across those regimes;
+//! [`FleetEnergy`] sums meters across boards so the fleet report can
+//! quote joules and fleet-level frames/J from one place.
+
+use crate::data::Action;
+use crate::dpusim::DpuSim;
+use std::collections::HashMap;
+
+/// Default sleep-state PL power (W) when `calibration.csv` carries no
+/// `p_sleep` key: the suspend-to-idle floor measured in
+/// arXiv:2407.12027 for configuration-retaining sleep.
+pub const DEFAULT_SLEEP_POWER_W: f64 = 0.25;
+
+/// Sleep-state PL power, from calibration when fitted.
+pub fn sleep_power_w(cal: &HashMap<String, f64>) -> f64 {
+    cal.get("p_sleep").copied().unwrap_or(DEFAULT_SLEEP_POWER_W)
+}
+
+/// PL power of an awake board that is *not* serving frames: static power
+/// plus the per-instance idle power of the currently-loaded
+/// configuration (nothing loaded -> static only).
+pub fn idle_power_w(sim: &DpuSim, loaded: Option<&Action>) -> f64 {
+    let cal = sim.calibration();
+    let p_static = cal.get("p_pl_static").copied().unwrap_or(3.0);
+    match loaded {
+        None => p_static,
+        Some(a) => {
+            let p_idle0 = cal.get("p_idle0").copied().unwrap_or(0.5);
+            let p_idle1 = cal.get("p_idle1").copied().unwrap_or(0.0015);
+            let macs = sim
+                .sizes()
+                .get(&a.size)
+                .map(|s| s.peak_macs as f64)
+                .unwrap_or(0.0);
+            p_static + a.instances as f64 * (p_idle0 + p_idle1 * macs)
+        }
+    }
+}
+
+/// Per-board energy integrator across the serving / idle / sleep / wake
+/// regimes. All energies in joules, all times in simulated seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyMeter {
+    pub active_j: f64,
+    pub idle_j: f64,
+    pub sleep_j: f64,
+    pub wake_j: f64,
+    pub active_s: f64,
+    pub idle_s: f64,
+    pub sleep_s: f64,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Integrate `dt_s` of serving at `p_w` watts.
+    pub fn add_active(&mut self, p_w: f64, dt_s: f64) {
+        self.active_j += p_w * dt_s;
+        self.active_s += dt_s;
+    }
+
+    /// Integrate `dt_s` of awake-but-idle time at `p_w` watts.
+    pub fn add_idle(&mut self, p_w: f64, dt_s: f64) {
+        self.idle_j += p_w * dt_s;
+        self.idle_s += dt_s;
+    }
+
+    /// Integrate `dt_s` of sleep time at `p_w` watts.
+    pub fn add_sleep(&mut self, p_w: f64, dt_s: f64) {
+        self.sleep_j += p_w * dt_s;
+        self.sleep_s += dt_s;
+    }
+
+    /// Charge a wake-up event (reconfiguration energy, joules).
+    pub fn add_wake(&mut self, e_j: f64) {
+        self.wake_j += e_j;
+    }
+
+    /// Total PL energy across all regimes.
+    pub fn total_j(&self) -> f64 {
+        self.active_j + self.idle_j + self.sleep_j + self.wake_j
+    }
+
+    /// Total accounted wall time.
+    pub fn total_s(&self) -> f64 {
+        self.active_s + self.idle_s + self.sleep_s
+    }
+}
+
+/// Fleet-level sum of per-board meters.
+#[derive(Debug, Clone, Default)]
+pub struct FleetEnergy {
+    pub boards: Vec<EnergyMeter>,
+}
+
+impl FleetEnergy {
+    pub fn new(n: usize) -> Self {
+        FleetEnergy {
+            boards: vec![EnergyMeter::default(); n],
+        }
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.boards.iter().map(EnergyMeter::total_j).sum()
+    }
+
+    /// Fleet energy efficiency: frames served per joule of PL energy
+    /// (idle + sleep energy counted — that is the point of the fleet
+    /// accounting; a board that naps cheaply raises this number).
+    pub fn fleet_ppw(&self, total_frames: f64) -> f64 {
+        let e = self.total_j();
+        if e > 0.0 {
+            total_frames / e
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_integrates_all_regimes() {
+        let mut m = EnergyMeter::new();
+        m.add_active(10.0, 2.0);
+        m.add_idle(3.0, 4.0);
+        m.add_sleep(0.25, 8.0);
+        m.add_wake(1.5);
+        assert!((m.total_j() - (20.0 + 12.0 + 2.0 + 1.5)).abs() < 1e-12);
+        assert!((m.total_s() - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_power_tracks_loaded_config() {
+        let sim = DpuSim::load().unwrap();
+        let none = idle_power_w(&sim, None);
+        let b4096 = crate::data::Action {
+            id: 23,
+            size: "B4096".into(),
+            instances: 3,
+        };
+        let loaded = idle_power_w(&sim, Some(&b4096));
+        assert!(loaded > none, "loaded config must idle hotter than empty PL");
+        // sleep must undercut both (the whole premise of the sleep state)
+        assert!(sleep_power_w(sim.calibration()) < none);
+    }
+
+    #[test]
+    fn fleet_energy_sums_boards() {
+        let mut f = FleetEnergy::new(3);
+        for (i, b) in f.boards.iter_mut().enumerate() {
+            b.add_active(5.0, (i + 1) as f64);
+        }
+        assert!((f.total_j() - 5.0 * 6.0).abs() < 1e-12);
+        assert!(f.fleet_ppw(300.0) > 0.0);
+    }
+}

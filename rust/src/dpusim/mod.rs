@@ -6,9 +6,11 @@
 //! other by `data/golden_parity.csv` (tests in `rust/tests/parity.rs` and
 //! `python/tests/test_dpusim.py`).
 
+pub mod energy;
 pub mod multi;
 pub mod perf;
 
+pub use energy::{EnergyMeter, FleetEnergy};
 pub use multi::{evaluate_shared, Placement};
 pub use perf::{DpuSim, Metrics};
 

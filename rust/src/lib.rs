@@ -10,6 +10,9 @@
 //! * [`coordinator`] is the DPUConfig framework itself (paper Fig 4):
 //!   telemetry-driven decision engine, FPGA reconfiguration manager with
 //!   the paper's measured overheads, and an inference-serving loop.
+//!   [`coordinator::fleet`] scales it to N boards behind one
+//!   admission/routing layer with batched policy decisions and
+//!   idle/sleep power states (DESIGN.md §8).
 //! * [`dpusim`], [`models`], [`workload`], [`telemetry`] are the substrate:
 //!   a calibrated analytical simulator of the ZCU102 + DPUCZDX8G testbed
 //!   (see DESIGN.md §2 for the substitution rationale and §7 for the

@@ -10,6 +10,7 @@
 //! dpuconfig fig6    [--dwell 30]                # reconfiguration timeline
 //! dpuconfig serve   [--requests 64]             # threaded decision service
 //! dpuconfig decide  --model ResNet152 --state M # one decision, verbose
+//! dpuconfig fleet   [--boards 4] [--routing energy_aware] [--pattern diurnal]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -135,6 +136,19 @@ fn run() -> Result<()> {
             let state: WorkloadState = args.opt_or("state", "N").parse()?;
             colocate_demo(args.positional.clone(), state)?;
         }
+        "fleet" => {
+            let boards = args.opt_usize("boards", 4)?;
+            let horizon = args.opt_f64("horizon", 120.0)?;
+            let rate = args.opt_f64("rate", 0.5)?;
+            let routing: dpuconfig::coordinator::RoutingPolicy =
+                args.opt_or("routing", "energy_aware").parse()?;
+            let pattern: dpuconfig::workload::traffic::ArrivalPattern =
+                args.opt_or("pattern", "diurnal").parse()?;
+            let correlation = args.opt_f64("correlation", 0.7)?;
+            let seed = args.opt_u64("seed", 7)?;
+            let policy = args.opt_or("policy", "optimal");
+            fleet_demo(boards, horizon, rate, routing, pattern, correlation, seed, policy)?;
+        }
         "metrics" => {
             // serve the telemetry endpoint for a few seconds (demo)
             let port = args.opt_u64("port", 0)? as u16;
@@ -167,7 +181,7 @@ fn run() -> Result<()> {
         }
         "help" | _ => {
             println!("dpuconfig {} — see module docs / README", dpuconfig::version());
-            println!("subcommands: sweep tables fig1 fig2 fig3 fig5 fig6 serve decide colocate metrics profile");
+            println!("subcommands: sweep tables fig1 fig2 fig3 fig5 fig6 serve decide colocate metrics profile fleet");
         }
     }
     Ok(())
@@ -226,6 +240,50 @@ fn colocate_demo(mut names: Vec<String>, state: WorkloadState) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fleet_demo(
+    boards: usize,
+    horizon: f64,
+    rate: f64,
+    routing: dpuconfig::coordinator::RoutingPolicy,
+    pattern: dpuconfig::workload::traffic::ArrivalPattern,
+    correlation: f64,
+    seed: u64,
+    policy: &str,
+) -> Result<()> {
+    use dpuconfig::coordinator::{FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario};
+    let fleet_policy = match policy {
+        "dpuconfig" | "agent" => {
+            // batched artifact: one forward pass covers up to 8 boards
+            let rt = PolicyRuntime::load(&default_policy_path(8), 8)?;
+            FleetPolicy::Agent(rt)
+        }
+        "optimal" => FleetPolicy::Static(Baseline::Optimal),
+        "max_fps" => FleetPolicy::Static(Baseline::MaxFps),
+        "min_power" => FleetPolicy::Static(Baseline::MinPower),
+        "random" => FleetPolicy::Static(Baseline::Random),
+        other => bail!("unknown policy {other:?}"),
+    };
+    let cfg = FleetConfig {
+        boards,
+        routing,
+        seed,
+        ..FleetConfig::default()
+    };
+    let scenario =
+        FleetScenario::generate(pattern, boards, horizon, rate, 10.0, correlation, seed)?;
+    println!(
+        "fleet: {boards} boards, {} arrivals ({}), routing {}, horizon {horizon}s",
+        scenario.jobs.len(),
+        pattern.name(),
+        routing.name()
+    );
+    let mut fleet = FleetCoordinator::new(cfg, fleet_policy)?;
+    let report = fleet.run(&scenario)?;
+    print!("{}", report.render());
     Ok(())
 }
 

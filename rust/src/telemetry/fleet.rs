@@ -1,0 +1,182 @@
+//! Fleet telemetry aggregation (DESIGN.md §8): roll per-board
+//! [`Sample`]s up into one fleet-level view, and render the multi-board
+//! Prometheus exposition a rack-level collector would scrape.
+//!
+//! ```
+//! use dpuconfig::telemetry::{fleet, Sample};
+//! let boards = vec![
+//!     Sample { t_us: 0, cpu: [10.0; 4], memr: [1.0; 5], memw: [1.0; 5], p_fpga: 6.0, p_arm: 2.0 },
+//!     Sample { t_us: 0, cpu: [30.0; 4], memr: [2.0; 5], memw: [2.0; 5], p_fpga: 8.0, p_arm: 2.5 },
+//! ];
+//! let agg = fleet::aggregate(&boards);
+//! assert_eq!(agg.boards, 2);
+//! assert!((agg.total_p_fpga - 14.0).abs() < 1e-12);
+//! ```
+
+use crate::telemetry::{prometheus_text, Sample};
+
+/// One fleet-level aggregate of per-board samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetStats {
+    pub boards: usize,
+    /// Mean CPU utilization across all boards and cores (percent).
+    pub mean_cpu: f64,
+    /// Hottest single core anywhere in the fleet (percent).
+    pub max_cpu: f64,
+    /// Total DDR traffic across the fleet (GB/s).
+    pub total_mem_gbs: f64,
+    /// Total PL power (W).
+    pub total_p_fpga: f64,
+    /// Total PS power (W).
+    pub total_p_arm: f64,
+}
+
+/// Aggregate per-board samples into fleet totals. Empty input is a
+/// zero-board fleet (all aggregates 0).
+pub fn aggregate(samples: &[Sample]) -> FleetStats {
+    let n = samples.len();
+    let mut mean_cpu = 0.0;
+    let mut max_cpu = 0.0f64;
+    let mut mem = 0.0;
+    let mut p_fpga = 0.0;
+    let mut p_arm = 0.0;
+    for s in samples {
+        mean_cpu += s.cpu_mean();
+        for &c in &s.cpu {
+            max_cpu = max_cpu.max(c);
+        }
+        mem += s.mem_total_gbs();
+        p_fpga += s.p_fpga;
+        p_arm += s.p_arm;
+    }
+    FleetStats {
+        boards: n,
+        mean_cpu: if n > 0 { mean_cpu / n as f64 } else { 0.0 },
+        max_cpu,
+        total_mem_gbs: mem,
+        total_p_fpga: p_fpga,
+        total_p_arm: p_arm,
+    }
+}
+
+/// Render the whole fleet in Prometheus exposition format: every board's
+/// metrics carry a `board` label, followed by the fleet aggregates a
+/// dashboard alerts on. Lines are grouped family-major (one `# TYPE`
+/// header, then every board's samples) — the exposition format requires
+/// each metric family to form one uninterrupted group.
+pub fn prometheus_text_fleet(samples: &[Sample]) -> String {
+    // collect each board's lines into families, preserving family order
+    let mut family_order: Vec<String> = Vec::new();
+    let mut families: std::collections::HashMap<String, Vec<String>> =
+        std::collections::HashMap::new();
+    for (i, s) in samples.iter().enumerate() {
+        for line in prometheus_text(s).lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split(' ').next().unwrap_or("").to_string();
+                if !families.contains_key(&name) {
+                    families.insert(name.clone(), Vec::new());
+                    family_order.push(name);
+                }
+            } else if let Some(brace) = line.find('{') {
+                let name = line[..brace].to_string();
+                families
+                    .entry(name)
+                    .or_default()
+                    .push(format!("{}board=\"{i}\",{}", &line[..brace + 1], &line[brace + 1..]));
+            } else if let Some(space) = line.find(' ') {
+                let name = line[..space].to_string();
+                families
+                    .entry(name)
+                    .or_default()
+                    .push(format!("{}{{board=\"{i}\"}}{}", &line[..space], &line[space..]));
+            }
+        }
+    }
+    let mut out = String::with_capacity(2048 * samples.len().max(1));
+    for name in &family_order {
+        out.push_str(&format!("# TYPE {name} gauge\n"));
+        for line in &families[name] {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    let agg = aggregate(samples);
+    out.push_str("# TYPE dpufleet_boards gauge\n");
+    out.push_str(&format!("dpufleet_boards {}\n", agg.boards));
+    out.push_str("# TYPE dpufleet_power_watts gauge\n");
+    out.push_str(&format!(
+        "dpufleet_power_watts{{rail=\"fpga\"}} {}\n",
+        agg.total_p_fpga
+    ));
+    out.push_str(&format!(
+        "dpufleet_power_watts{{rail=\"arm\"}} {}\n",
+        agg.total_p_arm
+    ));
+    out.push_str("# TYPE dpufleet_mem_gbs gauge\n");
+    out.push_str(&format!("dpufleet_mem_gbs {}\n", agg.total_mem_gbs));
+    out.push_str("# TYPE dpufleet_cpu_mean gauge\n");
+    out.push_str(&format!("dpufleet_cpu_mean {}\n", agg.mean_cpu));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(cpu: f64, p: f64) -> Sample {
+        Sample {
+            t_us: 0,
+            cpu: [cpu; 4],
+            memr: [10.0; 5],
+            memw: [5.0; 5],
+            p_fpga: p,
+            p_arm: 2.0,
+        }
+    }
+
+    #[test]
+    fn aggregates_sum_and_average() {
+        let s = vec![sample(20.0, 6.0), sample(40.0, 8.0), sample(90.0, 11.0)];
+        let a = aggregate(&s);
+        assert_eq!(a.boards, 3);
+        assert!((a.mean_cpu - 50.0).abs() < 1e-12);
+        assert!((a.max_cpu - 90.0).abs() < 1e-12);
+        assert!((a.total_p_fpga - 25.0).abs() < 1e-12);
+        // 3 boards x 15 ports x 7.5 MB/s... -> (10*5 + 5*5)/1e3 GB/s each
+        assert!((a.total_mem_gbs - 3.0 * 0.075).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_fleet_is_zeroes() {
+        let a = aggregate(&[]);
+        assert_eq!(a.boards, 0);
+        assert_eq!(a.total_p_fpga, 0.0);
+        assert_eq!(a.mean_cpu, 0.0);
+    }
+
+    #[test]
+    fn prometheus_fleet_labels_every_board() {
+        let s = vec![sample(20.0, 6.0), sample(40.0, 8.0)];
+        let txt = prometheus_text_fleet(&s);
+        assert!(txt.contains("board=\"0\""));
+        assert!(txt.contains("board=\"1\""));
+        assert!(txt.contains("zcu102_cpu_utilization{board=\"1\",core=\"3\"}"));
+        assert!(txt.contains("dpufleet_boards 2"));
+        assert!(txt.contains("dpufleet_power_watts{rail=\"fpga\"} 14"));
+        // headers emitted once, not per board
+        assert_eq!(txt.matches("# TYPE zcu102_cpu_utilization").count(), 1);
+        // families are uninterrupted groups: every sample line between a
+        // family's header and the next header belongs to that family
+        let mut current = String::new();
+        for line in txt.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                current = rest.split(' ').next().unwrap().to_string();
+            } else {
+                assert!(
+                    line.starts_with(current.as_str()),
+                    "line {line:?} interleaved into family {current:?}"
+                );
+            }
+        }
+    }
+}

@@ -7,8 +7,10 @@
 //! format (what the real node exporter would serve on `/metrics`).
 
 pub mod exporter;
+pub mod fleet;
 
 pub use exporter::{Exporter, MetricsSlot};
+pub use fleet::FleetStats;
 
 use crate::workload::{WorkloadState, XorShift64};
 use std::collections::VecDeque;

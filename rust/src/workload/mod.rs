@@ -7,6 +7,8 @@
 //! terms consumed by [`crate::dpusim`], plus a small stochastic jitter
 //! model standing in for real co-runner variability.
 
+pub mod traffic;
+
 use std::fmt;
 use std::str::FromStr;
 

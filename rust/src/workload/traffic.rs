@@ -1,0 +1,236 @@
+//! Fleet-scale traffic generators (DESIGN.md §8): arrival processes for
+//! the global request stream and correlated per-board co-runner
+//! schedules.
+//!
+//! Three arrival shapes cover the serving regimes the fleet coordinator
+//! is evaluated under:
+//!
+//! * **steady** — homogeneous Poisson arrivals (the single-board
+//!   baseline, scaled up),
+//! * **diurnal** — a sinusoidal day/night rate curve (deep troughs are
+//!   what make the sleep state pay for itself),
+//! * **bursty** — an on/off process: silence, then request storms (what
+//!   stresses admission + wake-up latency).
+//!
+//! Co-runner interference is generated per board but *correlated* across
+//! the fleet (`correlation` = probability that a board follows the
+//! fleet-wide state instead of drawing its own) — rack-level noisy
+//! neighbours hit many boards at once.
+//!
+//! All generators are deterministic in their seed ([`XorShift64`]).
+//!
+//! ```
+//! use dpuconfig::workload::traffic::{self, ArrivalPattern};
+//! let ts = traffic::arrival_times(ArrivalPattern::Diurnal, 7, 120.0, 0.5);
+//! assert!(ts.windows(2).all(|w| w[0] <= w[1]), "sorted in time");
+//! let boards = traffic::correlated_schedules(7, 4, 120.0, 20.0, 0.8);
+//! assert_eq!(boards.len(), 4);
+//! ```
+
+use crate::workload::{WorkloadState, XorShift64, ALL_STATES};
+
+/// Shape of the global arrival process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    /// Homogeneous Poisson arrivals at the mean rate.
+    Steady,
+    /// Sinusoidal day/night curve: rate swings between ~0.2x and ~1.8x
+    /// the mean over one period (1/10 of the horizon).
+    Diurnal,
+    /// On/off bursts: 5x the mean rate one fifth of the time.
+    Bursty,
+}
+
+impl ArrivalPattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Steady => "steady",
+            ArrivalPattern::Diurnal => "diurnal",
+            ArrivalPattern::Bursty => "bursty",
+        }
+    }
+}
+
+impl std::str::FromStr for ArrivalPattern {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "steady" => Ok(ArrivalPattern::Steady),
+            "diurnal" => Ok(ArrivalPattern::Diurnal),
+            "bursty" => Ok(ArrivalPattern::Bursty),
+            other => anyhow::bail!("unknown arrival pattern {other:?} (want steady|diurnal|bursty)"),
+        }
+    }
+}
+
+/// Instantaneous arrival rate (requests/s) of `pattern` at time `t_s`,
+/// for a mean rate of `mean_rate` over `horizon_s`.
+pub fn rate_at(pattern: ArrivalPattern, t_s: f64, horizon_s: f64, mean_rate: f64) -> f64 {
+    match pattern {
+        ArrivalPattern::Steady => mean_rate,
+        ArrivalPattern::Diurnal => {
+            let period = horizon_s / 10.0;
+            let phase = 2.0 * std::f64::consts::PI * t_s / period.max(1e-9);
+            mean_rate * (1.0 + 0.8 * phase.sin())
+        }
+        ArrivalPattern::Bursty => {
+            // on/off: one fifth of each period is a 5x storm, the rest is
+            // a trickle that keeps the mean rate at mean_rate
+            let period = horizon_s / 8.0;
+            let frac = (t_s / period.max(1e-9)).fract();
+            if frac < 0.2 {
+                5.0 * mean_rate
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Sorted arrival times over `[0, horizon_s)` via Poisson thinning
+/// against the pattern's rate curve. Deterministic in `seed`.
+pub fn arrival_times(
+    pattern: ArrivalPattern,
+    seed: u64,
+    horizon_s: f64,
+    mean_rate: f64,
+) -> Vec<f64> {
+    let mut rng = XorShift64::new(seed ^ 0x7_2aff_1c);
+    let rate_max = 5.0 * mean_rate; // upper bound of every pattern
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    loop {
+        // exponential inter-arrival at the bounding rate
+        t += -rng.next_f64().max(1e-12).ln() / rate_max;
+        if t >= horizon_s {
+            break;
+        }
+        // thin: accept with probability rate(t)/rate_max
+        if rng.next_f64() < rate_at(pattern, t, horizon_s, mean_rate) / rate_max {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Per-board co-runner schedules over `[0, horizon_s)`: a fleet-wide
+/// state sequence (dwell `dwell_s` per segment) that each board follows
+/// with probability `correlation`, drawing an independent state
+/// otherwise. `correlation = 1.0` -> every board sees the same noisy
+/// neighbour; `0.0` -> fully independent interference.
+pub fn correlated_schedules(
+    seed: u64,
+    boards: usize,
+    horizon_s: f64,
+    dwell_s: f64,
+    correlation: f64,
+) -> Vec<Vec<(f64, WorkloadState)>> {
+    assert!(boards > 0 && dwell_s > 0.0);
+    let mut global_rng = XorShift64::new(seed ^ 0x61_0ba1);
+    let mut board_rngs: Vec<XorShift64> = (0..boards)
+        .map(|i| XorShift64::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(i as u64 + 1)))
+        .collect();
+    let mut out: Vec<Vec<(f64, WorkloadState)>> = vec![Vec::new(); boards];
+    let mut t = 0.0;
+    while t < horizon_s {
+        let global = ALL_STATES[global_rng.below(3)];
+        for (b, rng) in board_rngs.iter_mut().enumerate() {
+            let st = if rng.next_f64() < correlation {
+                global
+            } else {
+                ALL_STATES[rng.below(3)]
+            };
+            // only record changes (schedules are step functions)
+            if out[b].last().map(|&(_, s)| s) != Some(st) {
+                out[b].push((t, st));
+            }
+        }
+        t += dwell_s;
+    }
+    for sched in &mut out {
+        if sched.is_empty() {
+            sched.push((0.0, WorkloadState::None));
+        } else if sched[0].0 > 0.0 {
+            sched.insert(0, (0.0, WorkloadState::None));
+        }
+    }
+    out
+}
+
+/// Workload state active at time `t` in a step-function schedule
+/// (same contract as `coordinator::server::Scenario::state_at`).
+pub fn state_at(schedule: &[(f64, WorkloadState)], t: f64) -> WorkloadState {
+    let mut cur = WorkloadState::None;
+    for &(start, st) in schedule {
+        if start <= t {
+            cur = st;
+        } else {
+            break;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_sorted_deterministic_and_roughly_at_rate() {
+        for pattern in [
+            ArrivalPattern::Steady,
+            ArrivalPattern::Diurnal,
+            ArrivalPattern::Bursty,
+        ] {
+            let a = arrival_times(pattern, 3, 400.0, 1.0);
+            let b = arrival_times(pattern, 3, 400.0, 1.0);
+            assert_eq!(a, b, "{pattern:?} must be deterministic");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{pattern:?} sorted");
+            // mean rate 1.0 over 400 s -> a few hundred arrivals
+            assert!(
+                (150..=800).contains(&a.len()),
+                "{pattern:?}: {} arrivals",
+                a.len()
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_clusters_and_diurnal_oscillates() {
+        let bursts = arrival_times(ArrivalPattern::Bursty, 5, 400.0, 1.0);
+        // everything lands inside the on-windows (first 20% of each period)
+        assert!(bursts.iter().all(|t| (t / 50.0).fract() < 0.2));
+        // diurnal rate must actually swing
+        let hi = rate_at(ArrivalPattern::Diurnal, 10.0, 400.0, 1.0);
+        let lo = rate_at(ArrivalPattern::Diurnal, 30.0, 400.0, 1.0);
+        assert!((hi - lo).abs() > 0.5, "hi {hi} lo {lo}");
+    }
+
+    #[test]
+    fn full_correlation_means_identical_schedules() {
+        let s = correlated_schedules(9, 4, 100.0, 10.0, 1.0);
+        for b in &s[1..] {
+            assert_eq!(b, &s[0]);
+        }
+    }
+
+    #[test]
+    fn zero_correlation_decorrelates_boards() {
+        let s = correlated_schedules(9, 4, 400.0, 5.0, 0.0);
+        // at least one pair of boards must disagree somewhere
+        let disagree = (0..4).any(|i| (0..4).any(|j| i != j && s[i] != s[j]));
+        assert!(disagree, "independent schedules should differ");
+    }
+
+    #[test]
+    fn state_at_steps_correctly() {
+        let sched = vec![
+            (0.0, WorkloadState::None),
+            (10.0, WorkloadState::Cpu),
+            (20.0, WorkloadState::Mem),
+        ];
+        assert_eq!(state_at(&sched, 5.0), WorkloadState::None);
+        assert_eq!(state_at(&sched, 10.0), WorkloadState::Cpu);
+        assert_eq!(state_at(&sched, 25.0), WorkloadState::Mem);
+    }
+}

@@ -1,0 +1,172 @@
+//! Fleet-coordinator integration tests: aggregate-efficiency parity with
+//! independent single-board runs, the energy story of sleep states, and
+//! (artifact-gated) batched-vs-sequential agent equivalence.
+
+use dpuconfig::coordinator::fleet::{
+    FleetConfig, FleetCoordinator, FleetJob, FleetPolicy, FleetScenario, RoutingPolicy,
+};
+use dpuconfig::coordinator::{Arrival, Coordinator, Scenario, Selector};
+use dpuconfig::data::load_models;
+use dpuconfig::models::ModelVariant;
+use dpuconfig::rl::Baseline;
+use dpuconfig::runtime::{default_policy_path, PolicyRuntime};
+use dpuconfig::workload::traffic::ArrivalPattern;
+use dpuconfig::workload::WorkloadState;
+
+fn variant(name: &str) -> ModelVariant {
+    ModelVariant::new(
+        load_models()
+            .unwrap()
+            .into_iter()
+            .find(|m| m.name == name)
+            .unwrap(),
+        0.0,
+    )
+}
+
+/// The satellite acceptance test: a 4-board fleet under uncorrelated,
+/// pre-partitioned load must land within tolerance of 4 independent
+/// single-board coordinator runs on aggregate energy efficiency.
+#[test]
+fn four_board_fleet_matches_independent_single_board_runs() {
+    let mix = ["ResNet18", "MobileNetV2", "InceptionV3", "ResNet50"];
+    let groups = 8usize;
+    let slot_s = 20.0;
+
+    // fleet: groups of 4 simultaneous jobs, round-robin -> board i always
+    // serves model mix[(k + i) % 4]
+    let mut jobs = Vec::new();
+    for k in 0..groups {
+        for i in 0..4 {
+            jobs.push(FleetJob {
+                model: variant(mix[(k + i) % 4]),
+                at_s: k as f64 * slot_s,
+                duration_s: slot_s,
+            });
+        }
+    }
+    let scenario = FleetScenario {
+        jobs,
+        schedules: vec![vec![(0.0, WorkloadState::None)]; 4],
+        horizon_s: groups as f64 * slot_s,
+    };
+    let cfg = FleetConfig {
+        boards: 4,
+        routing: RoutingPolicy::RoundRobin,
+        idle_to_sleep_s: f64::INFINITY,
+        ..FleetConfig::default()
+    };
+    let mut fleet = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+    let fleet_report = fleet.run(&scenario).unwrap();
+    assert_eq!(fleet_report.jobs_done(), (groups * 4) as u64);
+
+    // the same load as 4 independent single-board scenarios
+    let mut frames = 0.0;
+    let mut energy = 0.0;
+    for i in 0..4 {
+        let arrivals: Vec<Arrival> = (0..groups)
+            .map(|k| Arrival {
+                model: variant(mix[(k + i) % 4]),
+                at_s: k as f64 * slot_s,
+                duration_s: slot_s,
+            })
+            .collect();
+        let s = Scenario {
+            arrivals,
+            workload: vec![(0.0, WorkloadState::None)],
+            seed: 1,
+        };
+        let mut c = Coordinator::new(Selector::Static(Baseline::Optimal), 1).unwrap();
+        let r = c.run_scenario(&s).unwrap();
+        frames += r.totals.frames;
+        energy += r.totals.energy_fpga_j;
+    }
+    let single_ppw = frames / energy;
+    let fleet_ppw = fleet_report.serving_ppw();
+    let rel = (fleet_ppw / single_ppw - 1.0).abs();
+    assert!(
+        rel < 0.15,
+        "fleet {fleet_ppw:.3} vs 4x single-board {single_ppw:.3} fps/J (rel {rel:.3})"
+    );
+}
+
+/// Sleep states must pay off under trough-heavy traffic: same jobs, same
+/// decision policy — energy-aware routing with sleep beats the
+/// always-on round-robin deployment on fleet-level frames/J.
+#[test]
+fn sleeping_fleet_beats_always_on_fleet_under_diurnal_load() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Diurnal, 4, 300.0, 0.25, 8.0, 0.8, 17).unwrap();
+
+    let managed_cfg = FleetConfig {
+        boards: 4,
+        routing: RoutingPolicy::EnergyAware,
+        idle_to_sleep_s: 5.0,
+        seed: 17,
+        ..FleetConfig::default()
+    };
+    let mut managed =
+        FleetCoordinator::new(managed_cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+    let m = managed.run(&scenario).unwrap();
+
+    let always_on_cfg = FleetConfig {
+        boards: 4,
+        routing: RoutingPolicy::RoundRobin,
+        idle_to_sleep_s: f64::INFINITY,
+        seed: 17,
+        ..FleetConfig::default()
+    };
+    let mut always_on =
+        FleetCoordinator::new(always_on_cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+    let a = always_on.run(&scenario).unwrap();
+
+    assert_eq!(m.jobs_done(), a.jobs_done(), "both fleets drain the stream");
+    assert!(
+        m.fleet_ppw() > a.fleet_ppw(),
+        "managed {:.3} fps/J must beat always-on {:.3} fps/J",
+        m.fleet_ppw(),
+        a.fleet_ppw()
+    );
+    // and the win comes from where it should: less awake-idle energy
+    let m_idle: f64 = m.boards.iter().map(|b| b.energy.idle_j).sum();
+    let a_idle: f64 = a.boards.iter().map(|b| b.energy.idle_j).sum();
+    assert!(m_idle < a_idle, "managed idle {m_idle:.0} J vs always-on {a_idle:.0} J");
+}
+
+/// Batched fleet decisions must agree with the sequential agent and use
+/// fewer forward passes (requires `make artifacts`).
+#[test]
+fn batched_fleet_decisions_match_sequential_agent() {
+    if !default_policy_path(8).exists() || !default_policy_path(1).exists() {
+        eprintln!("SKIP: policy artifacts missing — run `make artifacts`");
+        return;
+    }
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, 6, 60.0, 0.5, 6.0, 0.5, 5).unwrap();
+    let run_with = |batch: usize| {
+        let rt = PolicyRuntime::load(&default_policy_path(batch), batch).unwrap();
+        let cfg = FleetConfig {
+            boards: 6,
+            routing: RoutingPolicy::RoundRobin,
+            seed: 5,
+            ..FleetConfig::default()
+        };
+        let mut fleet = FleetCoordinator::new(cfg, FleetPolicy::Agent(rt)).unwrap();
+        fleet.run(&scenario).unwrap()
+    };
+    let batched = run_with(8);
+    let sequential = run_with(1);
+    assert_eq!(batched.decisions, sequential.decisions);
+    assert!(
+        batched.decision_batches < sequential.decision_batches,
+        "batched {} passes vs sequential {}",
+        batched.decision_batches,
+        sequential.decision_batches
+    );
+    let bf = batched.total_frames();
+    let sf = sequential.total_frames();
+    assert!(
+        ((bf - sf) / sf).abs() < 1e-6,
+        "identical decisions must serve identical frames: {bf} vs {sf}"
+    );
+}
