@@ -1,0 +1,41 @@
+//! Online policy adaptation under drift (DESIGN.md §9).
+//!
+//! Three runs of the adaptation session, one per drift family:
+//!
+//! * **calibration** — per-MAC leakage grows 20x (aging/thermal wall):
+//!   the PPW landscape tilts toward small arrays, the frozen agent keeps
+//!   picking yesterday's optima, the online agent detects the reward
+//!   collapse (Page–Hinkley), fine-tunes a challenger in shadow and
+//!   promotes it once it beats the incumbent on paired counterfactuals;
+//! * **thermal** — clock derating + static-power climb;
+//! * **churn** — the arrival stream switches to held-out models
+//!   (observation drift rather than outcome drift).
+//!
+//! Each run prints when drift was detected, when (if) the challenger was
+//! promoted, and how much of the *drifted oracle's* PPW each policy
+//! recovers.
+//!
+//! ```bash
+//! cargo run --release --example online_adaptation
+//! ```
+
+use dpuconfig::online::session::{self, SessionConfig};
+use dpuconfig::workload::traffic::DriftKind;
+
+fn main() -> anyhow::Result<()> {
+    for kind in [DriftKind::Calibration, DriftKind::Thermal, DriftKind::ModelChurn] {
+        let cfg = SessionConfig {
+            kind,
+            magnitude: if kind == DriftKind::Thermal { 1.0 } else { 20.0 },
+            ..SessionConfig::default()
+        };
+        let report = session::run(&cfg)?;
+        print!("{}", report.render());
+        println!();
+    }
+    println!(
+        "note: the frozen agent is the committed export (data/policy_weights.csv);\n\
+         rerun `make artifacts && python -m compile.aot --pin-data` after retraining."
+    );
+    Ok(())
+}

@@ -68,6 +68,74 @@ def save_weights(result: ppo.TrainResult, path: str) -> None:
     np.savez(path, **{k: np.asarray(v) for k, v in result.params.items()})
 
 
+# Tensor order is the export contract with rust/src/online/policy.rs.
+WEIGHT_TENSORS = [
+    "obs_mu", "obs_sigma", "w1", "b1", "w2", "b2", "w_pi", "b_pi", "w_v", "b_v",
+]
+
+
+def export_weights_csv(params, path: str) -> None:
+    """Raw f32 weights for the pure-Rust online policy (DESIGN.md §9).
+
+    One row per scalar: tensor,row,col,value. Vectors use col=0. Values are
+    repr() of the f32 value, so a f64 parse + cast on the rust side
+    round-trips bit-exactly.
+    """
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        f.write("# Trained actor-critic weights, exported by compile.aot for\n")
+        f.write("# the pure-Rust online policy (rust/src/online/policy.rs).\n")
+        w.writerow(["tensor", "row", "col", "value"])
+        for name in WEIGHT_TENSORS:
+            arr = np.asarray(params[name], np.float32)
+            a2 = arr.reshape(arr.shape[0], -1)
+            for i in range(a2.shape[0]):
+                for j in range(a2.shape[1]):
+                    w.writerow([name, i, j, repr(float(a2[i, j]))])
+    print(f"wrote {path}")
+
+
+def export_golden_logits(params, path: str) -> None:
+    """Pin rust-vs-JAX forward parity: obs -> (logits, value) goldens.
+
+    Cases are dpusim observations for the first base variants x all three
+    workload states — the same vectors the serving path produces — so the
+    rust online policy's forward pass is checked on realistic inputs.
+    """
+    from . import dpusim as dpusim_mod
+
+    sim = dpusim_mod.DpuSim()
+    variants = [v for v in dpusim_mod.load_variants() if v.prune == 0.0]
+    obs = np.array(
+        [sim.observe(v, st) for v in variants[:5] for st in ("N", "C", "M")],
+        np.float32,
+    )
+    logits, value = model.apply(params, jnp.asarray(obs), use_pallas=False)
+    logits = np.asarray(logits)
+    value = np.asarray(value)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        f.write("# JAX forward-pass goldens pinning the pure-Rust online policy\n")
+        f.write("# (rust/src/online/policy.rs) to 1e-5. Regenerate with\n")
+        f.write("# `python -m compile.aot --pin-data` after retraining.\n")
+        header = (
+            ["case"]
+            + [f"obs_{i}" for i in range(model.OBS_DIM)]
+            + [f"logit_{i}" for i in range(model.NUM_ACTIONS)]
+            + ["value"]
+        )
+        w.writerow(header)
+        for c in range(obs.shape[0]):
+            row = (
+                [str(c)]
+                + [repr(float(x)) for x in obs[c]]
+                + [repr(float(x)) for x in logits[c]]
+                + [repr(float(value[c, 0]))]
+            )
+            w.writerow(row)
+    print(f"wrote {path} ({obs.shape[0]} cases)")
+
+
 def load_weights(path: str):
     z = np.load(path)
     keys = ["obs_mu", "obs_sigma", "w1", "b1", "w2", "b2", "w_pi", "b_pi", "w_v", "b_v"]
@@ -102,6 +170,12 @@ def main() -> None:
     ap.add_argument("--batch-per-context", type=int, default=8)
     ap.add_argument(
         "--retrain", action="store_true", help="ignore cached weights.npz"
+    )
+    ap.add_argument(
+        "--pin-data",
+        action="store_true",
+        help="refresh the committed data/policy_weights.csv + "
+        "data/golden_logits.csv (the online-policy export contract)",
     )
     args = ap.parse_args()
 
@@ -139,6 +213,17 @@ def main() -> None:
 
     export_policy(result.params, 1, os.path.join(args.out_dir, "policy.hlo.txt"))
     export_policy(result.params, 8, os.path.join(args.out_dir, "policy_b8.hlo.txt"))
+    export_weights_csv(
+        result.params, os.path.join(args.out_dir, "policy_weights.csv")
+    )
+    if args.pin_data:
+        data_dir = os.path.join(os.path.dirname(__file__), "..", "..", "data")
+        export_weights_csv(
+            result.params, os.path.join(data_dir, "policy_weights.csv")
+        )
+        export_golden_logits(
+            result.params, os.path.join(data_dir, "golden_logits.csv")
+        )
     write_meta(
         os.path.join(args.out_dir, "policy_meta.csv"),
         result.params,

@@ -85,6 +85,80 @@ def test_batch_export_shapes(trained_params):
     assert "f32[8,1]" in text
 
 
+def test_weight_export_roundtrips_bit_exactly(trained_params, tmp_path):
+    # the rust online policy parses value as f64 then casts to f32; the
+    # repr() export must survive that round trip bit-for-bit
+    path = str(tmp_path / "w.csv")
+    aot.export_weights_csv(trained_params, path)
+    tensors = {k: [] for k in aot.WEIGHT_TENSORS}
+    with open(path) as f:
+        for line in f:
+            if line.startswith("#") or line.startswith("tensor,"):
+                continue
+            name, i, j, v = line.rstrip("\n").split(",")
+            tensors[name].append((int(i), int(j), np.float32(float(v))))
+    for name in aot.WEIGHT_TENSORS:
+        ref = np.asarray(trained_params[name], np.float32).reshape(
+            np.asarray(trained_params[name]).shape[0], -1
+        )
+        got = np.zeros_like(ref)
+        for i, j, v in tensors[name]:
+            got[i, j] = v
+        assert np.array_equal(got, ref), f"{name} did not round-trip"
+        assert len(tensors[name]) == ref.size, f"{name} incomplete"
+
+
+def test_golden_logits_match_reference_forward(tmp_path):
+    golden = os.path.join(aot.ARTIFACTS, "..", "data", "golden_logits.csv")
+    if not os.path.exists(golden):
+        pytest.skip("data/golden_logits.csv missing — run compile.aot --pin-data")
+    weights = os.path.join(aot.ARTIFACTS, "..", "data", "policy_weights.csv")
+    # rebuild params from the *committed* weights csv so the two pinned
+    # files are checked against each other, not against artifacts/
+    tensors = {}
+    with open(weights) as f:
+        for line in f:
+            if line.startswith("#") or line.startswith("tensor,"):
+                continue
+            name, i, j, v = line.rstrip("\n").split(",")
+            tensors.setdefault(name, []).append((int(i), int(j), np.float32(float(v))))
+    shapes = {
+        "obs_mu": (22, 1), "obs_sigma": (22, 1), "w1": (22, 128), "b1": (128, 1),
+        "w2": (128, 128), "b2": (128, 1), "w_pi": (128, 26), "b_pi": (26, 1),
+        "w_v": (128, 1), "b_v": (1, 1),
+    }
+    vectors = {"obs_mu", "obs_sigma", "b1", "b2", "b_pi", "b_v"}
+    params = {}
+    for name, shape in shapes.items():
+        arr = np.zeros(shape, np.float32)
+        for i, j, v in tensors[name]:
+            arr[i, j] = v
+        params[name] = jnp.asarray(arr[:, 0] if name in vectors else arr)
+    rows = []
+    with open(golden) as f:
+        header = None
+        for line in f:
+            if line.startswith("#"):
+                continue
+            if header is None:
+                header = line.rstrip("\n").split(",")
+                continue
+            rows.append(dict(zip(header, line.rstrip("\n").split(","))))
+    assert rows, "golden file has no cases"
+    obs = np.array(
+        [[float(r[f"obs_{i}"]) for i in range(model.OBS_DIM)] for r in rows],
+        np.float32,
+    )
+    logits, value = model.apply(params, jnp.asarray(obs), use_pallas=False)
+    want = np.array(
+        [[float(r[f"logit_{i}"]) for i in range(model.NUM_ACTIONS)] for r in rows]
+    )
+    np.testing.assert_allclose(np.asarray(logits), want, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(value)[:, 0], [float(r["value"]) for r in rows], atol=2e-5
+    )
+
+
 def test_trained_agent_beats_uniform_on_train_contexts(trained_params):
     # sanity: the exported weights encode a real policy, not init noise
     from compile import ppo

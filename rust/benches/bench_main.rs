@@ -333,6 +333,68 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
+    // ---- online adaptation hot paths: train step + drift check -------------
+    if wants("online_train_step") {
+        use dpuconfig::online::policy::MlpPolicy;
+        use dpuconfig::online::trainer::{PpoTrainer, TrainerConfig};
+        use dpuconfig::online::Transition;
+        let cfg = TrainerConfig::default();
+        let mut policy = MlpPolicy::load_default()
+            .unwrap_or_else(|_| MlpPolicy::init_random(1));
+        let mut rng = dpuconfig::workload::XorShift64::new(17);
+        let batch: Vec<Transition> = (0..cfg.rollout)
+            .map(|i| {
+                let mut obs = [0f32; 22];
+                for o in obs.iter_mut() {
+                    *o = rng.range_f64(0.0, 5.0) as f32;
+                }
+                Transition {
+                    obs,
+                    action: i % 26,
+                    reward: rng.range_f64(-1.0, 1.0),
+                    value: 0.0,
+                    logp: -3.2,
+                    done: true,
+                }
+            })
+            .collect();
+        let mut trainer = PpoTrainer::new(cfg);
+        results.push(bench("online_train_step", 50, || {
+            if !trainer.budget_left() {
+                trainer.reset();
+            }
+            let m = trainer.update(&mut policy, &batch);
+            format!("pi {:+.4} v {:.4} H {:.2}", m.pi_loss, m.v_loss, m.entropy)
+        }));
+    }
+
+    if wants("online_drift_check") {
+        use dpuconfig::online::DriftDetector;
+        let mut det = DriftDetector::default();
+        let mut rng = dpuconfig::workload::XorShift64::new(23);
+        let mut i = 0u64;
+        results.push(bench("online_drift_check", 5000, || {
+            i += 1;
+            let mut obs = [0f32; 22];
+            for o in obs.iter_mut() {
+                *o = (5.0 + rng.normal()) as f32;
+            }
+            let fired = det.update(0.1 * rng.normal(), &obs);
+            format!("ph {:.3} fired {}", det.ph.stat(), fired.is_some())
+        }));
+    }
+
+    if wants("online_forward") {
+        use dpuconfig::online::policy::MlpPolicy;
+        let policy = MlpPolicy::load_default()
+            .unwrap_or_else(|_| MlpPolicy::init_random(1));
+        let obs = [0.5f32; 22];
+        results.push(bench("online_forward", 5000, || {
+            let f = policy.forward(&obs);
+            format!("argmax {}", f.argmax())
+        }));
+    }
+
     // ---- report -------------------------------------------------------------
     println!("\n{:-^100}", " dpuconfig bench results ");
     println!(

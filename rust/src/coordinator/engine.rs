@@ -5,8 +5,9 @@
 //! loop and the evaluation harness are policy-agnostic.
 
 use crate::data::Action;
-use crate::dpusim::DpuSim;
+use crate::dpusim::{DpuSim, Metrics};
 use crate::models::ModelVariant;
+use crate::online::OnlineAgent;
 use crate::rl::{Baseline, Featurizer};
 use crate::runtime::{PolicyOutput, PolicyRuntime};
 use crate::telemetry::Sample;
@@ -19,6 +20,10 @@ pub enum Selector {
     Agent(PolicyRuntime),
     /// A static baseline (Fig 5 comparisons).
     Static(Baseline),
+    /// The frozen agent wrapped in the online-adaptation state machine
+    /// (pure-Rust forward pass; learns from the serving stream via
+    /// [`DecisionEngine::feedback`] — DESIGN.md §9).
+    Online(Box<OnlineAgent>),
 }
 
 impl Selector {
@@ -26,6 +31,7 @@ impl Selector {
         match self {
             Selector::Agent(_) => "dpuconfig",
             Selector::Static(b) => b.name(),
+            Selector::Online(_) => "online",
         }
     }
 }
@@ -70,7 +76,7 @@ impl DecisionEngine {
         sim: &DpuSim,
         state: WorkloadState,
     ) -> Result<Decision> {
-        match &self.selector {
+        match &mut self.selector {
             Selector::Agent(rt) => {
                 let obs = self.featurizer.observe(sample, model);
                 let out: PolicyOutput = rt.infer(&obs)?;
@@ -88,6 +94,42 @@ impl DecisionEngine {
                     obs: None,
                 })
             }
+            Selector::Online(agent) => {
+                let obs = self.featurizer.observe(sample, model);
+                let d = agent.decide(&obs);
+                Ok(Decision {
+                    action_id: d.serving,
+                    value: Some(d.value as f32),
+                    obs: Some(obs),
+                })
+            }
+        }
+    }
+
+    /// Close the loop after a served segment: the Algorithm-1 reward and
+    /// measured metrics of the decision made by the last [`Self::decide`]
+    /// call. A no-op for the frozen agent and the static baselines; the
+    /// online selector uses it for drift detection, shadow evaluation and
+    /// fine-tuning.
+    pub fn feedback(
+        &mut self,
+        sim: &DpuSim,
+        model: &ModelVariant,
+        state: WorkloadState,
+        reward: f64,
+        served: &Metrics,
+    ) -> Result<()> {
+        if let Selector::Online(agent) = &mut self.selector {
+            agent.feedback_from_sim(sim, model, state, reward, served)?;
+        }
+        Ok(())
+    }
+
+    /// Online-adaptation statistics, if the online selector is active.
+    pub fn online_stats(&self) -> Option<&crate::online::OnlineStats> {
+        match &self.selector {
+            Selector::Online(agent) => Some(agent.stats()),
+            _ => None,
         }
     }
 

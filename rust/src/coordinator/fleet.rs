@@ -102,6 +102,12 @@ pub enum FleetPolicy {
     /// A static baseline applied per board (no batching possible — there
     /// is no forward pass).
     Static(Baseline),
+    /// ONE online-adapting agent shared by every board: decisions for
+    /// all boards come from the same pure-Rust policy, and every board's
+    /// served outcome feeds the same replay buffer / drift detector —
+    /// fleet-wide experience sharing accelerates adaptation N-fold
+    /// (DESIGN.md §9).
+    Online(Box<crate::online::OnlineAgent>),
 }
 
 impl FleetPolicy {
@@ -109,6 +115,15 @@ impl FleetPolicy {
         match self {
             FleetPolicy::Agent(_) => "dpuconfig",
             FleetPolicy::Static(b) => b.name(),
+            FleetPolicy::Online(_) => "online",
+        }
+    }
+
+    /// Online-adaptation statistics, when the fleet runs the online policy.
+    pub fn online_stats(&self) -> Option<&crate::online::OnlineStats> {
+        match self {
+            FleetPolicy::Online(agent) => Some(agent.stats()),
+            _ => None,
         }
     }
 }
@@ -371,6 +386,10 @@ pub struct FleetCoordinator {
     featurizer: Featurizer,
     rng: XorShift64,
     rr_cursor: usize,
+    /// Fleet-level Algorithm-1 bookkeeping for the shared online agent's
+    /// feedback stream (separate from the per-board serve-loop
+    /// calculators, which keep updating per slice).
+    online_rewards: RewardCalculator,
 }
 
 impl FleetCoordinator {
@@ -384,11 +403,16 @@ impl FleetCoordinator {
             featurizer: Featurizer::new(),
             rng: XorShift64::new(config.seed ^ 0xf1ee7c0de),
             rr_cursor: 0,
+            online_rewards: RewardCalculator::new(),
         })
     }
 
     pub fn sim(&self) -> &DpuSim {
         &self.sim
+    }
+
+    pub fn policy(&self) -> &FleetPolicy {
+        &self.policy
     }
 
     /// Pick the target board for a newly arrived job.
@@ -448,7 +472,7 @@ impl FleetCoordinator {
         if requests.is_empty() {
             return Ok((Vec::new(), 0));
         }
-        match &self.policy {
+        match &mut self.policy {
             FleetPolicy::Agent(rt) => {
                 let mut actions = Vec::with_capacity(requests.len());
                 let mut passes = 0u64;
@@ -458,6 +482,36 @@ impl FleetCoordinator {
                     passes += 1;
                     actions.extend(outs.iter().map(|o| o.argmax()));
                 }
+                Ok((actions, passes))
+            }
+            FleetPolicy::Online(agent) => {
+                // one shared policy decides for every board, and every
+                // board's outcome feeds the same adaptation loop —
+                // decide and close the loop inline (the served outcome
+                // is the simulator's steady-state prediction either way)
+                let mut actions = Vec::with_capacity(requests.len());
+                for &(board, obs, state) in requests {
+                    let head = boards[board]
+                        .queue
+                        .front()
+                        .expect("pending board has a head job");
+                    let d = agent.decide(&obs);
+                    let a = &self.sim.actions()[d.serving];
+                    let m = self.sim.evaluate(&head.model, &a.size, a.instances, state)?;
+                    let (cpu_util, mem_util_gbs) = crate::rl::features::context_stats(&obs);
+                    let r = self.online_rewards.calculate(&Outcome {
+                        measured_fps: m.fps,
+                        fpga_power: m.p_fpga,
+                        cpu_util,
+                        mem_util_gbs,
+                        gmac: head.model.gmac(),
+                        model_data_mb: head.model.data_io_mb(),
+                        fps_constraint: FPS_CONSTRAINT,
+                    });
+                    agent.feedback_from_sim(&self.sim, &head.model, state, r, &m)?;
+                    actions.push(d.serving);
+                }
+                let passes = requests.len() as u64;
                 Ok((actions, passes))
             }
             FleetPolicy::Static(b) => {

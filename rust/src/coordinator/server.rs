@@ -13,8 +13,13 @@ use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
 use crate::models::ModelVariant;
 use crate::rl::reward::{Outcome, RewardCalculator};
 use crate::telemetry::{PlatformState, Sampler};
+use crate::workload::traffic::DriftProfile;
 use crate::workload::WorkloadState;
 use anyhow::Result;
+
+/// Drift-ramp quantization: the simulator is re-calibrated at most this
+/// many times along a drift profile's ramp.
+pub const DRIFT_QUANTUM: usize = 16;
 
 /// A model arriving at the platform at a given simulated time.
 #[derive(Debug, Clone)]
@@ -169,17 +174,44 @@ impl Coordinator {
         &self.sim
     }
 
+    pub fn engine(&self) -> &DecisionEngine {
+        &self.engine
+    }
+
     /// Run a scenario to completion; returns the event timeline + totals.
     pub fn run_scenario(&mut self, scenario: &Scenario) -> Result<Report> {
+        self.run_drifted(scenario, None)
+    }
+
+    /// [`Self::run_scenario`] under a non-stationary world: `profile`
+    /// re-calibrates the simulator along its ramp (quantized to
+    /// [`DRIFT_QUANTUM`] steps so the tables are rebuilt a handful of
+    /// times, not per decision). The policy is *not* told — detecting
+    /// and surviving the drift is the online selector's job.
+    pub fn run_drifted(
+        &mut self,
+        scenario: &Scenario,
+        profile: Option<&DriftProfile>,
+    ) -> Result<Report> {
         let mut events = Vec::new();
         let mut totals = Totals::default();
         let policy = self.engine.policy_name();
+        let base_cal = self.sim.calibration().clone();
+        let mut drift_step = 0usize;
 
         for arrival in &scenario.arrivals {
             let end = arrival.at_s + arrival.duration_s;
             let mut t = arrival.at_s;
             while t < end - 1e-9 {
                 let state = scenario.state_at(t);
+                // apply any drift that ramped in since the last decision
+                if let Some(p) = profile {
+                    let step = p.step_index(t, DRIFT_QUANTUM);
+                    if step != drift_step {
+                        self.sim = DpuSim::with_calibration(p.calibration_at(&base_cal, t))?;
+                        drift_step = step;
+                    }
+                }
                 // observe (pre-action: DPU idle from the sampler's view)
                 let platform = PlatformState {
                     workload: state,
@@ -249,6 +281,8 @@ impl Coordinator {
                 });
                 totals.mean_reward += r;
                 totals.rewards_n += 1;
+                // close the loop for the online selector (no-op otherwise)
+                self.engine.feedback(&self.sim, &arrival.model, state, r, &m)?;
                 events.push(Event::Serve {
                     t_s: t,
                     dur_s: dur,
@@ -261,6 +295,12 @@ impl Coordinator {
                 });
                 t = seg_end;
             }
+        }
+        // restore the pre-drift simulator: a later run on this
+        // coordinator must start from the calibrated baseline, not the
+        // terminal drifted state (and never compound a second profile)
+        if drift_step != 0 {
+            self.sim = DpuSim::with_calibration(base_cal)?;
         }
         if totals.rewards_n > 0 {
             totals.mean_reward /= totals.rewards_n as f64;

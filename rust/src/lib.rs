@@ -22,6 +22,9 @@
 //!   baseline policies of Fig 5.
 //! * [`sweep`] regenerates the paper's 2574-experiment measurement table;
 //!   [`eval`] reproduces the evaluation figures.
+//! * [`online`] closes the loop at runtime: a pure-Rust actor-critic
+//!   fine-tunes on the serving stream behind drift detection and
+//!   shadow-promotion gating (DESIGN.md §9).
 
 pub mod cli;
 pub mod coordinator;
@@ -30,6 +33,7 @@ pub mod data;
 pub mod dpusim;
 pub mod eval;
 pub mod models;
+pub mod online;
 pub mod rl;
 pub mod runtime;
 pub mod sweep;

@@ -11,6 +11,7 @@
 //! dpuconfig serve   [--requests 64]             # threaded decision service
 //! dpuconfig decide  --model ResNet152 --state M # one decision, verbose
 //! dpuconfig fleet   [--boards 4] [--routing energy_aware] [--pattern diurnal]
+//! dpuconfig adapt   [--kind calibration] [--seed 7]  # online adaptation
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -149,6 +150,32 @@ fn run() -> Result<()> {
             let policy = args.opt_or("policy", "optimal");
             fleet_demo(boards, horizon, rate, routing, pattern, correlation, seed, policy)?;
         }
+        "adapt" => {
+            // online adaptation under drift: frozen agent vs the
+            // drift-detect -> fine-tune -> shadow-promote loop
+            use dpuconfig::online::session::{self, SessionConfig};
+            use dpuconfig::workload::traffic::DriftKind;
+            let kind: DriftKind = args.opt_or("kind", "calibration").parse()?;
+            let cfg = SessionConfig {
+                seed: args.opt_u64("seed", 7)?,
+                pre_steps: args.opt_usize("pre", 256)?,
+                post_steps: args.opt_usize("steps", 4256)?,
+                magnitude: args.opt_f64(
+                    "magnitude",
+                    if kind == DriftKind::Thermal { 1.0 } else { 20.0 },
+                )?,
+                kind,
+                ..SessionConfig::default()
+            };
+            let report = session::run(&cfg)?;
+            print!("{}", report.render());
+            if args.flag("metrics") {
+                print!(
+                    "{}",
+                    dpuconfig::telemetry::prometheus_text_online(&report.stats)
+                );
+            }
+        }
         "metrics" => {
             // serve the telemetry endpoint for a few seconds (demo)
             let port = args.opt_u64("port", 0)? as u16;
@@ -181,7 +208,7 @@ fn run() -> Result<()> {
         }
         "help" | _ => {
             println!("dpuconfig {} — see module docs / README", dpuconfig::version());
-            println!("subcommands: sweep tables fig1 fig2 fig3 fig5 fig6 serve decide colocate metrics profile fleet");
+            println!("subcommands: sweep tables fig1 fig2 fig3 fig5 fig6 serve decide colocate metrics profile fleet adapt");
         }
     }
     Ok(())

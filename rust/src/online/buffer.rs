@@ -1,0 +1,203 @@
+//! Bounded replay/rollout buffer + generalized advantage estimation.
+//!
+//! The online loop uses it as an on-policy rollout buffer: transitions
+//! from the coordinator's `Decision`/reward stream accumulate until one
+//! training batch is full, the trainer drains it, repeat. The bound makes
+//! it a ring — if the trainer falls behind (budgeted cadence), the oldest
+//! experience is dropped rather than growing without limit.
+//!
+//! The coordinator's episodes are single-step (every decision is its own
+//! episode: `done = true`), under which GAE degenerates to
+//! `A_t = r_t - V(s_t)` — pinned by the invariants tests below. The full
+//! multi-step recursion is implemented anyway so episodic scenarios
+//! (model-session trajectories) can reuse the buffer unchanged.
+
+use crate::rl::features::OBS_DIM;
+use std::collections::VecDeque;
+
+/// One (s, a, r) sample with the policy stats PPO needs.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub obs: [f32; OBS_DIM],
+    pub action: usize,
+    pub reward: f64,
+    /// Value estimate at decision time.
+    pub value: f64,
+    /// Log-probability of `action` under the *behavior* distribution
+    /// (the exploration mixture, not the raw softmax).
+    pub logp: f64,
+    /// Episode boundary after this transition.
+    pub done: bool,
+}
+
+/// Bounded FIFO of transitions.
+#[derive(Debug)]
+pub struct ReplayBuffer {
+    buf: VecDeque<Transition>,
+    cap: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> ReplayBuffer {
+        assert!(cap > 0, "buffer capacity must be positive");
+        ReplayBuffer {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+        }
+    }
+
+    /// Push a transition, dropping the oldest when full. Returns whether
+    /// something was evicted.
+    pub fn push(&mut self, t: Transition) -> bool {
+        let evicted = self.buf.len() == self.cap;
+        if evicted {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(t);
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.cap
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Drain everything in arrival order (the on-policy training batch).
+    pub fn drain(&mut self) -> Vec<Transition> {
+        self.buf.drain(..).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Transition> {
+        self.buf.iter()
+    }
+}
+
+/// GAE(γ, λ) over `transitions` in arrival order. `last_value`
+/// bootstraps the value beyond the final transition when the rollout was
+/// truncated mid-episode (ignored if the final transition is `done`).
+///
+/// Returns `(advantages, returns)` with `returns[t] = adv[t] + value[t]`
+/// (the value-regression targets).
+pub fn gae(transitions: &[Transition], last_value: f64, gamma: f64, lam: f64) -> (Vec<f64>, Vec<f64>) {
+    let n = transitions.len();
+    let mut adv = vec![0.0; n];
+    let mut next_value = last_value;
+    let mut next_adv = 0.0;
+    for t in (0..n).rev() {
+        let tr = &transitions[t];
+        let nonterminal = if tr.done { 0.0 } else { 1.0 };
+        let delta = tr.reward + gamma * next_value * nonterminal - tr.value;
+        next_adv = delta + gamma * lam * nonterminal * next_adv;
+        adv[t] = next_adv;
+        next_value = tr.value;
+    }
+    let ret = adv
+        .iter()
+        .zip(transitions.iter())
+        .map(|(a, tr)| a + tr.value)
+        .collect();
+    (adv, ret)
+}
+
+/// Normalize advantages in place to zero mean / unit variance (the PPO
+/// batch conditioning step; no-op on empty or constant batches).
+pub fn normalize(adv: &mut [f64]) {
+    if adv.is_empty() {
+        return;
+    }
+    let n = adv.len() as f64;
+    let mean = adv.iter().sum::<f64>() / n;
+    let var = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / n;
+    let std = var.sqrt();
+    for a in adv.iter_mut() {
+        *a = (*a - mean) / (std + 1e-8);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(reward: f64, value: f64, done: bool) -> Transition {
+        Transition {
+            obs: [0.0; OBS_DIM],
+            action: 0,
+            reward,
+            value,
+            logp: 0.0,
+            done,
+        }
+    }
+
+    #[test]
+    fn ring_bound_holds() {
+        let mut b = ReplayBuffer::new(3);
+        for i in 0..5 {
+            b.push(tr(i as f64, 0.0, true));
+        }
+        assert_eq!(b.len(), 3);
+        assert!(b.is_full());
+        // oldest dropped: rewards 2, 3, 4 remain in order
+        let rs: Vec<f64> = b.iter().map(|t| t.reward).collect();
+        assert_eq!(rs, vec![2.0, 3.0, 4.0]);
+        assert_eq!(b.drain().len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn single_step_episodes_reduce_to_r_minus_v() {
+        let ts = vec![tr(1.0, 0.25, true), tr(-0.5, 0.1, true), tr(0.0, -0.3, true)];
+        let (adv, ret) = gae(&ts, 99.0, 0.99, 0.95); // bootstrap must be ignored
+        assert!((adv[0] - 0.75).abs() < 1e-12);
+        assert!((adv[1] - (-0.6)).abs() < 1e-12);
+        assert!((adv[2] - 0.3).abs() < 1e-12);
+        for (a, (r, t)) in adv.iter().zip(ret.iter().zip(ts.iter())) {
+            assert!((a + t.value - r).abs() < 1e-12, "returns = adv + value");
+        }
+    }
+
+    #[test]
+    fn undiscounted_gae_sums_rewards() {
+        // gamma = lam = 1, no episode boundary: A_t = sum_{k>=t} r_k +
+        // bootstrap - V_t
+        let ts = vec![tr(1.0, 0.0, false), tr(2.0, 0.0, false), tr(3.0, 0.0, false)];
+        let (adv, _) = gae(&ts, 4.0, 1.0, 1.0);
+        assert!((adv[0] - 10.0).abs() < 1e-12);
+        assert!((adv[1] - 9.0).abs() < 1e-12);
+        assert!((adv[2] - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn done_stops_credit_flow() {
+        let ts = vec![tr(1.0, 0.0, true), tr(5.0, 0.0, false)];
+        let (adv, _) = gae(&ts, 2.0, 1.0, 1.0);
+        // episode boundary after t=0: its advantage sees only its reward
+        assert!((adv[0] - 1.0).abs() < 1e-12);
+        assert!((adv[1] - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_centres_and_scales() {
+        let mut a = vec![1.0, 2.0, 3.0, 4.0];
+        normalize(&mut a);
+        let mean: f64 = a.iter().sum::<f64>() / 4.0;
+        let var: f64 = a.iter().map(|x| x * x).sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-9);
+        assert!((var - 1.0).abs() < 1e-6);
+    }
+}

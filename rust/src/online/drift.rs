@@ -1,0 +1,311 @@
+//! Telemetry drift detection: decides *when* online adaptation starts.
+//!
+//! Two complementary detectors watch the serving stream:
+//!
+//! * [`PageHinkley`] on the Algorithm-1 reward of the *served* decisions.
+//!   The reward is already residual-shaped — it measures outcomes
+//!   against running context baselines — so a healthy policy hovers near
+//!   zero and a policy invalidated by calibration drift (derated DDR,
+//!   thermal leakage growth) goes persistently negative until the
+//!   baselines re-absorb the new level. Page–Hinkley accumulates exactly
+//!   that transient deficit.
+//! * [`ObsShift`] on the observation mean. Calibration drift leaves the
+//!   *inputs* untouched (it changes outcomes, not telemetry), but
+//!   model churn and co-runner regime changes move the observation
+//!   distribution itself — the static model features and memory
+//!   counters shift by many reference sigmas.
+//!
+//! Either alarm triggers adaptation ([`DriftDetector::update`]).
+
+use crate::rl::features::OBS_DIM;
+use std::collections::VecDeque;
+
+/// One-sided Page–Hinkley test for a *downward* shift in a stream's mean.
+///
+/// Maintains `g_t = Σ (x_i − x̄_i + δ)` and alarms when the drawdown
+/// `max g − g` exceeds `lambda`: sustained deficits of more than `δ`
+/// below the running mean accumulate until the threshold trips, while
+/// zero-mean noise keeps `g` climbing by `+δ` per sample.
+#[derive(Debug, Clone)]
+pub struct PageHinkley {
+    /// Per-sample slack: deficits smaller than this never alarm.
+    pub delta: f64,
+    /// Alarm threshold on the cumulative deficit.
+    pub lambda: f64,
+    /// Samples before the running mean is trusted.
+    pub min_samples: u64,
+    n: u64,
+    mean: f64,
+    g: f64,
+    g_max: f64,
+}
+
+impl PageHinkley {
+    pub fn new(delta: f64, lambda: f64, min_samples: u64) -> PageHinkley {
+        PageHinkley {
+            delta,
+            lambda,
+            min_samples,
+            n: 0,
+            mean: 0.0,
+            g: 0.0,
+            g_max: 0.0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.n = 0;
+        self.mean = 0.0;
+        self.g = 0.0;
+        self.g_max = 0.0;
+    }
+
+    /// Current drawdown statistic (alarms at `lambda`).
+    pub fn stat(&self) -> f64 {
+        self.g_max - self.g
+    }
+
+    /// Feed one sample; returns true when the alarm fires.
+    pub fn update(&mut self, x: f64) -> bool {
+        self.n += 1;
+        self.mean += (x - self.mean) / self.n as f64;
+        self.g += x - self.mean + self.delta;
+        self.g_max = self.g_max.max(self.g);
+        self.n > self.min_samples && self.stat() > self.lambda
+    }
+}
+
+/// Windowed observation-mean shift against frozen reference statistics.
+///
+/// The first `warmup` samples build per-dimension reference mean/std
+/// (Welford); afterwards a sliding window of `window` samples is compared
+/// against the reference, and the score is the largest per-dimension
+/// standardized shift `|win_mean − ref_mean| / ref_std`.
+#[derive(Debug, Clone)]
+pub struct ObsShift {
+    pub warmup: usize,
+    pub window: usize,
+    /// Alarm threshold in reference sigmas.
+    pub threshold: f64,
+    n: usize,
+    ref_mean: [f64; OBS_DIM],
+    ref_m2: [f64; OBS_DIM],
+    win: VecDeque<[f32; OBS_DIM]>,
+    win_sum: [f64; OBS_DIM],
+}
+
+impl ObsShift {
+    pub fn new(warmup: usize, window: usize, threshold: f64) -> ObsShift {
+        assert!(warmup > 1 && window > 0);
+        ObsShift {
+            warmup,
+            window,
+            threshold,
+            n: 0,
+            ref_mean: [0.0; OBS_DIM],
+            ref_m2: [0.0; OBS_DIM],
+            win: VecDeque::new(),
+            win_sum: [0.0; OBS_DIM],
+        }
+    }
+
+    fn ref_std(&self, i: usize) -> f64 {
+        // the reference froze after `warmup` samples — divide by that
+        // count, not the ever-growing n, or the std deflates over time
+        let var = self.ref_m2[i] / (self.warmup - 1) as f64;
+        // floor: dead-flat reference dims should not divide by ~0
+        var.sqrt().max(1e-6 + 0.01 * self.ref_mean[i].abs())
+    }
+
+    /// Current max standardized shift (0 until warmup + a full window).
+    pub fn score(&self) -> f64 {
+        if self.n < self.warmup || self.win.len() < self.window {
+            return 0.0;
+        }
+        let inv = 1.0 / self.win.len() as f64;
+        let mut worst = 0.0f64;
+        for i in 0..OBS_DIM {
+            let shift = (self.win_sum[i] * inv - self.ref_mean[i]).abs() / self.ref_std(i);
+            worst = worst.max(shift);
+        }
+        worst
+    }
+
+    /// Feed one observation; returns true when the alarm fires.
+    pub fn update(&mut self, obs: &[f32; OBS_DIM]) -> bool {
+        if self.n < self.warmup {
+            // build reference statistics (Welford)
+            self.n += 1;
+            for i in 0..OBS_DIM {
+                let x = obs[i] as f64;
+                let d = x - self.ref_mean[i];
+                self.ref_mean[i] += d / self.n as f64;
+                self.ref_m2[i] += d * (x - self.ref_mean[i]);
+            }
+            return false;
+        }
+        self.n += 1;
+        if self.win.len() == self.window {
+            let old = self.win.pop_front().unwrap();
+            for i in 0..OBS_DIM {
+                self.win_sum[i] -= old[i] as f64;
+            }
+        }
+        for i in 0..OBS_DIM {
+            self.win_sum[i] += obs[i] as f64;
+        }
+        self.win.push_back(*obs);
+        self.score() > self.threshold
+    }
+
+    pub fn reset(&mut self) {
+        self.n = 0;
+        self.ref_mean = [0.0; OBS_DIM];
+        self.ref_m2 = [0.0; OBS_DIM];
+        self.win.clear();
+        self.win_sum = [0.0; OBS_DIM];
+    }
+}
+
+/// Which detector fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriftSignal {
+    /// Page–Hinkley on reward residuals (outcome drift).
+    Reward,
+    /// Observation-mean shift (input drift: churn, co-runner regime).
+    Observation,
+}
+
+/// The combined trigger consumed by the online agent.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    pub ph: PageHinkley,
+    pub obs: ObsShift,
+    pub events: u64,
+}
+
+impl Default for DriftDetector {
+    fn default() -> Self {
+        // delta/lambda sized against measured Algorithm-1 streams: a
+        // healthy serving stream carries sparse -1 constraint-violation
+        // spikes whose worst 4000-sample drawdown is ~4 at delta 0.15,
+        // while the calibration-drift collapse (sustained ~-0.5) crosses
+        // lambda 12 in ~35 samples — 3x false-alarm headroom
+        DriftDetector {
+            ph: PageHinkley::new(0.15, 12.0, 32),
+            obs: ObsShift::new(128, 64, 6.0),
+            events: 0,
+        }
+    }
+}
+
+impl DriftDetector {
+    /// Feed one served (reward, observation) pair.
+    pub fn update(&mut self, reward: f64, obs: &[f32; OBS_DIM]) -> Option<DriftSignal> {
+        let ph_fired = self.ph.update(reward);
+        let obs_fired = self.obs.update(obs);
+        if ph_fired {
+            self.events += 1;
+            Some(DriftSignal::Reward)
+        } else if obs_fired {
+            self.events += 1;
+            Some(DriftSignal::Observation)
+        } else {
+            None
+        }
+    }
+
+    /// Re-arm after an adaptation round begins (both statistics restart
+    /// against the new regime).
+    pub fn rearm(&mut self) {
+        self.ph.reset();
+        self.obs.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::XorShift64;
+
+    #[test]
+    fn page_hinkley_ignores_stationary_noise() {
+        let mut ph = PageHinkley::new(0.05, 3.0, 32);
+        let mut rng = XorShift64::new(1);
+        for _ in 0..5000 {
+            assert!(!ph.update(0.15 * rng.normal()), "false alarm at stat {}", ph.stat());
+        }
+    }
+
+    #[test]
+    fn page_hinkley_catches_a_level_drop() {
+        let mut ph = PageHinkley::new(0.05, 3.0, 32);
+        let mut rng = XorShift64::new(2);
+        for _ in 0..500 {
+            ph.update(0.1 * rng.normal());
+        }
+        let mut fired_at = None;
+        for i in 0..200 {
+            if ph.update(-0.5 + 0.1 * rng.normal()) {
+                fired_at = Some(i);
+                break;
+            }
+        }
+        let at = fired_at.expect("a 0.5 drop must alarm");
+        assert!(at < 40, "alarm took {at} samples");
+    }
+
+    #[test]
+    fn obs_shift_catches_feature_migration() {
+        let mut d = ObsShift::new(128, 64, 6.0);
+        let mut rng = XorShift64::new(3);
+        let base = |rng: &mut XorShift64| {
+            let mut o = [0f32; OBS_DIM];
+            for (i, x) in o.iter_mut().enumerate() {
+                *x = i as f32 + 0.1 * rng.normal() as f32;
+            }
+            o
+        };
+        for _ in 0..400 {
+            assert!(!d.update(&base(&mut rng)), "false alarm at {}", d.score());
+        }
+        // model churn: the static features (16..21) jump
+        let mut fired = false;
+        for _ in 0..80 {
+            let mut o = base(&mut rng);
+            for x in o.iter_mut().skip(16) {
+                *x += 25.0;
+            }
+            if d.update(&o) {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "a 25-unit static-feature jump must alarm (score {})", d.score());
+    }
+
+    #[test]
+    fn detector_classifies_signals_and_rearms() {
+        let mut det = DriftDetector::default();
+        let obs = [1.0f32; OBS_DIM];
+        let mut rng = XorShift64::new(4);
+        for _ in 0..200 {
+            assert!(det.update(0.1 * rng.normal(), &obs).is_none());
+        }
+        let mut sig = None;
+        for _ in 0..100 {
+            sig = det.update(-0.6, &obs);
+            if sig.is_some() {
+                break;
+            }
+        }
+        assert_eq!(sig, Some(DriftSignal::Reward));
+        assert_eq!(det.events, 1);
+        det.rearm();
+        assert!(det.ph.stat() == 0.0);
+        for _ in 0..100 {
+            // the *new* level is the baseline now: no re-alarm
+            assert!(det.update(-0.6 + 0.05 * rng.normal(), &obs).is_none());
+        }
+    }
+}

@@ -1,0 +1,544 @@
+//! Online policy adaptation (DESIGN.md §9): closes the AI↔FPGA loop
+//! *at runtime*, entirely in Rust.
+//!
+//! The AOT pipeline freezes the PPO agent at build time; production
+//! fleets are non-stationary (model churn, thermal derating, co-runner
+//! drift), so a frozen policy quietly decays. This subsystem watches the
+//! serving stream, detects drift, fine-tunes a challenger policy in
+//! process, and promotes it only once it provably beats the incumbent:
+//!
+//! * [`policy`] — pure-Rust MLP actor-critic (forward + backward + Adam)
+//!   loaded from the weights `python/compile/aot.py` exports next to the
+//!   HLO artifact; JAX parity pinned by `data/golden_logits.csv`.
+//! * [`buffer`] — bounded rollout/replay buffer + GAE.
+//! * [`trainer`] — budgeted in-process PPO-clip fine-tuning.
+//! * [`drift`] — Page–Hinkley on reward residuals + observation-mean
+//!   shift: the adaptation trigger.
+//! * [`shadow`] — windowed paired promotion gate with automatic rollback.
+//! * [`session`] — self-contained drift-scenario harness (the `adapt`
+//!   CLI subcommand and the acceptance tests).
+//!
+//! [`OnlineAgent`] composes the above into the state machine wired into
+//! [`crate::coordinator::engine::Selector::Online`] and
+//! [`crate::coordinator::fleet::FleetPolicy::Online`]:
+//!
+//! ```text
+//! Monitoring --drift alarm--> Adapting --gate win--> (adapted serves)
+//!     ^                          |  ^                     |
+//!     |                   budget |  '----- rollback ------'
+//!     '---- consolidate ---------'
+//! ```
+
+pub mod buffer;
+pub mod drift;
+pub mod policy;
+pub mod session;
+pub mod shadow;
+pub mod trainer;
+
+pub use buffer::{ReplayBuffer, Transition};
+pub use drift::{DriftDetector, DriftSignal};
+pub use policy::MlpPolicy;
+pub use shadow::{GateConfig, GateEvent, PromotionGate};
+pub use trainer::{PpoTrainer, TrainerConfig};
+
+use crate::dpusim::{DpuSim, Metrics, FPS_CONSTRAINT};
+use crate::models::ModelVariant;
+use crate::rl::features::OBS_DIM;
+use crate::rl::reward::{Outcome, RewardCalculator};
+use crate::workload::{WorkloadState, XorShift64};
+use anyhow::Result;
+
+/// Lifecycle phase of the online agent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Serving the frozen policy, watching for drift.
+    Monitoring,
+    /// Challenger training in shadow (serving switches on promotion).
+    Adapting,
+}
+
+/// Composite configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OnlineConfig {
+    pub trainer: TrainerConfig,
+    pub gate: GateConfig,
+}
+
+/// Public counters/gauges (exported by `telemetry::online`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OnlineStats {
+    pub decisions: u64,
+    pub transitions: u64,
+    pub updates: u64,
+    pub drift_events: u64,
+    pub promotions: u64,
+    pub rollbacks: u64,
+    /// Adaptation rounds folded back into the incumbent at budget end.
+    pub consolidations: u64,
+    pub ph_stat: f64,
+    pub obs_shift: f64,
+    pub gate_mean_margin: f64,
+    pub gate_fill: usize,
+    pub adapting: bool,
+    /// True while the adapted policy is the serving policy.
+    pub serving_adapted: bool,
+}
+
+/// The three actions one online decision exposes.
+#[derive(Debug, Clone, Copy)]
+pub struct OnlineDecision {
+    /// What the platform actually configures.
+    pub serving: usize,
+    /// The challenger's exploration sample (training stream).
+    pub explore: usize,
+    /// Frozen incumbent's greedy action.
+    pub frozen_greedy: usize,
+    /// Challenger's greedy action (the promotion candidate).
+    pub adapted_greedy: usize,
+    /// Value estimate of the policy that produced `serving`.
+    pub value: f64,
+}
+
+/// Counterfactual feedback for one decision (assembled by
+/// [`OnlineAgent::feedback_from_sim`] or by the session harness).
+#[derive(Debug, Clone, Copy)]
+pub struct Feedback {
+    /// Algorithm-1 reward of the *served* outcome (the coordinator's
+    /// reward stream — drift-detection input).
+    pub served_reward: f64,
+    /// Counterfactual outcome of the exploration action.
+    pub explore_fps: f64,
+    pub explore_p_fpga: f64,
+    /// Counterfactual scores of both greedy policies on this decision.
+    pub frozen_ppw: f64,
+    pub frozen_feasible: bool,
+    pub adapted_ppw: f64,
+    pub adapted_feasible: bool,
+    /// Model statics for the reward context key.
+    pub gmac: f64,
+    pub data_mb: f64,
+}
+
+#[derive(Debug, Clone)]
+struct Pending {
+    obs: [f32; OBS_DIM],
+    explore: usize,
+    value: f64,
+    logp: f64,
+}
+
+/// The online-adaptation agent: frozen incumbent + adapting challenger.
+pub struct OnlineAgent {
+    frozen: MlpPolicy,
+    adapting: MlpPolicy,
+    trainer: PpoTrainer,
+    buffer: ReplayBuffer,
+    /// Reward bookkeeping for the challenger's exploration stream
+    /// (separate from the coordinator's served-stream calculator).
+    rcalc: RewardCalculator,
+    detector: DriftDetector,
+    gate: PromotionGate,
+    rng: XorShift64,
+    mode: Mode,
+    pending: Option<Pending>,
+    stats: OnlineStats,
+    /// Feedbacks seen since the training budget ran out (grace period
+    /// letting a late gate verdict land before the round closes).
+    post_budget: u64,
+    cfg: OnlineConfig,
+}
+
+impl OnlineAgent {
+    pub fn new(frozen: MlpPolicy, cfg: OnlineConfig, seed: u64) -> OnlineAgent {
+        let adapting = frozen.clone();
+        OnlineAgent {
+            frozen,
+            adapting,
+            trainer: PpoTrainer::new(cfg.trainer),
+            buffer: ReplayBuffer::new(cfg.trainer.rollout.max(1)),
+            rcalc: RewardCalculator::new(),
+            detector: DriftDetector::default(),
+            gate: PromotionGate::new(cfg.gate),
+            rng: XorShift64::new(seed ^ 0x0a_11e),
+            mode: Mode::Monitoring,
+            pending: None,
+            stats: OnlineStats::default(),
+            post_budget: 0,
+            cfg,
+        }
+    }
+
+    /// Agent with the committed frozen weights (export contract).
+    pub fn load_default(seed: u64) -> Result<OnlineAgent> {
+        Ok(OnlineAgent::new(
+            MlpPolicy::load_default()?,
+            OnlineConfig::default(),
+            seed,
+        ))
+    }
+
+    pub fn stats(&self) -> &OnlineStats {
+        &self.stats
+    }
+
+    /// Tune or disable the drift triggers (tests, cautious deployments).
+    pub fn detector_mut(&mut self) -> &mut DriftDetector {
+        &mut self.detector
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// The policy currently serving decisions.
+    pub fn serving_policy(&self) -> &MlpPolicy {
+        if self.gate.promoted {
+            &self.adapting
+        } else {
+            &self.frozen
+        }
+    }
+
+    /// The frozen incumbent (for baseline comparisons).
+    pub fn frozen_policy(&self) -> &MlpPolicy {
+        &self.frozen
+    }
+
+    /// The challenger in its current training state.
+    pub fn adapted_policy(&self) -> &MlpPolicy {
+        &self.adapting
+    }
+
+    /// Decide actions for one observation. Must be followed by exactly
+    /// one [`Self::feedback`] (or [`Self::feedback_from_sim`]) call.
+    pub fn decide(&mut self, obs: &[f32; OBS_DIM]) -> OnlineDecision {
+        self.stats.decisions += 1;
+        let f_frozen = self.frozen.forward(obs);
+        let frozen_greedy = f_frozen.argmax();
+        let d = match self.mode {
+            Mode::Monitoring => OnlineDecision {
+                serving: frozen_greedy,
+                explore: frozen_greedy,
+                frozen_greedy,
+                adapted_greedy: frozen_greedy,
+                value: f_frozen.value,
+            },
+            Mode::Adapting => {
+                let f_adapt = self.adapting.forward(obs);
+                let adapted_greedy = f_adapt.argmax();
+                let (explore, logp) = trainer::sample_explore(
+                    &f_adapt.logits,
+                    self.trainer.cfg.explore_eps,
+                    &mut self.rng,
+                );
+                self.pending = Some(Pending {
+                    obs: *obs,
+                    explore,
+                    value: f_adapt.value,
+                    logp,
+                });
+                OnlineDecision {
+                    serving: if self.gate.promoted {
+                        adapted_greedy
+                    } else {
+                        frozen_greedy
+                    },
+                    explore,
+                    frozen_greedy,
+                    adapted_greedy,
+                    value: if self.gate.promoted {
+                        f_adapt.value
+                    } else {
+                        f_frozen.value
+                    },
+                }
+            }
+        };
+        if self.mode == Mode::Monitoring {
+            self.pending = Some(Pending {
+                obs: *obs,
+                explore: frozen_greedy,
+                value: f_frozen.value,
+                logp: 0.0,
+            });
+        }
+        d
+    }
+
+    /// Begin an adaptation round: clone the incumbent, soften its policy
+    /// head (entropy reset), fresh optimizer/baselines/gate.
+    fn start_adaptation(&mut self) {
+        self.adapting = self.frozen.clone();
+        self.adapting.head_reset(self.trainer.cfg.head_tau);
+        self.trainer.reset();
+        self.buffer.clear();
+        self.rcalc = RewardCalculator::new();
+        self.gate.reset();
+        self.mode = Mode::Adapting;
+        self.post_budget = 0;
+        self.stats.drift_events = self.detector.events;
+        self.stats.adapting = true;
+    }
+
+    /// End the round: a promoted challenger becomes the new incumbent
+    /// (consolidation), an unpromoted one is dropped; either way the
+    /// detector re-arms against the current regime.
+    fn end_adaptation(&mut self) {
+        if self.gate.promoted {
+            self.frozen = self.adapting.clone();
+            self.gate.reset();
+            self.stats.consolidations += 1;
+        }
+        self.mode = Mode::Monitoring;
+        self.detector.rearm();
+        self.stats.adapting = false;
+    }
+
+    /// Consume the feedback for the last [`Self::decide`] call.
+    pub fn feedback(&mut self, fb: &Feedback) {
+        let Some(pending) = self.pending.take() else {
+            return;
+        };
+        // drift watch runs on the served stream while monitoring
+        if self.mode == Mode::Monitoring {
+            let fired = self.detector.update(fb.served_reward, &pending.obs).is_some();
+            self.stats.ph_stat = self.detector.ph.stat();
+            self.stats.obs_shift = self.detector.obs.score();
+            if fired {
+                self.start_adaptation();
+            }
+            return;
+        }
+
+        // challenger training stream: Algorithm-1 reward of the
+        // exploration action's counterfactual outcome
+        let (cpu_util, mem_gbs) = crate::rl::features::context_stats(&pending.obs);
+        let reward = self.rcalc.calculate(&Outcome {
+            measured_fps: fb.explore_fps,
+            fpga_power: fb.explore_p_fpga,
+            cpu_util,
+            mem_util_gbs: mem_gbs,
+            gmac: fb.gmac,
+            model_data_mb: fb.data_mb,
+            fps_constraint: FPS_CONSTRAINT,
+        });
+        self.buffer.push(Transition {
+            obs: pending.obs,
+            action: pending.explore,
+            reward,
+            value: pending.value,
+            logp: pending.logp,
+            done: true,
+        });
+        self.stats.transitions += 1;
+
+        // promotion gate on the paired greedy counterfactuals
+        let frozen_score = shadow::score(fb.frozen_ppw, fb.frozen_feasible);
+        let adapted_score = shadow::score(fb.adapted_ppw, fb.adapted_feasible);
+        let (inc, ch) = if self.gate.promoted {
+            (adapted_score, frozen_score)
+        } else {
+            (frozen_score, adapted_score)
+        };
+        self.gate.push(inc, ch);
+        self.stats.promotions = self.gate.promotions;
+        self.stats.rollbacks = self.gate.rollbacks;
+        self.stats.gate_mean_margin = self.gate.mean_margin();
+        self.stats.gate_fill = self.gate.fill();
+        self.stats.serving_adapted = self.gate.promoted;
+
+        // budgeted training cadence
+        if self.buffer.len() >= self.trainer.cfg.rollout && self.trainer.budget_left() {
+            let batch = self.buffer.drain();
+            self.trainer.update(&mut self.adapting, &batch);
+            self.stats.updates += 1; // cumulative across rounds
+        }
+        if !self.trainer.budget_left() {
+            // budget spent: one more gate window of grace, then close
+            self.post_budget += 1;
+            if self.post_budget > self.gate.cfg.window as u64 {
+                self.end_adaptation();
+            }
+        }
+    }
+
+    /// Evaluate the counterfactual actions on `sim` and feed back — the
+    /// glue used by the decision engine, the fleet coordinator and the
+    /// session harness. `served` is the metrics of the action that
+    /// actually served; `served_reward` its Algorithm-1 reward from the
+    /// caller's reward stream.
+    pub fn feedback_from_sim(
+        &mut self,
+        sim: &DpuSim,
+        model: &ModelVariant,
+        state: WorkloadState,
+        served_reward: f64,
+        served: &Metrics,
+    ) -> Result<()> {
+        // copy out of the pending slot so no borrow outlives this point
+        let (explore, pending_obs) = match self.pending.as_ref() {
+            None => return Ok(()),
+            Some(p) => (p.explore, p.obs),
+        };
+        if self.mode == Mode::Monitoring {
+            // only the served stream matters while monitoring
+            self.feedback(&Feedback {
+                served_reward,
+                explore_fps: served.fps,
+                explore_p_fpga: served.p_fpga,
+                frozen_ppw: served.ppw,
+                frozen_feasible: served.meets_constraint,
+                adapted_ppw: served.ppw,
+                adapted_feasible: served.meets_constraint,
+                gmac: model.gmac(),
+                data_mb: model.data_io_mb(),
+            });
+            return Ok(());
+        }
+        let eval = |action_id: usize| -> Result<Metrics> {
+            let a = &sim.actions()[action_id];
+            sim.evaluate(model, &a.size, a.instances, state)
+        };
+        // recompute the greedy pair for this obs (cheap: two forwards)
+        let frozen_greedy = self.frozen.forward(&pending_obs).argmax();
+        let adapted_greedy = self.adapting.forward(&pending_obs).argmax();
+        let me = eval(explore)?;
+        let mf = eval(frozen_greedy)?;
+        let ma = eval(adapted_greedy)?;
+        self.feedback(&Feedback {
+            served_reward,
+            explore_fps: me.fps,
+            explore_p_fpga: me.p_fpga,
+            frozen_ppw: mf.ppw,
+            frozen_feasible: mf.meets_constraint,
+            adapted_ppw: ma.ppw,
+            adapted_feasible: ma.meets_constraint,
+            gmac: model.gmac(),
+            data_mb: model.data_io_mb(),
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agent() -> OnlineAgent {
+        OnlineAgent::new(MlpPolicy::init_random(3), OnlineConfig::default(), 7)
+    }
+
+    fn healthy_feedback(serving_reward: f64) -> Feedback {
+        Feedback {
+            served_reward: serving_reward,
+            explore_fps: 60.0,
+            explore_p_fpga: 6.0,
+            frozen_ppw: 10.0,
+            frozen_feasible: true,
+            adapted_ppw: 10.0,
+            adapted_feasible: true,
+            gmac: 4.0,
+            data_mb: 40.0,
+        }
+    }
+
+    #[test]
+    fn monitoring_until_drift_then_adapting() {
+        let mut a = agent();
+        let obs = [0.4f32; OBS_DIM];
+        let mut rng = XorShift64::new(9);
+        for _ in 0..200 {
+            let d = a.decide(&obs);
+            assert_eq!(d.serving, d.frozen_greedy, "monitoring serves frozen");
+            a.feedback(&healthy_feedback(0.1 * rng.normal()));
+            assert_eq!(a.mode(), Mode::Monitoring);
+        }
+        // reward collapses: Page-Hinkley must fire and flip the mode
+        for _ in 0..100 {
+            a.decide(&obs);
+            a.feedback(&healthy_feedback(-0.8));
+            if a.mode() == Mode::Adapting {
+                break;
+            }
+        }
+        assert_eq!(a.mode(), Mode::Adapting);
+        assert_eq!(a.stats().drift_events, 1);
+        // challenger starts as a softened clone: still serving frozen
+        let d = a.decide(&obs);
+        assert_eq!(d.serving, d.frozen_greedy);
+        assert!(!a.stats().serving_adapted);
+        a.feedback(&healthy_feedback(0.0));
+    }
+
+    #[test]
+    fn adapting_trains_and_better_challenger_promotes() {
+        let mut a = agent();
+        let obs = [0.4f32; OBS_DIM];
+        // force adaptation directly
+        a.start_adaptation();
+        for i in 0..300 {
+            let d = a.decide(&obs);
+            // synthetic world: challenger's greedy is always 25% better
+            let fb = Feedback {
+                served_reward: 0.0,
+                explore_fps: 60.0,
+                explore_p_fpga: 6.0,
+                frozen_ppw: 8.0,
+                frozen_feasible: true,
+                adapted_ppw: 10.0,
+                adapted_feasible: true,
+                gmac: 4.0,
+                data_mb: 40.0,
+            };
+            let _ = d;
+            a.feedback(&fb);
+            if a.stats().serving_adapted {
+                assert!(i >= a.gate.cfg.window - 1, "full window before promotion");
+                break;
+            }
+        }
+        assert!(a.stats().serving_adapted, "clear winner must promote");
+        assert!(a.stats().transitions > 0);
+        assert!(a.stats().updates > 0, "training ran during adaptation");
+        // promoted: serving flips to the adapted greedy
+        let d = a.decide(&obs);
+        assert_eq!(d.serving, d.adapted_greedy);
+        a.feedback(&healthy_feedback(0.0));
+    }
+
+    #[test]
+    fn worse_challenger_is_never_promoted_and_round_closes() {
+        let mut a = agent();
+        let obs = [0.1f32; OBS_DIM];
+        a.start_adaptation();
+        // run the whole budget with the challenger clearly worse
+        for _ in 0..(64 * 63 + 200) {
+            a.decide(&obs);
+            let fb = Feedback {
+                served_reward: 0.0,
+                explore_fps: 60.0,
+                explore_p_fpga: 6.0,
+                frozen_ppw: 10.0,
+                frozen_feasible: true,
+                adapted_ppw: 7.0,
+                adapted_feasible: true,
+                gmac: 4.0,
+                data_mb: 40.0,
+            };
+            a.feedback(&fb);
+            assert!(!a.stats().serving_adapted, "worse challenger promoted");
+            if a.mode() == Mode::Monitoring {
+                break; // round closed at budget end
+            }
+        }
+        assert_eq!(a.stats().promotions, 0);
+    }
+
+    #[test]
+    fn feedback_without_decide_is_ignored() {
+        let mut a = agent();
+        a.feedback(&healthy_feedback(0.5));
+        assert_eq!(a.stats().transitions, 0);
+    }
+}

@@ -1,0 +1,535 @@
+//! Pure-Rust MLP actor-critic: the *trainable* twin of the AOT artifact.
+//!
+//! Same network as `python/compile/model.py` — obs(22) -> whiten -> 128
+//! tanh -> 128 tanh -> {26 logits, 1 value} — but with weights held as
+//! plain `f32` buffers so the coordinator can fine-tune in process
+//! (backward pass + Adam below). Weights load from the CSV that
+//! `python/compile/aot.py` exports alongside the HLO
+//! (`artifacts/policy_weights.csv`, pinned copy in
+//! `data/policy_weights.csv`); forward-pass parity with the JAX graph is
+//! pinned to 1e-5 by `data/golden_logits.csv` (rust/tests/online.rs).
+//!
+//! Accumulation is f64 throughout: it costs nothing at these sizes
+//! (~23k weights) and keeps the forward pass within the golden tolerance
+//! of JAX's f32-SIMD summation order.
+
+// Matvec/Adam inner loops index several flat buffers in lockstep; the
+// index-based style mirrors the math (scoped here, not crate-wide).
+#![allow(clippy::needless_range_loop)]
+
+use crate::csvutil::Table;
+use crate::rl::features::OBS_DIM;
+use crate::runtime::{PolicyOutput, NUM_ACTIONS};
+use crate::workload::XorShift64;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Hidden width (mirrors `model.HIDDEN`).
+pub const HIDDEN: usize = 128;
+
+/// The actor-critic network. Matrices are row-major `[input][output]`.
+#[derive(Debug, Clone)]
+pub struct MlpPolicy {
+    /// Observation whitening (frozen, never trained).
+    pub obs_mu: Vec<f32>,
+    pub obs_sigma: Vec<f32>,
+    pub w1: Vec<f32>, // OBS_DIM x HIDDEN
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>, // HIDDEN x HIDDEN
+    pub b2: Vec<f32>,
+    pub w_pi: Vec<f32>, // HIDDEN x NUM_ACTIONS
+    pub b_pi: Vec<f32>,
+    pub w_v: Vec<f32>, // HIDDEN x 1
+    pub b_v: f32,
+}
+
+/// One forward pass with cached activations (what backward consumes).
+#[derive(Debug, Clone)]
+pub struct Forward {
+    /// Whitened input.
+    pub x: [f64; OBS_DIM],
+    pub h1: [f64; HIDDEN],
+    pub h2: [f64; HIDDEN],
+    pub logits: [f64; NUM_ACTIONS],
+    pub value: f64,
+}
+
+impl Forward {
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for i in 1..NUM_ACTIONS {
+            if self.logits[i] > self.logits[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// View as the runtime's output type (f32 logits).
+    pub fn to_output(&self) -> PolicyOutput {
+        PolicyOutput {
+            logits: self.logits.iter().map(|&l| l as f32).collect(),
+            value: self.value as f32,
+        }
+    }
+}
+
+/// Numerically-stable softmax over the logits.
+pub fn softmax(logits: &[f64; NUM_ACTIONS]) -> [f64; NUM_ACTIONS] {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut out = [0f64; NUM_ACTIONS];
+    let mut z = 0.0;
+    for (o, &l) in out.iter_mut().zip(logits.iter()) {
+        *o = (l - m).exp();
+        z += *o;
+    }
+    for o in &mut out {
+        *o /= z;
+    }
+    out
+}
+
+/// acc[j] += x * w[j]   (the inner loop of every matvec here)
+#[inline]
+fn axpy(acc: &mut [f64], x: f64, w: &[f32]) {
+    for (a, &wj) in acc.iter_mut().zip(w.iter()) {
+        *a += x * wj as f64;
+    }
+}
+
+impl MlpPolicy {
+    /// Forward pass with cached activations.
+    pub fn forward(&self, obs: &[f32; OBS_DIM]) -> Forward {
+        let mut x = [0f64; OBS_DIM];
+        for (i, xi) in x.iter_mut().enumerate() {
+            *xi = ((obs[i] - self.obs_mu[i]) / self.obs_sigma[i]) as f64;
+        }
+        let mut a1 = [0f64; HIDDEN];
+        for (j, a) in a1.iter_mut().enumerate() {
+            *a = self.b1[j] as f64;
+        }
+        for (i, &xi) in x.iter().enumerate() {
+            axpy(&mut a1, xi, &self.w1[i * HIDDEN..(i + 1) * HIDDEN]);
+        }
+        let mut h1 = [0f64; HIDDEN];
+        for (h, &a) in h1.iter_mut().zip(a1.iter()) {
+            *h = a.tanh();
+        }
+        let mut a2 = [0f64; HIDDEN];
+        for (j, a) in a2.iter_mut().enumerate() {
+            *a = self.b2[j] as f64;
+        }
+        for (i, &hi) in h1.iter().enumerate() {
+            axpy(&mut a2, hi, &self.w2[i * HIDDEN..(i + 1) * HIDDEN]);
+        }
+        let mut h2 = [0f64; HIDDEN];
+        for (h, &a) in h2.iter_mut().zip(a2.iter()) {
+            *h = a.tanh();
+        }
+        let mut logits = [0f64; NUM_ACTIONS];
+        for (j, l) in logits.iter_mut().enumerate() {
+            *l = self.b_pi[j] as f64;
+        }
+        for (i, &hi) in h2.iter().enumerate() {
+            axpy(&mut logits, hi, &self.w_pi[i * NUM_ACTIONS..(i + 1) * NUM_ACTIONS]);
+        }
+        let mut value = self.b_v as f64;
+        for (i, &hi) in h2.iter().enumerate() {
+            value += hi * self.w_v[i] as f64;
+        }
+        Forward {
+            x,
+            h1,
+            h2,
+            logits,
+            value,
+        }
+    }
+
+    /// Entropy-reset: soften the policy head by `tau` so fine-tuning can
+    /// explore again (a near-deterministic head makes PPO's importance
+    /// ratios vanish for every alternative action — see DESIGN.md §9).
+    pub fn head_reset(&mut self, tau: f32) {
+        for w in &mut self.w_pi {
+            *w *= tau;
+        }
+        for b in &mut self.b_pi {
+            *b *= tau;
+        }
+    }
+
+    /// Load from the `tensor,row,col,value` CSV exported by
+    /// `python -m compile.aot` (see `export_weights_csv`).
+    pub fn load_csv(path: &Path) -> Result<MlpPolicy> {
+        let t = Table::read(path)?;
+        let (ct, cr, cc, cv) = (t.col("tensor")?, t.col("row")?, t.col("col")?, t.col("value")?);
+        let mut p = MlpPolicy {
+            obs_mu: vec![0.0; OBS_DIM],
+            obs_sigma: vec![1.0; OBS_DIM],
+            w1: vec![0.0; OBS_DIM * HIDDEN],
+            b1: vec![0.0; HIDDEN],
+            w2: vec![0.0; HIDDEN * HIDDEN],
+            b2: vec![0.0; HIDDEN],
+            w_pi: vec![0.0; HIDDEN * NUM_ACTIONS],
+            b_pi: vec![0.0; NUM_ACTIONS],
+            w_v: vec![0.0; HIDDEN],
+            b_v: 0.0,
+        };
+        let mut seen = 0usize;
+        for row in &t.rows {
+            let tensor = &row[ct];
+            let i: usize = row[cr].parse().context("weight row index")?;
+            let j: usize = row[cc].parse().context("weight col index")?;
+            let v: f32 = row[cv].parse::<f64>().context("weight value")? as f32;
+            let (buf, cols): (&mut [f32], usize) = match tensor.as_str() {
+                "obs_mu" => (&mut p.obs_mu, 1),
+                "obs_sigma" => (&mut p.obs_sigma, 1),
+                "w1" => (&mut p.w1, HIDDEN),
+                "b1" => (&mut p.b1, 1),
+                "w2" => (&mut p.w2, HIDDEN),
+                "b2" => (&mut p.b2, 1),
+                "w_pi" => (&mut p.w_pi, NUM_ACTIONS),
+                "b_pi" => (&mut p.b_pi, 1),
+                "w_v" => (&mut p.w_v, 1),
+                "b_v" => {
+                    p.b_v = v;
+                    seen += 1;
+                    continue;
+                }
+                other => anyhow::bail!("unknown tensor {other:?} in {}", path.display()),
+            };
+            let idx = i * cols + j;
+            anyhow::ensure!(
+                idx < buf.len(),
+                "{tensor}[{i},{j}] out of range in {}",
+                path.display()
+            );
+            buf[idx] = v;
+            seen += 1;
+        }
+        let expect = 2 * OBS_DIM
+            + OBS_DIM * HIDDEN
+            + HIDDEN * HIDDEN
+            + HIDDEN * NUM_ACTIONS
+            + 2 * HIDDEN
+            + NUM_ACTIONS
+            + HIDDEN
+            + 1;
+        anyhow::ensure!(
+            seen == expect,
+            "{} has {seen} weights, expected {expect}",
+            path.display()
+        );
+        anyhow::ensure!(
+            p.obs_sigma.iter().all(|&s| s > 0.0),
+            "obs_sigma must be positive"
+        );
+        Ok(p)
+    }
+
+    /// The committed frozen-agent weights (export contract: DESIGN.md §9).
+    pub fn load_default() -> Result<MlpPolicy> {
+        Self::load_csv(&default_weights_path())
+    }
+
+    /// Random init (tests / cold start without an exported agent). Uses
+    /// the PPO conventions of `model.init_params`.
+    pub fn init_random(seed: u64) -> MlpPolicy {
+        let mut rng = XorShift64::new(seed ^ 0x0411e);
+        let mut dense = |fan_in: usize, fan_out: usize, gain: f64| -> Vec<f32> {
+            (0..fan_in * fan_out)
+                .map(|_| (rng.normal() * gain / (fan_in as f64).sqrt()) as f32)
+                .collect()
+        };
+        MlpPolicy {
+            w1: dense(OBS_DIM, HIDDEN, std::f64::consts::SQRT_2),
+            w2: dense(HIDDEN, HIDDEN, std::f64::consts::SQRT_2),
+            w_pi: dense(HIDDEN, NUM_ACTIONS, 0.01),
+            w_v: dense(HIDDEN, 1, 1.0),
+            obs_mu: vec![0.0; OBS_DIM],
+            obs_sigma: vec![1.0; OBS_DIM],
+            b1: vec![0.0; HIDDEN],
+            b2: vec![0.0; HIDDEN],
+            b_pi: vec![0.0; NUM_ACTIONS],
+            b_v: 0.0,
+        }
+    }
+}
+
+/// Where the frozen-agent weights live: the committed `data/` pin. A
+/// freshly exported `artifacts/policy_weights.csv` (from `make
+/// artifacts`) takes precedence so a retrained agent is picked up
+/// without re-pinning.
+pub fn default_weights_path() -> std::path::PathBuf {
+    let fresh = crate::repo_root().join("artifacts").join("policy_weights.csv");
+    if fresh.exists() {
+        return fresh;
+    }
+    crate::repo_root().join("data").join("policy_weights.csv")
+}
+
+/// Gradient accumulator, same shapes as the trainable tensors (f64).
+#[derive(Debug, Clone)]
+pub struct Grads {
+    pub w1: Vec<f64>,
+    pub b1: Vec<f64>,
+    pub w2: Vec<f64>,
+    pub b2: Vec<f64>,
+    pub w_pi: Vec<f64>,
+    pub b_pi: Vec<f64>,
+    pub w_v: Vec<f64>,
+    pub b_v: f64,
+}
+
+impl Grads {
+    pub fn zeros() -> Grads {
+        Grads {
+            w1: vec![0.0; OBS_DIM * HIDDEN],
+            b1: vec![0.0; HIDDEN],
+            w2: vec![0.0; HIDDEN * HIDDEN],
+            b2: vec![0.0; HIDDEN],
+            w_pi: vec![0.0; HIDDEN * NUM_ACTIONS],
+            b_pi: vec![0.0; NUM_ACTIONS],
+            w_v: vec![0.0; HIDDEN],
+            b_v: 0.0,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        for v in [
+            &mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2,
+            &mut self.w_pi, &mut self.b_pi, &mut self.w_v,
+        ] {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.b_v = 0.0;
+    }
+}
+
+/// Accumulate gradients for one sample: `dlogits` and `dvalue` are the
+/// loss gradients at the heads (already divided by the batch size).
+pub fn backward(p: &MlpPolicy, fwd: &Forward, dlogits: &[f64; NUM_ACTIONS], dvalue: f64, g: &mut Grads) {
+    // heads
+    for (i, &hi) in fwd.h2.iter().enumerate() {
+        let row = &mut g.w_pi[i * NUM_ACTIONS..(i + 1) * NUM_ACTIONS];
+        for (w, &dl) in row.iter_mut().zip(dlogits.iter()) {
+            *w += hi * dl;
+        }
+        g.w_v[i] += hi * dvalue;
+    }
+    for (b, &dl) in g.b_pi.iter_mut().zip(dlogits.iter()) {
+        *b += dl;
+    }
+    g.b_v += dvalue;
+
+    // into h2: dh2 = w_pi . dlogits + w_v * dvalue, through tanh
+    let mut dz2 = [0f64; HIDDEN];
+    for (i, dz) in dz2.iter_mut().enumerate() {
+        let mut dh = p.w_v[i] as f64 * dvalue;
+        let row = &p.w_pi[i * NUM_ACTIONS..(i + 1) * NUM_ACTIONS];
+        for (&w, &dl) in row.iter().zip(dlogits.iter()) {
+            dh += w as f64 * dl;
+        }
+        *dz = dh * (1.0 - fwd.h2[i] * fwd.h2[i]);
+    }
+    for (i, &hi) in fwd.h1.iter().enumerate() {
+        let row = &mut g.w2[i * HIDDEN..(i + 1) * HIDDEN];
+        for (w, &dz) in row.iter_mut().zip(dz2.iter()) {
+            *w += hi * dz;
+        }
+    }
+    for (b, &dz) in g.b2.iter_mut().zip(dz2.iter()) {
+        *b += dz;
+    }
+
+    // into h1
+    let mut dz1 = [0f64; HIDDEN];
+    for (i, dz) in dz1.iter_mut().enumerate() {
+        let mut dh = 0.0;
+        let row = &p.w2[i * HIDDEN..(i + 1) * HIDDEN];
+        for (&w, &d2) in row.iter().zip(dz2.iter()) {
+            dh += w as f64 * d2;
+        }
+        *dz = dh * (1.0 - fwd.h1[i] * fwd.h1[i]);
+    }
+    for (i, &xi) in fwd.x.iter().enumerate() {
+        let row = &mut g.w1[i * HIDDEN..(i + 1) * HIDDEN];
+        for (w, &dz) in row.iter_mut().zip(dz1.iter()) {
+            *w += xi * dz;
+        }
+    }
+    for (b, &dz) in g.b1.iter_mut().zip(dz1.iter()) {
+        *b += dz;
+    }
+}
+
+/// Hand-rolled Adam, mirroring `python/compile/ppo.py::adam_update`.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    m: Grads,
+    v: Grads,
+    t: i32,
+}
+
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-8;
+
+impl Adam {
+    pub fn new(lr: f64) -> Adam {
+        Adam {
+            lr,
+            m: Grads::zeros(),
+            v: Grads::zeros(),
+            t: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.m.clear();
+        self.v.clear();
+        self.t = 0;
+    }
+
+    /// Apply one Adam step of `g` to the trainable tensors of `p`.
+    pub fn step(&mut self, p: &mut MlpPolicy, g: &Grads) {
+        self.t += 1;
+        let ms = 1.0 / (1.0 - ADAM_B1.powi(self.t));
+        let vs = 1.0 / (1.0 - ADAM_B2.powi(self.t));
+        let lr = self.lr;
+        let mut upd = |w: &mut [f32], m: &mut [f64], v: &mut [f64], g: &[f64]| {
+            for i in 0..w.len() {
+                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+                w[i] -= (lr * (m[i] * ms) / ((v[i] * vs).sqrt() + ADAM_EPS)) as f32;
+            }
+        };
+        upd(&mut p.w1, &mut self.m.w1, &mut self.v.w1, &g.w1);
+        upd(&mut p.b1, &mut self.m.b1, &mut self.v.b1, &g.b1);
+        upd(&mut p.w2, &mut self.m.w2, &mut self.v.w2, &g.w2);
+        upd(&mut p.b2, &mut self.m.b2, &mut self.v.b2, &g.b2);
+        upd(&mut p.w_pi, &mut self.m.w_pi, &mut self.v.w_pi, &g.w_pi);
+        upd(&mut p.b_pi, &mut self.m.b_pi, &mut self.v.b_pi, &g.b_pi);
+        upd(&mut p.w_v, &mut self.m.w_v, &mut self.v.w_v, &g.w_v);
+        self.m.b_v = ADAM_B1 * self.m.b_v + (1.0 - ADAM_B1) * g.b_v;
+        self.v.b_v = ADAM_B2 * self.v.b_v + (1.0 - ADAM_B2) * g.b_v * g.b_v;
+        p.b_v -= (lr * (self.m.b_v * ms) / ((self.v.b_v * vs).sqrt() + ADAM_EPS)) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes_and_softmax() {
+        let p = MlpPolicy::init_random(1);
+        let obs = [0.5f32; OBS_DIM];
+        let f = p.forward(&obs);
+        assert!(f.logits.iter().all(|l| l.is_finite()));
+        assert!(f.value.is_finite());
+        let probs = softmax(&f.logits);
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(f.argmax(), f.to_output().argmax());
+    }
+
+    #[test]
+    fn head_reset_flattens_distribution() {
+        let mut p = MlpPolicy::init_random(2);
+        // sharpen artificially (init biases are zero — set a ramp)
+        for (j, b) in p.b_pi.iter_mut().enumerate() {
+            *b = j as f32;
+        }
+        let obs = [1.0f32; OBS_DIM];
+        let before = softmax(&p.forward(&obs).logits);
+        p.head_reset(0.01);
+        let after = softmax(&p.forward(&obs).logits);
+        let ent = |q: &[f64; NUM_ACTIONS]| -> f64 {
+            -q.iter().map(|&x| if x > 0.0 { x * x.ln() } else { 0.0 }).sum::<f64>()
+        };
+        assert!(ent(&after) > ent(&before));
+        assert!(ent(&after) > 0.9 * (NUM_ACTIONS as f64).ln());
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        // check dlogits/dvalue propagation through the whole net on a
+        // random weight coordinate of every tensor
+        let p = MlpPolicy::init_random(3);
+        let obs: [f32; OBS_DIM] = std::array::from_fn(|i| 0.1 * i as f32 - 0.7);
+        let mut dlogits = [0f64; NUM_ACTIONS];
+        dlogits[4] = 0.7;
+        dlogits[11] = -0.3;
+        let dvalue = 0.5;
+        let loss = |p: &MlpPolicy| -> f64 {
+            let f = p.forward(&obs);
+            dlogits.iter().zip(f.logits.iter()).map(|(d, l)| d * l).sum::<f64>()
+                + dvalue * f.value
+        };
+        let mut g = Grads::zeros();
+        backward(&p, &p.forward(&obs), &dlogits, dvalue, &mut g);
+        // probe one coordinate per tensor against central differences
+        fn coord(p: &mut MlpPolicy, which: usize) -> &mut f32 {
+            match which {
+                0 => &mut p.w1[5 * HIDDEN + 7],
+                1 => &mut p.b1[9],
+                2 => &mut p.w2[17 * HIDDEN + 3],
+                3 => &mut p.b2[40],
+                4 => &mut p.w_pi[30 * NUM_ACTIONS + 4],
+                5 => &mut p.b_pi[11],
+                _ => &mut p.w_v[77],
+            }
+        }
+        let analytic = [
+            g.w1[5 * HIDDEN + 7],
+            g.b1[9],
+            g.w2[17 * HIDDEN + 3],
+            g.b2[40],
+            g.w_pi[30 * NUM_ACTIONS + 4],
+            g.b_pi[11],
+            g.w_v[77],
+        ];
+        let eps = 1e-3f32;
+        for (which, &a) in analytic.iter().enumerate() {
+            let mut pp = p.clone();
+            *coord(&mut pp, which) += eps;
+            let up = loss(&pp);
+            let mut pm = p.clone();
+            *coord(&mut pm, which) -= eps;
+            let down = loss(&pm);
+            let numeric = (up - down) / (2.0 * eps as f64);
+            assert!(
+                (a - numeric).abs() < 1e-3 * a.abs().max(1.0),
+                "grad {which} mismatch: analytic {a} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn adam_descends_a_quadratic_proxy() {
+        // minimize ||logits||^2 + value^2: gradients through backward,
+        // loss must fall monotonically-ish
+        let mut p = MlpPolicy::init_random(5);
+        let mut opt = Adam::new(1e-2);
+        let obs = [0.3f32; OBS_DIM];
+        let loss_of = |p: &MlpPolicy| {
+            let f = p.forward(&obs);
+            f.logits.iter().map(|l| l * l).sum::<f64>() + f.value * f.value
+        };
+        let l0 = loss_of(&p);
+        for _ in 0..50 {
+            let f = p.forward(&obs);
+            let mut dlogits = [0f64; NUM_ACTIONS];
+            for (d, &l) in dlogits.iter_mut().zip(f.logits.iter()) {
+                *d = 2.0 * l;
+            }
+            let mut g = Grads::zeros();
+            backward(&p, &f, &dlogits, 2.0 * f.value, &mut g);
+            opt.step(&mut p, &g);
+        }
+        // Adam's fixed-size steps leave a small oscillation floor, so
+        // assert solid descent rather than an exact fraction
+        assert!(loss_of(&p) < 0.9 * l0, "{} -> {}", l0, loss_of(&p));
+    }
+}

@@ -1,0 +1,244 @@
+//! Shadow serving + safe promotion.
+//!
+//! While adaptation runs, the *incumbent* policy keeps serving and the
+//! *challenger* (the fine-tuning policy) runs in shadow: its greedy
+//! action for every decision is evaluated counterfactually on the
+//! simulator (the simulated-testbed privilege that stands in for a
+//! production A/B slice — DESIGN.md §9). Promotion is gated on a full
+//! window of *paired* comparisons on identical decisions, so
+//! heterogeneous contexts cannot bias the estimate: each sample is the
+//! normalized margin between the challenger's and the incumbent's
+//! counterfactual score on the same observation.
+//!
+//! A promotion swaps the roles — the previous incumbent keeps running in
+//! shadow — and the same windowed test, now won by the demoted policy,
+//! triggers automatic rollback. A challenger that is not strictly better
+//! by `promote_margin` over a full window is never promoted.
+
+use std::collections::VecDeque;
+
+/// Gate shape.
+#[derive(Debug, Clone, Copy)]
+pub struct GateConfig {
+    /// Paired decisions per verdict.
+    pub window: usize,
+    /// Mean paired margin required to promote (fraction, e.g. 0.02 = 2%).
+    pub promote_margin: f64,
+    /// Mean paired margin (won by the shadow ex-incumbent) that rolls back.
+    pub rollback_margin: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig {
+            window: 128,
+            promote_margin: 0.02,
+            rollback_margin: 0.02,
+        }
+    }
+}
+
+/// Gate verdicts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateEvent {
+    /// Challenger wins: serving switches to the adapted policy.
+    Promote,
+    /// Ex-incumbent wins post-promotion: serving reverts.
+    Rollback,
+}
+
+/// Constraint-aware comparable score of one counterfactual outcome: PPW
+/// if the FPS constraint is met, else 0 (a policy violating C_PERF must
+/// never displace one that meets it).
+pub fn score(ppw: f64, feasible: bool) -> f64 {
+    if feasible {
+        ppw
+    } else {
+        0.0
+    }
+}
+
+/// Normalized paired margin in [-1, 1]: positive favors the challenger.
+pub fn paired_margin(incumbent_score: f64, challenger_score: f64) -> f64 {
+    let denom = incumbent_score.max(challenger_score);
+    if denom <= 0.0 {
+        0.0
+    } else {
+        (challenger_score - incumbent_score) / denom
+    }
+}
+
+/// The windowed promotion/rollback gate.
+#[derive(Debug, Clone)]
+pub struct PromotionGate {
+    pub cfg: GateConfig,
+    window: VecDeque<f64>,
+    sum: f64,
+    /// True while the adapted policy is the serving incumbent.
+    pub promoted: bool,
+    pub promotions: u64,
+    pub rollbacks: u64,
+}
+
+impl PromotionGate {
+    pub fn new(cfg: GateConfig) -> PromotionGate {
+        PromotionGate {
+            cfg,
+            window: VecDeque::with_capacity(cfg.window),
+            sum: 0.0,
+            promoted: false,
+            promotions: 0,
+            rollbacks: 0,
+        }
+    }
+
+    /// Mean paired margin over the current window (0 if empty).
+    pub fn mean_margin(&self) -> f64 {
+        if self.window.is_empty() {
+            0.0
+        } else {
+            self.sum / self.window.len() as f64
+        }
+    }
+
+    pub fn fill(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Restart the window (new adaptation round), keeping counters.
+    pub fn reset_window(&mut self) {
+        self.window.clear();
+        self.sum = 0.0;
+    }
+
+    /// Full reset for a new adaptation round.
+    pub fn reset(&mut self) {
+        self.reset_window();
+        self.promoted = false;
+    }
+
+    /// Feed one paired comparison. Before promotion the challenger is the
+    /// adapted policy; after promotion the roles swap (the shadow is the
+    /// demoted frozen policy) and a win by the shadow means rollback.
+    pub fn push(&mut self, incumbent_score: f64, challenger_score: f64) -> Option<GateEvent> {
+        let d = paired_margin(incumbent_score, challenger_score);
+        if self.window.len() == self.cfg.window {
+            self.sum -= self.window.pop_front().unwrap();
+        }
+        self.window.push_back(d);
+        self.sum += d;
+        if self.window.len() < self.cfg.window {
+            return None;
+        }
+        let margin = if self.promoted {
+            self.cfg.rollback_margin
+        } else {
+            self.cfg.promote_margin
+        };
+        if self.mean_margin() > margin {
+            self.reset_window();
+            return if self.promoted {
+                self.promoted = false;
+                self.rollbacks += 1;
+                Some(GateEvent::Rollback)
+            } else {
+                self.promoted = true;
+                self.promotions += 1;
+                Some(GateEvent::Promote)
+            };
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::XorShift64;
+
+    fn gate() -> PromotionGate {
+        PromotionGate::new(GateConfig::default())
+    }
+
+    #[test]
+    fn worse_challenger_never_promotes() {
+        let mut g = gate();
+        let mut rng = XorShift64::new(1);
+        for _ in 0..5000 {
+            // challenger consistently ~10% worse, with noise
+            let inc = 10.0 + 0.3 * rng.normal();
+            let ch = 9.0 + 0.3 * rng.normal();
+            assert_eq!(g.push(inc.max(0.1), ch.max(0.1)), None);
+        }
+        assert!(!g.promoted);
+        assert_eq!(g.promotions, 0);
+    }
+
+    #[test]
+    fn equal_challenger_never_promotes() {
+        // the margin requirement keeps ties from flapping
+        let mut g = gate();
+        let mut rng = XorShift64::new(2);
+        for _ in 0..5000 {
+            let x = 10.0 + 0.3 * rng.normal();
+            let y = 10.0 + 0.3 * rng.normal();
+            assert_eq!(g.push(x.max(0.1), y.max(0.1)), None);
+        }
+        assert_eq!(g.promotions, 0);
+    }
+
+    #[test]
+    fn better_challenger_promotes_after_a_full_window() {
+        let mut g = gate();
+        let mut at = None;
+        for i in 0..400 {
+            if let Some(e) = g.push(10.0, 12.0) {
+                assert_eq!(e, GateEvent::Promote);
+                at = Some(i);
+                break;
+            }
+        }
+        assert_eq!(at, Some(g.cfg.window - 1), "verdict exactly at window fill");
+        assert!(g.promoted);
+    }
+
+    #[test]
+    fn infeasible_challenger_cannot_promote_on_ppw() {
+        let mut g = gate();
+        for _ in 0..1000 {
+            // challenger has huge PPW but violates the constraint
+            let e = g.push(score(5.0, true), score(50.0, false));
+            assert_eq!(e, None);
+        }
+        assert!(!g.promoted);
+    }
+
+    #[test]
+    fn regression_after_promotion_rolls_back() {
+        let mut g = gate();
+        for _ in 0..g.cfg.window {
+            g.push(10.0, 12.0);
+        }
+        assert!(g.promoted);
+        // roles swapped: shadow (old incumbent) now clearly better
+        let mut rolled = false;
+        for _ in 0..g.cfg.window {
+            if g.push(8.0, 10.0) == Some(GateEvent::Rollback) {
+                rolled = true;
+                break;
+            }
+        }
+        assert!(rolled);
+        assert!(!g.promoted);
+        assert_eq!(g.rollbacks, 1);
+    }
+
+    #[test]
+    fn margin_is_context_normalized() {
+        // a 2x win on a tiny-PPW context counts the same as on a big one
+        assert!((paired_margin(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert!((paired_margin(100.0, 200.0) - 0.5).abs() < 1e-12);
+        assert!((paired_margin(2.0, 1.0) + 0.5).abs() < 1e-12);
+        assert_eq!(paired_margin(0.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! In-process PPO-clip fine-tuning (the training half of `aot.py`'s
+//! Algorithm 2, transplanted to Rust for the serving path).
+//!
+//! One `update()` call is one budgeted training step: `update_epochs`
+//! full-batch gradient passes over a drained rollout. The budget story
+//! (DESIGN.md §9): a 64-sample update is 8 forward+backward sweeps of a
+//! ~23k-weight MLP — comfortably inside the decision-loop idle time on
+//! the A53, and the cadence (one update per `rollout` decisions, at most
+//! `max_updates` per adaptation round) caps the total compute an
+//! adaptation may consume.
+//!
+//! Loss mirrors `python/compile/ppo.py::_loss_fn` — PPO-clip policy
+//! term + `VF_COEF` value regression − entropy bonus — with the entropy
+//! coefficient annealed linearly over the adaptation budget. Gradients
+//! are the hand-derived closed forms (verified against `jax.grad` to
+//! f32 precision; see rust/tests/online.rs for the behavioral pins).
+
+use crate::online::buffer::{self, Transition};
+use crate::online::policy::{backward, softmax, Adam, Grads, MlpPolicy};
+use crate::runtime::NUM_ACTIONS;
+
+/// Hyperparameters of the online fine-tuning loop.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainerConfig {
+    /// Decisions per training batch.
+    pub rollout: usize,
+    /// Full-batch passes per update (PPO inner epochs).
+    pub update_epochs: usize,
+    pub lr: f64,
+    pub clip_eps: f64,
+    pub vf_coef: f64,
+    /// Initial entropy bonus, annealed linearly to 0 across `max_updates`.
+    pub ent_coef0: f64,
+    /// Adaptation budget: updates per adaptation round.
+    pub max_updates: u64,
+    /// Uniform exploration mixed into the challenger's action sampling.
+    pub explore_eps: f64,
+    /// Policy-head entropy-reset factor applied when adaptation starts.
+    pub head_tau: f32,
+    pub gamma: f64,
+    pub lam: f64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            rollout: 64,
+            update_epochs: 8,
+            lr: 2e-3,
+            clip_eps: 0.2,
+            vf_coef: 0.5,
+            ent_coef0: 0.01,
+            max_updates: 62,
+            explore_eps: 0.05,
+            head_tau: 0.1,
+            gamma: 0.99,
+            lam: 0.95,
+        }
+    }
+}
+
+/// Diagnostics of one update.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainMetrics {
+    pub pi_loss: f64,
+    pub v_loss: f64,
+    pub entropy: f64,
+    pub mean_reward: f64,
+}
+
+/// The PPO trainer: optimizer state + update budget.
+#[derive(Debug)]
+pub struct PpoTrainer {
+    pub cfg: TrainerConfig,
+    opt: Adam,
+    grads: Grads,
+    updates: u64,
+}
+
+impl PpoTrainer {
+    pub fn new(cfg: TrainerConfig) -> PpoTrainer {
+        PpoTrainer {
+            opt: Adam::new(cfg.lr),
+            grads: Grads::zeros(),
+            updates: 0,
+            cfg,
+        }
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    pub fn budget_left(&self) -> bool {
+        self.updates < self.cfg.max_updates
+    }
+
+    /// Reset optimizer state and budget (a new adaptation round).
+    pub fn reset(&mut self) {
+        self.opt.reset();
+        self.updates = 0;
+    }
+
+    /// Current entropy coefficient (linear anneal over the budget).
+    pub fn ent_coef(&self) -> f64 {
+        self.cfg.ent_coef0 * self.anneal_frac()
+    }
+
+    /// Current learning rate: like the offline trainer, annealed to 10%
+    /// over the budget — late updates polish instead of churning the
+    /// nearly-converged policy.
+    pub fn lr(&self) -> f64 {
+        self.cfg.lr * (0.1 + 0.9 * self.anneal_frac())
+    }
+
+    fn anneal_frac(&self) -> f64 {
+        (1.0 - self.updates as f64 / self.cfg.max_updates.max(1) as f64).max(0.0)
+    }
+
+    /// One budgeted PPO update over a drained rollout batch.
+    pub fn update(&mut self, policy: &mut MlpPolicy, batch: &[Transition]) -> TrainMetrics {
+        let n = batch.len();
+        if n == 0 {
+            return TrainMetrics::default();
+        }
+        let (mut adv, returns) = buffer::gae(batch, 0.0, self.cfg.gamma, self.cfg.lam);
+        buffer::normalize(&mut adv);
+        let ent_coef = self.ent_coef();
+        self.opt.lr = self.lr();
+        let inv_n = 1.0 / n as f64;
+        let mut metrics = TrainMetrics::default();
+
+        for _ in 0..self.cfg.update_epochs {
+            self.grads.clear();
+            let (mut pi_l, mut v_l, mut ent_sum) = (0.0, 0.0, 0.0);
+            for (i, tr) in batch.iter().enumerate() {
+                let fwd = policy.forward(&tr.obs);
+                let probs = softmax(&fwd.logits);
+                let logp_a = (probs[tr.action] + 1e-38).ln();
+                let ratio = (logp_a - tr.logp).exp();
+                let unclipped = ratio * adv[i];
+                let clipped = ratio.clamp(1.0 - self.cfg.clip_eps, 1.0 + self.cfg.clip_eps) * adv[i];
+                pi_l -= unclipped.min(clipped) * inv_n;
+
+                let mut dlogits = [0f64; NUM_ACTIONS];
+                // d(pi_loss)/dlogits: only the unclipped branch of min()
+                // carries gradient (the clipped branch is constant in θ)
+                if unclipped <= clipped {
+                    let coef = -adv[i] * ratio * inv_n;
+                    for (j, d) in dlogits.iter_mut().enumerate() {
+                        let onehot = if j == tr.action { 1.0 } else { 0.0 };
+                        *d += coef * (onehot - probs[j]);
+                    }
+                }
+                // entropy bonus: loss -= c*H, dH/dz_j = -p_j (log p_j + H)
+                let mut h = 0.0;
+                for &p in probs.iter() {
+                    if p > 0.0 {
+                        h -= p * p.ln();
+                    }
+                }
+                ent_sum += h;
+                for (j, d) in dlogits.iter_mut().enumerate() {
+                    let lp = (probs[j] + 1e-38).ln();
+                    *d += ent_coef * probs[j] * (lp + h) * inv_n;
+                }
+                // value regression
+                let verr = fwd.value - returns[i];
+                v_l += verr * verr * inv_n;
+                let dvalue = 2.0 * self.cfg.vf_coef * verr * inv_n;
+
+                backward(policy, &fwd, &dlogits, dvalue, &mut self.grads);
+            }
+            self.opt.step(policy, &self.grads);
+            metrics.pi_loss = pi_l;
+            metrics.v_loss = v_l;
+            metrics.entropy = ent_sum * inv_n;
+        }
+        metrics.mean_reward = batch.iter().map(|t| t.reward).sum::<f64>() * inv_n;
+        self.updates += 1;
+        metrics
+    }
+}
+
+/// Sample an action from the exploration mixture
+/// `q = eps/|A| + (1-eps)·softmax(logits)`; returns `(action, log q(a))`.
+/// The mixture keeps a probability floor under every action so fine-tuning
+/// can still discover configurations the stale policy had written off.
+pub fn sample_explore(
+    logits: &[f64; NUM_ACTIONS],
+    eps: f64,
+    rng: &mut crate::workload::XorShift64,
+) -> (usize, f64) {
+    let probs = softmax(logits);
+    let floor = eps / NUM_ACTIONS as f64;
+    let u = rng.next_f64();
+    let mut cum = 0.0;
+    let mut action = NUM_ACTIONS - 1;
+    for (j, &p) in probs.iter().enumerate() {
+        cum += floor + (1.0 - eps) * p;
+        if u < cum {
+            action = j;
+            break;
+        }
+    }
+    let q = floor + (1.0 - eps) * probs[action];
+    (action, (q + 1e-38).ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::features::OBS_DIM;
+    use crate::workload::XorShift64;
+
+    /// A 3-context bandit: the reward prefers one action per obs pattern.
+    fn bandit_reward(obs: &[f32; OBS_DIM], action: usize) -> f64 {
+        let target = ((obs[0] * 2.0).round() as usize) % 3; // 0, 1, 2
+        let best = [3usize, 11, 22][target];
+        if action == best {
+            1.0
+        } else {
+            -0.2
+        }
+    }
+
+    #[test]
+    fn trainer_solves_a_contextual_bandit() {
+        let mut policy = MlpPolicy::init_random(11);
+        let cfg = TrainerConfig {
+            max_updates: 40,
+            ..TrainerConfig::default()
+        };
+        let mut trainer = PpoTrainer::new(cfg);
+        let mut rng = XorShift64::new(5);
+        let mut batch = Vec::new();
+        while trainer.budget_left() {
+            let ctx = rng.below(3);
+            let mut obs = [0f32; OBS_DIM];
+            obs[0] = ctx as f32 * 0.5;
+            obs[1] = 1.0;
+            let fwd = policy.forward(&obs);
+            let (action, logp) = sample_explore(&fwd.logits, cfg.explore_eps, &mut rng);
+            batch.push(Transition {
+                obs,
+                action,
+                reward: bandit_reward(&obs, action),
+                value: fwd.value,
+                logp,
+                done: true,
+            });
+            if batch.len() >= cfg.rollout {
+                trainer.update(&mut policy, &batch);
+                batch.clear();
+            }
+        }
+        // greedy policy must have found the per-context best action
+        for ctx in 0..3usize {
+            let mut obs = [0f32; OBS_DIM];
+            obs[0] = ctx as f32 * 0.5;
+            obs[1] = 1.0;
+            let a = policy.forward(&obs).argmax();
+            assert_eq!(
+                a,
+                [3, 11, 22][ctx],
+                "context {ctx} converged to wrong action"
+            );
+        }
+    }
+
+    #[test]
+    fn update_budget_is_enforced_and_entropy_anneals() {
+        let cfg = TrainerConfig {
+            max_updates: 3,
+            ..TrainerConfig::default()
+        };
+        let mut t = PpoTrainer::new(cfg);
+        assert!((t.ent_coef() - cfg.ent_coef0).abs() < 1e-12);
+        let mut p = MlpPolicy::init_random(1);
+        let batch: Vec<Transition> = (0..8)
+            .map(|i| Transition {
+                obs: [0.1; OBS_DIM],
+                action: i % 26,
+                reward: 0.1,
+                value: 0.0,
+                logp: -3.0,
+                done: true,
+            })
+            .collect();
+        for _ in 0..3 {
+            assert!(t.budget_left());
+            t.update(&mut p, &batch);
+        }
+        assert!(!t.budget_left());
+        assert!(t.ent_coef() < 1e-12, "entropy fully annealed at budget end");
+        t.reset();
+        assert!(t.budget_left());
+        assert_eq!(t.updates(), 0);
+    }
+
+    #[test]
+    fn explore_sampling_has_a_probability_floor() {
+        // a near-deterministic head still samples every action sometimes
+        let mut logits = [0f64; NUM_ACTIONS];
+        logits[0] = 50.0;
+        let mut rng = XorShift64::new(9);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20_000 {
+            let (a, logp) = sample_explore(&logits, 0.1, &mut rng);
+            assert!(logp <= 0.0);
+            seen.insert(a);
+        }
+        assert!(
+            seen.len() > 20,
+            "exploration floor must reach most actions, saw {}",
+            seen.len()
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let mut p = MlpPolicy::init_random(2);
+        let before = p.forward(&[0.2; OBS_DIM]).logits;
+        let mut t = PpoTrainer::new(TrainerConfig::default());
+        t.update(&mut p, &[]);
+        assert_eq!(before, p.forward(&[0.2; OBS_DIM]).logits);
+        assert_eq!(t.updates(), 0, "an empty batch must not consume budget");
+    }
+}

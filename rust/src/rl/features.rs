@@ -44,6 +44,18 @@ impl Featurizer {
     }
 }
 
+/// Recover the Algorithm-1 context statistics from an observation in
+/// [`Featurizer::observe`] layout: `(mean CPU util %, total DDR GB/s)`.
+/// The single place that knows cpu = obs[0..4] and mem = obs[4..14]
+/// (MB/s per port) — every reward stream reconstructing context from an
+/// observation must go through here so the schema can't silently
+/// diverge.
+pub fn context_stats(obs: &[f32; OBS_DIM]) -> (f64, f64) {
+    let cpu = obs[..4].iter().map(|&x| x as f64).sum::<f64>() / 4.0;
+    let mem_gbs = obs[4..14].iter().map(|&x| x as f64).sum::<f64>() / 1e3;
+    (cpu, mem_gbs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,9 +8,11 @@
 
 pub mod exporter;
 pub mod fleet;
+pub mod online;
 
 pub use exporter::{Exporter, MetricsSlot};
 pub use fleet::FleetStats;
+pub use online::prometheus_text_online;
 
 use crate::workload::{WorkloadState, XorShift64};
 use std::collections::VecDeque;

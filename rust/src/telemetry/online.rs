@@ -1,0 +1,69 @@
+//! Prometheus exposition for the online-adaptation subsystem: the
+//! drift/promotion gauges a fleet dashboard alerts on (DESIGN.md §9).
+//!
+//! ```
+//! use dpuconfig::online::OnlineStats;
+//! use dpuconfig::telemetry::online::prometheus_text_online;
+//! let txt = prometheus_text_online(&OnlineStats::default());
+//! assert!(txt.contains("dpuonline_drift_events_total 0"));
+//! ```
+
+use crate::online::OnlineStats;
+
+/// Render the online agent's counters/gauges in Prometheus exposition
+/// format (all families prefixed `dpuonline_`).
+pub fn prometheus_text_online(s: &OnlineStats) -> String {
+    let mut out = String::with_capacity(1024);
+    let mut gauge = |name: &str, help: &str, value: String| {
+        out.push_str(&format!("# HELP dpuonline_{name} {help}\n"));
+        out.push_str(&format!("# TYPE dpuonline_{name} gauge\n"));
+        out.push_str(&format!("dpuonline_{name} {value}\n"));
+    };
+    gauge("decisions_total", "Decisions made by the online selector", s.decisions.to_string());
+    gauge("transitions_total", "Transitions pushed to the replay buffer", s.transitions.to_string());
+    gauge("train_steps_total", "Total PPO updates across adaptation rounds", s.updates.to_string());
+    gauge("drift_events_total", "Drift alarms raised", s.drift_events.to_string());
+    gauge("promotions_total", "Shadow-to-serving promotions", s.promotions.to_string());
+    gauge("rollbacks_total", "Automatic rollbacks after promotion", s.rollbacks.to_string());
+    gauge("consolidations_total", "Adaptation rounds folded into the incumbent", s.consolidations.to_string());
+    gauge("page_hinkley_stat", "Page-Hinkley drawdown on reward residuals", format!("{}", s.ph_stat));
+    gauge("obs_shift_sigma", "Observation-mean shift (reference sigmas)", format!("{}", s.obs_shift));
+    gauge("gate_mean_margin", "Windowed paired margin, challenger vs incumbent", format!("{}", s.gate_mean_margin));
+    gauge("gate_window_fill", "Paired comparisons in the promotion window", s.gate_fill.to_string());
+    gauge("adapting", "1 while a challenger is training in shadow", u8::from(s.adapting).to_string());
+    gauge("serving_adapted", "1 while the adapted policy is serving", u8::from(s.serving_adapted).to_string());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_is_well_formed() {
+        let s = OnlineStats {
+            decisions: 10,
+            drift_events: 2,
+            promotions: 1,
+            ph_stat: 1.25,
+            adapting: true,
+            ..OnlineStats::default()
+        };
+        let txt = prometheus_text_online(&s);
+        assert!(txt.contains("dpuonline_decisions_total 10"));
+        assert!(txt.contains("dpuonline_drift_events_total 2"));
+        assert!(txt.contains("dpuonline_promotions_total 1"));
+        assert!(txt.contains("dpuonline_page_hinkley_stat 1.25"));
+        assert!(txt.contains("dpuonline_adapting 1"));
+        assert!(txt.contains("dpuonline_serving_adapted 0"));
+        // every sample line is preceded by its TYPE header
+        let mut current = String::new();
+        for line in txt.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                current = rest.split(' ').next().unwrap().to_string();
+            } else if !line.starts_with('#') {
+                assert!(line.starts_with(current.as_str()), "stray line {line:?}");
+            }
+        }
+    }
+}

@@ -28,6 +28,7 @@
 //! ```
 
 use crate::workload::{WorkloadState, XorShift64, ALL_STATES};
+use std::collections::HashMap;
 
 /// Shape of the global arrival process.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -157,6 +158,108 @@ pub fn correlated_schedules(
     out
 }
 
+/// Non-stationary drift families (DESIGN.md §9): the conditions a frozen
+/// policy cannot follow, expressed as time-varying simulator calibration
+/// (calibration/thermal) or as an arrival-stream regime change (churn).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriftKind {
+    /// DPU power model mis-calibrates over time: static leakage grows
+    /// with array size (aging / thermal wall), so the PPW landscape
+    /// tilts toward small arrays while FPS is untouched.
+    Calibration,
+    /// Thermal derating: the PL clock backs off while static power and
+    /// per-MAC energy climb.
+    Thermal,
+    /// Model churn: the arrival stream switches to held-out models the
+    /// agent never trained on (observation drift, not outcome drift).
+    ModelChurn,
+}
+
+impl DriftKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftKind::Calibration => "calibration",
+            DriftKind::Thermal => "thermal",
+            DriftKind::ModelChurn => "churn",
+        }
+    }
+}
+
+impl std::str::FromStr for DriftKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "calibration" | "cal" => Ok(DriftKind::Calibration),
+            "thermal" => Ok(DriftKind::Thermal),
+            "churn" | "model_churn" => Ok(DriftKind::ModelChurn),
+            other => anyhow::bail!("unknown drift kind {other:?} (want calibration|thermal|churn)"),
+        }
+    }
+}
+
+/// A drift event on the serving timeline: `kind` ramps in linearly from
+/// `at_s` over `ramp_s` seconds to full `magnitude`.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftProfile {
+    pub kind: DriftKind,
+    pub at_s: f64,
+    pub ramp_s: f64,
+    /// Kind-specific severity scale; for [`DriftKind::Calibration`] it is
+    /// the terminal multiplier on the per-MAC leakage (`p_idle1`).
+    pub magnitude: f64,
+}
+
+impl DriftProfile {
+    /// Severity in [0, 1] at time `t` (0 before onset, 1 past the ramp).
+    pub fn severity(&self, t_s: f64) -> f64 {
+        if t_s <= self.at_s {
+            0.0
+        } else if self.ramp_s <= 0.0 {
+            1.0
+        } else {
+            ((t_s - self.at_s) / self.ramp_s).min(1.0)
+        }
+    }
+
+    /// The drifted calibration table at time `t` (identity for
+    /// [`DriftKind::ModelChurn`], which drifts the workload instead).
+    pub fn calibration_at(
+        &self,
+        base: &HashMap<String, f64>,
+        t_s: f64,
+    ) -> HashMap<String, f64> {
+        let sev = self.severity(t_s);
+        let mut cal = base.clone();
+        let mut scale = |key: &str, factor: f64| {
+            if let Some(v) = cal.get_mut(key) {
+                *v *= factor;
+            }
+        };
+        match self.kind {
+            DriftKind::Calibration => {
+                // leakage grows with array size: p_idle1 ramps to
+                // `magnitude` x its calibrated value
+                scale("p_idle1", 1.0 + (self.magnitude - 1.0) * sev);
+            }
+            DriftKind::Thermal => {
+                // magnitude 1.0 = the full derating corner
+                let m = self.magnitude * sev;
+                scale("f_clk_hz", 1.0 - 0.4 * m);
+                scale("p_pl_static", 1.0 + m);
+                scale("e_mac_j_per_gmac", 1.0 + 1.5 * m);
+            }
+            DriftKind::ModelChurn => {}
+        }
+        cal
+    }
+
+    /// Quantized ramp position — the serving loop rebuilds its simulator
+    /// only when this changes, not every decision.
+    pub fn step_index(&self, t_s: f64, steps: usize) -> usize {
+        (self.severity(t_s) * steps as f64).round() as usize
+    }
+}
+
 /// Workload state active at time `t` in a step-function schedule
 /// (same contract as `coordinator::server::Scenario::state_at`).
 pub fn state_at(schedule: &[(f64, WorkloadState)], t: f64) -> WorkloadState {
@@ -220,6 +323,98 @@ mod tests {
         // at least one pair of boards must disagree somewhere
         let disagree = (0..4).any(|i| (0..4).any(|j| i != j && s[i] != s[j]));
         assert!(disagree, "independent schedules should differ");
+    }
+
+    #[test]
+    fn same_seed_means_identical_job_streams() {
+        // determinism satellite: the full job stream (times, models,
+        // durations), not just arrival times, must reproduce per seed —
+        // for every arrival process
+        use crate::coordinator::fleet::FleetScenario;
+        for pattern in [
+            ArrivalPattern::Steady,
+            ArrivalPattern::Diurnal,
+            ArrivalPattern::Bursty,
+        ] {
+            let a = FleetScenario::generate(pattern, 2, 200.0, 0.5, 8.0, 0.7, 21).unwrap();
+            let b = FleetScenario::generate(pattern, 2, 200.0, 0.5, 8.0, 0.7, 21).unwrap();
+            assert_eq!(a.jobs.len(), b.jobs.len(), "{pattern:?}");
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.at_s, y.at_s);
+                assert_eq!(x.duration_s, y.duration_s);
+                assert_eq!(x.model.name(), y.model.name());
+            }
+            assert_eq!(a.schedules, b.schedules, "{pattern:?} schedules");
+            // and a different seed must actually change the stream
+            let c = FleetScenario::generate(pattern, 2, 200.0, 0.5, 8.0, 0.7, 22).unwrap();
+            assert!(
+                a.jobs.len() != c.jobs.len()
+                    || a.jobs.iter().zip(&c.jobs).any(|(x, y)| x.at_s != y.at_s),
+                "{pattern:?}: seed must matter"
+            );
+        }
+    }
+
+    #[test]
+    fn diurnal_and_bursty_hold_their_mean_rate() {
+        // time-averaged thinning must land near the nominal mean rate
+        for pattern in [ArrivalPattern::Diurnal, ArrivalPattern::Bursty] {
+            for (seed, rate) in [(1u64, 0.5f64), (9, 1.0), (33, 2.0)] {
+                let horizon = 800.0;
+                let n = arrival_times(pattern, seed, horizon, rate).len() as f64;
+                let measured = n / horizon;
+                assert!(
+                    (0.7 * rate..=1.3 * rate).contains(&measured),
+                    "{pattern:?} seed {seed}: measured {measured:.3} vs nominal {rate}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drift_profile_ramps_and_quantizes() {
+        let d = DriftProfile {
+            kind: DriftKind::Calibration,
+            at_s: 100.0,
+            ramp_s: 50.0,
+            magnitude: 20.0,
+        };
+        assert_eq!(d.severity(0.0), 0.0);
+        assert_eq!(d.severity(100.0), 0.0);
+        assert!((d.severity(125.0) - 0.5).abs() < 1e-12);
+        assert_eq!(d.severity(1e9), 1.0);
+        assert_eq!(d.step_index(0.0, 16), 0);
+        assert_eq!(d.step_index(1e9, 16), 16);
+        let mut base = HashMap::new();
+        base.insert("p_idle1".to_string(), 2.0);
+        base.insert("f_clk_hz".to_string(), 3e8);
+        let cal = d.calibration_at(&base, 1e9);
+        assert!((cal["p_idle1"] - 40.0).abs() < 1e-9, "x20 at full severity");
+        assert_eq!(cal["f_clk_hz"], 3e8, "calibration drift leaves the clock");
+        // step drift (ramp 0) jumps straight to full severity
+        let step = DriftProfile { ramp_s: 0.0, ..d };
+        assert_eq!(step.severity(100.0 + 1e-9), 1.0);
+        // churn leaves calibration untouched
+        let churn = DriftProfile { kind: DriftKind::ModelChurn, ..d };
+        assert_eq!(churn.calibration_at(&base, 1e9)["p_idle1"], 2.0);
+    }
+
+    #[test]
+    fn thermal_drift_derates_clock_and_raises_power() {
+        let d = DriftProfile {
+            kind: DriftKind::Thermal,
+            at_s: 0.0,
+            ramp_s: 10.0,
+            magnitude: 1.0,
+        };
+        let mut base = HashMap::new();
+        base.insert("f_clk_hz".to_string(), 3e8);
+        base.insert("p_pl_static".to_string(), 1.5);
+        base.insert("e_mac_j_per_gmac".to_string(), 0.01);
+        let cal = d.calibration_at(&base, 100.0);
+        assert!(cal["f_clk_hz"] < 3e8);
+        assert!(cal["p_pl_static"] > 1.5);
+        assert!(cal["e_mac_j_per_gmac"] > 0.01);
     }
 
     #[test]
