@@ -4,7 +4,7 @@
 
 PY := python3
 
-.PHONY: artifacts data test rust-test py-test clean
+.PHONY: artifacts data test rust-test py-test bench-fleet clean
 
 # Train the agent and export artifacts/policy.hlo.txt (+ batched b8,
 # metadata, and the full measurement table).
@@ -25,6 +25,13 @@ rust-test:
 
 py-test:
 	cd python && $(PY) -m pytest tests -q
+
+# Fleet event-core bench in smoke mode: event-driven vs the fine-tick
+# reference (iterations, wall-clock, parity) -> BENCH_fleet.json.
+# `make bench-fleet FLEET_BENCH_FLAGS=--full` for the long variant.
+bench-fleet:
+	cargo run --release -- fleet-bench --out BENCH_fleet.json $(FLEET_BENCH_FLAGS)
+	@cat BENCH_fleet.json
 
 clean:
 	rm -rf target artifacts

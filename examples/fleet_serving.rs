@@ -1,34 +1,35 @@
-//! Fleet-scale serving: a 4-board ZCU102 rack behind the fleet
-//! coordinator, driven through three traffic regimes (diurnal, bursty,
-//! steady-with-correlated-interference).
+//! Fleet-scale serving: a 4-board ZCU102 rack behind the event-driven
+//! fleet coordinator, driven through three traffic regimes (diurnal,
+//! bursty, steady-with-correlated-interference).
 //!
 //! For every scenario the fleet runs twice:
 //!
-//! * **managed** — energy-aware routing, idle boards sleep
-//!   (arXiv:2407.12027), per-board configurations picked by the
-//!   DPUConfig policy (the AOT agent when `make artifacts` has run,
-//!   otherwise the oracle), decisions batched across boards into one
-//!   forward pass per tick;
+//! * **managed** — SLO-aware routing (least predicted queue wait under
+//!   dpusim's latency model), idle boards sleep (arXiv:2407.12027),
+//!   per-board configurations picked by the DPUConfig policy (the AOT
+//!   agent when `make artifacts` has run, otherwise the oracle);
 //! * **static-best baseline** — round-robin routing, sleep disabled, and
 //!   the max-FPS static configuration on every board (the classic
 //!   "provision for peak" deployment).
 //!
-//! and prints per-board accounting plus the aggregate energy-efficiency
-//! comparison.
+//! and prints per-board accounting, per-model p50/p95/p99 request
+//! latency with SLO violations, and the aggregate energy-efficiency +
+//! tail-latency comparison.
 //!
 //! ```bash
 //! cargo run --release --example fleet_serving
 //! ```
 
 use dpuconfig::coordinator::{
-    FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+    FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy, SloConfig,
 };
 use dpuconfig::rl::Baseline;
 use dpuconfig::runtime::{default_policy_path, PolicyRuntime};
 use dpuconfig::workload::traffic::ArrivalPattern;
 
 const BOARDS: usize = 4;
-const HORIZON_S: f64 = 240.0;
+const HORIZON_S: f64 = 120.0;
+const SLO_MS: f64 = 250.0;
 
 fn managed_policy() -> anyhow::Result<FleetPolicy> {
     let path = default_policy_path(8);
@@ -42,29 +43,36 @@ fn managed_policy() -> anyhow::Result<FleetPolicy> {
     }
 }
 
+fn slo() -> SloConfig {
+    SloConfig {
+        default_ms: SLO_MS,
+        per_model: vec![],
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    // (pattern, mean arrival rate, cross-board interference correlation)
+    // (pattern, aggregate request rate req/s, interference correlation)
     let scenarios = [
-        (ArrivalPattern::Diurnal, 0.6, 0.7),
-        (ArrivalPattern::Bursty, 0.6, 0.7),
-        (ArrivalPattern::Steady, 0.4, 1.0),
+        (ArrivalPattern::Diurnal, 12.0, 0.7),
+        (ArrivalPattern::Bursty, 12.0, 0.7),
+        (ArrivalPattern::Steady, 8.0, 1.0),
     ];
 
     for (pattern, rate, correlation) in scenarios {
-        let scenario = FleetScenario::generate(
-            pattern, BOARDS, HORIZON_S, rate, 10.0, correlation, 42,
-        )?;
+        let scenario =
+            FleetScenario::generate(pattern, BOARDS, HORIZON_S, rate, correlation, 42)?;
         println!(
-            "\n================ scenario {} — {} jobs over {HORIZON_S}s, correlation {correlation}",
+            "\n================ scenario {} — {} requests over {HORIZON_S}s, correlation {correlation}",
             pattern.name(),
-            scenario.jobs.len()
+            scenario.requests.len()
         );
 
-        // managed fleet: energy-aware routing + sleep states + RL policy
+        // managed fleet: SLO-aware routing + sleep states + RL policy
         let managed_cfg = FleetConfig {
             boards: BOARDS,
-            routing: RoutingPolicy::EnergyAware,
+            routing: RoutingPolicy::SloAware,
             seed: 42,
+            slo: slo(),
             ..FleetConfig::default()
         };
         let mut managed = FleetCoordinator::new(managed_cfg, managed_policy()?)?;
@@ -77,6 +85,7 @@ fn main() -> anyhow::Result<()> {
             routing: RoutingPolicy::RoundRobin,
             idle_to_sleep_s: f64::INFINITY,
             seed: 42,
+            slo: slo(),
             ..FleetConfig::default()
         };
         let mut baseline =
@@ -94,11 +103,19 @@ fn main() -> anyhow::Result<()> {
             100.0 * (m / b - 1.0),
         );
         println!(
-            "policy invocations: managed {} passes for {} decisions (batched) vs baseline {}/{}",
-            managed_report.decision_batches,
+            "tail latency [{}]: managed p99 {:.1} ms ({} SLO violations) vs static-best p99 {:.1} ms ({} violations)",
+            pattern.name(),
+            managed_report.latency().p99_ms(),
+            managed_report.slo_violations(),
+            baseline_report.latency().p99_ms(),
+            baseline_report.slo_violations(),
+        );
+        println!(
+            "event core: managed {} events for {} requests (tick-free); {} decisions in {} policy passes",
+            managed_report.events,
+            managed_report.requests_total,
             managed_report.decisions,
-            baseline_report.decision_batches,
-            baseline_report.decisions,
+            managed_report.decision_batches,
         );
     }
     Ok(())

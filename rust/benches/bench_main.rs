@@ -266,29 +266,42 @@ fn main() -> anyhow::Result<()> {
         results.push(bench("ablation_baseline", 20, || optima(&sim)));
     }
 
-    // ---- fleet: full multi-board tick loop (artifact-free) -----------------
-    if wants("fleet_tick") {
+    // ---- fleet: event-driven core vs the fine-tick reference ---------------
+    // (the tentpole speedup: idle time costs zero loop iterations; run
+    // `dpuconfig fleet-bench` / `make bench-fleet` for the JSON record)
+    if wants("fleet_event") {
         use dpuconfig::coordinator::fleet::{
-            FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+            FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy, RunMode,
         };
         use dpuconfig::workload::traffic::ArrivalPattern;
         let scenario =
-            FleetScenario::generate(ArrivalPattern::Diurnal, 8, 120.0, 1.0, 8.0, 0.7, 3)?;
-        results.push(bench("fleet_tick_8_boards", 20, || {
+            FleetScenario::generate(ArrivalPattern::Diurnal, 8, 300.0, 2.0, 0.7, 3)?;
+        let mk = || {
             let cfg = FleetConfig {
                 boards: 8,
-                routing: RoutingPolicy::EnergyAware,
+                tick_s: 0.05,
+                routing: RoutingPolicy::SloAware,
                 seed: 3,
                 ..FleetConfig::default()
             };
-            let mut fleet =
-                FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
-            let r = fleet.run(&scenario).unwrap();
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap()
+        };
+        results.push(bench("fleet_event_8_boards", 20, || {
+            let r = mk().run_mode(&scenario, RunMode::EventDriven).unwrap();
             format!(
-                "{} jobs, {:.2} fps/W fleet, {} decisions",
-                r.jobs_done(),
-                r.fleet_ppw(),
-                r.decisions
+                "{} reqs in {} events, p99 {:.1} ms, {:.2} fps/W",
+                r.requests_done(),
+                r.events,
+                r.latency().p99_ms(),
+                r.fleet_ppw()
+            )
+        }));
+        results.push(bench("fleet_finetick_8_boards", 5, || {
+            let r = mk().run_mode(&scenario, RunMode::FineTick).unwrap();
+            format!(
+                "{} reqs in {} events (tick grid 0.05s)",
+                r.requests_done(),
+                r.events
             )
         }));
     }

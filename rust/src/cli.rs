@@ -81,6 +81,26 @@ impl Args {
     pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
         Ok(self.opt_u64(name, default as u64)? as usize)
     }
+
+    /// Parse a `--name Key=1.5,Other=20` option into (key, value) pairs
+    /// (per-model SLO overrides, calibration tweaks, ...). Missing
+    /// option -> empty vec.
+    pub fn opt_pairs(&self, name: &str) -> Result<Vec<(String, f64)>> {
+        let Some(raw) = self.opt(name) else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        for item in raw.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = item
+                .split_once('=')
+                .with_context(|| format!("--{name}: {item:?} is not key=value"))?;
+            let val: f64 = v
+                .parse()
+                .with_context(|| format!("--{name}: {v:?} is not a number"))?;
+            out.push((k.to_string(), val));
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +138,20 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("x --seed abc");
         assert!(a.opt_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn pairs_parse_and_reject_garbage() {
+        let a = parse("fleet --slo ResNet152=120,MobileNetV2=40.5");
+        assert_eq!(
+            a.opt_pairs("slo").unwrap(),
+            vec![
+                ("ResNet152".to_string(), 120.0),
+                ("MobileNetV2".to_string(), 40.5)
+            ]
+        );
+        assert!(parse("fleet").opt_pairs("slo").unwrap().is_empty());
+        assert!(parse("fleet --slo Model").opt_pairs("slo").is_err());
+        assert!(parse("fleet --slo Model=x").opt_pairs("slo").is_err());
     }
 }

@@ -36,6 +36,23 @@ impl Selector {
     }
 }
 
+/// Queue-state context riding alongside an observation into the
+/// decision path (DESIGN.md §10). The 22-feature Table-II observation is
+/// frozen by the trained artifact, so queue visibility cannot be folded
+/// into it; instead the event core surfaces it out-of-band: heuristic
+/// consumers (the SLO-aware router, admission control) read it, reports
+/// aggregate it, and a future retrained policy can consume it directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QueueContext {
+    /// Requests queued on the deciding board (including the head).
+    pub depth: usize,
+    /// Predicted seconds of work outstanding in the queue.
+    pub backlog_s: f64,
+    /// SLO headroom of the head request: its latency target minus the
+    /// wait it has already accrued. Negative = already violating.
+    pub headroom_s: f64,
+}
+
 /// One decision with its provenance.
 #[derive(Debug, Clone)]
 pub struct Decision {

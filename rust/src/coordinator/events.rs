@@ -1,0 +1,197 @@
+//! Discrete-event core of the fleet serving loop (DESIGN.md §10).
+//!
+//! The fleet coordinator no longer steps a fixed tick grid; it drains a
+//! binary-heap [`EventQueue`] of typed [`FleetEvent`]s, so simulated time
+//! jumps from event to event and idle stretches cost zero loop
+//! iterations. Determinism contract: events pop in nondecreasing
+//! timestamp order, and events with *equal* timestamps pop in the order
+//! they were pushed (a monotonically increasing sequence number breaks
+//! ties), so a run is a pure function of (scenario, config, seed).
+//!
+//! ```
+//! use dpuconfig::coordinator::events::{EventQueue, FleetEvent};
+//! let mut q = EventQueue::new();
+//! q.push(2.0, FleetEvent::DecisionDue { board: 1 });
+//! q.push(1.0, FleetEvent::Arrival { request: 0 });
+//! q.push(2.0, FleetEvent::FrameDone { board: 0, request: 0 });
+//! let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|s| s.t_s)).collect();
+//! assert_eq!(order, vec![1.0, 2.0, 2.0]);
+//! ```
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Everything that can happen on the fleet timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEvent {
+    /// Request `request` (index into the scenario stream) reaches the
+    /// admission layer. Arrivals are chained: processing one schedules
+    /// the next, so the heap holds at most one at a time.
+    Arrival { request: usize },
+    /// Board `board` finishes serving one frame of `request`.
+    FrameDone { board: usize, request: usize },
+    /// Board `board` finishes paying decision/reconfiguration overhead.
+    ReconfigDone { board: usize },
+    /// Board `board` finishes its sleep-exit latency.
+    WakeDone { board: usize },
+    /// Idle-dwell expiry check: board `board` drops to sleep *iff* it has
+    /// been idle continuously since the timer was armed (`idle_epoch`
+    /// invalidates timers from earlier idle episodes).
+    SleepTimer { board: usize, idle_epoch: u64 },
+    /// Board `board` needs a configuration decision. Due events at the
+    /// same timestamp are drained together into one batched policy call.
+    DecisionDue { board: usize },
+    /// Board `board`'s co-runner workload schedule steps to a new state.
+    WorkloadShift { board: usize },
+    /// Fine-tick reference mode only: a no-progress accounting tick (the
+    /// tick-driven loop this core replaced; kept to measure the speedup
+    /// and to cross-check totals).
+    Tick,
+}
+
+/// An event bound to a simulated timestamp.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduled {
+    /// Simulated time (seconds) the event fires at.
+    pub t_s: f64,
+    /// Push-order sequence number (the equal-time tiebreak).
+    pub seq: u64,
+    pub event: FleetEvent,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        // defined via cmp so Eq and Ord stay consistent (a == b iff
+        // cmp(a, b) == Equal), as the Ord contract requires
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    /// Reversed comparison: `BinaryHeap` is a max-heap, we want the
+    /// earliest timestamp (then lowest sequence number) on top.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t_s
+            .partial_cmp(&self.t_s)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of scheduled events with deterministic equal-time ordering.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    popped: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at simulated time `t_s`.
+    pub fn push(&mut self, t_s: f64, event: FleetEvent) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { t_s, seq, event });
+    }
+
+    /// Pop the earliest event (FIFO among equal timestamps).
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        let s = self.heap.pop();
+        if s.is_some() {
+            self.popped += 1;
+        }
+        s
+    }
+
+    /// The earliest scheduled event without popping it.
+    pub fn peek(&self) -> Option<&Scheduled> {
+        self.heap.peek()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Events popped so far — the loop-iteration count the event core is
+    /// judged on (vs the tick-equivalent run).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        for (t, b) in [(5.0, 0), (1.0, 1), (3.0, 2), (0.5, 3), (4.0, 4)] {
+            q.push(t, FleetEvent::DecisionDue { board: b });
+        }
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|s| s.t_s)).collect();
+        assert_eq!(times, vec![0.5, 1.0, 3.0, 4.0, 5.0]);
+        assert_eq!(q.popped(), 5);
+    }
+
+    #[test]
+    fn equal_times_pop_fifo() {
+        let mut q = EventQueue::new();
+        for b in 0..16 {
+            q.push(2.0, FleetEvent::DecisionDue { board: b });
+        }
+        q.push(1.0, FleetEvent::Tick);
+        assert_eq!(q.pop().unwrap().event, FleetEvent::Tick);
+        for b in 0..16 {
+            match q.pop().unwrap().event {
+                FleetEvent::DecisionDue { board } => assert_eq!(board, b),
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_matches_next_pop() {
+        let mut q = EventQueue::new();
+        q.push(7.0, FleetEvent::Tick);
+        q.push(2.0, FleetEvent::WakeDone { board: 3 });
+        let peeked = *q.peek().unwrap();
+        let popped = q.pop().unwrap();
+        assert_eq!(peeked.t_s, popped.t_s);
+        assert_eq!(peeked.event, popped.event);
+        assert_eq!(popped.event, FleetEvent::WakeDone { board: 3 });
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.push(1.0, FleetEvent::Arrival { request: 0 });
+        q.push(3.0, FleetEvent::Arrival { request: 1 });
+        assert_eq!(q.pop().unwrap().t_s, 1.0);
+        // scheduling into the past of the heap head still orders correctly
+        q.push(2.0, FleetEvent::FrameDone { board: 0, request: 0 });
+        assert_eq!(q.pop().unwrap().t_s, 2.0);
+        assert_eq!(q.pop().unwrap().t_s, 3.0);
+        assert!(q.pop().is_none());
+        assert_eq!(q.popped(), 3);
+    }
+}

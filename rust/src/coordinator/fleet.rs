@@ -1,29 +1,29 @@
-//! Fleet coordinator: N ZCU102 boards behind one admission/routing layer
-//! (DESIGN.md §8).
+//! Fleet coordinator: N ZCU102 boards behind one admission/routing layer,
+//! rebuilt around a discrete-event, request-level serving core
+//! (DESIGN.md §8 for the fleet shape, §10 for the event core).
 //!
-//! The single-board [`crate::coordinator::Coordinator`] manages one
-//! platform; production serving runs *racks* of them. This module scales
-//! the same decision machinery out:
+//! The tick-driven loop this replaces stepped simulated time on a fixed
+//! grid and modeled jobs as opaque duration blobs; no per-request latency
+//! existed anywhere. This core instead:
 //!
-//! * a global arrival stream ([`FleetScenario`]) is routed to boards by a
-//!   pluggable [`RoutingPolicy`] (round-robin, least-loaded,
-//!   energy-aware),
-//! * every board runs the existing per-board pieces — a
-//!   [`ReconfigManager`] with the paper's measured overheads, a telemetry
-//!   [`Sampler`], Algorithm-1 reward bookkeeping,
-//! * boards with an empty queue go **idle**, and after
-//!   [`FleetConfig::idle_to_sleep_s`] drop into a low-power **sleep**
-//!   state whose exit pays a wake-up latency *and* a full
-//!   reconfiguration (the bitstream is lost — "Idle is the New Sleep",
-//!   arXiv:2407.12027),
-//! * RL policy invocations are **batched across boards**: each decision
-//!   tick stacks every pending observation and runs one PJRT forward
-//!   pass per chunk of the artifact's batch size instead of N sequential
-//!   calls (the fleet hot path; see `fleet_batched` in the bench
-//!   harness).
-//!
-//! Time is simulated, like the single-board serving loop: the fleet
-//! advances in decision ticks of [`FleetConfig::tick_s`] seconds.
+//! * serves an **open-loop stream of per-frame requests**
+//!   ([`crate::workload::traffic::request_stream`]) — every request
+//!   carries an arrival→start→done timestamp trail,
+//! * drains a typed **event queue** ([`crate::coordinator::events`]):
+//!   simulated time jumps between events, so idle stretches cost zero
+//!   loop iterations (`RunMode::FineTick` re-adds the old tick grid as a
+//!   reference to cross-check totals and measure the speedup),
+//! * accounts **latency end to end**: per-model log-linear histograms
+//!   (p50/p95/p99), per-model SLO targets with violation counting, and
+//!   an SLO-aware routing policy that sends each request to the board
+//!   with the least predicted queue wait under dpusim's latency model,
+//! * keeps the per-board machinery of the single-board coordinator — a
+//!   [`ReconfigManager`] with the paper's measured overheads, a
+//!   telemetry [`Sampler`], Algorithm-1 reward bookkeeping — plus the
+//!   idle→sleep power-state machine of arXiv:2407.12027, now exact
+//!   instead of tick-quantized,
+//! * batches RL policy invocations for decisions that fall due at the
+//!   same instant (burst arrivals), via `PolicyRuntime::infer_batch`.
 //!
 //! ```
 //! use dpuconfig::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario};
@@ -31,43 +31,55 @@
 //! use dpuconfig::workload::traffic::ArrivalPattern;
 //!
 //! let cfg = FleetConfig { boards: 2, ..FleetConfig::default() };
-//! let scenario =
-//!     FleetScenario::generate(ArrivalPattern::Steady, 2, 30.0, 0.2, 8.0, 0.5, 7).unwrap();
+//! let scenario = FleetScenario::generate(ArrivalPattern::Steady, 2, 20.0, 5.0, 0.5, 7).unwrap();
 //! let mut fleet = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
 //! let report = fleet.run(&scenario).unwrap();
 //! assert_eq!(report.boards.len(), 2);
-//! assert!(report.fleet_ppw() >= 0.0);
+//! assert_eq!(report.requests_done() as usize, report.requests_total);
+//! assert_eq!(report.dropped, 0);
+//! assert!(report.latency().p99_ms() > 0.0);
 //! ```
 
-use crate::coordinator::reconfig::ReconfigManager;
+use crate::coordinator::engine::QueueContext;
+use crate::coordinator::events::{EventQueue, FleetEvent};
+use crate::coordinator::reconfig::{
+    full_decision_overhead_s, ReconfigManager, INSTR_LOAD_US, RL_INFERENCE_US, TELEMETRY_US,
+};
 use crate::dpusim::energy::{idle_power_w, sleep_power_w, EnergyMeter};
-use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
+use crate::dpusim::{DpuSim, Metrics, FPS_CONSTRAINT};
 use crate::models::{load_variants, ModelVariant};
 use crate::rl::features::OBS_DIM;
 use crate::rl::reward::{Outcome, RewardCalculator};
 use crate::rl::{Baseline, Featurizer};
 use crate::runtime::PolicyRuntime;
+use crate::telemetry::latency::LatencyHistogram;
 use crate::telemetry::{PlatformState, Sampler};
-use crate::workload::traffic::{arrival_times, correlated_schedules, state_at, ArrivalPattern};
+use crate::workload::traffic::{correlated_schedules, request_stream, state_at, ArrivalPattern};
 use crate::workload::{WorkloadState, XorShift64};
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use super::server::Totals;
 
-/// How the admission layer maps arriving jobs to boards.
+/// How the admission layer maps arriving requests to boards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutingPolicy {
     /// Cycle through boards regardless of state (spreads load, keeps
     /// every board awake).
     RoundRobin,
-    /// Shortest queue first (classic join-shortest-queue admission).
+    /// Join-shortest-queue on predicted outstanding work (seconds).
     LeastLoaded,
     /// Least-loaded among *awake* boards; a sleeping board is woken only
     /// when every awake board is backlogged past
     /// [`FleetConfig::wake_backlog`] (load consolidation, so troughs let
     /// boards nap — arXiv:2407.12027's configuration-aware idling).
     EnergyAware,
+    /// Route to the board minimizing the request's *predicted completion
+    /// wait* under dpusim's latency model: in-flight work + per-request
+    /// service estimates + model-switch instruction loads + (for
+    /// sleepers) wake latency and a full reconfiguration. The policy
+    /// that actually optimizes the p99/SLO story.
+    SloAware,
 }
 
 impl RoutingPolicy {
@@ -76,7 +88,18 @@ impl RoutingPolicy {
             RoutingPolicy::RoundRobin => "round_robin",
             RoutingPolicy::LeastLoaded => "least_loaded",
             RoutingPolicy::EnergyAware => "energy_aware",
+            RoutingPolicy::SloAware => "slo_aware",
         }
+    }
+
+    /// Every routing policy, in a stable order (test matrices).
+    pub fn all() -> [RoutingPolicy; 4] {
+        [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::EnergyAware,
+            RoutingPolicy::SloAware,
+        ]
     }
 }
 
@@ -87,20 +110,32 @@ impl std::str::FromStr for RoutingPolicy {
             "round_robin" | "rr" => Ok(RoutingPolicy::RoundRobin),
             "least_loaded" | "ll" => Ok(RoutingPolicy::LeastLoaded),
             "energy_aware" | "ea" => Ok(RoutingPolicy::EnergyAware),
+            "slo_aware" | "slo" => Ok(RoutingPolicy::SloAware),
             other => anyhow::bail!(
-                "unknown routing policy {other:?} (want round_robin|least_loaded|energy_aware)"
+                "unknown routing policy {other:?} (want round_robin|least_loaded|energy_aware|slo_aware)"
             ),
         }
     }
 }
 
+/// Join-shortest-queue selection with the tie-breaking contract the
+/// determinism tests pin down: the least backlog wins, and exact ties
+/// resolve to the lowest board index. `None` only for an empty fleet.
+pub fn least_loaded_pick(backlogs: &[f64]) -> Option<usize> {
+    (0..backlogs.len()).min_by(|&a, &b| {
+        backlogs[a]
+            .partial_cmp(&backlogs[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    })
+}
+
 /// Which policy produces per-board configuration decisions.
 pub enum FleetPolicy {
-    /// The AOT PPO agent; observations from all deciding boards are
-    /// stacked into `PolicyRuntime::infer_batch` calls.
+    /// The AOT PPO agent; observations of decisions falling due at the
+    /// same instant are stacked into `PolicyRuntime::infer_batch` calls.
     Agent(PolicyRuntime),
-    /// A static baseline applied per board (no batching possible — there
-    /// is no forward pass).
+    /// A static baseline applied per board.
     Static(Baseline),
     /// ONE online-adapting agent shared by every board: decisions for
     /// all boards come from the same pure-Rust policy, and every board's
@@ -128,22 +163,47 @@ impl FleetPolicy {
     }
 }
 
-/// Power regime of one board (arXiv:2407.12027 state machine).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum PowerState {
-    /// Serving (or paying decision/reconfiguration overhead).
-    Active,
-    /// Awake, bitstream retained, queue empty since `since_s`.
-    Idle { since_s: f64 },
-    /// Low-power state; exit pays wake latency + full reconfiguration.
-    Sleep,
+/// Per-model latency SLOs. `default_ms` applies to every model without
+/// an explicit entry in `per_model`.
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    pub default_ms: f64,
+    pub per_model: Vec<(String, f64)>,
 }
 
-/// Fleet shape + power-state policy.
-#[derive(Debug, Clone, Copy)]
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            default_ms: 250.0,
+            per_model: Vec::new(),
+        }
+    }
+}
+
+impl SloConfig {
+    /// The latency target (ms) for `model`. Entries match the full
+    /// variant name (`ResNet152_PR25`) exactly, or a base-model name
+    /// (`ResNet152`) covering every pruning variant.
+    pub fn target_ms(&self, model: &str) -> f64 {
+        self.per_model
+            .iter()
+            .find(|p| {
+                p.0 == model
+                    || (model.len() > p.0.len()
+                        && model.starts_with(p.0.as_str())
+                        && model[p.0.len()..].starts_with("_PR"))
+            })
+            .map(|p| p.1)
+            .unwrap_or(self.default_ms)
+    }
+}
+
+/// Fleet shape + power-state + SLO policy.
+#[derive(Debug, Clone)]
 pub struct FleetConfig {
     pub boards: usize,
-    /// Decision-tick length (simulated seconds).
+    /// Grid of the [`RunMode::FineTick`] reference mode (simulated
+    /// seconds). The event-driven mode never reads it.
     pub tick_s: f64,
     /// Idle dwell before a board drops to sleep; `f64::INFINITY`
     /// disables the sleep state.
@@ -158,6 +218,8 @@ pub struct FleetConfig {
     pub wake_backlog: usize,
     pub routing: RoutingPolicy,
     pub seed: u64,
+    /// Per-model request-latency targets.
+    pub slo: SloConfig,
 }
 
 impl Default for FleetConfig {
@@ -170,101 +232,192 @@ impl Default for FleetConfig {
             wake_backlog: 2,
             routing: RoutingPolicy::EnergyAware,
             seed: 1,
+            slo: SloConfig::default(),
         }
     }
 }
 
-/// One job in the global arrival stream: serve `model` for
-/// `duration_s` seconds of *serving demand* (overheads delay completion,
-/// they do not shrink it).
-#[derive(Debug, Clone)]
-pub struct FleetJob {
-    pub model: ModelVariant,
-    pub at_s: f64,
-    pub duration_s: f64,
+/// How the serving loop advances simulated time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// Discrete-event (the default): time jumps between events.
+    EventDriven,
+    /// Reference mode: identical semantics, plus a no-progress
+    /// accounting tick every [`FleetConfig::tick_s`] that integrates
+    /// every board's energy on the tick grid — the loop the event core
+    /// replaced. Totals must agree with [`RunMode::EventDriven`] to
+    /// ~1e-6 (f64 summation order is the only difference); the
+    /// iteration count is the speedup under test.
+    FineTick,
 }
 
-/// A fleet-scale scenario: the global job stream plus one co-runner
+impl RunMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunMode::EventDriven => "event_driven",
+            RunMode::FineTick => "fine_tick",
+        }
+    }
+}
+
+/// One per-frame inference request in the global stream.
+#[derive(Debug, Clone)]
+pub struct FleetRequest {
+    pub model: ModelVariant,
+    pub at_s: f64,
+}
+
+/// A fleet-scale scenario: the global request stream plus one co-runner
 /// interference schedule per board.
 #[derive(Debug, Clone)]
 pub struct FleetScenario {
-    /// Jobs sorted by arrival time.
-    pub jobs: Vec<FleetJob>,
+    /// Requests sorted by arrival time.
+    pub requests: Vec<FleetRequest>,
     /// Per-board workload step functions (len == boards).
     pub schedules: Vec<Vec<(f64, WorkloadState)>>,
     pub horizon_s: f64,
 }
 
 impl FleetScenario {
-    /// Generate a scenario: `pattern` arrivals at `mean_rate` jobs/s over
-    /// `horizon_s`, serving demands exponential around `mean_duration_s`,
-    /// co-runner schedules correlated across boards with probability
-    /// `correlation`. Deterministic in `seed`.
+    /// Generate a scenario: an open-loop `pattern` request stream at an
+    /// aggregate `rate_rps` requests/s over `horizon_s` (one independent
+    /// sub-stream per model — Poisson for steady/diurnal,
+    /// Markov-modulated for bursty), plus co-runner schedules correlated
+    /// across boards with probability `correlation`. Deterministic in
+    /// `seed`.
     pub fn generate(
         pattern: ArrivalPattern,
         boards: usize,
         horizon_s: f64,
-        mean_rate: f64,
-        mean_duration_s: f64,
+        rate_rps: f64,
         correlation: f64,
         seed: u64,
     ) -> Result<FleetScenario> {
         anyhow::ensure!(boards > 0, "fleet needs at least one board");
+        anyhow::ensure!(rate_rps > 0.0, "request rate must be positive");
         let variants = load_variants()?;
-        let mut rng = XorShift64::new(seed ^ 0xf1ee7);
-        let jobs = arrival_times(pattern, seed, horizon_s, mean_rate)
+        let requests = request_stream(pattern, seed, horizon_s, rate_rps, variants.len())
             .into_iter()
-            .map(|at_s| {
-                let model = variants[rng.below(variants.len())].clone();
-                let duration_s =
-                    (-rng.next_f64().max(1e-12).ln() * mean_duration_s).clamp(2.0, 60.0);
-                FleetJob {
-                    model,
-                    at_s,
-                    duration_s,
-                }
+            .map(|r| FleetRequest {
+                model: variants[r.model_idx].clone(),
+                at_s: r.at_s,
             })
             .collect();
         let schedules = correlated_schedules(seed, boards, horizon_s, 20.0, correlation);
         Ok(FleetScenario {
-            jobs,
+            requests,
             schedules,
             horizon_s,
         })
     }
 }
 
-/// A board's queued job (head of queue = currently served).
+/// The arrival→start→done trail of one request (indexed like
+/// [`FleetScenario::requests`]). `start_s`/`done_s` are −1 until the
+/// respective transition happened (they never are in a completed run).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTrail {
+    pub board: usize,
+    pub at_s: f64,
+    pub start_s: f64,
+    pub done_s: f64,
+}
+
+/// What one board is doing right now (power/accounting regime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Low-power state; exit pays wake latency + full reconfiguration.
+    Sleeping,
+    /// Paying the sleep-exit latency.
+    Waking,
+    /// Paying decision/reconfiguration overhead.
+    Reconfiguring,
+    /// Serving one frame.
+    Serving,
+    /// Awake, queue empty, bitstream retained.
+    Idle,
+    /// Awake with queued work, waiting on a same-instant decision.
+    Holding,
+}
+
+/// One queued request on a board (head = in service or next up).
 #[derive(Debug, Clone)]
-struct ActiveJob {
+struct QueuedReq {
+    req: usize,
     model: ModelVariant,
-    remaining_s: f64,
+    at_s: f64,
 }
 
 /// One board: the per-board halves of the single-board coordinator plus
-/// the fleet power-state machine.
+/// the fleet power-state machine and latency accounting.
 struct Board {
     reconfig: ReconfigManager,
     sampler: Sampler,
     rewards: RewardCalculator,
-    power: PowerState,
-    queue: VecDeque<ActiveJob>,
+    phase: Phase,
+    /// Power drawn in the current phase (W) — energy integrates lazily
+    /// between events at this constant power.
+    phase_power_w: f64,
+    /// Energy/time integrated up to this simulated instant.
+    last_t: f64,
+    /// When the current frame/overhead/wake completes.
+    busy_until: f64,
+    queue: VecDeque<QueuedReq>,
     /// Chosen action for (head model, state), if still valid.
     decided: Option<(usize, String, WorkloadState)>,
-    /// Reconfiguration/decision overhead still to pay (s).
-    pending_overhead_s: f64,
-    /// Wake-up latency still to pay (s).
-    pending_wake_s: f64,
-    /// Telemetry snapshot at the last decision (for reward bookkeeping).
+    /// A DecisionDue event is already scheduled for this board.
+    decision_pending: bool,
+    /// Invalidates SleepTimer events from earlier idle episodes.
+    idle_epoch: u64,
+    serving_meets: bool,
+    /// Occupancy-derived observation inputs (what a node exporter would
+    /// measure *now*): DPU DDR traffic, host coordination CPU, PL power.
+    obs_traffic_bps: f64,
+    obs_host_util: f64,
+    obs_p_fpga: f64,
+    /// Telemetry snapshot at the last decision (reward bookkeeping).
     last_cpu: f64,
     last_mem_gbs: f64,
     // accounting
     totals: Totals,
     energy: EnergyMeter,
     wakes: u64,
-    jobs_done: u64,
+    requests_done: u64,
+    slo_violations: u64,
+    latency: LatencyHistogram,
     reward_sum: f64,
     reward_n: u64,
+    qdepth_sum: u64,
+    late_decisions: u64,
+}
+
+/// Integrate the board's current regime from `last_t` to `t`.
+fn advance(b: &mut Board, t: f64) {
+    let dt = t - b.last_t;
+    if dt <= 0.0 {
+        return;
+    }
+    match b.phase {
+        Phase::Sleeping => b.energy.add_sleep(b.phase_power_w, dt),
+        Phase::Waking => {
+            b.energy.add_wake(b.phase_power_w * dt);
+            b.totals.overhead_s += dt;
+        }
+        Phase::Reconfiguring => {
+            b.energy.add_active(b.phase_power_w, dt);
+            b.totals.overhead_s += dt;
+        }
+        Phase::Serving => {
+            b.energy.add_active(b.phase_power_w, dt);
+            b.totals.busy_s += dt;
+            b.totals.energy_fpga_j += b.phase_power_w * dt;
+            if !b.serving_meets {
+                b.totals.constraint_violation_s += dt;
+            }
+        }
+        Phase::Idle | Phase::Holding => b.energy.add_idle(b.phase_power_w, dt),
+    }
+    b.last_t = t;
 }
 
 /// Per-board slice of the fleet report.
@@ -273,22 +426,52 @@ pub struct BoardReport {
     pub totals: Totals,
     pub energy: EnergyMeter,
     pub wakes: u64,
-    pub jobs_done: u64,
+    pub requests_done: u64,
+    pub slo_violations: u64,
+    /// Request latencies completed on this board (all models).
+    pub latency: LatencyHistogram,
     pub queue_left: usize,
+    /// Mean queue depth observed at decision instants.
+    pub mean_decision_queue_depth: f64,
+    /// Decisions taken when the head request's SLO headroom was already
+    /// negative (the deadline-headroom feature of the decision path).
+    pub late_decisions: u64,
 }
 
-/// Fleet run outcome: per-board reports + fleet-level counters.
+/// Per-model latency/SLO slice of the fleet report.
+pub struct ModelLatencyReport {
+    pub model: String,
+    pub slo_ms: f64,
+    pub done: u64,
+    pub violations: u64,
+    pub hist: LatencyHistogram,
+}
+
+/// Fleet run outcome: per-board reports, per-model latency, per-request
+/// trails, and fleet-level counters.
 pub struct FleetReport {
     pub policy: &'static str,
     pub routing: RoutingPolicy,
+    pub mode: RunMode,
     pub boards: Vec<BoardReport>,
-    pub ticks: u64,
+    /// Loop iterations: events popped from the queue. The number the
+    /// event core is judged on against the fine-tick reference.
+    pub events: u64,
     /// Total configuration decisions made.
     pub decisions: u64,
-    /// Policy forward passes (or baseline selections) executed; with the
-    /// batched agent this is ~decisions / batch, the fleet speedup.
+    /// Policy forward passes (or baseline selections) executed.
     pub decision_batches: u64,
-    pub jobs_total: usize,
+    pub requests_total: usize,
+    /// Requests refused at admission. The current admission layer never
+    /// drops (queues are unbounded); the counter pins that contract —
+    /// the CI smoke asserts it stays zero.
+    pub dropped: u64,
+    /// Simulated span accounted on every board (run end, seconds).
+    pub span_s: f64,
+    /// Per-model latency + SLO accounting, sorted by model name.
+    pub by_model: Vec<ModelLatencyReport>,
+    /// Per-request arrival→start→done trails.
+    pub trails: Vec<RequestTrail>,
 }
 
 impl FleetReport {
@@ -319,8 +502,7 @@ impl FleetReport {
         self.energy().fleet_ppw(self.total_frames())
     }
 
-    /// Serving-only efficiency (frames per serving joule) — the number to
-    /// compare against N independent single-board runs.
+    /// Serving-only efficiency (frames per serving joule).
     pub fn serving_ppw(&self) -> f64 {
         let e = self.serving_energy_j();
         if e > 0.0 {
@@ -330,19 +512,82 @@ impl FleetReport {
         }
     }
 
-    pub fn jobs_done(&self) -> u64 {
-        self.boards.iter().map(|b| b.jobs_done).sum()
+    pub fn requests_done(&self) -> u64 {
+        self.boards.iter().map(|b| b.requests_done).sum()
     }
 
-    /// Render a compact fleet table.
+    pub fn slo_violations(&self) -> u64 {
+        self.boards.iter().map(|b| b.slo_violations).sum()
+    }
+
+    /// Fleet-wide request-latency histogram (all boards, all models).
+    pub fn latency(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for b in &self.boards {
+            h.merge(&b.latency);
+        }
+        h
+    }
+
+    /// Latency histogram of one model, if any of its requests completed.
+    pub fn model_latency(&self, model: &str) -> Option<&ModelLatencyReport> {
+        self.by_model.iter().find(|m| m.model == model)
+    }
+
+    /// Stable digest of everything decision-dependent — two runs of the
+    /// same (scenario, config, seed) must produce identical fingerprints
+    /// (the determinism tests).
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = format!(
+            "{}|{}|{}|ev={}|dec={}|bat={}|req={}|drop={}|span={:.9}",
+            self.policy,
+            self.routing.name(),
+            self.mode.name(),
+            self.events,
+            self.decisions,
+            self.decision_batches,
+            self.requests_total,
+            self.dropped,
+            self.span_s
+        );
+        for b in &self.boards {
+            let _ = write!(
+                s,
+                "|b{}:f={:.3}:e={:.9e}:E={:.9e}:w={}:d={}:v={}:{}",
+                b.board,
+                b.totals.frames,
+                b.totals.energy_fpga_j,
+                b.energy.total_j(),
+                b.wakes,
+                b.requests_done,
+                b.slo_violations,
+                b.latency.fingerprint()
+            );
+        }
+        for m in &self.by_model {
+            let _ = write!(
+                s,
+                "|{}:p99={:.6}:done={}:viol={}",
+                m.model,
+                m.hist.p99_ms(),
+                m.done,
+                m.violations
+            );
+        }
+        s
+    }
+
+    /// Render the fleet table + the per-model latency/SLO table.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "=== fleet report — policy {} / routing {} ({} boards, {} ticks)\n\
-             board   frames   busy_s   idle_s  sleep_s  wakes  jobs  serve_J  total_J  fps/J\n",
+            "=== fleet report — policy {} / routing {} ({} boards, {} events, {})\n\
+             board   frames   busy_s   idle_s  sleep_s  wakes   reqs  p99_ms   viol  serve_J  total_J  fps/J\n",
             self.policy,
             self.routing.name(),
             self.boards.len(),
-            self.ticks
+            self.events,
+            self.mode.name(),
         );
         for b in &self.boards {
             let ppw = if b.energy.total_j() > 0.0 {
@@ -351,31 +596,93 @@ impl FleetReport {
                 0.0
             };
             out.push_str(&format!(
-                "{:>5} {:>8.0} {:>8.1} {:>8.1} {:>8.1} {:>6} {:>5} {:>8.0} {:>8.0} {:>6.2}\n",
+                "{:>5} {:>8.0} {:>8.1} {:>8.1} {:>8.1} {:>6} {:>6} {:>7.1} {:>6} {:>8.0} {:>8.0} {:>6.2}\n",
                 b.board,
                 b.totals.frames,
                 b.totals.busy_s,
                 b.energy.idle_s,
                 b.energy.sleep_s,
                 b.wakes,
-                b.jobs_done,
+                b.requests_done,
+                b.latency.p99_ms(),
+                b.slo_violations,
                 b.totals.energy_fpga_j,
                 b.energy.total_j(),
                 ppw,
             ));
         }
+        out.push_str(
+            "model                    slo_ms   reqs   p50_ms   p95_ms   p99_ms   max_ms   viol\n",
+        );
+        for m in &self.by_model {
+            out.push_str(&format!(
+                "{:<24} {:>6.0} {:>6} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>6}\n",
+                m.model,
+                m.slo_ms,
+                m.done,
+                m.hist.p50_ms(),
+                m.hist.p95_ms(),
+                m.hist.p99_ms(),
+                m.hist.max_ms(),
+                m.violations,
+            ));
+        }
+        let lat = self.latency();
         out.push_str(&format!(
             "fleet: {:.0} frames / {:.0} J = {:.2} fps/W (serving-only {:.2}); \
-             {} decisions in {} policy passes\n",
+             latency p50 {:.1} p95 {:.1} p99 {:.1} ms; \
+             requests {}/{} done, dropped {}, SLO violations {}; \
+             {} decisions in {} policy passes over {} events\n",
             self.total_frames(),
             self.total_energy_j(),
             self.fleet_ppw(),
             self.serving_ppw(),
+            lat.p50_ms(),
+            lat.p95_ms(),
+            lat.p99_ms(),
+            self.requests_done(),
+            self.requests_total,
+            self.dropped,
+            self.slo_violations(),
             self.decisions,
             self.decision_batches,
+            self.events,
         ));
         out
     }
+}
+
+/// One pending configuration decision in a batch.
+struct DecisionRequest {
+    board: usize,
+    model: ModelVariant,
+    obs: [f32; OBS_DIM],
+    state: WorkloadState,
+    queue: QueueContext,
+}
+
+/// Per-model latency accumulator during a run.
+struct ModelAcc {
+    hist: LatencyHistogram,
+    violations: u64,
+    done: u64,
+}
+
+/// Mutable state of one `run_mode` invocation, bundled so helpers stay
+/// under control (and under clippy's argument limit).
+struct RunState<'a> {
+    scenario: &'a FleetScenario,
+    boards: Vec<Board>,
+    events: EventQueue,
+    trails: Vec<RequestTrail>,
+    by_model: BTreeMap<String, ModelAcc>,
+    decisions: u64,
+    decision_batches: u64,
+    remaining: usize,
+    end_t: Option<f64>,
+    p_static: f64,
+    p_arm_base: f64,
+    sleep_w: f64,
 }
 
 /// The fleet coordinator itself.
@@ -387,23 +694,33 @@ pub struct FleetCoordinator {
     rng: XorShift64,
     rr_cursor: usize,
     /// Fleet-level Algorithm-1 bookkeeping for the shared online agent's
-    /// feedback stream (separate from the per-board serve-loop
-    /// calculators, which keep updating per slice).
+    /// feedback stream.
     online_rewards: RewardCalculator,
+    /// (model, action, state) -> steady-state metrics. The event core
+    /// looks service times up once per combination instead of once per
+    /// tick.
+    metrics_cache: HashMap<(String, usize, WorkloadState), Metrics>,
+    /// (model, state) -> estimated per-frame service time under the
+    /// best feasible configuration (the routing predictor's unit).
+    est_cache: HashMap<(String, WorkloadState), f64>,
 }
 
 impl FleetCoordinator {
     pub fn new(config: FleetConfig, policy: FleetPolicy) -> Result<FleetCoordinator> {
         anyhow::ensure!(config.boards > 0, "fleet needs at least one board");
         anyhow::ensure!(config.tick_s > 0.0, "tick must be positive");
+        anyhow::ensure!(config.slo.default_ms > 0.0, "SLO target must be positive");
+        let seed = config.seed;
         Ok(FleetCoordinator {
             sim: DpuSim::load()?,
             policy,
             config,
             featurizer: Featurizer::new(),
-            rng: XorShift64::new(config.seed ^ 0xf1ee7c0de),
+            rng: XorShift64::new(seed ^ 0xf1ee7c0de),
             rr_cursor: 0,
             online_rewards: RewardCalculator::new(),
+            metrics_cache: HashMap::new(),
+            est_cache: HashMap::new(),
         })
     }
 
@@ -415,60 +732,161 @@ impl FleetCoordinator {
         &self.policy
     }
 
-    /// Pick the target board for a newly arrived job.
-    fn route(&mut self, boards: &[Board]) -> usize {
+    /// Steady-state metrics of (model, action, state), memoized.
+    fn metrics_for(
+        &mut self,
+        model: &ModelVariant,
+        action_id: usize,
+        state: WorkloadState,
+    ) -> Result<Metrics> {
+        let key = (model.name(), action_id, state);
+        if let Some(m) = self.metrics_cache.get(&key) {
+            return Ok(*m);
+        }
+        let (size, instances) = {
+            let a = &self.sim.actions()[action_id];
+            (a.size.clone(), a.instances)
+        };
+        let m = self.sim.evaluate(model, &size, instances, state)?;
+        self.metrics_cache.insert(key, m);
+        Ok(m)
+    }
+
+    /// Estimated per-frame service time of `model` under `state` (the
+    /// oracle-best configuration's throughput), memoized.
+    fn est_service_s(&mut self, model: &ModelVariant, state: WorkloadState) -> Result<f64> {
+        let key = (model.name(), state);
+        if let Some(v) = self.est_cache.get(&key) {
+            return Ok(*v);
+        }
+        let aid = self.sim.optimal_action(model, state)?;
+        let m = self.metrics_for(model, aid, state)?;
+        let v = m.frame_service_s();
+        self.est_cache.insert(key, v);
+        Ok(v)
+    }
+
+    /// Awake idle power of whatever configuration `b` holds.
+    fn idle_power_of(&self, b: &Board) -> f64 {
+        let loaded = b.reconfig.current_action();
+        idle_power_w(&self.sim, loaded.map(|id| &self.sim.actions()[id]))
+    }
+
+    /// Predicted outstanding work on `b` (seconds): in-flight remainder +
+    /// service estimates of everything queued behind it.
+    fn board_backlog_s(&mut self, b: &Board, state: WorkloadState, t: f64) -> Result<f64> {
+        let mut w = (b.busy_until - t).max(0.0);
+        let skip = usize::from(b.phase == Phase::Serving);
+        for q in b.queue.iter().skip(skip) {
+            w += self.est_service_s(&q.model, state)?;
+        }
+        Ok(w)
+    }
+
+    /// Predicted completion wait of `incoming` if routed to `b`:
+    /// backlog + model-switch overheads + (for sleepers) wake latency
+    /// and a full reconfiguration.
+    fn predicted_wait_s(
+        &mut self,
+        b: &Board,
+        state: WorkloadState,
+        incoming: &ModelVariant,
+        t: f64,
+    ) -> Result<f64> {
+        if b.phase == Phase::Sleeping {
+            return Ok(self.config.wake_penalty_s
+                + full_decision_overhead_s()
+                + self.est_service_s(incoming, state)?);
+        }
+        let switch_s = (TELEMETRY_US + RL_INFERENCE_US + INSTR_LOAD_US) as f64 * 1e-6;
+        let mut w = (b.busy_until - t).max(0.0);
+        let mut prev: Option<String> = b.decided.as_ref().map(|d| d.1.clone());
+        let skip = usize::from(b.phase == Phase::Serving);
+        for q in b.queue.iter().skip(skip) {
+            let name = q.model.name();
+            if prev.as_deref() != Some(name.as_str()) {
+                w += switch_s;
+            }
+            w += self.est_service_s(&q.model, state)?;
+            prev = Some(name);
+        }
+        let name = incoming.name();
+        if prev.as_deref() != Some(name.as_str()) {
+            w += if prev.is_none() {
+                full_decision_overhead_s()
+            } else {
+                switch_s
+            };
+        }
+        w += self.est_service_s(incoming, state)?;
+        Ok(w)
+    }
+
+    /// Pick the target board for a newly arrived request.
+    fn route(
+        &mut self,
+        boards: &[Board],
+        schedules: &[Vec<(f64, WorkloadState)>],
+        model: &ModelVariant,
+        t: f64,
+    ) -> Result<usize> {
         let n = boards.len();
-        let queue_len = |b: &Board| b.queue.len();
-        // backlog = outstanding serving demand, the join-shortest-queue key
-        let backlog = |b: &Board| b.queue.iter().map(|j| j.remaining_s).sum::<f64>();
         match self.config.routing {
             RoutingPolicy::RoundRobin => {
                 let i = self.rr_cursor % n;
                 self.rr_cursor += 1;
-                i
+                Ok(i)
             }
-            RoutingPolicy::LeastLoaded => (0..n)
-                .min_by(|&a, &b| {
-                    backlog(&boards[a])
-                        .partial_cmp(&backlog(&boards[b]))
-                        .unwrap()
-                        .then(a.cmp(&b))
-                })
-                .unwrap(),
+            RoutingPolicy::LeastLoaded => {
+                let mut backlogs = Vec::with_capacity(n);
+                for (i, b) in boards.iter().enumerate() {
+                    let state = state_at(&schedules[i], t);
+                    backlogs.push(self.board_backlog_s(b, state, t)?);
+                }
+                Ok(least_loaded_pick(&backlogs).expect("fleet has boards"))
+            }
             RoutingPolicy::EnergyAware => {
                 let awake: Vec<usize> = (0..n)
-                    .filter(|&i| boards[i].power != PowerState::Sleep)
+                    .filter(|&i| boards[i].phase != Phase::Sleeping)
                     .collect();
                 // 1. an awake board with an empty queue
                 if let Some(&i) = awake.iter().find(|&&i| boards[i].queue.is_empty()) {
-                    return i;
+                    return Ok(i);
                 }
                 // 2. the least-backlogged awake board, if acceptable
-                if let Some(&i) = awake
-                    .iter()
-                    .min_by_key(|&&i| (queue_len(&boards[i]), i))
-                {
-                    if queue_len(&boards[i]) < self.config.wake_backlog {
-                        return i;
+                if let Some(&i) = awake.iter().min_by_key(|&&i| (boards[i].queue.len(), i)) {
+                    if boards[i].queue.len() < self.config.wake_backlog {
+                        return Ok(i);
                     }
                 }
                 // 3. wake a sleeper
-                if let Some(i) = (0..n).find(|&i| boards[i].power == PowerState::Sleep) {
-                    return i;
+                if let Some(i) = (0..n).find(|&i| boards[i].phase == Phase::Sleeping) {
+                    return Ok(i);
                 }
                 // 4. everyone is awake and backlogged: shortest queue
-                (0..n).min_by_key(|&i| (queue_len(&boards[i]), i)).unwrap()
+                Ok((0..n)
+                    .min_by_key(|&i| (boards[i].queue.len(), i))
+                    .expect("fleet has boards"))
+            }
+            RoutingPolicy::SloAware => {
+                let mut best = 0usize;
+                let mut best_wait = f64::INFINITY;
+                for (i, b) in boards.iter().enumerate() {
+                    let state = state_at(&schedules[i], t);
+                    let w = self.predicted_wait_s(b, state, model, t)?;
+                    if w < best_wait - 1e-12 {
+                        best = i;
+                        best_wait = w;
+                    }
+                }
+                Ok(best)
             }
         }
     }
 
-    /// Decide configurations for all pending boards in one tick. Returns
-    /// (action ids aligned with `pending`, forward passes used).
-    fn decide_batch(
-        &mut self,
-        requests: &[(usize, [f32; OBS_DIM], WorkloadState)],
-        boards: &[Board],
-    ) -> Result<(Vec<usize>, u64)> {
+    /// Decide configurations for a batch of boards. Returns (action ids
+    /// aligned with `requests`, forward passes used).
+    fn decide_batch(&mut self, requests: &[DecisionRequest]) -> Result<(Vec<usize>, u64)> {
         if requests.is_empty() {
             return Ok((Vec::new(), 0));
         }
@@ -477,7 +895,7 @@ impl FleetCoordinator {
                 let mut actions = Vec::with_capacity(requests.len());
                 let mut passes = 0u64;
                 for chunk in requests.chunks(rt.batch().max(1)) {
-                    let obs: Vec<[f32; OBS_DIM]> = chunk.iter().map(|r| r.1).collect();
+                    let obs: Vec<[f32; OBS_DIM]> = chunk.iter().map(|r| r.obs).collect();
                     let outs = rt.infer_batch(&obs)?;
                     passes += 1;
                     actions.extend(outs.iter().map(|o| o.argmax()));
@@ -486,64 +904,257 @@ impl FleetCoordinator {
             }
             FleetPolicy::Online(agent) => {
                 // one shared policy decides for every board, and every
-                // board's outcome feeds the same adaptation loop —
-                // decide and close the loop inline (the served outcome
-                // is the simulator's steady-state prediction either way)
+                // board's outcome feeds the same adaptation loop
                 let mut actions = Vec::with_capacity(requests.len());
-                for &(board, obs, state) in requests {
-                    let head = boards[board]
-                        .queue
-                        .front()
-                        .expect("pending board has a head job");
-                    let d = agent.decide(&obs);
+                for req in requests {
+                    let d = agent.decide(&req.obs);
                     let a = &self.sim.actions()[d.serving];
-                    let m = self.sim.evaluate(&head.model, &a.size, a.instances, state)?;
-                    let (cpu_util, mem_util_gbs) = crate::rl::features::context_stats(&obs);
+                    let m = self.sim.evaluate(&req.model, &a.size, a.instances, req.state)?;
+                    let (cpu_util, mem_util_gbs) = crate::rl::features::context_stats(&req.obs);
                     let r = self.online_rewards.calculate(&Outcome {
                         measured_fps: m.fps,
                         fpga_power: m.p_fpga,
                         cpu_util,
                         mem_util_gbs,
-                        gmac: head.model.gmac(),
-                        model_data_mb: head.model.data_io_mb(),
+                        gmac: req.model.gmac(),
+                        model_data_mb: req.model.data_io_mb(),
                         fps_constraint: FPS_CONSTRAINT,
                     });
-                    agent.feedback_from_sim(&self.sim, &head.model, state, r, &m)?;
+                    agent.feedback_from_sim(&self.sim, &req.model, req.state, r, &m)?;
                     actions.push(d.serving);
                 }
-                let passes = requests.len() as u64;
-                Ok((actions, passes))
+                Ok((actions, requests.len() as u64))
             }
             FleetPolicy::Static(b) => {
                 let baseline = *b;
                 let mut actions = Vec::with_capacity(requests.len());
-                for &(board, _, state) in requests {
-                    let head = boards[board]
-                        .queue
-                        .front()
-                        .expect("pending board has a head job");
+                for req in requests {
                     actions.push(baseline.select(
                         &self.sim,
-                        &head.model,
-                        state,
+                        &req.model,
+                        req.state,
                         Some(&mut self.rng),
                     )?);
                 }
-                let passes = requests.len() as u64;
-                Ok((actions, passes))
+                Ok((actions, requests.len() as u64))
             }
         }
     }
 
-    /// Run a fleet scenario to completion (all routed jobs drained).
+    /// Try to make progress on board `i` at time `t`: start serving the
+    /// head request if its decision is valid, schedule a decision if
+    /// not, or settle into idle (arming the sleep timer) when the queue
+    /// is empty. No-op while the board is busy or asleep.
+    fn kick(&mut self, rs: &mut RunState<'_>, i: usize, t: f64) -> Result<()> {
+        match rs.boards[i].phase {
+            Phase::Sleeping | Phase::Waking | Phase::Reconfiguring | Phase::Serving => {
+                return Ok(())
+            }
+            Phase::Idle | Phase::Holding => {}
+        }
+        if rs.boards[i].queue.is_empty() {
+            if rs.boards[i].phase != Phase::Idle {
+                let p_idle = self.idle_power_of(&rs.boards[i]);
+                let b = &mut rs.boards[i];
+                b.phase = Phase::Idle;
+                b.phase_power_w = p_idle;
+                b.idle_epoch += 1;
+                b.obs_traffic_bps = 0.0;
+                b.obs_host_util = 0.0;
+                b.obs_p_fpga = rs.p_static;
+                if self.config.idle_to_sleep_s.is_finite() {
+                    let epoch = b.idle_epoch;
+                    rs.events.push(
+                        t + self.config.idle_to_sleep_s,
+                        FleetEvent::SleepTimer {
+                            board: i,
+                            idle_epoch: epoch,
+                        },
+                    );
+                }
+            }
+            return Ok(());
+        }
+        let state = state_at(&rs.scenario.schedules[i], t);
+        let (head_model, head_req, valid) = {
+            let b = &rs.boards[i];
+            let head = b.queue.front().expect("non-empty queue");
+            let valid = matches!(
+                &b.decided,
+                Some((_, m, s)) if *m == head.model.name() && *s == state
+            );
+            (head.model.clone(), head.req, valid)
+        };
+        if valid {
+            let action_id = rs.boards[i].decided.as_ref().expect("valid decision").0;
+            let instances = self.sim.actions()[action_id].instances;
+            let m = self.metrics_for(&head_model, action_id, state)?;
+            let b = &mut rs.boards[i];
+            b.phase = Phase::Serving;
+            b.phase_power_w = m.p_fpga;
+            b.serving_meets = m.meets_constraint;
+            b.busy_until = t + m.frame_service_s();
+            b.obs_traffic_bps = m.dpu_traffic_bps(instances);
+            b.obs_host_util = m.host_util_pct(instances);
+            b.obs_p_fpga = m.p_fpga;
+            // Algorithm-1 reward bookkeeping per served frame
+            let r = b.rewards.calculate(&Outcome {
+                measured_fps: m.fps,
+                fpga_power: m.p_fpga,
+                cpu_util: b.last_cpu,
+                mem_util_gbs: b.last_mem_gbs,
+                gmac: head_model.gmac(),
+                model_data_mb: head_model.data_io_mb(),
+                fps_constraint: FPS_CONSTRAINT,
+            });
+            b.reward_sum += r;
+            b.reward_n += 1;
+            if rs.trails[head_req].start_s < 0.0 {
+                rs.trails[head_req].start_s = t;
+            }
+            let until = rs.boards[i].busy_until;
+            rs.events.push(
+                until,
+                FleetEvent::FrameDone {
+                    board: i,
+                    request: head_req,
+                },
+            );
+        } else if !rs.boards[i].decision_pending {
+            let b = &mut rs.boards[i];
+            b.decision_pending = true;
+            b.phase = Phase::Holding;
+            rs.events.push(t, FleetEvent::DecisionDue { board: i });
+        }
+        Ok(())
+    }
+
+    /// Resolve a batch of same-instant decisions: sample telemetry with
+    /// occupancy-derived platform state, invoke the policy once, charge
+    /// reconfiguration overheads, and schedule the `ReconfigDone`s.
+    fn decide_due(&mut self, rs: &mut RunState<'_>, due: &[usize], t: f64) -> Result<()> {
+        let mut requests: Vec<DecisionRequest> = Vec::new();
+        for &i in due {
+            rs.boards[i].decision_pending = false;
+            let free = matches!(rs.boards[i].phase, Phase::Holding | Phase::Idle);
+            if rs.boards[i].queue.is_empty() || !free {
+                self.kick(rs, i, t)?;
+                continue;
+            }
+            let state = state_at(&rs.scenario.schedules[i], t);
+            let (head_model, head_at) = {
+                let head = rs.boards[i].queue.front().expect("non-empty queue");
+                (head.model.clone(), head.at_s)
+            };
+            let valid = matches!(
+                &rs.boards[i].decided,
+                Some((_, m, s)) if *m == head_model.name() && *s == state
+            );
+            if valid {
+                self.kick(rs, i, t)?;
+                continue;
+            }
+            let depth = rs.boards[i].queue.len();
+            let mut backlog = 0.0;
+            for q in rs.boards[i].queue.iter() {
+                backlog += self.est_service_s(&q.model, state)?;
+            }
+            let slo_s = self.config.slo.target_ms(&head_model.name()) * 1e-3;
+            let ctx = QueueContext {
+                depth,
+                backlog_s: backlog,
+                headroom_s: slo_s - (t - head_at),
+            };
+            let platform = PlatformState {
+                workload: state,
+                dpu_traffic_bps: rs.boards[i].obs_traffic_bps,
+                host_cpu_util: rs.boards[i].obs_host_util,
+                p_fpga: rs.boards[i].obs_p_fpga,
+                p_arm: rs.p_arm_base,
+            };
+            let b = &mut rs.boards[i];
+            let sample = b.sampler.sample((t * 1e6) as u64, &platform);
+            b.last_cpu = sample.cpu_mean();
+            b.last_mem_gbs = sample.mem_total_gbs();
+            b.qdepth_sum += ctx.depth as u64;
+            let obs = self.featurizer.observe(&sample, &head_model);
+            requests.push(DecisionRequest {
+                board: i,
+                model: head_model,
+                obs,
+                state,
+                queue: ctx,
+            });
+        }
+        if requests.is_empty() {
+            return Ok(());
+        }
+        let (chosen, passes) = self.decide_batch(&requests)?;
+        rs.decision_batches += passes;
+        for (req, &action_id) in requests.iter().zip(&chosen) {
+            let i = req.board;
+            let action = self.sim.actions()[action_id].clone();
+            let b = &mut rs.boards[i];
+            advance(b, t);
+            let overhead = b.reconfig.apply(&action, &req.model.name());
+            b.totals.decisions += 1;
+            rs.decisions += 1;
+            if req.queue.headroom_s < 0.0 {
+                b.late_decisions += 1;
+            }
+            if overhead.reconfig_us > 0 {
+                b.totals.reconfigs += 1;
+            }
+            b.decided = Some((action_id, req.model.name(), req.state));
+            b.phase = Phase::Reconfiguring;
+            b.busy_until = t + overhead.total_s();
+            let p_over = idle_power_w(&self.sim, Some(&self.sim.actions()[action_id]));
+            let b = &mut rs.boards[i];
+            b.phase_power_w = p_over;
+            let until = b.busy_until;
+            rs.events.push(until, FleetEvent::ReconfigDone { board: i });
+        }
+        Ok(())
+    }
+
+    /// Run a fleet scenario to completion (all requests served, energy
+    /// accounted to `max(horizon, drain time)`).
     pub fn run(&mut self, scenario: &FleetScenario) -> Result<FleetReport> {
+        self.run_mode(scenario, RunMode::EventDriven)
+    }
+
+    /// [`Self::run`] with an explicit [`RunMode`].
+    pub fn run_mode(&mut self, scenario: &FleetScenario, mode: RunMode) -> Result<FleetReport> {
+        self.run_inner(scenario, mode, None)
+    }
+
+    fn run_inner(
+        &mut self,
+        scenario: &FleetScenario,
+        mode: RunMode,
+        budget_override: Option<u64>,
+    ) -> Result<FleetReport> {
         anyhow::ensure!(
             scenario.schedules.len() == self.config.boards,
             "scenario has {} board schedules, fleet has {} boards",
             scenario.schedules.len(),
             self.config.boards
         );
-        let cal_sleep_w = sleep_power_w(self.sim.calibration());
+        anyhow::ensure!(
+            scenario
+                .requests
+                .windows(2)
+                .all(|w| w[0].at_s <= w[1].at_s),
+            "scenario requests must be sorted by arrival time"
+        );
+        // per-run mutable state resets so a reused coordinator replays
+        // identically (the determinism contract fingerprinted in tests);
+        // the online *agent* intentionally persists across runs — only
+        // the run-scoped reward normalization restarts
+        self.rr_cursor = 0;
+        self.rng = XorShift64::new(self.config.seed ^ 0xf1ee7c0de);
+        self.online_rewards = RewardCalculator::new();
+        let sleep_w = sleep_power_w(self.sim.calibration());
         let p_static = self
             .sim
             .calibration()
@@ -557,7 +1168,7 @@ impl FleetCoordinator {
             .copied()
             .unwrap_or(1.5);
 
-        let mut boards: Vec<Board> = (0..self.config.boards)
+        let boards: Vec<Board> = (0..self.config.boards)
             .map(|i| Board {
                 reconfig: ReconfigManager::new(),
                 sampler: Sampler::from_calibration(
@@ -565,232 +1176,369 @@ impl FleetCoordinator {
                     self.sim.calibration(),
                 ),
                 rewards: RewardCalculator::new(),
-                power: PowerState::Idle { since_s: 0.0 },
+                phase: Phase::Idle,
+                phase_power_w: p_static,
+                last_t: 0.0,
+                busy_until: 0.0,
                 queue: VecDeque::new(),
                 decided: None,
-                pending_overhead_s: 0.0,
-                pending_wake_s: 0.0,
+                decision_pending: false,
+                idle_epoch: 0,
+                serving_meets: true,
+                obs_traffic_bps: 0.0,
+                obs_host_util: 0.0,
+                obs_p_fpga: p_static,
                 last_cpu: 0.0,
                 last_mem_gbs: 0.0,
                 totals: Totals::default(),
                 energy: EnergyMeter::new(),
                 wakes: 0,
-                jobs_done: 0,
+                requests_done: 0,
+                slo_violations: 0,
+                latency: LatencyHistogram::new(),
                 reward_sum: 0.0,
                 reward_n: 0,
+                qdepth_sum: 0,
+                late_decisions: 0,
             })
             .collect();
 
-        let tick = self.config.tick_s;
-        let mut decisions = 0u64;
-        let mut decision_batches = 0u64;
-        let mut next_job = 0usize;
-        let mut t = 0.0f64;
-        let mut ticks = 0u64;
-        // hard stop: the horizon plus a generous drain allowance
-        let max_ticks =
-            ((scenario.horizon_s / tick).ceil() as u64 + 1).saturating_mul(64).max(4096);
+        let trails: Vec<RequestTrail> = scenario
+            .requests
+            .iter()
+            .map(|r| RequestTrail {
+                board: usize::MAX,
+                at_s: r.at_s,
+                start_s: -1.0,
+                done_s: -1.0,
+            })
+            .collect();
 
-        loop {
-            // run to the scenario horizon (idle/sleep energy is part of the
-            // fleet bill), then keep going until every queue drains
-            let drained = t >= scenario.horizon_s - 1e-9
-                && next_job >= scenario.jobs.len()
-                && boards.iter().all(|b| b.queue.is_empty());
-            if drained || ticks >= max_ticks {
-                break;
-            }
-            ticks += 1;
+        let mut rs = RunState {
+            scenario,
+            boards,
+            events: EventQueue::new(),
+            trails,
+            by_model: BTreeMap::new(),
+            decisions: 0,
+            decision_batches: 0,
+            remaining: scenario.requests.len(),
+            end_t: if scenario.requests.is_empty() {
+                Some(scenario.horizon_s)
+            } else {
+                None
+            },
+            p_static,
+            p_arm_base,
+            sleep_w,
+        };
 
-            // 1. admit jobs arriving inside this tick
-            while next_job < scenario.jobs.len() && scenario.jobs[next_job].at_s < t + tick {
-                let job = &scenario.jobs[next_job];
-                let target = self.route(&boards);
-                let b = &mut boards[target];
-                if b.power == PowerState::Sleep {
-                    // wake: pay exit latency now, full reconfiguration later
-                    b.pending_wake_s += self.config.wake_penalty_s;
-                    b.reconfig = ReconfigManager::new();
-                    b.decided = None;
-                    b.wakes += 1;
+        // seed the timeline: workload shifts, the first arrival, the
+        // initial idle->sleep timers, and (reference mode) the tick grid
+        for (i, sched) in scenario.schedules.iter().enumerate() {
+            for &(t0, _) in sched {
+                if t0 > 0.0 {
+                    rs.events.push(t0, FleetEvent::WorkloadShift { board: i });
                 }
-                b.power = PowerState::Active;
-                b.queue.push_back(ActiveJob {
-                    model: job.model.clone(),
-                    remaining_s: job.duration_s,
-                });
-                next_job += 1;
             }
-
-            // 2. collect decision requests (head job or workload changed)
-            let mut requests: Vec<(usize, [f32; OBS_DIM], WorkloadState)> = Vec::new();
-            for (i, b) in boards.iter_mut().enumerate() {
-                let Some(head) = b.queue.front() else { continue };
-                let state = state_at(&scenario.schedules[i], t);
-                let valid = matches!(
-                    &b.decided,
-                    Some((_, m, s)) if *m == head.model.name() && *s == state
+        }
+        if let Some(first) = scenario.requests.first() {
+            rs.events.push(first.at_s, FleetEvent::Arrival { request: 0 });
+        }
+        if self.config.idle_to_sleep_s.is_finite() {
+            for i in 0..self.config.boards {
+                rs.events.push(
+                    self.config.idle_to_sleep_s,
+                    FleetEvent::SleepTimer {
+                        board: i,
+                        idle_epoch: 0,
+                    },
                 );
-                if !valid {
-                    let platform = PlatformState {
-                        workload: state,
-                        dpu_traffic_bps: 0.0,
-                        host_cpu_util: 0.0,
-                        p_fpga: p_static,
-                        p_arm: p_arm_base,
-                    };
-                    let sample = b.sampler.sample((t * 1e6) as u64, &platform);
-                    b.last_cpu = sample.cpu_mean();
-                    b.last_mem_gbs = sample.mem_total_gbs();
-                    let obs = self.featurizer.observe(&sample, &head.model);
-                    requests.push((i, obs, state));
-                }
             }
-
-            // 3. one batched policy invocation for the whole tick
-            let (chosen, passes) = self.decide_batch(&requests, &boards)?;
-            decision_batches += passes;
-            for (&(i, _, state), &action_id) in requests.iter().zip(&chosen) {
-                let b = &mut boards[i];
-                let head_name = b.queue.front().expect("still queued").model.name();
-                let action = &self.sim.actions()[action_id];
-                let overhead = b.reconfig.apply(action, &head_name);
-                b.pending_overhead_s += overhead.total_us() as f64 * 1e-6;
-                b.totals.decisions += 1;
-                decisions += 1;
-                if overhead.reconfig_us > 0 {
-                    b.totals.reconfigs += 1;
-                }
-                b.decided = Some((action_id, head_name, state));
-            }
-
-            // 4. advance every board by one tick
-            for (i, b) in boards.iter_mut().enumerate() {
-                let state = state_at(&scenario.schedules[i], t);
-                let mut remaining = tick;
-
-                // wake latency (PL held at static power, metered as wake)
-                if b.pending_wake_s > 0.0 {
-                    let dt = b.pending_wake_s.min(remaining);
-                    b.pending_wake_s -= dt;
-                    remaining -= dt;
-                    b.totals.overhead_s += dt;
-                    b.energy.add_wake(p_static * dt);
-                }
-                // reconfiguration/decision overhead
-                if b.pending_overhead_s > 0.0 && remaining > 0.0 {
-                    let dt = b.pending_overhead_s.min(remaining);
-                    let loaded = b.decided.as_ref().map(|d| &self.sim.actions()[d.0]);
-                    b.pending_overhead_s -= dt;
-                    remaining -= dt;
-                    b.totals.overhead_s += dt;
-                    b.energy.add_active(idle_power_w(&self.sim, loaded), dt);
-                }
-
-                // serve the head job for whatever is left of the tick
-                while remaining > 1e-9 {
-                    let Some((action_id, decided_state)) =
-                        b.decided.as_ref().map(|d| (d.0, d.2))
-                    else {
-                        break;
-                    };
-                    let Some(head) = b.queue.front_mut() else { break };
-                    if decided_state != state {
-                        // workload changed mid-tick window; re-decide next tick
-                        break;
-                    }
-                    let dur = remaining.min(head.remaining_s);
-                    let action = &self.sim.actions()[action_id];
-                    let m = self
-                        .sim
-                        .evaluate(&head.model, &action.size, action.instances, state)?;
-                    b.totals.frames += m.fps * dur;
-                    b.totals.busy_s += dur;
-                    b.totals.energy_fpga_j += m.p_fpga * dur;
-                    b.energy.add_active(m.p_fpga, dur);
-                    if !m.meets_constraint {
-                        b.totals.constraint_violation_s += dur;
-                    }
-                    let r = b.rewards.calculate(&Outcome {
-                        measured_fps: m.fps,
-                        fpga_power: m.p_fpga,
-                        cpu_util: b.last_cpu,
-                        mem_util_gbs: b.last_mem_gbs,
-                        gmac: head.model.gmac(),
-                        model_data_mb: head.model.data_io_mb(),
-                        fps_constraint: FPS_CONSTRAINT,
-                    });
-                    b.reward_sum += r;
-                    b.reward_n += 1;
-                    head.remaining_s -= dur;
-                    remaining -= dur;
-                    if head.remaining_s <= 1e-9 {
-                        b.queue.pop_front();
-                        b.jobs_done += 1;
-                        b.decided = None;
-                        if b.queue.is_empty() {
-                            b.power = PowerState::Idle {
-                                since_s: t + (tick - remaining),
-                            };
-                        }
-                        // the next job needs a fresh (batched) decision
-                        break;
-                    }
-                }
-
-                // idle / sleep accounting for the rest of the tick
-                if remaining > 1e-9 && b.queue.is_empty() {
-                    if b.power == PowerState::Sleep {
-                        b.energy.add_sleep(cal_sleep_w, remaining);
-                    } else {
-                        let since = match b.power {
-                            PowerState::Idle { since_s } => since_s,
-                            _ => t + (tick - remaining),
-                        };
-                        let loaded = b.reconfig.current_action().map(|aid| &self.sim.actions()[aid]);
-                        b.energy.add_idle(idle_power_w(&self.sim, loaded), remaining);
-                        // deep-sleep transition once the dwell expires
-                        if (t + tick) - since >= self.config.idle_to_sleep_s {
-                            b.power = PowerState::Sleep;
-                        } else {
-                            b.power = PowerState::Idle { since_s: since };
-                        }
-                    }
-                } else if remaining > 1e-9 {
-                    // queued but waiting on a decision (next tick):
-                    // board is awake, holding its configuration
-                    let loaded = b.reconfig.current_action().map(|aid| &self.sim.actions()[aid]);
-                    b.energy.add_idle(idle_power_w(&self.sim, loaded), remaining);
-                }
-            }
-            t += tick;
+        }
+        if mode == RunMode::FineTick {
+            rs.events.push(self.config.tick_s, FleetEvent::Tick);
         }
 
-        let boards_out = boards
+        // event budget (replaces the old "horizon x 64" tick hard-stop):
+        // a generous per-source bound; exceeding it is an error naming
+        // the stuck board, never a silent truncation
+        let sched_points: usize = scenario.schedules.iter().map(|s| s.len()).sum();
+        let mut budget: u64 = 4096
+            + 64u64.saturating_mul(scenario.requests.len() as u64)
+            + 8 * sched_points as u64
+            + 16 * self.config.boards as u64;
+        if mode == RunMode::FineTick {
+            let drain_bound = scenario.horizon_s + 1.2 * scenario.requests.len() as f64 + 16.0;
+            budget = budget
+                .saturating_add((drain_bound / self.config.tick_s.max(1e-6)) as u64)
+                .saturating_add(64);
+        }
+        if let Some(b) = budget_override {
+            budget = b;
+        }
+
+        let mut t = 0.0f64;
+        while let Some(ev) = rs.events.pop() {
+            if let Some(end) = rs.end_t {
+                if ev.t_s > end + 1e-9 {
+                    // past the accounted span: only stale sleep timers /
+                    // ticks live out here — discard
+                    continue;
+                }
+            }
+            t = ev.t_s;
+            if rs.events.popped() > budget {
+                let (worst, depth) = rs
+                    .boards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| (i, b.queue.len()))
+                    .max_by_key(|&(_, d)| d)
+                    .expect("fleet has boards");
+                anyhow::bail!(
+                    "fleet event budget exhausted after {} events at t={:.3}s \
+                     (policy {}, routing {}): board {} is stuck with queue depth {} \
+                     ({} of {} requests still unserved)",
+                    rs.events.popped(),
+                    t,
+                    self.policy.name(),
+                    self.config.routing.name(),
+                    worst,
+                    depth,
+                    rs.remaining,
+                    scenario.requests.len(),
+                );
+            }
+            match ev.event {
+                FleetEvent::Arrival { request } => {
+                    if request + 1 < scenario.requests.len() {
+                        rs.events.push(
+                            scenario.requests[request + 1].at_s,
+                            FleetEvent::Arrival {
+                                request: request + 1,
+                            },
+                        );
+                    }
+                    let model = scenario.requests[request].model.clone();
+                    let target =
+                        self.route(&rs.boards, &scenario.schedules, &model, t)?;
+                    rs.trails[request].board = target;
+                    {
+                        let b = &mut rs.boards[target];
+                        advance(b, t);
+                        b.queue.push_back(QueuedReq {
+                            req: request,
+                            model,
+                            at_s: t,
+                        });
+                    }
+                    if rs.boards[target].phase == Phase::Sleeping {
+                        // wake: pay exit latency now; the bitstream is
+                        // lost, so the next decision pays a full
+                        // reconfiguration
+                        let b = &mut rs.boards[target];
+                        b.phase = Phase::Waking;
+                        b.phase_power_w = rs.p_static;
+                        b.busy_until = t + self.config.wake_penalty_s;
+                        b.reconfig = ReconfigManager::new();
+                        b.decided = None;
+                        b.wakes += 1;
+                        let until = b.busy_until;
+                        rs.events
+                            .push(until, FleetEvent::WakeDone { board: target });
+                    } else {
+                        self.kick(&mut rs, target, t)?;
+                    }
+                }
+                FleetEvent::WakeDone { board } => {
+                    advance(&mut rs.boards[board], t);
+                    rs.boards[board].phase = Phase::Holding;
+                    rs.boards[board].phase_power_w = rs.p_static;
+                    self.kick(&mut rs, board, t)?;
+                }
+                FleetEvent::ReconfigDone { board } => {
+                    advance(&mut rs.boards[board], t);
+                    let p_idle = self.idle_power_of(&rs.boards[board]);
+                    rs.boards[board].phase = Phase::Holding;
+                    rs.boards[board].phase_power_w = p_idle;
+                    self.kick(&mut rs, board, t)?;
+                }
+                FleetEvent::FrameDone { board, request } => {
+                    advance(&mut rs.boards[board], t);
+                    let done = {
+                        let b = &mut rs.boards[board];
+                        let q = b.queue.pop_front().expect("serving board has a head");
+                        debug_assert_eq!(q.req, request);
+                        b.totals.frames += 1.0;
+                        b.requests_done += 1;
+                        q
+                    };
+                    let latency_ms = (t - rs.trails[request].at_s) * 1e3;
+                    rs.trails[request].done_s = t;
+                    let name = done.model.name();
+                    let slo_ms = self.config.slo.target_ms(&name);
+                    let violated = latency_ms > slo_ms;
+                    {
+                        let b = &mut rs.boards[board];
+                        b.latency.record_ms(latency_ms);
+                        if violated {
+                            b.slo_violations += 1;
+                        }
+                    }
+                    let acc = rs.by_model.entry(name).or_insert_with(|| ModelAcc {
+                        hist: LatencyHistogram::new(),
+                        violations: 0,
+                        done: 0,
+                    });
+                    acc.hist.record_ms(latency_ms);
+                    acc.done += 1;
+                    if violated {
+                        acc.violations += 1;
+                    }
+                    rs.remaining -= 1;
+                    if rs.remaining == 0 {
+                        rs.end_t = Some(scenario.horizon_s.max(t));
+                    }
+                    let p_idle = self.idle_power_of(&rs.boards[board]);
+                    rs.boards[board].phase = Phase::Holding;
+                    rs.boards[board].phase_power_w = p_idle;
+                    self.kick(&mut rs, board, t)?;
+                }
+                FleetEvent::SleepTimer { board, idle_epoch } => {
+                    let b = &mut rs.boards[board];
+                    if b.phase == Phase::Idle && b.idle_epoch == idle_epoch {
+                        advance(b, t);
+                        b.phase = Phase::Sleeping;
+                        b.phase_power_w = rs.sleep_w;
+                    }
+                }
+                FleetEvent::WorkloadShift { board } => {
+                    advance(&mut rs.boards[board], t);
+                    let state = state_at(&scenario.schedules[board], t);
+                    let stale = matches!(
+                        &rs.boards[board].decided,
+                        Some((_, _, s)) if *s != state
+                    );
+                    if stale {
+                        // an in-flight frame finishes at its old rate;
+                        // the *next* frame re-decides
+                        rs.boards[board].decided = None;
+                    }
+                    if rs.boards[board].phase == Phase::Holding {
+                        self.kick(&mut rs, board, t)?;
+                    }
+                }
+                FleetEvent::DecisionDue { board } => {
+                    // decisions resolve after co-instantaneous
+                    // admissions/shifts, so same-instant cohorts (burst
+                    // arrivals, correlated workload flips) batch into
+                    // one policy call: requeue behind any pending
+                    // same-time non-decision event
+                    let defer = matches!(
+                        rs.events.peek(),
+                        Some(nxt) if (nxt.t_s - t).abs() <= 1e-12
+                            && !matches!(nxt.event, FleetEvent::DecisionDue { .. })
+                    );
+                    if defer {
+                        rs.events.push(t, FleetEvent::DecisionDue { board });
+                        continue;
+                    }
+                    // drain every same-instant decision into one batch
+                    let mut due = vec![board];
+                    loop {
+                        let take = match rs.events.peek() {
+                            Some(nxt) if (nxt.t_s - t).abs() <= 1e-12 => {
+                                matches!(nxt.event, FleetEvent::DecisionDue { .. })
+                            }
+                            _ => false,
+                        };
+                        if !take {
+                            break;
+                        }
+                        if let Some(s) = rs.events.pop() {
+                            if let FleetEvent::DecisionDue { board: b2 } = s.event {
+                                if !due.contains(&b2) {
+                                    due.push(b2);
+                                }
+                            }
+                        }
+                    }
+                    self.decide_due(&mut rs, &due, t)?;
+                }
+                FleetEvent::Tick => {
+                    for b in rs.boards.iter_mut() {
+                        advance(b, t);
+                    }
+                    let next = t + self.config.tick_s;
+                    let keep = match rs.end_t {
+                        None => true,
+                        Some(end) => next <= end + 1e-9,
+                    };
+                    if keep {
+                        rs.events.push(next, FleetEvent::Tick);
+                    }
+                }
+            }
+        }
+
+        let span = rs.end_t.unwrap_or(scenario.horizon_s).max(t);
+        for b in rs.boards.iter_mut() {
+            advance(b, span);
+        }
+
+        let events = rs.events.popped();
+        let boards_out = rs
+            .boards
             .into_iter()
             .enumerate()
             .map(|(i, mut b)| {
                 if b.reward_n > 0 {
                     b.totals.mean_reward = b.reward_sum / b.reward_n as f64;
                 }
+                let mean_depth = if b.totals.decisions > 0 {
+                    b.qdepth_sum as f64 / b.totals.decisions as f64
+                } else {
+                    0.0
+                };
                 BoardReport {
                     board: i,
                     queue_left: b.queue.len(),
                     totals: b.totals,
                     energy: b.energy,
                     wakes: b.wakes,
-                    jobs_done: b.jobs_done,
+                    requests_done: b.requests_done,
+                    slo_violations: b.slo_violations,
+                    latency: b.latency,
+                    mean_decision_queue_depth: mean_depth,
+                    late_decisions: b.late_decisions,
                 }
+            })
+            .collect();
+        let by_model = rs
+            .by_model
+            .into_iter()
+            .map(|(model, acc)| ModelLatencyReport {
+                slo_ms: self.config.slo.target_ms(&model),
+                model,
+                done: acc.done,
+                violations: acc.violations,
+                hist: acc.hist,
             })
             .collect();
         Ok(FleetReport {
             policy: self.policy.name(),
             routing: self.config.routing,
+            mode,
             boards: boards_out,
-            ticks,
-            decisions,
-            decision_batches,
-            jobs_total: scenario.jobs.len(),
+            events,
+            decisions: rs.decisions,
+            decision_batches: rs.decision_batches,
+            requests_total: scenario.requests.len(),
+            dropped: 0,
+            span_s: span,
+            by_model,
+            trails: rs.trails,
         })
     }
 }
@@ -815,11 +1563,10 @@ mod tests {
         vec![vec![(0.0, WorkloadState::None)]; boards]
     }
 
-    fn job(name: &str, at: f64, dur: f64) -> FleetJob {
-        FleetJob {
+    fn req(name: &str, at: f64) -> FleetRequest {
+        FleetRequest {
             model: variant(name),
             at_s: at,
-            duration_s: dur,
         }
     }
 
@@ -831,65 +1578,64 @@ mod tests {
         }
     }
 
+    fn fleet(cfg: FleetConfig) -> FleetCoordinator {
+        FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap()
+    }
+
     #[test]
     fn round_robin_cycles_boards() {
-        let cfg = config(RoutingPolicy::RoundRobin, 3);
-        let mut fleet =
-            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let mut f = fleet(config(RoutingPolicy::RoundRobin, 3));
         let scenario = FleetScenario {
-            jobs: (0..6).map(|i| job("ResNet18", i as f64 * 0.1, 4.0)).collect(),
+            requests: (0..6).map(|i| req("ResNet18", i as f64 * 2.0)).collect(),
             schedules: steady_schedules(3),
-            horizon_s: 30.0,
+            horizon_s: 20.0,
         };
-        let r = fleet.run(&scenario).unwrap();
-        assert_eq!(r.jobs_done(), 6);
+        let r = f.run(&scenario).unwrap();
+        assert_eq!(r.requests_done(), 6);
+        assert_eq!(r.dropped, 0);
         for b in &r.boards {
-            assert_eq!(b.jobs_done, 2, "round robin spreads 6 jobs over 3 boards");
+            assert_eq!(b.requests_done, 2, "round robin spreads 6 requests over 3 boards");
         }
     }
 
     #[test]
-    fn least_loaded_prefers_empty_boards() {
-        let cfg = config(RoutingPolicy::LeastLoaded, 2);
-        let mut fleet =
-            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
-        // two long jobs at t=0: one per board; a third arrives while both
-        // are busy and lands on the shorter queue
+    fn least_loaded_prefers_empty_boards_and_breaks_ties_low() {
+        let mut f = fleet(config(RoutingPolicy::LeastLoaded, 2));
+        // first request ties (both empty) -> board 0; the next two arrive
+        // while board 0 still pays its decision overhead -> board 1
         let scenario = FleetScenario {
-            jobs: vec![
-                job("InceptionV3", 0.0, 20.0),
-                job("ResNet18", 0.0, 4.0),
-                job("MobileNetV2", 1.0, 4.0),
+            requests: vec![
+                req("ResNet152", 0.0),
+                req("MobileNetV2", 0.001),
+                req("MobileNetV2", 0.002),
             ],
             schedules: steady_schedules(2),
-            horizon_s: 40.0,
+            horizon_s: 10.0,
         };
-        let r = fleet.run(&scenario).unwrap();
-        assert_eq!(r.jobs_done(), 3);
-        // board 0 got the 20 s job; boards 1 got the two short ones
-        assert_eq!(r.boards[0].jobs_done, 1);
-        assert_eq!(r.boards[1].jobs_done, 2);
+        let r = f.run(&scenario).unwrap();
+        assert_eq!(r.requests_done(), 3);
+        assert_eq!(r.boards[0].requests_done, 1, "tie broke to board 0 first");
+        assert_eq!(r.boards[1].requests_done, 2);
     }
 
     #[test]
     fn energy_aware_consolidates_and_sleeps_spare_boards() {
         let mut cfg = config(RoutingPolicy::EnergyAware, 4);
         cfg.idle_to_sleep_s = 2.0;
-        let mut fleet =
-            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let mut f = fleet(cfg);
         // a thin trickle one board can absorb
         let scenario = FleetScenario {
-            jobs: (0..8).map(|i| job("MobileNetV2", i as f64 * 8.0, 6.0)).collect(),
+            requests: (0..8).map(|i| req("MobileNetV2", i as f64 * 8.0)).collect(),
             schedules: steady_schedules(4),
             horizon_s: 70.0,
         };
-        let r = fleet.run(&scenario).unwrap();
-        assert_eq!(r.jobs_done(), 8);
+        let r = f.run(&scenario).unwrap();
+        assert_eq!(r.requests_done(), 8);
         // the trickle consolidates onto board 0
-        assert_eq!(r.boards[0].jobs_done, 8);
+        assert_eq!(r.boards[0].requests_done, 8);
         // spare boards spent essentially the whole run asleep
         for b in &r.boards[1..] {
-            assert_eq!(b.jobs_done, 0);
+            assert_eq!(b.requests_done, 0);
             assert!(
                 b.energy.sleep_s > 50.0,
                 "board {} slept only {:.1}s",
@@ -903,25 +1649,24 @@ mod tests {
     fn wake_charges_latency_and_full_reconfiguration() {
         let mut cfg = config(RoutingPolicy::RoundRobin, 1);
         cfg.idle_to_sleep_s = 1.0;
-        let mut fleet =
-            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let mut f = fleet(cfg);
         // same model twice with a long gap: the board sleeps in between,
-        // so the second job must pay reconfig despite the same (model,
-        // config) pair
+        // so the second request must pay reconfig despite the same
+        // (model, config) pair
         let scenario = FleetScenario {
-            jobs: vec![job("ResNet18", 0.0, 4.0), job("ResNet18", 30.0, 4.0)],
+            requests: vec![req("ResNet18", 0.0), req("ResNet18", 30.0)],
             schedules: steady_schedules(1),
             horizon_s: 60.0,
         };
-        let r = fleet.run(&scenario).unwrap();
+        let r = f.run(&scenario).unwrap();
         let b = &r.boards[0];
-        assert_eq!(b.jobs_done, 2);
+        assert_eq!(b.requests_done, 2);
         assert_eq!(b.wakes, 1, "one sleep->active transition");
         assert!(b.energy.wake_j > 0.0);
         assert!(b.energy.sleep_s > 10.0);
         assert_eq!(
             b.totals.reconfigs, 2,
-            "sleep loses the bitstream: the repeat job reconfigures again"
+            "sleep loses the bitstream: the repeat request reconfigures again"
         );
     }
 
@@ -929,14 +1674,13 @@ mod tests {
     fn sleep_disabled_keeps_boards_idle() {
         let mut cfg = config(RoutingPolicy::RoundRobin, 2);
         cfg.idle_to_sleep_s = f64::INFINITY;
-        let mut fleet =
-            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let mut f = fleet(cfg);
         let scenario = FleetScenario {
-            jobs: vec![job("ResNet18", 0.0, 4.0)],
+            requests: vec![req("ResNet18", 0.0)],
             schedules: steady_schedules(2),
             horizon_s: 30.0,
         };
-        let r = fleet.run(&scenario).unwrap();
+        let r = f.run(&scenario).unwrap();
         assert!(r.boards[1].energy.sleep_s == 0.0);
         assert!(r.boards[1].energy.idle_s > 20.0);
         // and idling burns more than sleeping would have
@@ -949,27 +1693,29 @@ mod tests {
 
     #[test]
     fn fleet_time_and_energy_are_conserved() {
-        let cfg = config(RoutingPolicy::LeastLoaded, 2);
-        let mut fleet =
-            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::MaxFps)).unwrap();
+        let mut cfg = config(RoutingPolicy::LeastLoaded, 2);
+        cfg.idle_to_sleep_s = 5.0;
+        let mut f = fleet(cfg);
         let scenario = FleetScenario {
-            jobs: vec![
-                job("ResNet50", 0.0, 10.0),
-                job("MobileNetV2", 0.0, 10.0),
-                job("InceptionV3", 12.0, 8.0),
+            requests: vec![
+                req("ResNet50", 0.0),
+                req("MobileNetV2", 0.0),
+                req("InceptionV3", 12.0),
+                req("ResNet50", 12.5),
             ],
             schedules: steady_schedules(2),
             horizon_s: 40.0,
         };
-        let r = fleet.run(&scenario).unwrap();
+        let r = f.run(&scenario).unwrap();
+        assert!(r.span_s >= 40.0);
         for b in &r.boards {
             let accounted =
                 b.totals.busy_s + b.totals.overhead_s + b.energy.idle_s + b.energy.sleep_s;
-            let wall = r.ticks as f64 * 1.0;
             assert!(
-                (accounted - wall).abs() < 1e-6,
-                "board {}: accounted {accounted} vs wall {wall}",
-                b.board
+                (accounted - r.span_s).abs() < 1e-6,
+                "board {}: accounted {accounted} vs span {}",
+                b.board,
+                r.span_s
             );
             assert!(b.energy.total_j() >= b.totals.energy_fpga_j - 1e-9);
         }
@@ -978,32 +1724,113 @@ mod tests {
 
     #[test]
     fn workload_change_triggers_redecision_per_board() {
-        let cfg = config(RoutingPolicy::RoundRobin, 1);
-        let mut fleet =
-            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let mut f = fleet(config(RoutingPolicy::RoundRobin, 1));
         let scenario = FleetScenario {
-            jobs: vec![job("InceptionV3", 0.0, 20.0)],
+            requests: (0..40).map(|i| req("InceptionV3", i as f64 * 0.5)).collect(),
             schedules: vec![vec![
                 (0.0, WorkloadState::None),
                 (10.0, WorkloadState::Mem),
             ]],
             horizon_s: 40.0,
         };
-        let r = fleet.run(&scenario).unwrap();
+        let r = f.run(&scenario).unwrap();
         assert!(
             r.boards[0].totals.decisions >= 2,
             "arrival + workload flip must both decide (got {})",
             r.boards[0].totals.decisions
         );
+        assert_eq!(r.requests_done(), 40);
+    }
+
+    #[test]
+    fn per_request_latency_and_slo_accounting() {
+        let mut cfg = config(RoutingPolicy::RoundRobin, 1);
+        // impossible target: every request violates
+        cfg.slo.default_ms = 0.001;
+        let mut f = fleet(cfg);
+        let scenario = FleetScenario {
+            requests: (0..5).map(|i| req("ResNet18", i as f64 * 3.0)).collect(),
+            schedules: steady_schedules(1),
+            horizon_s: 20.0,
+        };
+        let r = f.run(&scenario).unwrap();
+        assert_eq!(r.requests_done(), 5);
+        assert_eq!(r.slo_violations(), 5, "0.001 ms SLO must always violate");
+        let lat = r.latency();
+        assert_eq!(lat.count(), 5);
+        // the first request pays the full 999 ms cold-start overhead
+        assert!(lat.max_ms() > 900.0, "max {:.1}", lat.max_ms());
+        assert!(lat.p99_ms() > 0.0);
+        let m = r.model_latency("ResNet18_PR0").expect("model report");
+        assert_eq!(m.done, 5);
+        assert_eq!(m.violations, 5);
+        // trails are complete and ordered
+        for trail in &r.trails {
+            assert_eq!(trail.board, 0);
+            assert!(trail.start_s >= trail.at_s);
+            assert!(trail.done_s > trail.start_s);
+        }
+
+        // a lenient per-model override silences the violations
+        let mut cfg = config(RoutingPolicy::RoundRobin, 1);
+        cfg.slo.default_ms = 0.001;
+        cfg.slo.per_model = vec![("ResNet18".to_string(), 60_000.0)];
+        let mut f = fleet(cfg);
+        let r = f.run(&scenario).unwrap();
+        assert_eq!(r.slo_violations(), 0);
+    }
+
+    #[test]
+    fn event_budget_exhaustion_names_the_stuck_board() {
+        let mut f = fleet(config(RoutingPolicy::RoundRobin, 2));
+        let scenario = FleetScenario {
+            requests: (0..20).map(|i| req("ResNet18", i as f64 * 0.01)).collect(),
+            schedules: steady_schedules(2),
+            horizon_s: 10.0,
+        };
+        let err = f
+            .run_inner(&scenario, RunMode::EventDriven, Some(8))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("event budget exhausted"), "{msg}");
+        assert!(msg.contains("board"), "{msg}");
+        assert!(msg.contains("queue depth"), "{msg}");
+    }
+
+    #[test]
+    fn empty_scenario_accounts_idle_and_sleep_to_horizon() {
+        let mut cfg = config(RoutingPolicy::EnergyAware, 2);
+        cfg.idle_to_sleep_s = 5.0;
+        let mut f = fleet(cfg);
+        let scenario = FleetScenario {
+            requests: Vec::new(),
+            schedules: steady_schedules(2),
+            horizon_s: 30.0,
+        };
+        let r = f.run(&scenario).unwrap();
+        assert_eq!(r.requests_done(), 0);
+        for b in &r.boards {
+            assert!((b.energy.idle_s - 5.0).abs() < 1e-9);
+            assert!((b.energy.sleep_s - 25.0).abs() < 1e-9);
+        }
+        // no requests -> no latency samples, p99 is 0 by contract
+        assert_eq!(r.latency().count(), 0);
+    }
+
+    #[test]
+    fn least_loaded_pick_tie_breaks_by_index() {
+        assert_eq!(least_loaded_pick(&[]), None);
+        assert_eq!(least_loaded_pick(&[0.0, 0.0, 0.0]), Some(0));
+        assert_eq!(least_loaded_pick(&[3.0, 1.0, 1.0]), Some(1));
+        assert_eq!(least_loaded_pick(&[2.0, 5.0, 1.0, 1.0]), Some(2));
     }
 
     #[test]
     fn generated_scenarios_shape_up() {
-        let s =
-            FleetScenario::generate(ArrivalPattern::Bursty, 4, 100.0, 0.5, 10.0, 0.7, 11).unwrap();
+        let s = FleetScenario::generate(ArrivalPattern::Bursty, 4, 60.0, 20.0, 0.7, 11).unwrap();
         assert_eq!(s.schedules.len(), 4);
-        assert!(!s.jobs.is_empty());
-        assert!(s.jobs.windows(2).all(|w| w[0].at_s <= w[1].at_s));
-        assert!(s.jobs.iter().all(|j| (2.0..=60.0).contains(&j.duration_s)));
+        assert!(!s.requests.is_empty());
+        assert!(s.requests.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        assert!(s.requests.iter().all(|r| r.at_s < 60.0));
     }
 }

@@ -4,15 +4,18 @@
 //! fleet coordinator (DESIGN.md §8).
 
 pub mod engine;
+pub mod events;
 pub mod fleet;
 pub mod placement;
 pub mod reconfig;
 pub mod server;
 pub mod service;
 
-pub use engine::{DecisionEngine, Selector};
+pub use engine::{DecisionEngine, QueueContext, Selector};
+pub use events::{EventQueue, FleetEvent};
 pub use fleet::{
-    FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetScenario, RoutingPolicy,
+    FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetScenario, RoutingPolicy, RunMode,
+    SloConfig,
 };
 pub use reconfig::{Overhead, ReconfigManager};
 pub use server::{Arrival, Coordinator, Event, Report, Scenario, Totals};

@@ -34,6 +34,21 @@ impl Overhead {
     pub fn total_us(&self) -> u64 {
         self.telemetry_us + self.rl_inference_us + self.reconfig_us + self.instr_load_us
     }
+
+    /// Total overhead in simulated seconds (what the event core schedules
+    /// `ReconfigDone` with).
+    pub fn total_s(&self) -> f64 {
+        self.total_us() as f64 * 1e-6
+    }
+}
+
+/// The worst-case decision overhead (s): telemetry + RL inference +
+/// bitstream reconfiguration + instruction load. The SLO-aware router
+/// charges this when predicting the queue wait of a board whose
+/// configuration would have to change (e.g. a sleeping board, which lost
+/// its bitstream).
+pub fn full_decision_overhead_s() -> f64 {
+    (TELEMETRY_US + RL_INFERENCE_US + RECONFIG_US + INSTR_LOAD_US) as f64 * 1e-6
 }
 
 /// The reconfiguration manager: current bitstream + loaded model.

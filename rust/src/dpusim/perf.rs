@@ -39,6 +39,41 @@ pub struct Metrics {
     pub meets_constraint: bool,
 }
 
+impl Metrics {
+    /// Per-frame service time (s) at steady state: the inter-completion
+    /// spacing a board's queue drains at — the reciprocal of aggregate
+    /// throughput, *not* the per-frame latency (`latency_ms` spans
+    /// `instances` in-flight frames). This is the quantum the
+    /// event-driven fleet core schedules `FrameDone` events with
+    /// (DESIGN.md §10).
+    pub fn frame_service_s(&self) -> f64 {
+        if self.fps > 0.0 {
+            1.0 / self.fps
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Total DDR traffic (bytes/s) the running configuration generates —
+    /// what a node exporter would attribute to the DPUs. Feeds the
+    /// occupancy-derived [`crate::telemetry::PlatformState`] of a busy
+    /// board (the fleet decision path; the old hard-coded 0.0 was only
+    /// correct for an idle board).
+    pub fn dpu_traffic_bps(&self, instances: u32) -> f64 {
+        instances as f64 * self.bw_demand_gbs * 1e9
+    }
+
+    /// Host-coordination CPU utilization (percent of one core pool) the
+    /// running configuration imposes: the fraction of wall time the ARM
+    /// spends in per-frame coordination, saturating at 100%.
+    pub fn host_util_pct(&self, instances: u32) -> f64 {
+        if self.latency_ms <= 0.0 {
+            return 0.0;
+        }
+        (instances as f64 * self.t_host_ms / self.latency_ms).min(1.0) * 100.0
+    }
+}
+
 /// Hoisted calibration constants — `evaluate` is the crate's hottest
 /// function (the sweep and the exhaustive placement search call it in
 /// tight loops); reading ~25 string-keyed HashMap entries per call cost
@@ -548,6 +583,25 @@ mod tests {
         assert_eq!(o[21], FPS_CONSTRAINT);
         // C state: high CPU utilization visible to the agent
         assert!(o[0] > 80.0);
+    }
+
+    #[test]
+    fn frame_service_time_is_throughput_reciprocal() {
+        let s = sim();
+        let v = variant("ResNet152", 0.0);
+        let m = s.evaluate(&v, "B4096", 1, WorkloadState::None).unwrap();
+        assert!((m.frame_service_s() * m.fps - 1.0).abs() < 1e-12);
+        // with one instance, service time equals per-frame latency
+        assert!((m.frame_service_s() * 1e3 - m.latency_ms).abs() < 1e-9);
+        // with 2 instances the completion spacing halves relative to the
+        // per-frame latency
+        let m2 = s.evaluate(&v, "B2304", 2, WorkloadState::None).unwrap();
+        assert!(m2.frame_service_s() * 1e3 < m2.latency_ms);
+        // occupancy stats are physical: positive traffic, bounded host util
+        assert!(m.dpu_traffic_bps(1) > 0.0);
+        assert!(m2.dpu_traffic_bps(2) > m2.dpu_traffic_bps(1));
+        let h = m.host_util_pct(1);
+        assert!((0.0..=100.0).contains(&h) && h > 0.0);
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Fleet event-core benchmark (DESIGN.md §10): runs the same scenario in
+//! [`RunMode::EventDriven`] and the [`RunMode::FineTick`] reference, and
+//! reports loop iterations, wall-clock, events/sec, the speedups, and
+//! the cross-mode parity of total frames/energy. `make bench-fleet`
+//! drives this via `dpuconfig fleet-bench` and writes `BENCH_fleet.json`.
+
+use crate::coordinator::fleet::{
+    FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy, RunMode,
+};
+use crate::rl::Baseline;
+use crate::workload::traffic::ArrivalPattern;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// One scenario's event-vs-tick comparison.
+pub struct ScenarioResult {
+    pub name: &'static str,
+    pub pattern: &'static str,
+    pub requests: usize,
+    pub event_iterations: u64,
+    pub tick_iterations: u64,
+    pub event_wall_s: f64,
+    pub tick_wall_s: f64,
+    /// Simulated events processed per wall-clock second (event mode).
+    pub events_per_sec: f64,
+    /// tick iterations / event iterations — the idle-skipping win.
+    pub iteration_speedup: f64,
+    /// tick wall-clock / event wall-clock.
+    pub wall_speedup: f64,
+    pub frames_rel_err: f64,
+    pub energy_rel_err: f64,
+    pub p99_ms: f64,
+    pub slo_violations: u64,
+    pub dropped: u64,
+}
+
+/// The full bench report.
+pub struct FleetBenchReport {
+    pub smoke: bool,
+    pub tick_s: f64,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    if b.abs() > 0.0 {
+        ((a - b) / b).abs()
+    } else {
+        (a - b).abs()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_pair(
+    name: &'static str,
+    pattern: ArrivalPattern,
+    boards: usize,
+    horizon_s: f64,
+    rate_rps: f64,
+    correlation: f64,
+    seed: u64,
+    tick_s: f64,
+) -> Result<ScenarioResult> {
+    let scenario =
+        FleetScenario::generate(pattern, boards, horizon_s, rate_rps, correlation, seed)?;
+    let mk = || -> Result<FleetCoordinator> {
+        let cfg = FleetConfig {
+            boards,
+            tick_s,
+            routing: RoutingPolicy::SloAware,
+            seed,
+            ..FleetConfig::default()
+        };
+        FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal))
+    };
+    let t0 = Instant::now();
+    let ev = mk()?.run_mode(&scenario, RunMode::EventDriven)?;
+    let event_wall_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let tk = mk()?.run_mode(&scenario, RunMode::FineTick)?;
+    let tick_wall_s = t1.elapsed().as_secs_f64();
+    Ok(ScenarioResult {
+        name,
+        pattern: pattern.name(),
+        requests: scenario.requests.len(),
+        event_iterations: ev.events,
+        tick_iterations: tk.events,
+        event_wall_s,
+        tick_wall_s,
+        events_per_sec: ev.events as f64 / event_wall_s.max(1e-9),
+        iteration_speedup: tk.events as f64 / ev.events.max(1) as f64,
+        wall_speedup: tick_wall_s / event_wall_s.max(1e-9),
+        frames_rel_err: rel_err(ev.total_frames(), tk.total_frames()),
+        energy_rel_err: rel_err(ev.total_energy_j(), tk.total_energy_j()),
+        p99_ms: ev.latency().p99_ms(),
+        slo_violations: ev.slo_violations(),
+        dropped: ev.dropped,
+    })
+}
+
+/// Run the bench. `smoke` keeps scenarios small enough for CI; the full
+/// variant stretches the sparse horizon so the idle-skipping win
+/// dominates.
+pub fn run(smoke: bool) -> Result<FleetBenchReport> {
+    let tick_s = 0.05;
+    let (dense_h, dense_rate, sparse_h, sparse_rate) = if smoke {
+        (30.0, 40.0, 300.0, 0.4)
+    } else {
+        (120.0, 80.0, 1800.0, 0.4)
+    };
+    let scenarios = vec![
+        run_pair(
+            "dense_steady",
+            ArrivalPattern::Steady,
+            4,
+            dense_h,
+            dense_rate,
+            0.7,
+            11,
+            tick_s,
+        )?,
+        run_pair(
+            "sparse_diurnal",
+            ArrivalPattern::Diurnal,
+            4,
+            sparse_h,
+            sparse_rate,
+            0.7,
+            12,
+            tick_s,
+        )?,
+        run_pair(
+            "bursty",
+            ArrivalPattern::Bursty,
+            4,
+            if smoke { 60.0 } else { 300.0 },
+            8.0,
+            0.7,
+            13,
+            tick_s,
+        )?,
+    ];
+    Ok(FleetBenchReport {
+        smoke,
+        tick_s,
+        scenarios,
+    })
+}
+
+/// Human-readable table.
+pub fn render(r: &FleetBenchReport) -> String {
+    let mut out = format!(
+        "=== fleet event-core bench ({} mode, reference tick {:.3}s)\n\
+         scenario            reqs   ev_iters tick_iters  iterX  wallX   ev/s    p99_ms  frames_err\n",
+        if r.smoke { "smoke" } else { "full" },
+        r.tick_s
+    );
+    for s in &r.scenarios {
+        out.push_str(&format!(
+            "{:<18} {:>6} {:>10} {:>10} {:>6.1} {:>6.1} {:>8.0} {:>8.1} {:>10.2e}\n",
+            s.name,
+            s.requests,
+            s.event_iterations,
+            s.tick_iterations,
+            s.iteration_speedup,
+            s.wall_speedup,
+            s.events_per_sec,
+            s.p99_ms,
+            s.frames_rel_err,
+        ));
+    }
+    out
+}
+
+/// Hand-rolled JSON (no serde in the offline vendor set).
+pub fn to_json(r: &FleetBenchReport) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"fleet_event_core\",\n");
+    out.push_str(&format!("  \"smoke\": {},\n", r.smoke));
+    out.push_str(&format!("  \"reference_tick_s\": {},\n", r.tick_s));
+    out.push_str("  \"scenarios\": [\n");
+    for (i, s) in r.scenarios.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"pattern\": \"{}\", \"requests\": {}, \
+             \"event_iterations\": {}, \"tick_iterations\": {}, \
+             \"event_wall_s\": {:.6}, \"tick_wall_s\": {:.6}, \
+             \"events_per_sec\": {:.1}, \"iteration_speedup\": {:.3}, \
+             \"wall_speedup\": {:.3}, \"frames_rel_err\": {:.3e}, \
+             \"energy_rel_err\": {:.3e}, \"p99_ms\": {:.3}, \
+             \"slo_violations\": {}, \"dropped\": {}}}{}\n",
+            s.name,
+            s.pattern,
+            s.requests,
+            s.event_iterations,
+            s.tick_iterations,
+            s.event_wall_s,
+            s.tick_wall_s,
+            s.events_per_sec,
+            s.iteration_speedup,
+            s.wall_speedup,
+            s.frames_rel_err,
+            s.energy_rel_err,
+            s.p99_ms,
+            s.slo_violations,
+            s.dropped,
+            if i + 1 < r.scenarios.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON report to `path`.
+pub fn write_json(r: &FleetBenchReport, path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(r))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        // tiny inline report: no need to run the bench to test the writer
+        let r = FleetBenchReport {
+            smoke: true,
+            tick_s: 0.05,
+            scenarios: vec![ScenarioResult {
+                name: "x",
+                pattern: "steady",
+                requests: 10,
+                event_iterations: 50,
+                tick_iterations: 500,
+                event_wall_s: 0.01,
+                tick_wall_s: 0.10,
+                events_per_sec: 5000.0,
+                iteration_speedup: 10.0,
+                wall_speedup: 10.0,
+                frames_rel_err: 0.0,
+                energy_rel_err: 1e-9,
+                p99_ms: 42.0,
+                slo_violations: 0,
+                dropped: 0,
+            }],
+        };
+        let j = to_json(&r);
+        assert!(j.contains("\"bench\": \"fleet_event_core\""));
+        assert!(j.contains("\"iteration_speedup\": 10.000"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(!render(&r).is_empty());
+    }
+}

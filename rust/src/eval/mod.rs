@@ -3,4 +3,5 @@
 
 pub mod fig5;
 pub mod figures;
+pub mod fleetbench;
 pub mod timeline;

@@ -11,6 +11,9 @@
 //! dpuconfig serve   [--requests 64]             # threaded decision service
 //! dpuconfig decide  --model ResNet152 --state M # one decision, verbose
 //! dpuconfig fleet   [--boards 4] [--routing energy_aware] [--pattern diurnal]
+//!                   [--rate 20] [--slo-ms 250] [--slo ResNet152=120]
+//!                   [--fine-tick] [--assert-served]
+//! dpuconfig fleet-bench [--full] [--out BENCH_fleet.json]
 //! dpuconfig adapt   [--kind calibration] [--seed 7]  # online adaptation
 //! ```
 
@@ -138,17 +141,32 @@ fn run() -> Result<()> {
             colocate_demo(args.positional.clone(), state)?;
         }
         "fleet" => {
-            let boards = args.opt_usize("boards", 4)?;
-            let horizon = args.opt_f64("horizon", 120.0)?;
-            let rate = args.opt_f64("rate", 0.5)?;
-            let routing: dpuconfig::coordinator::RoutingPolicy =
-                args.opt_or("routing", "energy_aware").parse()?;
-            let pattern: dpuconfig::workload::traffic::ArrivalPattern =
-                args.opt_or("pattern", "diurnal").parse()?;
-            let correlation = args.opt_f64("correlation", 0.7)?;
-            let seed = args.opt_u64("seed", 7)?;
-            let policy = args.opt_or("policy", "optimal");
-            fleet_demo(boards, horizon, rate, routing, pattern, correlation, seed, policy)?;
+            let opts = FleetDemoOpts {
+                boards: args.opt_usize("boards", 4)?,
+                horizon: args.opt_f64("horizon", 120.0)?,
+                rate: args.opt_f64("rate", 20.0)?,
+                routing: args.opt_or("routing", "energy_aware").parse()?,
+                pattern: args.opt_or("pattern", "diurnal").parse()?,
+                correlation: args.opt_f64("correlation", 0.7)?,
+                seed: args.opt_u64("seed", 7)?,
+                policy: args.opt_or("policy", "optimal").to_string(),
+                slo_ms: args.opt_f64("slo-ms", 250.0)?,
+                slo_overrides: args.opt_pairs("slo")?,
+                fine_tick: args.flag("fine-tick"),
+                assert_served: args.flag("assert-served"),
+            };
+            fleet_demo(&opts)?;
+        }
+        "fleet-bench" => {
+            // event core vs tick-equivalent reference: iterations,
+            // wall-clock, parity — recorded in BENCH_fleet.json
+            let smoke = !args.flag("full");
+            let out = args.opt_or("out", "BENCH_fleet.json").to_string();
+            let report = dpuconfig::eval::fleetbench::run(smoke)?;
+            print!("{}", dpuconfig::eval::fleetbench::render(&report));
+            let path = repo_root().join(&out);
+            dpuconfig::eval::fleetbench::write_json(&report, &path)?;
+            println!("wrote {}", path.display());
         }
         "adapt" => {
             // online adaptation under drift: frozen agent vs the
@@ -208,7 +226,7 @@ fn run() -> Result<()> {
         }
         "help" | _ => {
             println!("dpuconfig {} — see module docs / README", dpuconfig::version());
-            println!("subcommands: sweep tables fig1 fig2 fig3 fig5 fig6 serve decide colocate metrics profile fleet adapt");
+            println!("subcommands: sweep tables fig1 fig2 fig3 fig5 fig6 serve decide colocate metrics profile fleet fleet-bench adapt");
         }
     }
     Ok(())
@@ -270,8 +288,7 @@ fn colocate_demo(mut names: Vec<String>, state: WorkloadState) -> Result<()> {
     Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
-fn fleet_demo(
+struct FleetDemoOpts {
     boards: usize,
     horizon: f64,
     rate: f64,
@@ -279,10 +296,18 @@ fn fleet_demo(
     pattern: dpuconfig::workload::traffic::ArrivalPattern,
     correlation: f64,
     seed: u64,
-    policy: &str,
-) -> Result<()> {
-    use dpuconfig::coordinator::{FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario};
-    let fleet_policy = match policy {
+    policy: String,
+    slo_ms: f64,
+    slo_overrides: Vec<(String, f64)>,
+    fine_tick: bool,
+    assert_served: bool,
+}
+
+fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
+    use dpuconfig::coordinator::{
+        FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RunMode, SloConfig,
+    };
+    let fleet_policy = match o.policy.as_str() {
         "dpuconfig" | "agent" => {
             // batched artifact: one forward pass covers up to 8 boards
             let rt = PolicyRuntime::load(&default_policy_path(8), 8)?;
@@ -295,22 +320,56 @@ fn fleet_demo(
         other => bail!("unknown policy {other:?}"),
     };
     let cfg = FleetConfig {
-        boards,
-        routing,
-        seed,
+        boards: o.boards,
+        routing: o.routing,
+        seed: o.seed,
+        slo: SloConfig {
+            default_ms: o.slo_ms,
+            per_model: o.slo_overrides.clone(),
+        },
         ..FleetConfig::default()
     };
-    let scenario =
-        FleetScenario::generate(pattern, boards, horizon, rate, 10.0, correlation, seed)?;
+    let scenario = FleetScenario::generate(
+        o.pattern,
+        o.boards,
+        o.horizon,
+        o.rate,
+        o.correlation,
+        o.seed,
+    )?;
     println!(
-        "fleet: {boards} boards, {} arrivals ({}), routing {}, horizon {horizon}s",
-        scenario.jobs.len(),
-        pattern.name(),
-        routing.name()
+        "fleet: {} boards, {} requests ({}), routing {}, horizon {}s, SLO {} ms",
+        o.boards,
+        scenario.requests.len(),
+        o.pattern.name(),
+        o.routing.name(),
+        o.horizon,
+        o.slo_ms,
     );
+    let mode = if o.fine_tick {
+        RunMode::FineTick
+    } else {
+        RunMode::EventDriven
+    };
     let mut fleet = FleetCoordinator::new(cfg, fleet_policy)?;
-    let report = fleet.run(&scenario)?;
+    let report = fleet.run_mode(&scenario, mode)?;
     print!("{}", report.render());
+    if o.assert_served {
+        // CI smoke contract: the stream drains, nothing is dropped, and
+        // latency accounting produced a real tail
+        anyhow::ensure!(
+            report.requests_done() as usize == report.requests_total,
+            "fleet left {} of {} requests unserved",
+            report.requests_total - report.requests_done() as usize,
+            report.requests_total
+        );
+        anyhow::ensure!(report.dropped == 0, "fleet dropped {} requests", report.dropped);
+        anyhow::ensure!(
+            report.latency().p99_ms() > 0.0,
+            "p99 latency is zero — no requests were measured"
+        );
+        println!("assert-served: ok");
+    }
     Ok(())
 }
 

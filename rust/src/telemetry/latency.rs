@@ -1,0 +1,286 @@
+//! Fixed-bucket log-linear latency histogram (DESIGN.md §10).
+//!
+//! The event-driven serving core records one latency sample per request;
+//! a histogram with *fixed* bucket boundaries keeps that O(1) per sample
+//! and O(1) memory regardless of stream length, mergeable across boards,
+//! and — because the boundaries are data-independent — bit-deterministic
+//! across runs (the determinism tests fingerprint it).
+//!
+//! Layout: values in milliseconds, `SUB` linear sub-buckets per
+//! power-of-two octave from [`MIN_MS`] to [`MAX_MS`] (plus an underflow
+//! and an overflow bucket). Relative quantile error is bounded by
+//! `1/SUB` = 12.5% within the tracked range — ample for p50/p95/p99
+//! reporting against 100 ms-scale SLOs.
+//!
+//! ```
+//! use dpuconfig::telemetry::latency::LatencyHistogram;
+//! let mut h = LatencyHistogram::new();
+//! for i in 1..=100 {
+//!     h.record_ms(i as f64);
+//! }
+//! assert_eq!(h.count(), 100);
+//! assert!(h.p50_ms() >= 45.0 && h.p50_ms() <= 60.0);
+//! assert!(h.p99_ms() >= 95.0 && h.p99_ms() <= 115.0);
+//! ```
+
+/// Linear sub-buckets per octave.
+const SUB: usize = 8;
+/// Octaves tracked: [2^0 .. 2^20) sub-ranges of `MIN_MS`.
+const OCTAVES: usize = 20;
+/// Lower edge of the first octave (ms). Values below land in the
+/// underflow bucket (index 0).
+pub const MIN_MS: f64 = 0.0625;
+/// Upper edge of the last octave (ms): `MIN_MS * 2^OCTAVES` ≈ 65.5 s.
+/// Values at or above land in the overflow bucket.
+pub const MAX_MS: f64 = MIN_MS * ((1u64 << OCTAVES) as f64);
+/// Total buckets: underflow + OCTAVES*SUB + overflow.
+pub const N_BUCKETS: usize = 2 + OCTAVES * SUB;
+
+/// The histogram: bucket counts plus exact count/sum/min/max so means
+/// and extremes do not suffer bucketing error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum_ms: f64,
+    min_ms: f64,
+    max_ms: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index of a latency value (ms). Total function: negative/NaN
+/// values clamp into the underflow bucket.
+fn bucket_of(v_ms: f64) -> usize {
+    if v_ms.is_nan() || v_ms < MIN_MS {
+        return 0; // underflow
+    }
+    if v_ms >= MAX_MS {
+        return N_BUCKETS - 1;
+    }
+    // octave = floor(log2(v/MIN)), derived from the exponent bits via
+    // integer math on the ratio to avoid libm dependence on exactness
+    let ratio = v_ms / MIN_MS; // in [1, 2^OCTAVES)
+    let octave = (ratio.log2().floor() as usize).min(OCTAVES - 1);
+    let lo = (1u64 << octave) as f64; // octave lower edge, in ratio units
+    let sub = (((ratio / lo) - 1.0) * SUB as f64) as usize;
+    1 + octave * SUB + sub.min(SUB - 1)
+}
+
+/// Upper edge (ms) of bucket `i` — what quantiles report, so quantile
+/// estimates are conservative (never under-report a latency).
+fn bucket_upper_ms(i: usize) -> f64 {
+    if i == 0 {
+        return MIN_MS;
+    }
+    if i >= N_BUCKETS - 1 {
+        return f64::INFINITY;
+    }
+    let k = i - 1;
+    let octave = k / SUB;
+    let sub = k % SUB;
+    let lo = MIN_MS * (1u64 << octave) as f64;
+    lo + lo * (sub + 1) as f64 / SUB as f64
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: [0; N_BUCKETS],
+            count: 0,
+            sum_ms: 0.0,
+            min_ms: f64::INFINITY,
+            max_ms: 0.0,
+        }
+    }
+
+    /// Record one latency sample (milliseconds).
+    pub fn record_ms(&mut self, v_ms: f64) {
+        self.counts[bucket_of(v_ms)] += 1;
+        self.count += 1;
+        self.sum_ms += v_ms;
+        if v_ms < self.min_ms {
+            self.min_ms = v_ms;
+        }
+        if v_ms > self.max_ms {
+            self.max_ms = v_ms;
+        }
+    }
+
+    /// Fold another histogram into this one (per-board -> fleet rollup).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ms += other.sum_ms;
+        if other.min_ms < self.min_ms {
+            self.min_ms = other.min_ms;
+        }
+        if other.max_ms > self.max_ms {
+            self.max_ms = other.max_ms;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of the recorded samples (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count > 0 {
+            self.sum_ms / self.count as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Exact maximum recorded sample (0 when empty).
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// Exact minimum recorded sample (0 when empty).
+    pub fn min_ms(&self) -> f64 {
+        if self.count > 0 {
+            self.min_ms
+        } else {
+            0.0
+        }
+    }
+
+    /// Quantile estimate (ms): the upper edge of the bucket containing
+    /// the q-th sample, clamped to the exact observed maximum. 0 when
+    /// empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_upper_ms(i).min(self.max_ms);
+            }
+        }
+        self.max_ms
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.quantile_ms(0.50)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.quantile_ms(0.95)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.quantile_ms(0.99)
+    }
+
+    /// Stable textual digest (bucket counts + exact stats) used by the
+    /// determinism tests to fingerprint reports.
+    pub fn fingerprint(&self) -> String {
+        let nonzero: Vec<String> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| format!("{i}:{c}"))
+            .collect();
+        format!(
+            "n={} sum={:.9e} min={:.9e} max={:.9e} [{}]",
+            self.count,
+            self.sum_ms,
+            self.min_ms(),
+            self.max_ms,
+            nonzero.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_partition_the_range() {
+        // every bucket's upper edge lands in the *next* bucket
+        let mut prev = 0.0f64;
+        for i in 0..N_BUCKETS - 1 {
+            let up = bucket_upper_ms(i);
+            assert!(up > prev, "bucket {i} upper {up} not increasing");
+            assert_eq!(bucket_of(up), i + 1, "upper edge of {i} must open bucket {}", i + 1);
+            prev = up;
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(1e12), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_bound_relative_error() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..10_000 {
+            h.record_ms(0.1 + (i as f64) * 0.05); // 0.1 .. 500 ms uniform
+        }
+        // conservative estimate: never below the true quantile, at most
+        // one sub-bucket (12.5%) above
+        for (q, truth) in [(0.5, 250.0), (0.95, 475.0), (0.99, 495.0)] {
+            let est = h.quantile_ms(q);
+            assert!(est >= truth * 0.99, "q{q}: {est} under-reports {truth}");
+            assert!(est <= truth * 1.15, "q{q}: {est} over-reports {truth}");
+        }
+        assert!((h.mean_ms() - 250.075).abs() < 0.05);
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_once() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 0..500 {
+            let v = 0.2 * (1 + i % 97) as f64;
+            if i % 2 == 0 {
+                a.record_ms(v);
+            } else {
+                b.record_ms(v);
+            }
+            all.record_ms(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.fingerprint(), all.fingerprint());
+        assert_eq!(a.p99_ms(), all.p99_ms());
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50_ms(), 0.0);
+        assert_eq!(h.p99_ms(), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.min_ms(), 0.0);
+    }
+
+    #[test]
+    fn max_clamps_quantiles() {
+        let mut h = LatencyHistogram::new();
+        h.record_ms(3.0);
+        // single sample: every quantile is exactly the sample
+        assert_eq!(h.p50_ms(), 3.0);
+        assert_eq!(h.p99_ms(), 3.0);
+    }
+}

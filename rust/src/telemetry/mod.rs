@@ -8,10 +8,12 @@
 
 pub mod exporter;
 pub mod fleet;
+pub mod latency;
 pub mod online;
 
 pub use exporter::{Exporter, MetricsSlot};
 pub use fleet::FleetStats;
+pub use latency::LatencyHistogram;
 pub use online::prometheus_text_online;
 
 use crate::workload::{WorkloadState, XorShift64};

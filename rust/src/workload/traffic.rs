@@ -114,6 +114,96 @@ pub fn arrival_times(
     out
 }
 
+/// One inference request — a *single frame* — in the open-loop stream
+/// the event-driven fleet core serves (DESIGN.md §10). `model_idx`
+/// indexes whatever model table the caller attaches (the fleet scenario
+/// resolves it against [`crate::models::load_variants`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub at_s: f64,
+    pub model_idx: usize,
+}
+
+/// Markov-modulated Poisson arrivals: a two-state (calm/burst)
+/// continuous-time chain with exponential sojourns modulates the
+/// instantaneous rate — `burst_factor` x the base rate inside bursts,
+/// and a calm-state rate chosen so the *time-averaged* rate stays at
+/// `mean_rate`. This is the request-level sharpening of the tick-era
+/// `Bursty` profile: storms now have random (memoryless) onsets and
+/// durations instead of a fixed on/off grid. Deterministic in `seed`.
+pub fn mmpp_times(
+    seed: u64,
+    horizon_s: f64,
+    mean_rate: f64,
+    burst_factor: f64,
+    mean_calm_s: f64,
+    mean_burst_s: f64,
+) -> Vec<f64> {
+    assert!(burst_factor >= 1.0 && mean_calm_s > 0.0 && mean_burst_s > 0.0);
+    let mut rng = XorShift64::new(seed ^ 0x4d4d_5050);
+    // stationary burst fraction + rate split preserving the mean
+    let f_burst = mean_burst_s / (mean_calm_s + mean_burst_s);
+    let r_burst = burst_factor * mean_rate;
+    let r_calm = ((mean_rate - r_burst * f_burst) / (1.0 - f_burst)).max(0.0);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    let mut bursting = false;
+    while t < horizon_s {
+        let mean_sojourn = if bursting { mean_burst_s } else { mean_calm_s };
+        let seg_end = (t - rng.next_f64().max(1e-12).ln() * mean_sojourn).min(horizon_s);
+        let rate = if bursting { r_burst } else { r_calm };
+        if rate > 0.0 {
+            let mut a = t;
+            loop {
+                a += -rng.next_f64().max(1e-12).ln() / rate;
+                if a >= seg_end {
+                    break;
+                }
+                out.push(a);
+            }
+        }
+        t = seg_end;
+        bursting = !bursting;
+    }
+    out
+}
+
+/// Open-loop per-frame request stream over `[0, horizon_s)` at an
+/// aggregate `rate_rps` requests/s split evenly across `n_models` model
+/// streams. Steady/Diurnal streams are Poisson (thinned against the
+/// profile's rate curve, [`arrival_times`]); Bursty streams are
+/// Markov-modulated ([`mmpp_times`]). Each model gets an independent
+/// seeded stream ("per model" arrivals); the merge is sorted by time
+/// with the model index as the deterministic tiebreak.
+pub fn request_stream(
+    pattern: ArrivalPattern,
+    seed: u64,
+    horizon_s: f64,
+    rate_rps: f64,
+    n_models: usize,
+) -> Vec<Request> {
+    assert!(n_models > 0, "request stream needs at least one model");
+    let per_model = rate_rps / n_models as f64;
+    let mut out: Vec<Request> = Vec::new();
+    for m in 0..n_models {
+        let sub_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(m as u64 + 1);
+        let times = match pattern {
+            ArrivalPattern::Bursty => mmpp_times(sub_seed, horizon_s, per_model, 5.0, 20.0, 5.0),
+            _ => arrival_times(pattern, sub_seed, horizon_s, per_model),
+        };
+        out.extend(times.into_iter().map(|at_s| Request { at_s, model_idx: m }));
+    }
+    out.sort_by(|a, b| {
+        a.at_s
+            .partial_cmp(&b.at_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.model_idx.cmp(&b.model_idx))
+    });
+    out
+}
+
 /// Per-board co-runner schedules over `[0, horizon_s)`: a fleet-wide
 /// state sequence (dwell `dwell_s` per segment) that each board follows
 /// with probability `correlation`, drawing an independent state
@@ -326,9 +416,9 @@ mod tests {
     }
 
     #[test]
-    fn same_seed_means_identical_job_streams() {
-        // determinism satellite: the full job stream (times, models,
-        // durations), not just arrival times, must reproduce per seed —
+    fn same_seed_means_identical_request_streams() {
+        // determinism satellite: the full request stream (times + model
+        // assignment), not just arrival times, must reproduce per seed —
         // for every arrival process
         use crate::coordinator::fleet::FleetScenario;
         for pattern in [
@@ -336,23 +426,82 @@ mod tests {
             ArrivalPattern::Diurnal,
             ArrivalPattern::Bursty,
         ] {
-            let a = FleetScenario::generate(pattern, 2, 200.0, 0.5, 8.0, 0.7, 21).unwrap();
-            let b = FleetScenario::generate(pattern, 2, 200.0, 0.5, 8.0, 0.7, 21).unwrap();
-            assert_eq!(a.jobs.len(), b.jobs.len(), "{pattern:?}");
-            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            let a = FleetScenario::generate(pattern, 2, 60.0, 10.0, 0.7, 21).unwrap();
+            let b = FleetScenario::generate(pattern, 2, 60.0, 10.0, 0.7, 21).unwrap();
+            assert_eq!(a.requests.len(), b.requests.len(), "{pattern:?}");
+            for (x, y) in a.requests.iter().zip(&b.requests) {
                 assert_eq!(x.at_s, y.at_s);
-                assert_eq!(x.duration_s, y.duration_s);
                 assert_eq!(x.model.name(), y.model.name());
             }
             assert_eq!(a.schedules, b.schedules, "{pattern:?} schedules");
             // and a different seed must actually change the stream
-            let c = FleetScenario::generate(pattern, 2, 200.0, 0.5, 8.0, 0.7, 22).unwrap();
+            let c = FleetScenario::generate(pattern, 2, 60.0, 10.0, 0.7, 22).unwrap();
             assert!(
-                a.jobs.len() != c.jobs.len()
-                    || a.jobs.iter().zip(&c.jobs).any(|(x, y)| x.at_s != y.at_s),
+                a.requests.len() != c.requests.len()
+                    || a
+                        .requests
+                        .iter()
+                        .zip(&c.requests)
+                        .any(|(x, y)| x.at_s != y.at_s),
                 "{pattern:?}: seed must matter"
             );
         }
+    }
+
+    #[test]
+    fn request_stream_is_sorted_deterministic_and_at_rate() {
+        for pattern in [
+            ArrivalPattern::Steady,
+            ArrivalPattern::Diurnal,
+            ArrivalPattern::Bursty,
+        ] {
+            let a = request_stream(pattern, 11, 300.0, 20.0, 8);
+            let b = request_stream(pattern, 11, 300.0, 20.0, 8);
+            assert_eq!(a, b, "{pattern:?} must be deterministic");
+            assert!(
+                a.windows(2).all(|w| w[0].at_s <= w[1].at_s),
+                "{pattern:?} sorted"
+            );
+            assert!(a.iter().all(|r| r.model_idx < 8));
+            // 20 req/s over 300 s -> ~6000 requests, generously bounded
+            let measured = a.len() as f64 / 300.0;
+            assert!(
+                (12.0..=28.0).contains(&measured),
+                "{pattern:?}: measured {measured:.1} req/s"
+            );
+            // every model stream contributes
+            let models: std::collections::HashSet<usize> =
+                a.iter().map(|r| r.model_idx).collect();
+            assert_eq!(models.len(), 8, "{pattern:?} covers all model streams");
+        }
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // index of dispersion (var/mean of per-window counts): ~1 for
+        // Poisson, well above 1 for the Markov-modulated stream
+        let dispersion = |times: &[f64], horizon: f64| {
+            let w = 2.0;
+            let n = (horizon / w) as usize;
+            let mut counts = vec![0f64; n];
+            for &t in times {
+                let i = ((t / w) as usize).min(n - 1);
+                counts[i] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / n as f64;
+            let var = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / n as f64;
+            var / mean.max(1e-9)
+        };
+        let horizon = 2000.0;
+        let poisson = arrival_times(ArrivalPattern::Steady, 5, horizon, 2.0);
+        let mmpp = mmpp_times(5, horizon, 2.0, 5.0, 20.0, 5.0);
+        let dp = dispersion(&poisson, horizon);
+        let dm = dispersion(&mmpp, horizon);
+        assert!(dp < 2.0, "Poisson dispersion {dp:.2}");
+        assert!(dm > 2.0 * dp, "MMPP dispersion {dm:.2} vs Poisson {dp:.2}");
+        // the long-run rate still averages out to the nominal mean
+        let rate = mmpp.len() as f64 / horizon;
+        assert!((1.4..=2.6).contains(&rate), "MMPP mean rate {rate:.2}");
     }
 
     #[test]

@@ -1,15 +1,19 @@
-//! Fleet-coordinator integration tests: aggregate-efficiency parity with
-//! independent single-board runs, the energy story of sleep states, and
+//! Fleet event-core integration tests: event-vs-tick parity and the
+//! idle-skipping speedup (the tentpole acceptance criteria), the SLO
+//! story (SLO-aware routing beating round-robin on p99 under bursty
+//! load), sleep-state energy economics, routing/policy determinism, and
 //! (artifact-gated) batched-vs-sequential agent equivalence.
 
 use dpuconfig::coordinator::fleet::{
-    FleetConfig, FleetCoordinator, FleetJob, FleetPolicy, FleetScenario, RoutingPolicy,
+    least_loaded_pick, FleetConfig, FleetCoordinator, FleetPolicy, FleetRequest, FleetScenario,
+    RoutingPolicy, RunMode, SloConfig,
 };
-use dpuconfig::coordinator::{Arrival, Coordinator, Scenario, Selector};
 use dpuconfig::data::load_models;
 use dpuconfig::models::ModelVariant;
+use dpuconfig::online::OnlineAgent;
 use dpuconfig::rl::Baseline;
 use dpuconfig::runtime::{default_policy_path, PolicyRuntime};
+use dpuconfig::testutil::forall;
 use dpuconfig::workload::traffic::ArrivalPattern;
 use dpuconfig::workload::WorkloadState;
 
@@ -24,79 +28,176 @@ fn variant(name: &str) -> ModelVariant {
     )
 }
 
-/// The satellite acceptance test: a 4-board fleet under uncorrelated,
-/// pre-partitioned load must land within tolerance of 4 independent
-/// single-board coordinator runs on aggregate energy efficiency.
-#[test]
-fn four_board_fleet_matches_independent_single_board_runs() {
-    let mix = ["ResNet18", "MobileNetV2", "InceptionV3", "ResNet50"];
-    let groups = 8usize;
-    let slot_s = 20.0;
-
-    // fleet: groups of 4 simultaneous jobs, round-robin -> board i always
-    // serves model mix[(k + i) % 4]
-    let mut jobs = Vec::new();
-    for k in 0..groups {
-        for i in 0..4 {
-            jobs.push(FleetJob {
-                model: variant(mix[(k + i) % 4]),
-                at_s: k as f64 * slot_s,
-                duration_s: slot_s,
-            });
-        }
+fn req(name: &str, at: f64) -> FleetRequest {
+    FleetRequest {
+        model: variant(name),
+        at_s: at,
     }
-    let scenario = FleetScenario {
-        jobs,
-        schedules: vec![vec![(0.0, WorkloadState::None)]; 4],
-        horizon_s: groups as f64 * slot_s,
-    };
-    let cfg = FleetConfig {
-        boards: 4,
-        routing: RoutingPolicy::RoundRobin,
-        idle_to_sleep_s: f64::INFINITY,
-        ..FleetConfig::default()
-    };
-    let mut fleet = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
-    let fleet_report = fleet.run(&scenario).unwrap();
-    assert_eq!(fleet_report.jobs_done(), (groups * 4) as u64);
-
-    // the same load as 4 independent single-board scenarios
-    let mut frames = 0.0;
-    let mut energy = 0.0;
-    for i in 0..4 {
-        let arrivals: Vec<Arrival> = (0..groups)
-            .map(|k| Arrival {
-                model: variant(mix[(k + i) % 4]),
-                at_s: k as f64 * slot_s,
-                duration_s: slot_s,
-            })
-            .collect();
-        let s = Scenario {
-            arrivals,
-            workload: vec![(0.0, WorkloadState::None)],
-            seed: 1,
-        };
-        let mut c = Coordinator::new(Selector::Static(Baseline::Optimal), 1).unwrap();
-        let r = c.run_scenario(&s).unwrap();
-        frames += r.totals.frames;
-        energy += r.totals.energy_fpga_j;
-    }
-    let single_ppw = frames / energy;
-    let fleet_ppw = fleet_report.serving_ppw();
-    let rel = (fleet_ppw / single_ppw - 1.0).abs();
-    assert!(
-        rel < 0.15,
-        "fleet {fleet_ppw:.3} vs 4x single-board {single_ppw:.3} fps/J (rel {rel:.3})"
-    );
 }
 
-/// Sleep states must pay off under trough-heavy traffic: same jobs, same
-/// decision policy — energy-aware routing with sleep beats the
+fn steady_schedules(boards: usize) -> Vec<Vec<(f64, WorkloadState)>> {
+    vec![vec![(0.0, WorkloadState::None)]; boards]
+}
+
+fn optimal_fleet(cfg: FleetConfig) -> FleetCoordinator {
+    FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap()
+}
+
+/// Tentpole acceptance #1: on a dense scenario the event-driven run and
+/// the fine-tick reference must agree on total frames and energy to
+/// 1e-6 (the tick grid only changes f64 summation order, never
+/// semantics).
+#[test]
+fn event_core_matches_fine_tick_on_dense_scenario() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, 2, 30.0, 30.0, 0.7, 11).unwrap();
+    let cfg = FleetConfig {
+        boards: 2,
+        tick_s: 0.05,
+        routing: RoutingPolicy::LeastLoaded,
+        seed: 11,
+        ..FleetConfig::default()
+    };
+    let ev = optimal_fleet(cfg.clone())
+        .run_mode(&scenario, RunMode::EventDriven)
+        .unwrap();
+    let tk = optimal_fleet(cfg)
+        .run_mode(&scenario, RunMode::FineTick)
+        .unwrap();
+
+    assert_eq!(ev.requests_done(), tk.requests_done());
+    assert_eq!(ev.requests_done() as usize, scenario.requests.len());
+    assert_eq!(ev.decisions, tk.decisions, "identical decision sequences");
+    let frames_rel = ((ev.total_frames() - tk.total_frames()) / tk.total_frames()).abs();
+    assert!(frames_rel < 1e-6, "frames diverge: rel {frames_rel:.3e}");
+    let energy_rel =
+        ((ev.total_energy_j() - tk.total_energy_j()) / tk.total_energy_j()).abs();
+    assert!(energy_rel < 1e-6, "energy diverges: rel {energy_rel:.3e}");
+    let serving_rel =
+        ((ev.serving_energy_j() - tk.serving_energy_j()) / tk.serving_energy_j()).abs();
+    assert!(serving_rel < 1e-6, "serving energy diverges: rel {serving_rel:.3e}");
+    // and per-request latency is identical, not just aggregates
+    assert_eq!(ev.latency().fingerprint(), tk.latency().fingerprint());
+}
+
+/// Tentpole acceptance #2: on a sparse/diurnal scenario the event core
+/// must execute at least 5x fewer loop iterations than the tick grid —
+/// idle time costs zero events.
+#[test]
+fn event_core_skips_idle_on_sparse_diurnal_scenario() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Diurnal, 4, 400.0, 0.4, 0.7, 12).unwrap();
+    assert!(!scenario.requests.is_empty());
+    let cfg = FleetConfig {
+        boards: 4,
+        tick_s: 0.05,
+        routing: RoutingPolicy::EnergyAware,
+        seed: 12,
+        ..FleetConfig::default()
+    };
+    let ev = optimal_fleet(cfg.clone())
+        .run_mode(&scenario, RunMode::EventDriven)
+        .unwrap();
+    let tk = optimal_fleet(cfg)
+        .run_mode(&scenario, RunMode::FineTick)
+        .unwrap();
+
+    assert_eq!(ev.requests_done(), tk.requests_done());
+    assert!(
+        ev.events * 5 <= tk.events,
+        "event core must run >=5x fewer iterations: {} events vs {} ticks+events",
+        ev.events,
+        tk.events
+    );
+    // parity holds on the sparse scenario too
+    let frames_rel = ((ev.total_frames() - tk.total_frames()) / tk.total_frames()).abs();
+    assert!(frames_rel < 1e-6, "frames diverge: rel {frames_rel:.3e}");
+    let energy_rel =
+        ((ev.total_energy_j() - tk.total_energy_j()) / tk.total_energy_j()).abs();
+    assert!(energy_rel < 1e-6, "energy diverges: rel {energy_rel:.3e}");
+}
+
+/// Tentpole acceptance #3: the SLO-aware router beats round-robin on
+/// p99 in a bursty scenario. The discriminator is warm-board awareness:
+/// a request storm lands while one board is warm (configured, awake)
+/// and the rest sleep; round-robin blindly spreads the storm across
+/// sleepers (paying wake + full reconfiguration per board), the
+/// SLO-aware router absorbs it on the warm board whose predicted queue
+/// wait stays far below the wake path.
+#[test]
+fn slo_router_beats_round_robin_on_p99_in_bursty_storm() {
+    // warmups keep board 0 configured for MobileNetV2; the storm of 12
+    // requests arrives 4 s after the other boards fell asleep
+    let mut requests = vec![
+        req("MobileNetV2", 0.0),
+        req("MobileNetV2", 3.0),
+        req("MobileNetV2", 6.0),
+    ];
+    for i in 0..12 {
+        requests.push(req("MobileNetV2", 10.0 + i as f64 * 0.001));
+    }
+    let scenario = FleetScenario {
+        requests,
+        schedules: steady_schedules(4),
+        horizon_s: 30.0,
+    };
+    let run = |routing: RoutingPolicy| {
+        let cfg = FleetConfig {
+            boards: 4,
+            routing,
+            idle_to_sleep_s: 5.0,
+            seed: 3,
+            slo: SloConfig {
+                default_ms: 500.0,
+                per_model: vec![],
+            },
+            ..FleetConfig::default()
+        };
+        optimal_fleet(cfg).run(&scenario).unwrap()
+    };
+    let slo = run(RoutingPolicy::SloAware);
+    let rr = run(RoutingPolicy::RoundRobin);
+
+    assert_eq!(slo.requests_done(), 15);
+    assert_eq!(rr.requests_done(), 15);
+    assert_eq!(slo.dropped, 0);
+
+    let slo_p99 = slo.latency().p99_ms();
+    let rr_p99 = rr.latency().p99_ms();
+    assert!(slo_p99 > 0.0);
+    assert!(
+        slo_p99 < rr_p99,
+        "SLO-aware p99 {slo_p99:.1} ms must beat round-robin {rr_p99:.1} ms"
+    );
+    // the win comes from where it should: round-robin woke sleepers into
+    // the storm, the SLO-aware router kept them napping
+    let slo_wakes: u64 = slo.boards.iter().map(|b| b.wakes).sum();
+    let rr_wakes: u64 = rr.boards.iter().map(|b| b.wakes).sum();
+    assert_eq!(slo_wakes, 0, "warm board absorbs the whole storm");
+    assert!(rr_wakes >= 2, "round-robin must have woken sleepers");
+    // and the SLO ledger shows it: only the cold-start warmup violates
+    // under SLO-aware routing, while round-robin blows the target on
+    // every wake+reconfigure path
+    assert!(
+        slo.slo_violations() <= 2,
+        "slo_aware violations: {}",
+        slo.slo_violations()
+    );
+    assert!(
+        rr.slo_violations() >= 6,
+        "round_robin violations: {}",
+        rr.slo_violations()
+    );
+    assert!(slo.slo_violations() < rr.slo_violations());
+}
+
+/// Sleep states must pay off under trough-heavy traffic: same requests,
+/// same decision policy — energy-aware routing with sleep beats the
 /// always-on round-robin deployment on fleet-level frames/J.
 #[test]
 fn sleeping_fleet_beats_always_on_fleet_under_diurnal_load() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Diurnal, 4, 300.0, 0.25, 8.0, 0.8, 17).unwrap();
+        FleetScenario::generate(ArrivalPattern::Diurnal, 4, 300.0, 2.0, 0.8, 17).unwrap();
 
     let managed_cfg = FleetConfig {
         boards: 4,
@@ -105,9 +206,7 @@ fn sleeping_fleet_beats_always_on_fleet_under_diurnal_load() {
         seed: 17,
         ..FleetConfig::default()
     };
-    let mut managed =
-        FleetCoordinator::new(managed_cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
-    let m = managed.run(&scenario).unwrap();
+    let m = optimal_fleet(managed_cfg).run(&scenario).unwrap();
 
     let always_on_cfg = FleetConfig {
         boards: 4,
@@ -116,11 +215,13 @@ fn sleeping_fleet_beats_always_on_fleet_under_diurnal_load() {
         seed: 17,
         ..FleetConfig::default()
     };
-    let mut always_on =
-        FleetCoordinator::new(always_on_cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
-    let a = always_on.run(&scenario).unwrap();
+    let a = optimal_fleet(always_on_cfg).run(&scenario).unwrap();
 
-    assert_eq!(m.jobs_done(), a.jobs_done(), "both fleets drain the stream");
+    assert_eq!(
+        m.requests_done(),
+        a.requests_done(),
+        "both fleets drain the stream"
+    );
     assert!(
         m.fleet_ppw() > a.fleet_ppw(),
         "managed {:.3} fps/J must beat always-on {:.3} fps/J",
@@ -130,19 +231,156 @@ fn sleeping_fleet_beats_always_on_fleet_under_diurnal_load() {
     // and the win comes from where it should: less awake-idle energy
     let m_idle: f64 = m.boards.iter().map(|b| b.energy.idle_j).sum();
     let a_idle: f64 = a.boards.iter().map(|b| b.energy.idle_j).sum();
-    assert!(m_idle < a_idle, "managed idle {m_idle:.0} J vs always-on {a_idle:.0} J");
+    assert!(
+        m_idle < a_idle,
+        "managed idle {m_idle:.0} J vs always-on {a_idle:.0} J"
+    );
 }
 
-/// Batched fleet decisions must agree with the sequential agent and use
-/// fewer forward passes (requires `make artifacts`).
+/// Determinism satellite: same seed + scenario => identical FleetReport
+/// for every RoutingPolicy x FleetPolicy combination.
+#[test]
+fn same_seed_same_report_for_every_routing_and_policy() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 3, 30.0, 8.0, 0.7, 9).unwrap();
+    let fingerprint = |routing: RoutingPolicy, policy: &str| -> String {
+        let cfg = FleetConfig {
+            boards: 3,
+            routing,
+            idle_to_sleep_s: 5.0,
+            seed: 9,
+            ..FleetConfig::default()
+        };
+        let fleet_policy = match policy {
+            "optimal" => FleetPolicy::Static(Baseline::Optimal),
+            "max_fps" => FleetPolicy::Static(Baseline::MaxFps),
+            "min_power" => FleetPolicy::Static(Baseline::MinPower),
+            "random" => FleetPolicy::Static(Baseline::Random),
+            "online" => FleetPolicy::Online(Box::new(
+                OnlineAgent::load_default(9).expect("committed policy weights"),
+            )),
+            other => panic!("unknown test policy {other}"),
+        };
+        FleetCoordinator::new(cfg, fleet_policy)
+            .unwrap()
+            .run(&scenario)
+            .unwrap()
+            .fingerprint()
+    };
+    for routing in RoutingPolicy::all() {
+        for policy in ["optimal", "max_fps", "min_power", "random", "online"] {
+            let a = fingerprint(routing, policy);
+            let b = fingerprint(routing, policy);
+            assert_eq!(
+                a, b,
+                "{policy} x {} must be deterministic per seed",
+                routing.name()
+            );
+        }
+    }
+}
+
+/// Determinism satellite (property half): least-loaded tie-breaking is
+/// stable by board index — the minimum backlog wins and exact ties
+/// resolve to the lowest index, for arbitrary backlog vectors.
+#[test]
+fn prop_least_loaded_tie_breaks_by_lowest_index() {
+    forall(77, 300, |g, _| {
+        let n = 1 + g.usize(8);
+        // coarse values make ties frequent
+        let backlogs: Vec<f64> = (0..n).map(|_| g.usize(4) as f64).collect();
+        let pick = least_loaded_pick(&backlogs).unwrap();
+        let min = backlogs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(backlogs[pick], min, "{backlogs:?} picked {pick}");
+        assert!(
+            backlogs[..pick].iter().all(|&b| b > min),
+            "{backlogs:?}: pick {pick} is not the lowest tied index"
+        );
+    });
+    assert_eq!(least_loaded_pick(&[]), None);
+}
+
+/// End-to-end property: under least-loaded routing, a request arriving
+/// when every board is idle and empty lands on board 0 (the tie-break
+/// made observable).
+#[test]
+fn first_request_lands_on_board_zero_under_least_loaded() {
+    for seed in [1u64, 5, 23] {
+        let scenario = FleetScenario {
+            requests: vec![req("ResNet18", 0.0)],
+            schedules: steady_schedules(3),
+            horizon_s: 10.0,
+        };
+        let cfg = FleetConfig {
+            boards: 3,
+            routing: RoutingPolicy::LeastLoaded,
+            seed,
+            ..FleetConfig::default()
+        };
+        let r = optimal_fleet(cfg).run(&scenario).unwrap();
+        assert_eq!(r.boards[0].requests_done, 1, "seed {seed}");
+        assert_eq!(r.trails[0].board, 0, "seed {seed}");
+    }
+}
+
+/// Per-request trails are causally ordered and complete, and per-model
+/// histograms partition the fleet histogram.
+#[test]
+fn trails_and_model_histograms_are_consistent() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, 2, 20.0, 10.0, 0.5, 21).unwrap();
+    let cfg = FleetConfig {
+        boards: 2,
+        routing: RoutingPolicy::SloAware,
+        seed: 21,
+        ..FleetConfig::default()
+    };
+    let r = optimal_fleet(cfg).run(&scenario).unwrap();
+    assert_eq!(r.requests_done() as usize, scenario.requests.len());
+    for (i, trail) in r.trails.iter().enumerate() {
+        assert!(trail.board < 2, "request {i} routed");
+        assert!(trail.at_s >= 0.0);
+        assert!(trail.start_s >= trail.at_s, "request {i} starts after arrival");
+        assert!(trail.done_s > trail.start_s, "request {i} finishes after start");
+    }
+    let by_model_total: u64 = r.by_model.iter().map(|m| m.done).sum();
+    assert_eq!(by_model_total, r.requests_done());
+    let by_model_viol: u64 = r.by_model.iter().map(|m| m.violations).sum();
+    assert_eq!(by_model_viol, r.slo_violations());
+    assert!(r.latency().count() == r.requests_done());
+}
+
+/// Batched fleet decisions must agree with the sequential agent
+/// (requires `make artifacts`). Simultaneous arrivals form same-instant
+/// decision cohorts, so the batched artifact uses no more forward
+/// passes than the sequential one while choosing identical actions.
 #[test]
 fn batched_fleet_decisions_match_sequential_agent() {
     if !default_policy_path(8).exists() || !default_policy_path(1).exists() {
         eprintln!("SKIP: policy artifacts missing — run `make artifacts`");
         return;
     }
-    let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 6, 60.0, 0.5, 6.0, 0.5, 5).unwrap();
+    // six different models arriving at the same instant on six boards:
+    // one decision cohort per wave
+    let names = [
+        "ResNet18",
+        "ResNet50",
+        "MobileNetV2",
+        "InceptionV3",
+        "ResNet152",
+        "ResNeXt50_32x4d",
+    ];
+    let mut requests = Vec::new();
+    for wave in 0..4 {
+        for name in names {
+            requests.push(req(name, wave as f64 * 5.0));
+        }
+    }
+    let scenario = FleetScenario {
+        requests,
+        schedules: steady_schedules(6),
+        horizon_s: 40.0,
+    };
     let run_with = |batch: usize| {
         let rt = PolicyRuntime::load(&default_policy_path(batch), batch).unwrap();
         let cfg = FleetConfig {
@@ -151,14 +389,16 @@ fn batched_fleet_decisions_match_sequential_agent() {
             seed: 5,
             ..FleetConfig::default()
         };
-        let mut fleet = FleetCoordinator::new(cfg, FleetPolicy::Agent(rt)).unwrap();
-        fleet.run(&scenario).unwrap()
+        FleetCoordinator::new(cfg, FleetPolicy::Agent(rt))
+            .unwrap()
+            .run(&scenario)
+            .unwrap()
     };
     let batched = run_with(8);
     let sequential = run_with(1);
     assert_eq!(batched.decisions, sequential.decisions);
     assert!(
-        batched.decision_batches < sequential.decision_batches,
+        batched.decision_batches <= sequential.decision_batches,
         "batched {} passes vs sequential {}",
         batched.decision_batches,
         sequential.decision_batches

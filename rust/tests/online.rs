@@ -243,7 +243,7 @@ fn serving_loop_closes_the_feedback_loop_under_drift() {
 #[test]
 fn fleet_shares_one_online_policy() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 3, 120.0, 0.5, 6.0, 0.7, 5).unwrap();
+        FleetScenario::generate(ArrivalPattern::Steady, 3, 60.0, 10.0, 0.7, 5).unwrap();
     let cfg = FleetConfig {
         boards: 3,
         seed: 5,
@@ -253,14 +253,14 @@ fn fleet_shares_one_online_policy() {
     let mut fleet = FleetCoordinator::new(cfg, FleetPolicy::Online(Box::new(agent))).unwrap();
     let report = fleet.run(&scenario).unwrap();
     assert_eq!(report.policy, "online");
-    assert!(report.jobs_done() > 0);
+    assert!(report.requests_done() > 0);
     let stats = fleet.policy().online_stats().expect("online fleet policy");
     assert_eq!(
         stats.decisions, report.decisions,
         "all boards' decisions flow through the one shared agent"
     );
-    // multiple boards decided in the same ticks: fewer ticks than
-    // decisions proves cross-board sharing, not N isolated agents
+    // several boards served the stream, yet every decision above flowed
+    // through the single shared agent — not N isolated agents
     assert!(report.boards.len() > 1);
 }
 
