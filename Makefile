@@ -4,7 +4,7 @@
 
 PY := python3
 
-.PHONY: artifacts data test rust-test py-test bench-fleet clean
+.PHONY: artifacts data test rust-test py-test bench-fleet bench-check clean
 
 # Train the agent and export artifacts/policy.hlo.txt (+ batched b8,
 # metadata, and the full measurement table).
@@ -26,12 +26,21 @@ rust-test:
 py-test:
 	cd python && $(PY) -m pytest tests -q
 
-# Fleet event-core bench in smoke mode: event-driven vs the fine-tick
-# reference (iterations, wall-clock, parity) -> BENCH_fleet.json.
+# Fleet bench in smoke mode: event-driven vs the fine-tick reference
+# (iterations, wall-clock, parity) plus sharded-executor thread scaling
+# at 1/2/4 workers -> BENCH_fleet.json.
 # `make bench-fleet FLEET_BENCH_FLAGS=--full` for the long variant.
 bench-fleet:
 	cargo run --release -- fleet-bench --out BENCH_fleet.json $(FLEET_BENCH_FLAGS)
 	@cat BENCH_fleet.json
+
+# Perf-regression gate: re-measure and fail (exit nonzero) if events/sec
+# dropped >20% vs the committed BENCH_fleet.json, parity rel-err exceeds
+# 1e-6, or the 4-thread scaling floor is missed. Writes the fresh
+# numbers next to the baseline without overwriting it.
+bench-check:
+	cargo run --release -- fleet-bench --out BENCH_fleet.new.json \
+		--check-against BENCH_fleet.json
 
 clean:
 	rm -rf target artifacts

@@ -16,6 +16,11 @@
 //! latency with SLO violations, and the aggregate energy-efficiency +
 //! tail-latency comparison.
 //!
+//! The managed fleet runs on the sharded multi-threaded executor
+//! (DESIGN.md §11) at the host's available parallelism — the example
+//! cross-checks that its report fingerprint is byte-identical to a
+//! 1-thread run before trusting the numbers.
+//!
 //! ```bash
 //! cargo run --release --example fleet_serving
 //! ```
@@ -67,7 +72,11 @@ fn main() -> anyhow::Result<()> {
             scenario.requests.len()
         );
 
-        // managed fleet: SLO-aware routing + sleep states + RL policy
+        // managed fleet: SLO-aware routing + sleep states + RL policy,
+        // on the sharded executor at full host parallelism
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
         let managed_cfg = FleetConfig {
             boards: BOARDS,
             routing: RoutingPolicy::SloAware,
@@ -75,9 +84,20 @@ fn main() -> anyhow::Result<()> {
             slo: slo(),
             ..FleetConfig::default()
         };
-        let mut managed = FleetCoordinator::new(managed_cfg, managed_policy()?)?;
-        let managed_report = managed.run(&scenario)?;
+        let mut managed = FleetCoordinator::new(managed_cfg.clone(), managed_policy()?)?;
+        let managed_report = managed.run_threads(&scenario, threads)?;
         print!("{}", managed_report.render());
+        let mut single = FleetCoordinator::new(managed_cfg, managed_policy()?)?;
+        let single_report = single.run_threads(&scenario, 1)?;
+        assert_eq!(
+            managed_report.fingerprint(),
+            single_report.fingerprint(),
+            "sharded determinism: {threads}-thread and 1-thread runs must agree byte-for-byte"
+        );
+        println!(
+            "determinism: {threads}-thread fingerprint identical to 1-thread ({} events)",
+            managed_report.events
+        );
 
         // static-best baseline: provision for peak, never sleep
         let baseline_cfg = FleetConfig {

@@ -53,6 +53,20 @@ pub struct QueueContext {
     pub headroom_s: f64,
 }
 
+impl QueueContext {
+    /// Context for a board's head request: `waited_s` is how long the
+    /// head has already queued, `slo_s` its latency target. The one
+    /// place that encodes headroom = target − accrued wait, shared by
+    /// the single-queue and sharded decision paths.
+    pub fn for_head(depth: usize, backlog_s: f64, slo_s: f64, waited_s: f64) -> QueueContext {
+        QueueContext {
+            depth,
+            backlog_s,
+            headroom_s: slo_s - waited_s,
+        }
+    }
+}
+
 /// One decision with its provenance.
 #[derive(Debug, Clone)]
 pub struct Decision {

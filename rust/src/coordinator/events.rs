@@ -121,6 +121,12 @@ impl EventQueue {
         self.heap.peek()
     }
 
+    /// Timestamp of the earliest scheduled event, if any — what the
+    /// sharded executor's drain loop compares against its horizon.
+    pub fn next_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.t_s)
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }

@@ -53,7 +53,7 @@ use crate::rl::reward::{Outcome, RewardCalculator};
 use crate::rl::{Baseline, Featurizer};
 use crate::runtime::PolicyRuntime;
 use crate::telemetry::latency::LatencyHistogram;
-use crate::telemetry::{PlatformState, Sampler};
+use crate::telemetry::{PlatformState, Sample, Sampler};
 use crate::workload::traffic::{correlated_schedules, request_stream, state_at, ArrivalPattern};
 use crate::workload::{WorkloadState, XorShift64};
 use anyhow::Result;
@@ -220,6 +220,10 @@ pub struct FleetConfig {
     pub seed: u64,
     /// Per-model request-latency targets.
     pub slo: SloConfig,
+    /// Override of the serving loop's event budget (`None` = the
+    /// scenario-derived formula). Exceeding the budget is an error naming
+    /// the stuck board — the knob exists so tests can pin that path.
+    pub event_budget: Option<u64>,
 }
 
 impl Default for FleetConfig {
@@ -233,6 +237,7 @@ impl Default for FleetConfig {
             routing: RoutingPolicy::EnergyAware,
             seed: 1,
             slo: SloConfig::default(),
+            event_budget: None,
         }
     }
 }
@@ -324,8 +329,11 @@ pub struct RequestTrail {
 }
 
 /// What one board is doing right now (power/accounting regime).
+///
+/// `pub(crate)` so the sharded executor ([`crate::coordinator::shard`])
+/// can drive the same per-board state machine from worker threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Phase {
+pub(crate) enum Phase {
     /// Low-power state; exit pays wake latency + full reconfiguration.
     Sleeping,
     /// Paying the sleep-exit latency.
@@ -342,57 +350,59 @@ enum Phase {
 
 /// One queued request on a board (head = in service or next up).
 #[derive(Debug, Clone)]
-struct QueuedReq {
-    req: usize,
-    model: ModelVariant,
-    at_s: f64,
+pub(crate) struct QueuedReq {
+    pub(crate) req: usize,
+    pub(crate) model: ModelVariant,
+    pub(crate) at_s: f64,
 }
 
 /// One board: the per-board halves of the single-board coordinator plus
-/// the fleet power-state machine and latency accounting.
-struct Board {
-    reconfig: ReconfigManager,
-    sampler: Sampler,
-    rewards: RewardCalculator,
-    phase: Phase,
+/// the fleet power-state machine and latency accounting. Shared with the
+/// sharded executor, which moves boards onto worker threads between
+/// coordination barriers (every field is plain owned data — `Send`).
+pub(crate) struct Board {
+    pub(crate) reconfig: ReconfigManager,
+    pub(crate) sampler: Sampler,
+    pub(crate) rewards: RewardCalculator,
+    pub(crate) phase: Phase,
     /// Power drawn in the current phase (W) — energy integrates lazily
     /// between events at this constant power.
-    phase_power_w: f64,
+    pub(crate) phase_power_w: f64,
     /// Energy/time integrated up to this simulated instant.
-    last_t: f64,
+    pub(crate) last_t: f64,
     /// When the current frame/overhead/wake completes.
-    busy_until: f64,
-    queue: VecDeque<QueuedReq>,
+    pub(crate) busy_until: f64,
+    pub(crate) queue: VecDeque<QueuedReq>,
     /// Chosen action for (head model, state), if still valid.
-    decided: Option<(usize, String, WorkloadState)>,
+    pub(crate) decided: Option<(usize, String, WorkloadState)>,
     /// A DecisionDue event is already scheduled for this board.
-    decision_pending: bool,
+    pub(crate) decision_pending: bool,
     /// Invalidates SleepTimer events from earlier idle episodes.
-    idle_epoch: u64,
-    serving_meets: bool,
+    pub(crate) idle_epoch: u64,
+    pub(crate) serving_meets: bool,
     /// Occupancy-derived observation inputs (what a node exporter would
     /// measure *now*): DPU DDR traffic, host coordination CPU, PL power.
-    obs_traffic_bps: f64,
-    obs_host_util: f64,
-    obs_p_fpga: f64,
+    pub(crate) obs_traffic_bps: f64,
+    pub(crate) obs_host_util: f64,
+    pub(crate) obs_p_fpga: f64,
     /// Telemetry snapshot at the last decision (reward bookkeeping).
-    last_cpu: f64,
-    last_mem_gbs: f64,
+    pub(crate) last_cpu: f64,
+    pub(crate) last_mem_gbs: f64,
     // accounting
-    totals: Totals,
-    energy: EnergyMeter,
-    wakes: u64,
-    requests_done: u64,
-    slo_violations: u64,
-    latency: LatencyHistogram,
-    reward_sum: f64,
-    reward_n: u64,
-    qdepth_sum: u64,
-    late_decisions: u64,
+    pub(crate) totals: Totals,
+    pub(crate) energy: EnergyMeter,
+    pub(crate) wakes: u64,
+    pub(crate) requests_done: u64,
+    pub(crate) slo_violations: u64,
+    pub(crate) latency: LatencyHistogram,
+    pub(crate) reward_sum: f64,
+    pub(crate) reward_n: u64,
+    pub(crate) qdepth_sum: u64,
+    pub(crate) late_decisions: u64,
 }
 
 /// Integrate the board's current regime from `last_t` to `t`.
-fn advance(b: &mut Board, t: f64) {
+pub(crate) fn advance(b: &mut Board, t: f64) {
     let dt = t - b.last_t;
     if dt <= 0.0 {
         return;
@@ -418,6 +428,32 @@ fn advance(b: &mut Board, t: f64) {
         Phase::Idle | Phase::Holding => b.energy.add_idle(b.phase_power_w, dt),
     }
     b.last_t = t;
+}
+
+/// Roll a finished [`Board`] into its report slice. Shared by the
+/// single-queue loop and the sharded executor so derived statistics
+/// (mean reward, mean decision queue depth) are computed identically.
+pub(crate) fn finish_board(i: usize, mut b: Board) -> BoardReport {
+    if b.reward_n > 0 {
+        b.totals.mean_reward = b.reward_sum / b.reward_n as f64;
+    }
+    let mean_depth = if b.totals.decisions > 0 {
+        b.qdepth_sum as f64 / b.totals.decisions as f64
+    } else {
+        0.0
+    };
+    BoardReport {
+        board: i,
+        queue_left: b.queue.len(),
+        totals: b.totals,
+        energy: b.energy,
+        wakes: b.wakes,
+        requests_done: b.requests_done,
+        slo_violations: b.slo_violations,
+        latency: b.latency,
+        mean_decision_queue_depth: mean_depth,
+        late_decisions: b.late_decisions,
+    }
 }
 
 /// Per-board slice of the fleet report.
@@ -453,6 +489,11 @@ pub struct FleetReport {
     pub policy: &'static str,
     pub routing: RoutingPolicy,
     pub mode: RunMode,
+    /// Host worker threads the run executed on (1 for the single-queue
+    /// reference path). Deliberately NOT part of [`Self::fingerprint`]:
+    /// the determinism contract is that the fingerprint is byte-identical
+    /// for every thread count.
+    pub threads: usize,
     pub boards: Vec<BoardReport>,
     /// Loop iterations: events popped from the queue. The number the
     /// event core is judged on against the fine-tick reference.
@@ -521,12 +562,10 @@ impl FleetReport {
     }
 
     /// Fleet-wide request-latency histogram (all boards, all models).
+    /// Merged in board-index order so the result is independent of how
+    /// boards were sharded across worker threads.
     pub fn latency(&self) -> LatencyHistogram {
-        let mut h = LatencyHistogram::new();
-        for b in &self.boards {
-            h.merge(&b.latency);
-        }
-        h
+        LatencyHistogram::merged(self.boards.iter().map(|b| &b.latency))
     }
 
     /// Latency histogram of one model, if any of its requests completed.
@@ -652,20 +691,79 @@ impl FleetReport {
     }
 }
 
-/// One pending configuration decision in a batch.
-struct DecisionRequest {
-    board: usize,
-    model: ModelVariant,
-    obs: [f32; OBS_DIM],
-    state: WorkloadState,
-    queue: QueueContext,
+/// One pending configuration decision in a batch (shared with the
+/// sharded executor, which assembles cohorts sorted by board index).
+pub(crate) struct DecisionRequest {
+    pub(crate) board: usize,
+    pub(crate) model: ModelVariant,
+    pub(crate) obs: [f32; OBS_DIM],
+    pub(crate) state: WorkloadState,
+    pub(crate) queue: QueueContext,
+}
+
+/// What one decision consumed from the platform: workload state, the
+/// head request's model, queue context, and the telemetry sample taken
+/// at the decision instant.
+pub(crate) struct DecisionObservation {
+    pub(crate) state: WorkloadState,
+    pub(crate) head_model: ModelVariant,
+    pub(crate) queue: QueueContext,
+    pub(crate) sample: Sample,
+}
+
+/// The decision-instant observation sequence shared — in bit-exact
+/// lockstep — by the single-queue decide path and both sharded decision
+/// paths (inline static + coordinator cohort): estimate the queue
+/// backlog, build the head request's [`QueueContext`], sample telemetry
+/// from the board's occupancy-derived platform state, and record the
+/// reward-context snapshot (`last_cpu`/`last_mem_gbs`) plus queue-depth
+/// bookkeeping. `est` estimates per-frame service seconds for
+/// (model, state) through the caller's cache. Caller contract: the
+/// board's queue is non-empty.
+pub(crate) fn observe_for_decision(
+    b: &mut Board,
+    schedule: &[(f64, WorkloadState)],
+    slo: &SloConfig,
+    p_arm_base: f64,
+    t: f64,
+    mut est: impl FnMut(&ModelVariant, WorkloadState) -> Result<f64>,
+) -> Result<DecisionObservation> {
+    let state = state_at(schedule, t);
+    let (head_model, head_at) = {
+        let head = b.queue.front().expect("non-empty queue");
+        (head.model.clone(), head.at_s)
+    };
+    let depth = b.queue.len();
+    let mut backlog = 0.0;
+    for q in b.queue.iter() {
+        backlog += est(&q.model, state)?;
+    }
+    let slo_s = slo.target_ms(&head_model.name()) * 1e-3;
+    let queue = QueueContext::for_head(depth, backlog, slo_s, t - head_at);
+    let platform = PlatformState {
+        workload: state,
+        dpu_traffic_bps: b.obs_traffic_bps,
+        host_cpu_util: b.obs_host_util,
+        p_fpga: b.obs_p_fpga,
+        p_arm: p_arm_base,
+    };
+    let sample = b.sampler.sample((t * 1e6) as u64, &platform);
+    b.last_cpu = sample.cpu_mean();
+    b.last_mem_gbs = sample.mem_total_gbs();
+    b.qdepth_sum += depth as u64;
+    Ok(DecisionObservation {
+        state,
+        head_model,
+        queue,
+        sample,
+    })
 }
 
 /// Per-model latency accumulator during a run.
-struct ModelAcc {
-    hist: LatencyHistogram,
-    violations: u64,
-    done: u64,
+pub(crate) struct ModelAcc {
+    pub(crate) hist: LatencyHistogram,
+    pub(crate) violations: u64,
+    pub(crate) done: u64,
 }
 
 /// Mutable state of one `run_mode` invocation, bundled so helpers stay
@@ -685,24 +783,27 @@ struct RunState<'a> {
     sleep_w: f64,
 }
 
-/// The fleet coordinator itself.
+/// The fleet coordinator itself. Fields are `pub(crate)` because the
+/// sharded executor in [`crate::coordinator::shard`] is an alternate
+/// serving loop over the same state (main-thread halves only — nothing
+/// here ever crosses a thread boundary).
 pub struct FleetCoordinator {
-    sim: DpuSim,
-    policy: FleetPolicy,
-    config: FleetConfig,
-    featurizer: Featurizer,
-    rng: XorShift64,
-    rr_cursor: usize,
+    pub(crate) sim: DpuSim,
+    pub(crate) policy: FleetPolicy,
+    pub(crate) config: FleetConfig,
+    pub(crate) featurizer: Featurizer,
+    pub(crate) rng: XorShift64,
+    pub(crate) rr_cursor: usize,
     /// Fleet-level Algorithm-1 bookkeeping for the shared online agent's
     /// feedback stream.
-    online_rewards: RewardCalculator,
+    pub(crate) online_rewards: RewardCalculator,
     /// (model, action, state) -> steady-state metrics. The event core
     /// looks service times up once per combination instead of once per
     /// tick.
-    metrics_cache: HashMap<(String, usize, WorkloadState), Metrics>,
+    pub(crate) metrics_cache: HashMap<(String, usize, WorkloadState), Metrics>,
     /// (model, state) -> estimated per-frame service time under the
     /// best feasible configuration (the routing predictor's unit).
-    est_cache: HashMap<(String, WorkloadState), f64>,
+    pub(crate) est_cache: HashMap<(String, WorkloadState), f64>,
 }
 
 impl FleetCoordinator {
@@ -732,49 +833,113 @@ impl FleetCoordinator {
         &self.policy
     }
 
-    /// Steady-state metrics of (model, action, state), memoized.
-    fn metrics_for(
+    /// Build board `i`'s initial state. One constructor shared by the
+    /// single-queue loop and the sharded executor so both start from
+    /// bit-identical boards (same per-board sampler seed split).
+    pub(crate) fn mk_board(&self, i: usize, p_static: f64) -> Board {
+        Board {
+            reconfig: ReconfigManager::new(),
+            sampler: Sampler::from_calibration(
+                self.config.seed ^ (0xb0a2d + i as u64),
+                self.sim.calibration(),
+            ),
+            rewards: RewardCalculator::new(),
+            phase: Phase::Idle,
+            phase_power_w: p_static,
+            last_t: 0.0,
+            busy_until: 0.0,
+            queue: VecDeque::new(),
+            decided: None,
+            decision_pending: false,
+            idle_epoch: 0,
+            serving_meets: true,
+            obs_traffic_bps: 0.0,
+            obs_host_util: 0.0,
+            obs_p_fpga: p_static,
+            last_cpu: 0.0,
+            last_mem_gbs: 0.0,
+            totals: Totals::default(),
+            energy: EnergyMeter::new(),
+            wakes: 0,
+            requests_done: 0,
+            slo_violations: 0,
+            latency: LatencyHistogram::new(),
+            reward_sum: 0.0,
+            reward_n: 0,
+            qdepth_sum: 0,
+            late_decisions: 0,
+        }
+    }
+
+    /// The serving loop's event budget for `scenario` (a generous
+    /// per-source bound; exceeding it is an error naming the stuck board,
+    /// never a silent truncation). `FleetConfig::event_budget` overrides.
+    pub(crate) fn event_budget_for(&self, scenario: &FleetScenario, mode: RunMode) -> u64 {
+        if let Some(b) = self.config.event_budget {
+            return b;
+        }
+        let sched_points: usize = scenario.schedules.iter().map(|s| s.len()).sum();
+        let mut budget: u64 = 4096
+            + 64u64.saturating_mul(scenario.requests.len() as u64)
+            + 8 * sched_points as u64
+            + 16 * self.config.boards as u64;
+        if mode == RunMode::FineTick {
+            let drain_bound = scenario.horizon_s + 1.2 * scenario.requests.len() as f64 + 16.0;
+            budget = budget
+                .saturating_add((drain_bound / self.config.tick_s.max(1e-6)) as u64)
+                .saturating_add(64);
+        }
+        budget
+    }
+
+    /// Steady-state metrics of (model, action, state), memoized in the
+    /// coordinator's cache (one cache-parameterized implementation in
+    /// [`crate::coordinator::shard`] serves both executors).
+    pub(crate) fn metrics_for(
         &mut self,
         model: &ModelVariant,
         action_id: usize,
         state: WorkloadState,
     ) -> Result<Metrics> {
-        let key = (model.name(), action_id, state);
-        if let Some(m) = self.metrics_cache.get(&key) {
-            return Ok(*m);
-        }
-        let (size, instances) = {
-            let a = &self.sim.actions()[action_id];
-            (a.size.clone(), a.instances)
-        };
-        let m = self.sim.evaluate(model, &size, instances, state)?;
-        self.metrics_cache.insert(key, m);
-        Ok(m)
+        crate::coordinator::shard::metrics_cached(
+            &self.sim,
+            &mut self.metrics_cache,
+            model,
+            action_id,
+            state,
+        )
     }
 
     /// Estimated per-frame service time of `model` under `state` (the
     /// oracle-best configuration's throughput), memoized.
-    fn est_service_s(&mut self, model: &ModelVariant, state: WorkloadState) -> Result<f64> {
-        let key = (model.name(), state);
-        if let Some(v) = self.est_cache.get(&key) {
-            return Ok(*v);
-        }
-        let aid = self.sim.optimal_action(model, state)?;
-        let m = self.metrics_for(model, aid, state)?;
-        let v = m.frame_service_s();
-        self.est_cache.insert(key, v);
-        Ok(v)
+    pub(crate) fn est_service_s(
+        &mut self,
+        model: &ModelVariant,
+        state: WorkloadState,
+    ) -> Result<f64> {
+        crate::coordinator::shard::est_service_cached(
+            &self.sim,
+            &mut self.metrics_cache,
+            &mut self.est_cache,
+            model,
+            state,
+        )
     }
 
     /// Awake idle power of whatever configuration `b` holds.
-    fn idle_power_of(&self, b: &Board) -> f64 {
+    pub(crate) fn idle_power_of(&self, b: &Board) -> f64 {
         let loaded = b.reconfig.current_action();
         idle_power_w(&self.sim, loaded.map(|id| &self.sim.actions()[id]))
     }
 
     /// Predicted outstanding work on `b` (seconds): in-flight remainder +
     /// service estimates of everything queued behind it.
-    fn board_backlog_s(&mut self, b: &Board, state: WorkloadState, t: f64) -> Result<f64> {
+    pub(crate) fn board_backlog_s(
+        &mut self,
+        b: &Board,
+        state: WorkloadState,
+        t: f64,
+    ) -> Result<f64> {
         let mut w = (b.busy_until - t).max(0.0);
         let skip = usize::from(b.phase == Phase::Serving);
         for q in b.queue.iter().skip(skip) {
@@ -786,7 +951,7 @@ impl FleetCoordinator {
     /// Predicted completion wait of `incoming` if routed to `b`:
     /// backlog + model-switch overheads + (for sleepers) wake latency
     /// and a full reconfiguration.
-    fn predicted_wait_s(
+    pub(crate) fn predicted_wait_s(
         &mut self,
         b: &Board,
         state: WorkloadState,
@@ -822,10 +987,12 @@ impl FleetCoordinator {
         Ok(w)
     }
 
-    /// Pick the target board for a newly arrived request.
-    fn route(
+    /// Pick the target board for a newly arrived request. Takes a slice
+    /// of references (in global board order) so the sharded executor can
+    /// present boards that live scattered across shard-owned storage.
+    pub(crate) fn route(
         &mut self,
-        boards: &[Board],
+        boards: &[&Board],
         schedules: &[Vec<(f64, WorkloadState)>],
         model: &ModelVariant,
         t: f64,
@@ -885,8 +1052,14 @@ impl FleetCoordinator {
     }
 
     /// Decide configurations for a batch of boards. Returns (action ids
-    /// aligned with `requests`, forward passes used).
-    fn decide_batch(&mut self, requests: &[DecisionRequest]) -> Result<(Vec<usize>, u64)> {
+    /// aligned with `requests`, forward passes used). Cohort order is the
+    /// caller's contract: the single-queue path passes DecisionDue pop
+    /// order, the sharded path passes boards sorted by global index (the
+    /// partition-invariant order its determinism guarantee rests on).
+    pub(crate) fn decide_batch(
+        &mut self,
+        requests: &[DecisionRequest],
+    ) -> Result<(Vec<usize>, u64)> {
         if requests.is_empty() {
             return Ok((Vec::new(), 0));
         }
@@ -1033,6 +1206,7 @@ impl FleetCoordinator {
     /// occupancy-derived platform state, invoke the policy once, charge
     /// reconfiguration overheads, and schedule the `ReconfigDone`s.
     fn decide_due(&mut self, rs: &mut RunState<'_>, due: &[usize], t: f64) -> Result<()> {
+        let slo = self.config.slo.clone();
         let mut requests: Vec<DecisionRequest> = Vec::new();
         for &i in due {
             rs.boards[i].decision_pending = false;
@@ -1042,48 +1216,32 @@ impl FleetCoordinator {
                 continue;
             }
             let state = state_at(&rs.scenario.schedules[i], t);
-            let (head_model, head_at) = {
-                let head = rs.boards[i].queue.front().expect("non-empty queue");
-                (head.model.clone(), head.at_s)
+            let valid = match rs.boards[i].queue.front() {
+                Some(head) => matches!(
+                    &rs.boards[i].decided,
+                    Some((_, m, s)) if *m == head.model.name() && *s == state
+                ),
+                None => false,
             };
-            let valid = matches!(
-                &rs.boards[i].decided,
-                Some((_, m, s)) if *m == head_model.name() && *s == state
-            );
             if valid {
                 self.kick(rs, i, t)?;
                 continue;
             }
-            let depth = rs.boards[i].queue.len();
-            let mut backlog = 0.0;
-            for q in rs.boards[i].queue.iter() {
-                backlog += self.est_service_s(&q.model, state)?;
-            }
-            let slo_s = self.config.slo.target_ms(&head_model.name()) * 1e-3;
-            let ctx = QueueContext {
-                depth,
-                backlog_s: backlog,
-                headroom_s: slo_s - (t - head_at),
-            };
-            let platform = PlatformState {
-                workload: state,
-                dpu_traffic_bps: rs.boards[i].obs_traffic_bps,
-                host_cpu_util: rs.boards[i].obs_host_util,
-                p_fpga: rs.boards[i].obs_p_fpga,
-                p_arm: rs.p_arm_base,
-            };
-            let b = &mut rs.boards[i];
-            let sample = b.sampler.sample((t * 1e6) as u64, &platform);
-            b.last_cpu = sample.cpu_mean();
-            b.last_mem_gbs = sample.mem_total_gbs();
-            b.qdepth_sum += ctx.depth as u64;
-            let obs = self.featurizer.observe(&sample, &head_model);
+            let dec = observe_for_decision(
+                &mut rs.boards[i],
+                &rs.scenario.schedules[i],
+                &slo,
+                rs.p_arm_base,
+                t,
+                |m, s| self.est_service_s(m, s),
+            )?;
+            let obs = self.featurizer.observe(&dec.sample, &dec.head_model);
             requests.push(DecisionRequest {
                 board: i,
-                model: head_model,
+                model: dec.head_model,
                 obs,
-                state,
-                queue: ctx,
+                state: dec.state,
+                queue: dec.queue,
             });
         }
         if requests.is_empty() {
@@ -1169,38 +1327,7 @@ impl FleetCoordinator {
             .unwrap_or(1.5);
 
         let boards: Vec<Board> = (0..self.config.boards)
-            .map(|i| Board {
-                reconfig: ReconfigManager::new(),
-                sampler: Sampler::from_calibration(
-                    self.config.seed ^ (0xb0a2d + i as u64),
-                    self.sim.calibration(),
-                ),
-                rewards: RewardCalculator::new(),
-                phase: Phase::Idle,
-                phase_power_w: p_static,
-                last_t: 0.0,
-                busy_until: 0.0,
-                queue: VecDeque::new(),
-                decided: None,
-                decision_pending: false,
-                idle_epoch: 0,
-                serving_meets: true,
-                obs_traffic_bps: 0.0,
-                obs_host_util: 0.0,
-                obs_p_fpga: p_static,
-                last_cpu: 0.0,
-                last_mem_gbs: 0.0,
-                totals: Totals::default(),
-                energy: EnergyMeter::new(),
-                wakes: 0,
-                requests_done: 0,
-                slo_violations: 0,
-                latency: LatencyHistogram::new(),
-                reward_sum: 0.0,
-                reward_n: 0,
-                qdepth_sum: 0,
-                late_decisions: 0,
-            })
+            .map(|i| self.mk_board(i, p_static))
             .collect();
 
         let trails: Vec<RequestTrail> = scenario
@@ -1263,17 +1390,7 @@ impl FleetCoordinator {
         // event budget (replaces the old "horizon x 64" tick hard-stop):
         // a generous per-source bound; exceeding it is an error naming
         // the stuck board, never a silent truncation
-        let sched_points: usize = scenario.schedules.iter().map(|s| s.len()).sum();
-        let mut budget: u64 = 4096
-            + 64u64.saturating_mul(scenario.requests.len() as u64)
-            + 8 * sched_points as u64
-            + 16 * self.config.boards as u64;
-        if mode == RunMode::FineTick {
-            let drain_bound = scenario.horizon_s + 1.2 * scenario.requests.len() as f64 + 16.0;
-            budget = budget
-                .saturating_add((drain_bound / self.config.tick_s.max(1e-6)) as u64)
-                .saturating_add(64);
-        }
+        let mut budget = self.event_budget_for(scenario, mode);
         if let Some(b) = budget_override {
             budget = b;
         }
@@ -1321,8 +1438,10 @@ impl FleetCoordinator {
                         );
                     }
                     let model = scenario.requests[request].model.clone();
-                    let target =
-                        self.route(&rs.boards, &scenario.schedules, &model, t)?;
+                    let target = {
+                        let refs: Vec<&Board> = rs.boards.iter().collect();
+                        self.route(&refs, &scenario.schedules, &model, t)?
+                    };
                     rs.trails[request].board = target;
                     {
                         let b = &mut rs.boards[target];
@@ -1492,28 +1611,7 @@ impl FleetCoordinator {
             .boards
             .into_iter()
             .enumerate()
-            .map(|(i, mut b)| {
-                if b.reward_n > 0 {
-                    b.totals.mean_reward = b.reward_sum / b.reward_n as f64;
-                }
-                let mean_depth = if b.totals.decisions > 0 {
-                    b.qdepth_sum as f64 / b.totals.decisions as f64
-                } else {
-                    0.0
-                };
-                BoardReport {
-                    board: i,
-                    queue_left: b.queue.len(),
-                    totals: b.totals,
-                    energy: b.energy,
-                    wakes: b.wakes,
-                    requests_done: b.requests_done,
-                    slo_violations: b.slo_violations,
-                    latency: b.latency,
-                    mean_decision_queue_depth: mean_depth,
-                    late_decisions: b.late_decisions,
-                }
-            })
+            .map(|(i, b)| finish_board(i, b))
             .collect();
         let by_model = rs
             .by_model
@@ -1530,6 +1628,7 @@ impl FleetCoordinator {
             policy: self.policy.name(),
             routing: self.config.routing,
             mode,
+            threads: 1,
             boards: boards_out,
             events,
             decisions: rs.decisions,

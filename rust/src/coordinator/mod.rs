@@ -1,7 +1,8 @@
 //! The DPUConfig framework (paper Fig 4): decision engine, FPGA
 //! reconfiguration manager, simulated-time serving loop, a threaded
 //! decision service with dynamic micro-batching, and the multi-board
-//! fleet coordinator (DESIGN.md §8).
+//! fleet coordinator (DESIGN.md §8) with its sharded multi-threaded
+//! executor (DESIGN.md §11).
 
 pub mod engine;
 pub mod events;
@@ -10,6 +11,7 @@ pub mod placement;
 pub mod reconfig;
 pub mod server;
 pub mod service;
+pub mod shard;
 
 pub use engine::{DecisionEngine, QueueContext, Selector};
 pub use events::{EventQueue, FleetEvent};

@@ -1,0 +1,1187 @@
+//! Sharded, multi-threaded fleet executor (DESIGN.md §11).
+//!
+//! The single-queue serving loop in [`crate::coordinator::fleet`] drains
+//! every board's events on one host thread, so fleet simulation speed is
+//! bounded by one core no matter how many boards are modeled. This
+//! module partitions boards into **shards** — each with its own
+//! [`EventQueue`] and service-time caches — and drains them on scoped
+//! worker threads (`std::thread`; the workspace is offline/vendored, so
+//! no rayon) up to a **conservative time horizon**: the next instant
+//! where global state can couple boards together.
+//!
+//! Two things couple boards:
+//!
+//! * **routing** — state-dependent policies (least-loaded, energy-aware,
+//!   SLO-aware) read every board's queue at each arrival, so arrivals
+//!   are admission epochs resolved on the coordinating thread between
+//!   drains. Round-robin routing is state-independent, so its arrivals
+//!   are pre-assigned into the owning shard's queue at init and the
+//!   whole run needs no admission barrier at all;
+//! * **decisions** — the RL agent / online learner / seeded-random
+//!   baseline mutate shared policy state, so boards that need a
+//!   configuration decision freeze at the decision instant and the
+//!   coordinator resolves each same-instant cohort in one batched policy
+//!   call. Order-independent static baselines (optimal / max-FPS /
+//!   min-power) are pure functions of `(model, state)` and resolve
+//!   inline inside the shard, barrier-free.
+//!
+//! Determinism is the contract the tests pin: a run is a pure function
+//! of `(scenario, config, seed)` and the report fingerprint is
+//! **byte-identical for every thread count and every board partition**.
+//! The ingredients:
+//!
+//! * every per-board event sequence is board-local between barriers
+//!   (boards never read each other's state except through the
+//!   coordinator at epoch boundaries);
+//! * decision cohorts are assembled as (time, board index) — FIFO at
+//!   equal times, lowest board first — so shared-RNG draws and online
+//!   policy updates happen in a partition-invariant order;
+//! * per-board RNG streams (telemetry samplers) are split from the
+//!   scenario seed exactly as in the single-queue path;
+//! * merge steps (per-model histograms, trails, board reports) run in
+//!   canonical order: completions sorted by (done time, request id),
+//!   boards by global index.
+//!
+//! ```
+//! use dpuconfig::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario};
+//! use dpuconfig::rl::Baseline;
+//! use dpuconfig::workload::traffic::ArrivalPattern;
+//!
+//! let cfg = FleetConfig { boards: 2, ..FleetConfig::default() };
+//! let scenario = FleetScenario::generate(ArrivalPattern::Steady, 2, 20.0, 5.0, 0.5, 7).unwrap();
+//! let mk = || FleetCoordinator::new(cfg.clone(), FleetPolicy::Static(Baseline::Optimal)).unwrap();
+//! let one = mk().run_threads(&scenario, 1).unwrap();
+//! let four = mk().run_threads(&scenario, 4).unwrap();
+//! assert_eq!(one.fingerprint(), four.fingerprint());
+//! ```
+
+use crate::coordinator::events::{EventQueue, FleetEvent};
+use crate::coordinator::fleet::{
+    advance, finish_board, observe_for_decision, Board, BoardReport, DecisionRequest, FleetConfig,
+    FleetCoordinator, FleetPolicy, FleetReport, FleetRequest, FleetScenario, ModelAcc,
+    ModelLatencyReport, Phase, QueuedReq, RequestTrail, RoutingPolicy, RunMode,
+};
+use crate::coordinator::reconfig::ReconfigManager;
+use crate::dpusim::energy::{idle_power_w, sleep_power_w};
+use crate::dpusim::{DpuSim, Metrics, FPS_CONSTRAINT};
+use crate::models::ModelVariant;
+use crate::rl::reward::Outcome;
+use crate::rl::{Baseline, RewardCalculator};
+use crate::telemetry::latency::LatencyHistogram;
+use crate::workload::traffic::state_at;
+use crate::workload::{WorkloadState, XorShift64};
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap};
+
+/// Below this many queued events across all shards a drain round runs
+/// inline on the coordinating thread — spawning workers costs more than
+/// the work (dense admission epochs drain a handful of events each).
+const PAR_MIN_EVENTS: usize = 64;
+
+/// Run-wide scalar constants every shard needs (plain copies, `Copy` so
+/// the context can be rebuilt cheaply around borrow scopes).
+#[derive(Clone, Copy)]
+struct ShardConsts {
+    p_static: f64,
+    p_arm_base: f64,
+    sleep_w: f64,
+}
+
+/// Read-only view shards drain against. Everything here is `Sync`:
+/// shared references to plain data plus `Copy` scalars.
+struct ShardCtx<'a> {
+    sim: &'a DpuSim,
+    config: &'a FleetConfig,
+    schedules: &'a [Vec<(f64, WorkloadState)>],
+    requests: &'a [FleetRequest],
+    /// `Some(baseline)` when decisions are order-independent and resolve
+    /// inline inside the shard (static non-random policies).
+    local: Option<Baseline>,
+    /// Event budget, also enforced per board *inside* drains: the
+    /// coordinator's barrier check cannot interrupt the barrier-free
+    /// fast path (round-robin + static decides everything in one
+    /// unbounded drain), so a board whose own event count passes the
+    /// budget bails out mid-drain. Per-board pop counts are partition-
+    /// and thread-count-invariant, so the error is deterministic.
+    budget: u64,
+    consts: ShardConsts,
+}
+
+/// One completed request, recorded inside the owning shard and merged in
+/// canonical order after the run.
+struct Completion {
+    req: usize,
+    done_s: f64,
+    latency_ms: f64,
+    model: String,
+    violated: bool,
+}
+
+/// One board plus its private timeline and result buffers.
+struct Slot {
+    /// Global board index.
+    idx: usize,
+    board: Board,
+    queue: EventQueue,
+    /// Simulated instant of the board's unresolved decision, if any. The
+    /// board freezes there: events past it stay queued until the
+    /// coordinator resolves the cohort (so energy integration segments
+    /// exactly match the single-queue path).
+    pending_t: Option<f64>,
+    /// Unprocessed pre-assigned arrivals still in `queue` (round-robin
+    /// mode). A live sleep timer with future arrivals behind it is safe
+    /// to fire; with none, its fate depends on the global end of span.
+    future_arrivals: usize,
+    /// (request, serve-start time), applied to trails at merge.
+    starts: Vec<(usize, f64)>,
+    completions: Vec<Completion>,
+    /// Locally resolved decisions / policy passes (static fast path).
+    decisions: u64,
+    batches: u64,
+    /// Locally resolved decision events (the DecisionDue pops of the
+    /// single-queue path), counted into the report's event total.
+    extra_events: u64,
+}
+
+/// A group of boards sharing one drain unit and one service-time cache.
+struct Shard {
+    slots: Vec<Slot>,
+    metrics_cache: HashMap<(String, usize, WorkloadState), Metrics>,
+    est_cache: HashMap<(String, WorkloadState), f64>,
+}
+
+pub(crate) type MetricsCache = HashMap<(String, usize, WorkloadState), Metrics>;
+pub(crate) type EstCache = HashMap<(String, WorkloadState), f64>;
+
+impl Shard {
+    fn drain(&mut self, ctx: &ShardCtx<'_>, horizon: f64) -> Result<()> {
+        let Shard {
+            slots,
+            metrics_cache,
+            est_cache,
+        } = self;
+        for slot in slots.iter_mut() {
+            drain_slot(slot, metrics_cache, est_cache, ctx, horizon)?;
+        }
+        Ok(())
+    }
+
+    fn queued(&self) -> usize {
+        self.slots.iter().map(|s| s.queue.len()).sum()
+    }
+
+    fn popped(&self) -> u64 {
+        self.slots
+            .iter()
+            .map(|s| s.queue.popped() + s.extra_events)
+            .sum()
+    }
+}
+
+/// Steady-state metrics of (model, action, state) through the caller's
+/// cache (cache placement never changes results — metrics are a pure
+/// function of the key). Shards pass their private caches; the
+/// coordinator's own `metrics_for` delegates here with its caches.
+pub(crate) fn metrics_cached(
+    sim: &DpuSim,
+    cache: &mut MetricsCache,
+    model: &ModelVariant,
+    action_id: usize,
+    state: WorkloadState,
+) -> Result<Metrics> {
+    let key = (model.name(), action_id, state);
+    if let Some(m) = cache.get(&key) {
+        return Ok(*m);
+    }
+    let (size, instances) = {
+        let a = &sim.actions()[action_id];
+        (a.size.clone(), a.instances)
+    };
+    let m = sim.evaluate(model, &size, instances, state)?;
+    cache.insert(key, m);
+    Ok(m)
+}
+
+/// Estimated per-frame service time of `model` under `state` (oracle
+/// configuration), through the caller's caches.
+pub(crate) fn est_service_cached(
+    sim: &DpuSim,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    model: &ModelVariant,
+    state: WorkloadState,
+) -> Result<f64> {
+    let key = (model.name(), state);
+    if let Some(v) = ecache.get(&key) {
+        return Ok(*v);
+    }
+    let aid = sim.optimal_action(model, state)?;
+    let m = metrics_cached(sim, mcache, model, aid, state)?;
+    let v = m.frame_service_s();
+    ecache.insert(key, v);
+    Ok(v)
+}
+
+/// Sleep-exit path of a board that receives work: pay the wake latency;
+/// the bitstream is lost, so the next decision pays full reconfiguration.
+fn wake_board(slot: &mut Slot, ctx: &ShardCtx<'_>, t: f64) {
+    let b = &mut slot.board;
+    b.phase = Phase::Waking;
+    b.phase_power_w = ctx.consts.p_static;
+    b.busy_until = t + ctx.config.wake_penalty_s;
+    b.reconfig = ReconfigManager::new();
+    b.decided = None;
+    b.wakes += 1;
+    let until = b.busy_until;
+    slot.queue.push(until, FleetEvent::WakeDone { board: slot.idx });
+}
+
+/// Apply one resolved configuration decision (the tail of the
+/// single-queue `decide_due`): charge overheads, schedule `ReconfigDone`.
+fn apply_decision(
+    slot: &mut Slot,
+    ctx: &ShardCtx<'_>,
+    action_id: usize,
+    model: &ModelVariant,
+    state: WorkloadState,
+    headroom_s: f64,
+    t: f64,
+) {
+    let action = ctx.sim.actions()[action_id].clone();
+    let b = &mut slot.board;
+    advance(b, t);
+    let overhead = b.reconfig.apply(&action, &model.name());
+    b.totals.decisions += 1;
+    if headroom_s < 0.0 {
+        b.late_decisions += 1;
+    }
+    if overhead.reconfig_us > 0 {
+        b.totals.reconfigs += 1;
+    }
+    b.decided = Some((action_id, model.name(), state));
+    b.phase = Phase::Reconfiguring;
+    b.busy_until = t + overhead.total_s();
+    b.phase_power_w = idle_power_w(ctx.sim, Some(&ctx.sim.actions()[action_id]));
+    let until = b.busy_until;
+    slot.queue.push(until, FleetEvent::ReconfigDone { board: slot.idx });
+}
+
+/// Resolve a decision inline inside the shard (static, order-independent
+/// policies only): the shared [`observe_for_decision`] sequence, then
+/// baseline selection and overhead charge — exactly the single-queue
+/// decide path minus the (unused) policy observation vector.
+fn decide_local(
+    slot: &mut Slot,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    ctx: &ShardCtx<'_>,
+    baseline: Baseline,
+    t: f64,
+) -> Result<()> {
+    let dec = observe_for_decision(
+        &mut slot.board,
+        &ctx.schedules[slot.idx],
+        &ctx.config.slo,
+        ctx.consts.p_arm_base,
+        t,
+        |m, s| est_service_cached(ctx.sim, mcache, ecache, m, s),
+    )?;
+    let action_id = baseline.select(ctx.sim, &dec.head_model, dec.state, None)?;
+    apply_decision(slot, ctx, action_id, &dec.head_model, dec.state, dec.queue.headroom_s, t);
+    slot.decisions += 1;
+    slot.batches += 1;
+    slot.extra_events += 1;
+    Ok(())
+}
+
+/// Make progress on the slot's board at time `t`: start serving the head
+/// request if its decision is valid, resolve/queue a decision if not, or
+/// settle into idle (arming the sleep timer) when the queue is empty.
+/// Mirrors the single-queue `kick`, with decisions going either inline
+/// (static fast path) or to the coordinator via `pending_t`.
+fn kick_slot(
+    slot: &mut Slot,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    ctx: &ShardCtx<'_>,
+    t: f64,
+) -> Result<()> {
+    match slot.board.phase {
+        Phase::Sleeping | Phase::Waking | Phase::Reconfiguring | Phase::Serving => return Ok(()),
+        Phase::Idle | Phase::Holding => {}
+    }
+    if slot.board.queue.is_empty() {
+        if slot.board.phase != Phase::Idle {
+            let loaded = slot.board.reconfig.current_action();
+            let p_idle = idle_power_w(ctx.sim, loaded.map(|id| &ctx.sim.actions()[id]));
+            let b = &mut slot.board;
+            b.phase = Phase::Idle;
+            b.phase_power_w = p_idle;
+            b.idle_epoch += 1;
+            b.obs_traffic_bps = 0.0;
+            b.obs_host_util = 0.0;
+            b.obs_p_fpga = ctx.consts.p_static;
+            let epoch = b.idle_epoch;
+            if ctx.config.idle_to_sleep_s.is_finite() {
+                slot.queue.push(
+                    t + ctx.config.idle_to_sleep_s,
+                    FleetEvent::SleepTimer {
+                        board: slot.idx,
+                        idle_epoch: epoch,
+                    },
+                );
+            }
+        }
+        return Ok(());
+    }
+    let state = state_at(&ctx.schedules[slot.idx], t);
+    let (head_model, head_req, valid) = {
+        let b = &slot.board;
+        let head = b.queue.front().expect("non-empty queue");
+        let valid = matches!(
+            &b.decided,
+            Some((_, m, s)) if *m == head.model.name() && *s == state
+        );
+        (head.model.clone(), head.req, valid)
+    };
+    if valid {
+        let action_id = slot.board.decided.as_ref().expect("valid decision").0;
+        let instances = ctx.sim.actions()[action_id].instances;
+        let m = metrics_cached(ctx.sim, mcache, &head_model, action_id, state)?;
+        let b = &mut slot.board;
+        b.phase = Phase::Serving;
+        b.phase_power_w = m.p_fpga;
+        b.serving_meets = m.meets_constraint;
+        b.busy_until = t + m.frame_service_s();
+        b.obs_traffic_bps = m.dpu_traffic_bps(instances);
+        b.obs_host_util = m.host_util_pct(instances);
+        b.obs_p_fpga = m.p_fpga;
+        // Algorithm-1 reward bookkeeping per served frame
+        let r = b.rewards.calculate(&Outcome {
+            measured_fps: m.fps,
+            fpga_power: m.p_fpga,
+            cpu_util: b.last_cpu,
+            mem_util_gbs: b.last_mem_gbs,
+            gmac: head_model.gmac(),
+            model_data_mb: head_model.data_io_mb(),
+            fps_constraint: FPS_CONSTRAINT,
+        });
+        b.reward_sum += r;
+        b.reward_n += 1;
+        let until = b.busy_until;
+        slot.starts.push((head_req, t));
+        slot.queue.push(
+            until,
+            FleetEvent::FrameDone {
+                board: slot.idx,
+                request: head_req,
+            },
+        );
+    } else if !slot.board.decision_pending {
+        match ctx.local {
+            Some(baseline) => decide_local(slot, mcache, ecache, ctx, baseline, t)?,
+            None => {
+                slot.board.decision_pending = true;
+                slot.board.phase = Phase::Holding;
+                slot.pending_t = Some(t);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Handle one board-local event. Mirrors the single-queue event match
+/// arm for arm; `Arrival` appears only in round-robin (pre-assigned)
+/// mode, `DecisionDue`/`Tick` never exist on shard timelines.
+fn process_event(
+    slot: &mut Slot,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    ctx: &ShardCtx<'_>,
+    t: f64,
+    event: FleetEvent,
+) -> Result<()> {
+    match event {
+        FleetEvent::Arrival { request } => {
+            slot.future_arrivals = slot.future_arrivals.saturating_sub(1);
+            let model = ctx.requests[request].model.clone();
+            advance(&mut slot.board, t);
+            slot.board.queue.push_back(QueuedReq {
+                req: request,
+                model,
+                at_s: t,
+            });
+            if slot.board.phase == Phase::Sleeping {
+                wake_board(slot, ctx, t);
+            } else {
+                kick_slot(slot, mcache, ecache, ctx, t)?;
+            }
+        }
+        FleetEvent::WakeDone { .. } => {
+            advance(&mut slot.board, t);
+            slot.board.phase = Phase::Holding;
+            slot.board.phase_power_w = ctx.consts.p_static;
+            kick_slot(slot, mcache, ecache, ctx, t)?;
+        }
+        FleetEvent::ReconfigDone { .. } => {
+            advance(&mut slot.board, t);
+            let loaded = slot.board.reconfig.current_action();
+            let p_idle = idle_power_w(ctx.sim, loaded.map(|id| &ctx.sim.actions()[id]));
+            slot.board.phase = Phase::Holding;
+            slot.board.phase_power_w = p_idle;
+            kick_slot(slot, mcache, ecache, ctx, t)?;
+        }
+        FleetEvent::FrameDone { request, .. } => {
+            advance(&mut slot.board, t);
+            let done = {
+                let b = &mut slot.board;
+                let q = b.queue.pop_front().expect("serving board has a head");
+                debug_assert_eq!(q.req, request);
+                b.totals.frames += 1.0;
+                b.requests_done += 1;
+                q
+            };
+            let latency_ms = (t - done.at_s) * 1e3;
+            let name = done.model.name();
+            let slo_ms = ctx.config.slo.target_ms(&name);
+            let violated = latency_ms > slo_ms;
+            {
+                let b = &mut slot.board;
+                b.latency.record_ms(latency_ms);
+                if violated {
+                    b.slo_violations += 1;
+                }
+            }
+            slot.completions.push(Completion {
+                req: request,
+                done_s: t,
+                latency_ms,
+                model: name,
+                violated,
+            });
+            let loaded = slot.board.reconfig.current_action();
+            let p_idle = idle_power_w(ctx.sim, loaded.map(|id| &ctx.sim.actions()[id]));
+            slot.board.phase = Phase::Holding;
+            slot.board.phase_power_w = p_idle;
+            kick_slot(slot, mcache, ecache, ctx, t)?;
+        }
+        FleetEvent::SleepTimer { idle_epoch, .. } => {
+            let b = &mut slot.board;
+            if b.phase == Phase::Idle && b.idle_epoch == idle_epoch {
+                advance(b, t);
+                b.phase = Phase::Sleeping;
+                b.phase_power_w = ctx.consts.sleep_w;
+            }
+        }
+        FleetEvent::WorkloadShift { .. } => {
+            advance(&mut slot.board, t);
+            let state = state_at(&ctx.schedules[slot.idx], t);
+            let stale = matches!(
+                &slot.board.decided,
+                Some((_, _, s)) if *s != state
+            );
+            if stale {
+                // an in-flight frame finishes at its old rate; the
+                // *next* frame re-decides
+                slot.board.decided = None;
+            }
+            if slot.board.phase == Phase::Holding {
+                kick_slot(slot, mcache, ecache, ctx, t)?;
+            }
+        }
+        FleetEvent::DecisionDue { .. } | FleetEvent::Tick => {
+            unreachable!("sharded executor never schedules DecisionDue/Tick events")
+        }
+    }
+    Ok(())
+}
+
+/// Drain one slot's timeline up to `horizon` (inclusive). A pending
+/// decision freezes the board at its decision instant — same-instant
+/// events still process (matching the single-queue deferral rule), later
+/// ones wait for the cohort resolution. In an unbounded drain, a *live*
+/// sleep timer on a board with no future work parks until the final
+/// pass, because whether it fires depends on the global end of span.
+fn drain_slot(
+    slot: &mut Slot,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    ctx: &ShardCtx<'_>,
+    horizon: f64,
+) -> Result<()> {
+    loop {
+        let nxt = match slot.queue.next_time() {
+            Some(x) => x,
+            None => break,
+        };
+        let eff = match slot.pending_t {
+            Some(p) => p.min(horizon),
+            None => horizon,
+        };
+        if nxt > eff {
+            break;
+        }
+        if horizon.is_infinite() && slot.pending_t.is_none() && slot.future_arrivals == 0 {
+            if let Some(s) = slot.queue.peek() {
+                if let FleetEvent::SleepTimer { idle_epoch, .. } = s.event {
+                    if slot.board.phase == Phase::Idle && slot.board.idle_epoch == idle_epoch {
+                        break; // park: resolved against the final span
+                    }
+                }
+            }
+        }
+        let ev = slot.queue.pop().expect("peeked event");
+        process_event(slot, mcache, ecache, ctx, ev.t_s, ev.event)?;
+        if slot.queue.popped() + slot.extra_events > ctx.budget {
+            anyhow::bail!(
+                "fleet event budget exhausted after {} events on one timeline: \
+                 board {} is stuck with queue depth {} at t={:.3}s",
+                slot.queue.popped() + slot.extra_events,
+                slot.idx,
+                slot.board.queue.len(),
+                ev.t_s,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Drain every shard to `horizon` — in parallel on scoped worker threads
+/// when there is enough queued work to amortize the spawns, inline
+/// otherwise. The choice never affects results: shards are independent
+/// between barriers by construction.
+fn drain_round(
+    shards: &mut [Shard],
+    ctx: &ShardCtx<'_>,
+    horizon: f64,
+    threads: usize,
+) -> Result<()> {
+    let queued: usize = shards.iter().map(Shard::queued).sum();
+    if threads <= 1 || shards.len() <= 1 || queued < PAR_MIN_EVENTS {
+        for s in shards.iter_mut() {
+            s.drain(ctx, horizon)?;
+        }
+        return Ok(());
+    }
+    let per = shards.len().div_ceil(threads).max(1);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for chunk in shards.chunks_mut(per) {
+            handles.push(scope.spawn(move || -> Result<()> {
+                for s in chunk.iter_mut() {
+                    s.drain(ctx, horizon)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("shard worker panicked")?;
+        }
+        Ok(())
+    })
+}
+
+fn min_pending(shards: &[Shard]) -> f64 {
+    let mut m = f64::INFINITY;
+    for sh in shards {
+        for slot in &sh.slots {
+            if let Some(p) = slot.pending_t {
+                if p < m {
+                    m = p;
+                }
+            }
+        }
+    }
+    m
+}
+
+fn done_count(shards: &[Shard]) -> usize {
+    shards
+        .iter()
+        .map(|sh| {
+            sh.slots
+                .iter()
+                .map(|s| s.board.requests_done as usize)
+                .sum::<usize>()
+        })
+        .sum()
+}
+
+/// (board, depth) of the deepest queue — named in stall/budget errors.
+fn worst_queue(shards: &[Shard]) -> (usize, usize) {
+    let mut worst = (0usize, 0usize);
+    let mut any = false;
+    for sh in shards {
+        for slot in &sh.slots {
+            let d = slot.board.queue.len();
+            if !any || d > worst.1 {
+                worst = (slot.idx, d);
+                any = true;
+            }
+        }
+    }
+    worst
+}
+
+impl FleetCoordinator {
+    /// Run `scenario` on the sharded executor with `threads` workers.
+    /// Boards split into `min(threads, boards)` contiguous shards; the
+    /// report fingerprint is byte-identical for every thread count.
+    pub fn run_threads(&mut self, scenario: &FleetScenario, threads: usize) -> Result<FleetReport> {
+        let threads = threads.max(1);
+        let n = self.config.boards;
+        let shard_count = threads.min(n).max(1);
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); shard_count];
+        for i in 0..n {
+            groups[i * shard_count / n].push(i);
+        }
+        self.run_partitioned(scenario, &groups, threads)
+    }
+
+    /// [`Self::run_threads`] with an explicit board partition. Groups
+    /// must cover every board exactly once; grouping is free to be
+    /// arbitrary — the partition-invariance property test exercises
+    /// random partitions and demands identical fingerprints.
+    pub fn run_partitioned(
+        &mut self,
+        scenario: &FleetScenario,
+        groups: &[Vec<usize>],
+        threads: usize,
+    ) -> Result<FleetReport> {
+        let threads = threads.max(1);
+        let n = self.config.boards;
+        anyhow::ensure!(
+            scenario.schedules.len() == n,
+            "scenario has {} board schedules, fleet has {} boards",
+            scenario.schedules.len(),
+            n
+        );
+        anyhow::ensure!(
+            scenario
+                .requests
+                .windows(2)
+                .all(|w| w[0].at_s <= w[1].at_s),
+            "scenario requests must be sorted by arrival time"
+        );
+        let mut seen = vec![false; n];
+        let mut covered = 0usize;
+        for g in groups {
+            for &i in g {
+                anyhow::ensure!(i < n, "shard group names board {i}, fleet has {n} boards");
+                anyhow::ensure!(!seen[i], "board {i} appears in two shard groups");
+                seen[i] = true;
+                covered += 1;
+            }
+        }
+        anyhow::ensure!(covered == n, "shard groups cover {covered} of {n} boards");
+
+        // per-run resets, mirroring the single-queue path exactly
+        self.rr_cursor = 0;
+        self.rng = XorShift64::new(self.config.seed ^ 0xf1ee7c0de);
+        self.online_rewards = RewardCalculator::new();
+        let consts = ShardConsts {
+            p_static: self
+                .sim
+                .calibration()
+                .get("p_pl_static")
+                .copied()
+                .unwrap_or(3.0),
+            p_arm_base: self
+                .sim
+                .calibration()
+                .get("p_arm_base")
+                .copied()
+                .unwrap_or(1.5),
+            sleep_w: sleep_power_w(self.sim.calibration()),
+        };
+        let local = match &self.policy {
+            FleetPolicy::Static(b) if *b != Baseline::Random => Some(*b),
+            _ => None,
+        };
+        let preassigned = self.config.routing == RoutingPolicy::RoundRobin;
+        let budget = self.event_budget_for(scenario, RunMode::EventDriven);
+        let total = scenario.requests.len();
+
+        let mut shards: Vec<Shard> = groups
+            .iter()
+            .map(|g| Shard {
+                slots: g
+                    .iter()
+                    .map(|&i| Slot {
+                        idx: i,
+                        board: self.mk_board(i, consts.p_static),
+                        queue: EventQueue::new(),
+                        pending_t: None,
+                        future_arrivals: 0,
+                        starts: Vec::new(),
+                        completions: Vec::new(),
+                        decisions: 0,
+                        batches: 0,
+                        extra_events: 0,
+                    })
+                    .collect(),
+                metrics_cache: HashMap::new(),
+                est_cache: HashMap::new(),
+            })
+            .collect();
+        let mut loc = vec![(0usize, 0usize); n];
+        for (si, sh) in shards.iter().enumerate() {
+            for (pi, slot) in sh.slots.iter().enumerate() {
+                loc[slot.idx] = (si, pi);
+            }
+        }
+
+        let mut trails: Vec<RequestTrail> = scenario
+            .requests
+            .iter()
+            .map(|r| RequestTrail {
+                board: usize::MAX,
+                at_s: r.at_s,
+                start_s: -1.0,
+                done_s: -1.0,
+            })
+            .collect();
+
+        // seed every board's local timeline: workload shifts + the
+        // initial idle->sleep timer
+        for sh in shards.iter_mut() {
+            for slot in sh.slots.iter_mut() {
+                for &(t0, _) in &scenario.schedules[slot.idx] {
+                    if t0 > 0.0 {
+                        slot.queue.push(t0, FleetEvent::WorkloadShift { board: slot.idx });
+                    }
+                }
+                if self.config.idle_to_sleep_s.is_finite() {
+                    slot.queue.push(
+                        self.config.idle_to_sleep_s,
+                        FleetEvent::SleepTimer {
+                            board: slot.idx,
+                            idle_epoch: 0,
+                        },
+                    );
+                }
+            }
+        }
+        // round-robin admission is state-independent: fix every route now
+        // and hand arrivals to the owning shard as board-local events
+        if preassigned {
+            for (k, r) in scenario.requests.iter().enumerate() {
+                let target = k % n;
+                trails[k].board = target;
+                let (si, pi) = loc[target];
+                let slot = &mut shards[si].slots[pi];
+                slot.future_arrivals += 1;
+                slot.queue.push(r.at_s, FleetEvent::Arrival { request: k });
+            }
+        }
+
+        let mut arr_idx: usize = if preassigned { total } else { 0 };
+        let mut global_events: u64 = 0;
+        let mut decisions: u64 = 0;
+        let mut batches: u64 = 0;
+
+        loop {
+            let t_arr = if arr_idx < total {
+                scenario.requests[arr_idx].at_s
+            } else {
+                f64::INFINITY
+            };
+            let t_dec = min_pending(&shards);
+            let horizon = t_arr.min(t_dec);
+            {
+                let ctx = ShardCtx {
+                    sim: &self.sim,
+                    config: &self.config,
+                    schedules: &scenario.schedules,
+                    requests: &scenario.requests,
+                    local,
+                    budget,
+                    consts,
+                };
+                drain_round(&mut shards, &ctx, horizon, threads)?;
+            }
+            let popped: u64 = shards.iter().map(Shard::popped).sum::<u64>() + global_events;
+            if popped > budget {
+                let (worst, depth) = worst_queue(&shards);
+                anyhow::bail!(
+                    "fleet event budget exhausted after {} events \
+                     (policy {}, routing {}, {} threads): board {} is stuck with \
+                     queue depth {} ({} of {} requests still unserved)",
+                    popped,
+                    self.policy.name(),
+                    self.config.routing.name(),
+                    threads,
+                    worst,
+                    depth,
+                    total - done_count(&shards),
+                    total,
+                );
+            }
+            // drains may surface decisions earlier than the chosen
+            // horizon — tighten and resolve those first
+            let t_dec2 = min_pending(&shards);
+            if t_dec2 < horizon {
+                continue;
+            }
+            if horizon.is_infinite() {
+                if t_dec2.is_finite() {
+                    continue;
+                }
+                break; // quiescent: no arrivals, no pending decisions
+            }
+            if arr_idx < total && scenario.requests[arr_idx].at_s <= horizon {
+                // admission epoch: route every arrival at this instant
+                // against globally consistent board state (all shards
+                // drained to `horizon`), in request order
+                let t = horizon;
+                while arr_idx < total && scenario.requests[arr_idx].at_s <= t {
+                    let model = scenario.requests[arr_idx].model.clone();
+                    let target = {
+                        let refs: Vec<&Board> = (0..n)
+                            .map(|i| {
+                                let (si, pi) = loc[i];
+                                &shards[si].slots[pi].board
+                            })
+                            .collect();
+                        self.route(&refs, &scenario.schedules, &model, t)?
+                    };
+                    trails[arr_idx].board = target;
+                    let ctx = ShardCtx {
+                        sim: &self.sim,
+                        config: &self.config,
+                        schedules: &scenario.schedules,
+                        requests: &scenario.requests,
+                        local,
+                        budget,
+                        consts,
+                    };
+                    let (si, pi) = loc[target];
+                    let Shard {
+                        slots,
+                        metrics_cache,
+                        est_cache,
+                    } = &mut shards[si];
+                    let slot = &mut slots[pi];
+                    advance(&mut slot.board, t);
+                    slot.board.queue.push_back(QueuedReq {
+                        req: arr_idx,
+                        model,
+                        at_s: t,
+                    });
+                    if slot.board.phase == Phase::Sleeping {
+                        wake_board(slot, &ctx, t);
+                    } else {
+                        kick_slot(slot, metrics_cache, est_cache, &ctx, t)?;
+                    }
+                    global_events += 1;
+                    arr_idx += 1;
+                }
+                continue;
+            }
+            // decision epoch: resolve the same-instant cohort in global
+            // board order — the partition-invariant cohort the RL batch
+            // (and any shared RNG/online update) sees
+            let t = horizon;
+            let mut cohort: Vec<usize> = Vec::new();
+            for sh in shards.iter() {
+                for slot in &sh.slots {
+                    if let Some(p) = slot.pending_t {
+                        if p <= t {
+                            cohort.push(slot.idx);
+                        }
+                    }
+                }
+            }
+            cohort.sort_unstable();
+            global_events += cohort.len() as u64;
+            let mut requests_out: Vec<DecisionRequest> = Vec::new();
+            for &i in &cohort {
+                let (si, pi) = loc[i];
+                let Shard {
+                    slots,
+                    metrics_cache,
+                    est_cache,
+                } = &mut shards[si];
+                let slot = &mut slots[pi];
+                slot.pending_t = None;
+                slot.board.decision_pending = false;
+                let state = state_at(&scenario.schedules[i], t);
+                let free = matches!(slot.board.phase, Phase::Holding | Phase::Idle);
+                let valid = match slot.board.queue.front() {
+                    Some(head) => matches!(
+                        &slot.board.decided,
+                        Some((_, m, s)) if *m == head.model.name() && *s == state
+                    ),
+                    None => false,
+                };
+                if slot.board.queue.is_empty() || !free || valid {
+                    let ctx = ShardCtx {
+                        sim: &self.sim,
+                        config: &self.config,
+                        schedules: &scenario.schedules,
+                        requests: &scenario.requests,
+                        local,
+                        budget,
+                        consts,
+                    };
+                    kick_slot(slot, metrics_cache, est_cache, &ctx, t)?;
+                    continue;
+                }
+                let dec = observe_for_decision(
+                    &mut slot.board,
+                    &scenario.schedules[i],
+                    &self.config.slo,
+                    consts.p_arm_base,
+                    t,
+                    |m, s| est_service_cached(&self.sim, metrics_cache, est_cache, m, s),
+                )?;
+                let obs = self.featurizer.observe(&dec.sample, &dec.head_model);
+                requests_out.push(DecisionRequest {
+                    board: i,
+                    model: dec.head_model,
+                    obs,
+                    state: dec.state,
+                    queue: dec.queue,
+                });
+            }
+            if !requests_out.is_empty() {
+                let (chosen, passes) = self.decide_batch(&requests_out)?;
+                batches += passes;
+                for (req, &action_id) in requests_out.iter().zip(&chosen) {
+                    let ctx = ShardCtx {
+                        sim: &self.sim,
+                        config: &self.config,
+                        schedules: &scenario.schedules,
+                        requests: &scenario.requests,
+                        local,
+                        budget,
+                        consts,
+                    };
+                    let (si, pi) = loc[req.board];
+                    let slot = &mut shards[si].slots[pi];
+                    apply_decision(
+                        slot,
+                        &ctx,
+                        action_id,
+                        &req.model,
+                        req.state,
+                        req.queue.headroom_s,
+                        t,
+                    );
+                    decisions += 1;
+                }
+            }
+        }
+
+        let done = done_count(&shards);
+        if done < total {
+            let (worst, depth) = worst_queue(&shards);
+            anyhow::bail!(
+                "fleet stalled with {} of {} requests unserved \
+                 (policy {}, routing {}, {} threads): board {} is stuck with queue depth {}",
+                total - done,
+                total,
+                self.policy.name(),
+                self.config.routing.name(),
+                threads,
+                worst,
+                depth,
+            );
+        }
+
+        // the accounted span is now known: fire or discard parked sleep
+        // timers against it, then integrate every board to the end —
+        // sequential, in global board order
+        let mut end = scenario.horizon_s;
+        for sh in &shards {
+            for slot in &sh.slots {
+                if let Some(c) = slot.completions.last() {
+                    if c.done_s > end {
+                        end = c.done_s;
+                    }
+                }
+            }
+        }
+        {
+            let ctx = ShardCtx {
+                sim: &self.sim,
+                config: &self.config,
+                schedules: &scenario.schedules,
+                requests: &scenario.requests,
+                local,
+                budget,
+                consts,
+            };
+            for &(si, pi) in &loc {
+                let Shard {
+                    slots,
+                    metrics_cache,
+                    est_cache,
+                } = &mut shards[si];
+                let slot = &mut slots[pi];
+                while let Some(ev) = slot.queue.pop() {
+                    if ev.t_s > end + 1e-9 {
+                        continue; // counted, discarded (stale timers)
+                    }
+                    process_event(slot, metrics_cache, est_cache, &ctx, ev.t_s, ev.event)?;
+                }
+                advance(&mut slot.board, end);
+            }
+        }
+
+        // barrier-merge in canonical order: events, decisions, trails,
+        // per-model accounting, per-board reports
+        let events: u64 = shards.iter().map(Shard::popped).sum::<u64>() + global_events;
+        let mut comps: Vec<Completion> = Vec::new();
+        let mut boards_raw: Vec<(usize, Board)> = Vec::new();
+        for sh in shards.into_iter() {
+            for slot in sh.slots.into_iter() {
+                decisions += slot.decisions;
+                batches += slot.batches;
+                for &(req, t0) in &slot.starts {
+                    if trails[req].start_s < 0.0 {
+                        trails[req].start_s = t0;
+                    }
+                }
+                comps.extend(slot.completions);
+                boards_raw.push((slot.idx, slot.board));
+            }
+        }
+        comps.sort_by(|a, b| {
+            a.done_s
+                .partial_cmp(&b.done_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.req.cmp(&b.req))
+        });
+        let mut by_model: BTreeMap<String, ModelAcc> = BTreeMap::new();
+        for c in &comps {
+            trails[c.req].done_s = c.done_s;
+            let acc = by_model.entry(c.model.clone()).or_insert_with(|| ModelAcc {
+                hist: LatencyHistogram::new(),
+                violations: 0,
+                done: 0,
+            });
+            acc.hist.record_ms(c.latency_ms);
+            acc.done += 1;
+            if c.violated {
+                acc.violations += 1;
+            }
+        }
+        boards_raw.sort_by_key(|(i, _)| *i);
+        let boards_out: Vec<BoardReport> = boards_raw
+            .into_iter()
+            .map(|(i, b)| finish_board(i, b))
+            .collect();
+        let by_model_out: Vec<ModelLatencyReport> = by_model
+            .into_iter()
+            .map(|(model, acc)| ModelLatencyReport {
+                slo_ms: self.config.slo.target_ms(&model),
+                model,
+                done: acc.done,
+                violations: acc.violations,
+                hist: acc.hist,
+            })
+            .collect();
+        Ok(FleetReport {
+            policy: self.policy.name(),
+            routing: self.config.routing,
+            mode: RunMode::EventDriven,
+            threads,
+            boards: boards_out,
+            events,
+            decisions,
+            decision_batches: batches,
+            requests_total: total,
+            dropped: 0,
+            span_s: end,
+            by_model: by_model_out,
+            trails,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::traffic::ArrivalPattern;
+
+    fn scenario() -> FleetScenario {
+        FleetScenario::generate(ArrivalPattern::Bursty, 4, 25.0, 8.0, 0.7, 5).unwrap()
+    }
+
+    fn coord(routing: RoutingPolicy, baseline: Baseline) -> FleetCoordinator {
+        let cfg = FleetConfig {
+            boards: 4,
+            routing,
+            idle_to_sleep_s: 5.0,
+            seed: 5,
+            ..FleetConfig::default()
+        };
+        FleetCoordinator::new(cfg, FleetPolicy::Static(baseline)).unwrap()
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_fingerprint() {
+        let s = scenario();
+        for routing in [RoutingPolicy::RoundRobin, RoutingPolicy::SloAware] {
+            let base = coord(routing, Baseline::Optimal).run_threads(&s, 1).unwrap().fingerprint();
+            for threads in [2, 3, 8] {
+                let fp = coord(routing, Baseline::Optimal)
+                    .run_threads(&s, threads)
+                    .unwrap()
+                    .fingerprint();
+                assert_eq!(base, fp, "{} x {threads} threads", routing.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_run_serves_everything_and_reports_threads() {
+        let s = scenario();
+        let r = coord(RoutingPolicy::EnergyAware, Baseline::Optimal).run_threads(&s, 4).unwrap();
+        assert_eq!(r.threads, 4);
+        assert_eq!(r.requests_done() as usize, s.requests.len());
+        assert_eq!(r.dropped, 0);
+        assert!(r.latency().p99_ms() > 0.0);
+        for trail in &r.trails {
+            assert!(trail.board < 4);
+            assert!(trail.start_s >= trail.at_s);
+            assert!(trail.done_s > trail.start_s);
+        }
+    }
+
+    #[test]
+    fn bad_partitions_are_rejected() {
+        let s = scenario();
+        let mut f = coord(RoutingPolicy::RoundRobin, Baseline::Optimal);
+        // missing board
+        assert!(f.run_partitioned(&s, &[vec![0, 1], vec![2]], 2).is_err());
+        // duplicated board
+        assert!(f.run_partitioned(&s, &[vec![0, 1], vec![1, 2, 3]], 2).is_err());
+        // out of range
+        assert!(f.run_partitioned(&s, &[vec![0, 1, 2, 4]], 2).is_err());
+    }
+
+    #[test]
+    fn empty_scenario_sleeps_to_horizon_like_the_single_queue_path() {
+        let scenario = FleetScenario {
+            requests: Vec::new(),
+            schedules: vec![vec![(0.0, WorkloadState::None)]; 2],
+            horizon_s: 30.0,
+        };
+        let cfg = FleetConfig {
+            boards: 2,
+            routing: RoutingPolicy::EnergyAware,
+            idle_to_sleep_s: 5.0,
+            seed: 1,
+            ..FleetConfig::default()
+        };
+        let mut f = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
+        let r = f.run_threads(&scenario, 2).unwrap();
+        assert_eq!(r.requests_done(), 0);
+        for b in &r.boards {
+            assert!((b.energy.idle_s - 5.0).abs() < 1e-9, "idle {}", b.energy.idle_s);
+            assert!((b.energy.sleep_s - 25.0).abs() < 1e-9, "sleep {}", b.energy.sleep_s);
+        }
+    }
+}

@@ -1,12 +1,26 @@
-//! Fleet event-core benchmark (DESIGN.md §10): runs the same scenario in
-//! [`RunMode::EventDriven`] and the [`RunMode::FineTick`] reference, and
-//! reports loop iterations, wall-clock, events/sec, the speedups, and
-//! the cross-mode parity of total frames/energy. `make bench-fleet`
-//! drives this via `dpuconfig fleet-bench` and writes `BENCH_fleet.json`.
+//! Fleet bench (DESIGN.md §10–§11): two measurements plus a CI gate.
+//!
+//! 1. **Event core vs fine-tick reference** — runs the same scenario in
+//!    [`RunMode::EventDriven`] and [`RunMode::FineTick`] and reports loop
+//!    iterations, wall-clock, events/sec, the speedups, and the
+//!    cross-mode parity of total frames/energy.
+//! 2. **Thread scaling** — runs a dense round-robin scenario on the
+//!    sharded executor at 1/2/4 worker threads, records events/sec per
+//!    thread count, the speedup over one thread, and whether every
+//!    thread count produced the same report fingerprint.
+//!
+//! `make bench-fleet` drives this via `dpuconfig fleet-bench` and writes
+//! `BENCH_fleet.json`; `--check-against <baseline>` turns the run into a
+//! perf-regression gate ([`check_against`]): it fails on >20% events/sec
+//! drops versus the committed baseline, parity rel-err above 1e-6, a
+//! non-deterministic scaling run, or a 4-thread speedup below 1.5x.
+//! Reports embed the git SHA and host thread count so uploaded CI
+//! artifacts stay attributable across runs.
 
 use crate::coordinator::fleet::{
     FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy, RunMode,
 };
+use crate::eval::minijson::{self, Json};
 use crate::rl::Baseline;
 use crate::workload::traffic::ArrivalPattern;
 use anyhow::{Context, Result};
@@ -35,11 +49,39 @@ pub struct ScenarioResult {
     pub dropped: u64,
 }
 
+/// One thread count's measurement on the scaling scenario.
+pub struct ScalingPoint {
+    pub threads: usize,
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+    /// events/sec relative to the 1-thread point.
+    pub speedup: f64,
+}
+
+/// The sharded-executor scaling section of the bench.
+pub struct ScalingReport {
+    pub pattern: &'static str,
+    pub boards: usize,
+    pub requests: usize,
+    /// Event count of the run (identical for every thread count).
+    pub events: u64,
+    /// Every thread count produced a byte-identical report fingerprint.
+    pub deterministic: bool,
+    pub points: Vec<ScalingPoint>,
+}
+
 /// The full bench report.
 pub struct FleetBenchReport {
     pub smoke: bool,
     pub tick_s: f64,
+    /// Commit the numbers were measured at (GITHUB_SHA, else `git
+    /// rev-parse`, else "unknown") — makes uploaded artifacts
+    /// attributable across CI runs.
+    pub git_sha: String,
+    /// Host parallelism at measurement time.
+    pub threads_available: usize,
     pub scenarios: Vec<ScenarioResult>,
+    pub scaling: Option<ScalingReport>,
 }
 
 fn rel_err(a: f64, b: f64) -> f64 {
@@ -48,6 +90,25 @@ fn rel_err(a: f64, b: f64) -> f64 {
     } else {
         (a - b).abs()
     }
+}
+
+/// Short commit id for report attribution.
+fn git_sha() -> String {
+    if let Ok(s) = std::env::var("GITHUB_SHA") {
+        if !s.is_empty() {
+            return s.chars().take(12).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .current_dir(crate::repo_root())
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -98,6 +159,70 @@ fn run_pair(
     })
 }
 
+/// Measure the sharded executor at 1/2/4 threads on a dense round-robin
+/// scenario — the barrier-free fast path (pre-assigned admission, inline
+/// static decisions), so events/sec genuinely scales with workers. Each
+/// point takes the best of two runs to damp scheduler noise.
+fn run_scaling(smoke: bool) -> Result<ScalingReport> {
+    let boards = 8;
+    let (horizon, rate) = if smoke { (30.0, 120.0) } else { (90.0, 200.0) };
+    let seed = 21;
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, boards, horizon, rate, 0.5, seed)?;
+    let mk = || -> Result<FleetCoordinator> {
+        let cfg = FleetConfig {
+            boards,
+            routing: RoutingPolicy::RoundRobin,
+            seed,
+            ..FleetConfig::default()
+        };
+        FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal))
+    };
+    let mut points = Vec::new();
+    let mut fp1 = String::new();
+    let mut events = 0u64;
+    let mut base_eps = 0.0;
+    let mut deterministic = true;
+    for &threads in &[1usize, 2, 4] {
+        let mut best_eps = 0.0;
+        let mut best_wall = f64::INFINITY;
+        for _ in 0..2 {
+            let mut f = mk()?;
+            let t0 = Instant::now();
+            let r = f.run_threads(&scenario, threads)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let eps = r.events as f64 / wall.max(1e-9);
+            if eps > best_eps {
+                best_eps = eps;
+                best_wall = wall;
+            }
+            if threads == 1 {
+                fp1 = r.fingerprint();
+                events = r.events;
+            } else if r.fingerprint() != fp1 {
+                deterministic = false;
+            }
+        }
+        if threads == 1 {
+            base_eps = best_eps;
+        }
+        points.push(ScalingPoint {
+            threads,
+            wall_s: best_wall,
+            events_per_sec: best_eps,
+            speedup: if base_eps > 0.0 { best_eps / base_eps } else { 0.0 },
+        });
+    }
+    Ok(ScalingReport {
+        pattern: "dense_rr",
+        boards,
+        requests: scenario.requests.len(),
+        events,
+        deterministic,
+        points,
+    })
+}
+
 /// Run the bench. `smoke` keeps scenarios small enough for CI; the full
 /// variant stretches the sparse horizon so the idle-skipping win
 /// dominates.
@@ -140,20 +265,29 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             tick_s,
         )?,
     ];
+    let scaling = Some(run_scaling(smoke)?);
     Ok(FleetBenchReport {
         smoke,
         tick_s,
+        git_sha: git_sha(),
+        threads_available: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
         scenarios,
+        scaling,
     })
 }
 
 /// Human-readable table.
 pub fn render(r: &FleetBenchReport) -> String {
     let mut out = format!(
-        "=== fleet event-core bench ({} mode, reference tick {:.3}s)\n\
+        "=== fleet event-core bench ({} mode, reference tick {:.3}s, \
+         commit {}, {} host threads)\n\
          scenario            reqs   ev_iters tick_iters  iterX  wallX   ev/s    p99_ms  frames_err\n",
         if r.smoke { "smoke" } else { "full" },
-        r.tick_s
+        r.tick_s,
+        r.git_sha,
+        r.threads_available,
     );
     for s in &r.scenarios {
         out.push_str(&format!(
@@ -169,14 +303,30 @@ pub fn render(r: &FleetBenchReport) -> String {
             s.frames_rel_err,
         ));
     }
+    if let Some(sc) = &r.scaling {
+        out.push_str(&format!(
+            "=== thread scaling ({}, {} boards, {} requests, {} events, deterministic: {})\n\
+             threads   wall_s       ev/s  speedup\n",
+            sc.pattern, sc.boards, sc.requests, sc.events, sc.deterministic,
+        ));
+        for p in &sc.points {
+            out.push_str(&format!(
+                "{:>7} {:>8.3} {:>10.0} {:>8.2}\n",
+                p.threads, p.wall_s, p.events_per_sec, p.speedup,
+            ));
+        }
+    }
     out
 }
 
-/// Hand-rolled JSON (no serde in the offline vendor set).
+/// Hand-rolled JSON (no serde in the offline vendor set); the matching
+/// reader is [`crate::eval::minijson`].
 pub fn to_json(r: &FleetBenchReport) -> String {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"fleet_event_core\",\n");
     out.push_str(&format!("  \"smoke\": {},\n", r.smoke));
+    out.push_str(&format!("  \"git_sha\": \"{}\",\n", r.git_sha));
+    out.push_str(&format!("  \"threads_available\": {},\n", r.threads_available));
     out.push_str(&format!("  \"reference_tick_s\": {},\n", r.tick_s));
     out.push_str("  \"scenarios\": [\n");
     for (i, s) in r.scenarios.iter().enumerate() {
@@ -206,48 +356,264 @@ pub fn to_json(r: &FleetBenchReport) -> String {
             if i + 1 < r.scenarios.len() { "," } else { "" },
         ));
     }
-    out.push_str("  ]\n}\n");
+    out.push_str("  ],\n");
+    match &r.scaling {
+        None => out.push_str("  \"scaling\": null\n"),
+        Some(sc) => {
+            out.push_str(&format!(
+                "  \"scaling\": {{\"pattern\": \"{}\", \"boards\": {}, \"requests\": {}, \
+                 \"events\": {}, \"deterministic\": {}, \"points\": [\n",
+                sc.pattern, sc.boards, sc.requests, sc.events, sc.deterministic,
+            ));
+            for (i, p) in sc.points.iter().enumerate() {
+                out.push_str(&format!(
+                    "    {{\"threads\": {}, \"wall_s\": {:.6}, \"events_per_sec\": {:.1}, \
+                     \"speedup\": {:.3}}}{}\n",
+                    p.threads,
+                    p.wall_s,
+                    p.events_per_sec,
+                    p.speedup,
+                    if i + 1 < sc.points.len() { "," } else { "" },
+                ));
+            }
+            out.push_str("  ]}\n");
+        }
+    }
+    out.push_str("}\n");
     out
 }
 
 /// Write the JSON report to `path`.
 pub fn write_json(r: &FleetBenchReport, path: &Path) -> Result<()> {
-    std::fs::write(path, to_json(r))
-        .with_context(|| format!("writing {}", path.display()))
+    std::fs::write(path, to_json(r)).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Outcome of the perf-regression gate: failures exit nonzero in the
+/// CLI, warnings only print.
+pub struct GateReport {
+    pub failures: Vec<String>,
+    pub warnings: Vec<String>,
+}
+
+impl GateReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Gate `current` against a committed baseline JSON: fail on >20%
+/// events/sec regression per scenario, parity rel-err above 1e-6,
+/// dropped requests, a non-deterministic scaling run, or (on hosts with
+/// >=4 cores) a 4-thread events/sec speedup below the 1.5x floor. A
+/// missing/placeholder baseline only warns — the first push to main
+/// commits real numbers.
+pub fn check_against(current: &FleetBenchReport, baseline_json: &str) -> GateReport {
+    let mut failures = Vec::new();
+    let mut warnings = Vec::new();
+    for s in &current.scenarios {
+        if s.frames_rel_err > 1e-6 {
+            failures.push(format!(
+                "{}: frames parity rel err {:.3e} exceeds 1e-6",
+                s.name, s.frames_rel_err
+            ));
+        }
+        if s.energy_rel_err > 1e-6 {
+            failures.push(format!(
+                "{}: energy parity rel err {:.3e} exceeds 1e-6",
+                s.name, s.energy_rel_err
+            ));
+        }
+        if s.dropped > 0 {
+            failures.push(format!("{}: dropped {} requests", s.name, s.dropped));
+        }
+    }
+    if let Some(sc) = &current.scaling {
+        if !sc.deterministic {
+            failures.push(
+                "thread scaling: fingerprints differ across thread counts (determinism broken)"
+                    .to_string(),
+            );
+        }
+        if current.threads_available >= 4 {
+            if let Some(p4) = sc.points.iter().find(|p| p.threads == 4) {
+                if p4.speedup < 1.5 {
+                    failures.push(format!(
+                        "thread scaling: 4-thread events/sec speedup {:.2} is below the 1.5x floor",
+                        p4.speedup
+                    ));
+                }
+            }
+        } else {
+            warnings.push(format!(
+                "host has only {} threads; skipping the 4-thread 1.5x speedup floor",
+                current.threads_available
+            ));
+        }
+    }
+    match minijson::parse(baseline_json) {
+        Err(e) => warnings.push(format!(
+            "baseline unreadable ({e:#}); skipping the regression compare"
+        )),
+        Ok(base) => {
+            let scenarios = base.get("scenarios").and_then(Json::as_arr).unwrap_or(&[]);
+            if scenarios.is_empty() {
+                warnings.push(
+                    "baseline has no measured scenarios yet (placeholder); \
+                     skipping the regression compare"
+                        .to_string(),
+                );
+            }
+            for bs in scenarios {
+                let (name, eps) = match (bs.str_of("name"), bs.num("events_per_sec")) {
+                    (Some(n), Some(e)) => (n, e),
+                    _ => {
+                        warnings.push("baseline scenario entry missing name/events_per_sec".into());
+                        continue;
+                    }
+                };
+                match current.scenarios.iter().find(|c| c.name == name) {
+                    None => warnings.push(format!(
+                        "baseline scenario {name:?} missing from the current run"
+                    )),
+                    Some(cur) => {
+                        if eps > 0.0 && cur.events_per_sec < 0.8 * eps {
+                            failures.push(format!(
+                                "{name}: events/sec {:.0} regressed >20% vs baseline {:.0}",
+                                cur.events_per_sec, eps
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    GateReport { failures, warnings }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn json_is_well_formed_enough() {
-        // tiny inline report: no need to run the bench to test the writer
-        let r = FleetBenchReport {
+    fn scenario(name: &'static str, eps: f64) -> ScenarioResult {
+        ScenarioResult {
+            name,
+            pattern: "steady",
+            requests: 10,
+            event_iterations: 50,
+            tick_iterations: 500,
+            event_wall_s: 0.01,
+            tick_wall_s: 0.10,
+            events_per_sec: eps,
+            iteration_speedup: 10.0,
+            wall_speedup: 10.0,
+            frames_rel_err: 0.0,
+            energy_rel_err: 1e-9,
+            p99_ms: 42.0,
+            slo_violations: 0,
+            dropped: 0,
+        }
+    }
+
+    fn report(eps: f64) -> FleetBenchReport {
+        FleetBenchReport {
             smoke: true,
             tick_s: 0.05,
-            scenarios: vec![ScenarioResult {
-                name: "x",
-                pattern: "steady",
-                requests: 10,
-                event_iterations: 50,
-                tick_iterations: 500,
-                event_wall_s: 0.01,
-                tick_wall_s: 0.10,
-                events_per_sec: 5000.0,
-                iteration_speedup: 10.0,
-                wall_speedup: 10.0,
-                frames_rel_err: 0.0,
-                energy_rel_err: 1e-9,
-                p99_ms: 42.0,
-                slo_violations: 0,
-                dropped: 0,
-            }],
-        };
+            git_sha: "deadbeef0123".to_string(),
+            threads_available: 4,
+            scenarios: vec![scenario("x", eps)],
+            scaling: Some(ScalingReport {
+                pattern: "dense_rr",
+                boards: 8,
+                requests: 3000,
+                events: 12000,
+                deterministic: true,
+                points: vec![
+                    ScalingPoint {
+                        threads: 1,
+                        wall_s: 0.10,
+                        events_per_sec: 120_000.0,
+                        speedup: 1.0,
+                    },
+                    ScalingPoint {
+                        threads: 4,
+                        wall_s: 0.04,
+                        events_per_sec: 300_000.0,
+                        speedup: 2.5,
+                    },
+                ],
+            }),
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let r = report(5000.0);
         let j = to_json(&r);
         assert!(j.contains("\"bench\": \"fleet_event_core\""));
+        assert!(j.contains("\"git_sha\": \"deadbeef0123\""));
         assert!(j.contains("\"iteration_speedup\": 10.000"));
+        assert!(j.contains("\"scaling\": {"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert!(!render(&r).is_empty());
+        // and the bundled reader accepts it
+        let v = minijson::parse(&j).unwrap();
+        assert_eq!(v.str_of("git_sha"), Some("deadbeef0123"));
+        let sc = v.get("scaling").unwrap();
+        assert_eq!(sc.num("boards"), Some(8.0));
+    }
+
+    #[test]
+    fn gate_warns_on_placeholder_and_fails_on_regression() {
+        let current = report(5000.0);
+        // placeholder baseline: warn, not fail
+        let g = check_against(&current, r#"{"scenarios": []}"#);
+        assert!(g.ok(), "failures: {:?}", g.failures);
+        assert!(!g.warnings.is_empty());
+        // matching baseline, no regression
+        let base = to_json(&report(5100.0));
+        let g = check_against(&current, &base);
+        assert!(g.ok(), "2% drop must pass: {:?}", g.failures);
+        // >20% regression fails
+        let base = to_json(&report(9000.0));
+        let g = check_against(&current, &base);
+        assert!(!g.ok());
+        assert!(g.failures[0].contains("regressed"), "{:?}", g.failures);
+        // unreadable baseline: warn, not fail
+        let g = check_against(&current, "not json");
+        assert!(g.ok());
+        assert!(!g.warnings.is_empty());
+    }
+
+    #[test]
+    fn gate_enforces_parity_determinism_and_scaling_floor() {
+        let mut current = report(5000.0);
+        current.scenarios[0].frames_rel_err = 1e-3;
+        let g = check_against(&current, r#"{"scenarios": []}"#);
+        assert!(!g.ok());
+        assert!(g.failures[0].contains("parity"), "{:?}", g.failures);
+
+        let mut current = report(5000.0);
+        if let Some(sc) = current.scaling.as_mut() {
+            sc.deterministic = false;
+        }
+        let g = check_against(&current, r#"{"scenarios": []}"#);
+        assert!(!g.ok());
+
+        let mut current = report(5000.0);
+        if let Some(sc) = current.scaling.as_mut() {
+            sc.points[1].speedup = 1.1;
+        }
+        let g = check_against(&current, r#"{"scenarios": []}"#);
+        assert!(!g.ok());
+        assert!(g.failures[0].contains("1.5x"), "{:?}", g.failures);
+
+        // a 2-core host skips the scaling floor with a warning
+        let mut current = report(5000.0);
+        if let Some(sc) = current.scaling.as_mut() {
+            sc.points[1].speedup = 1.1;
+        }
+        current.threads_available = 2;
+        let g = check_against(&current, r#"{"scenarios": []}"#);
+        assert!(g.ok(), "failures: {:?}", g.failures);
     }
 }

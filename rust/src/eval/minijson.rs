@@ -1,0 +1,318 @@
+//! Minimal JSON reader (no serde in the offline vendor set) — just
+//! enough for the bench perf gate to read a committed `BENCH_fleet.json`
+//! baseline back in: objects, arrays, strings, f64 numbers, bools,
+//! null, standard escapes. Writer-side stays the hand-rolled
+//! `fleetbench::to_json`; this is the matching reader.
+//!
+//! ```
+//! use dpuconfig::eval::minijson::{parse, Json};
+//! let v = parse(r#"{"name": "dense", "events_per_sec": 1250.5, "ok": true}"#).unwrap();
+//! assert_eq!(v.str_of("name"), Some("dense"));
+//! assert_eq!(v.num("events_per_sec"), Some(1250.5));
+//! assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// `get(key)` then number.
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Json::as_f64)
+    }
+
+    /// `get(key)` then string.
+    pub fn str_of(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Json::as_str)
+    }
+}
+
+/// Parse one complete JSON document.
+pub fn parse(s: &str) -> Result<Json> {
+    let mut p = Parser {
+        b: s.as_bytes(),
+        i: 0,
+    };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        bail!("trailing bytes at offset {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at offset {}", c as char, self.i)
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at offset {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.obj(),
+            Some(b'[') => self.arr(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(_) => self.number(),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn obj(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            out.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn arr(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let c = match self.peek() {
+                Some(x) => x,
+                None => bail!("unterminated string"),
+            };
+            self.i += 1;
+            if c == b'"' {
+                return String::from_utf8(out).context("invalid UTF-8 in string");
+            }
+            if c != b'\\' {
+                out.push(c);
+                continue;
+            }
+            let e = match self.peek() {
+                Some(x) => x,
+                None => bail!("unterminated escape"),
+            };
+            self.i += 1;
+            match e {
+                b'"' => out.push(b'"'),
+                b'\\' => out.push(b'\\'),
+                b'/' => out.push(b'/'),
+                b'n' => out.push(b'\n'),
+                b't' => out.push(b'\t'),
+                b'r' => out.push(b'\r'),
+                b'b' => out.push(0x08),
+                b'f' => out.push(0x0c),
+                b'u' => {
+                    if self.i + 4 > self.b.len() {
+                        bail!("truncated \\u escape at offset {}", self.i);
+                    }
+                    let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                        .context("non-ASCII \\u escape")?;
+                    let code = u32::from_str_radix(hex, 16).context("non-hex \\u escape")?;
+                    self.i += 4;
+                    let ch = char::from_u32(code).unwrap_or('\u{FFFD}');
+                    let mut buf = [0u8; 4];
+                    out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                }
+                other => bail!("unknown escape \\{} at offset {}", other as char, self.i),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if matches!(c, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        if start == self.i {
+            bail!("unexpected character at offset {}", start);
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).context("non-ASCII number")?;
+        let x: f64 = s
+            .parse()
+            .with_context(|| format!("bad number {s:?} at offset {start}"))?;
+        Ok(Json::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_documents() {
+        let v = parse(
+            r#"{
+                "bench": "fleet_event_core",
+                "smoke": true,
+                "nothing": null,
+                "scenarios": [
+                    {"name": "dense", "events_per_sec": 123456.7, "frames_rel_err": 1.2e-9},
+                    {"name": "sparse", "events_per_sec": 890.0}
+                ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(v.str_of("bench"), Some("fleet_event_core"));
+        assert_eq!(v.get("smoke").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("nothing"), Some(&Json::Null));
+        let sc = v.get("scenarios").and_then(Json::as_arr).unwrap();
+        assert_eq!(sc.len(), 2);
+        assert_eq!(sc[0].str_of("name"), Some("dense"));
+        assert!((sc[0].num("frames_rel_err").unwrap() - 1.2e-9).abs() < 1e-20);
+        assert_eq!(sc[1].num("events_per_sec"), Some(890.0));
+    }
+
+    #[test]
+    fn parses_escapes_and_negatives() {
+        let v = parse(r#"{"s": "a\"b\\c\ndA", "x": -2.5e3}"#).unwrap();
+        assert_eq!(v.str_of("s"), Some("a\"b\\c\ndA"));
+        assert_eq!(v.num("x"), Some(-2500.0));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("{\"a\": }").is_err());
+        assert!(parse("[1, 2,]").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("{\"a\": 1} trailing").is_err());
+    }
+
+    #[test]
+    fn round_trips_the_bench_writer() {
+        // the reader must accept what fleetbench::to_json emits
+        let r = crate::eval::fleetbench::FleetBenchReport {
+            smoke: true,
+            tick_s: 0.05,
+            git_sha: "abc123".to_string(),
+            threads_available: 4,
+            scenarios: vec![],
+            scaling: None,
+        };
+        let v = parse(&crate::eval::fleetbench::to_json(&r)).unwrap();
+        assert_eq!(v.str_of("bench"), Some("fleet_event_core"));
+        assert_eq!(v.str_of("git_sha"), Some("abc123"));
+        assert_eq!(v.num("threads_available"), Some(4.0));
+        assert_eq!(v.get("scenarios").and_then(Json::as_arr).unwrap().len(), 0);
+    }
+}

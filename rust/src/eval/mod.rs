@@ -4,4 +4,5 @@
 pub mod fig5;
 pub mod figures;
 pub mod fleetbench;
+pub mod minijson;
 pub mod timeline;

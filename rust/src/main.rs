@@ -12,8 +12,8 @@
 //! dpuconfig decide  --model ResNet152 --state M # one decision, verbose
 //! dpuconfig fleet   [--boards 4] [--routing energy_aware] [--pattern diurnal]
 //!                   [--rate 20] [--slo-ms 250] [--slo ResNet152=120]
-//!                   [--fine-tick] [--assert-served]
-//! dpuconfig fleet-bench [--full] [--out BENCH_fleet.json]
+//!                   [--threads N] [--fingerprint] [--fine-tick] [--assert-served]
+//! dpuconfig fleet-bench [--full] [--out BENCH_fleet.json] [--check-against BENCH_fleet.json]
 //! dpuconfig adapt   [--kind calibration] [--seed 7]  # online adaptation
 //! ```
 
@@ -152,14 +152,18 @@ fn run() -> Result<()> {
                 policy: args.opt_or("policy", "optimal").to_string(),
                 slo_ms: args.opt_f64("slo-ms", 250.0)?,
                 slo_overrides: args.opt_pairs("slo")?,
+                threads: args.opt_usize("threads", default_threads())?,
+                fingerprint: args.flag("fingerprint"),
                 fine_tick: args.flag("fine-tick"),
                 assert_served: args.flag("assert-served"),
             };
             fleet_demo(&opts)?;
         }
         "fleet-bench" => {
-            // event core vs tick-equivalent reference: iterations,
-            // wall-clock, parity — recorded in BENCH_fleet.json
+            // event core vs tick-equivalent reference + thread scaling:
+            // iterations, wall-clock, parity — recorded in
+            // BENCH_fleet.json. --check-against turns the run into the
+            // CI perf gate (exit nonzero on regression).
             let smoke = !args.flag("full");
             let out = args.opt_or("out", "BENCH_fleet.json").to_string();
             let report = dpuconfig::eval::fleetbench::run(smoke)?;
@@ -167,6 +171,26 @@ fn run() -> Result<()> {
             let path = repo_root().join(&out);
             dpuconfig::eval::fleetbench::write_json(&report, &path)?;
             println!("wrote {}", path.display());
+            if let Some(baseline) = args.opt("check-against") {
+                let bpath = repo_root().join(baseline);
+                let btext = std::fs::read_to_string(&bpath)
+                    .with_context(|| format!("reading baseline {}", bpath.display()))?;
+                let gate = dpuconfig::eval::fleetbench::check_against(&report, &btext);
+                for w in &gate.warnings {
+                    println!("perf-gate warning: {w}");
+                }
+                for f in &gate.failures {
+                    eprintln!("perf-gate FAILURE: {f}");
+                }
+                if !gate.ok() {
+                    bail!(
+                        "fleet-bench perf gate failed against {} ({} failure(s))",
+                        bpath.display(),
+                        gate.failures.len()
+                    );
+                }
+                println!("perf-gate: ok against {}", bpath.display());
+            }
         }
         "adapt" => {
             // online adaptation under drift: frozen agent vs the
@@ -288,6 +312,15 @@ fn colocate_demo(mut names: Vec<String>, state: WorkloadState) -> Result<()> {
     Ok(())
 }
 
+/// Worker threads the fleet runs on by default: the host's available
+/// parallelism (the sharded executor is fingerprint-identical at any
+/// thread count, so this is purely a speed knob).
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 struct FleetDemoOpts {
     boards: usize,
     horizon: f64,
@@ -299,6 +332,8 @@ struct FleetDemoOpts {
     policy: String,
     slo_ms: f64,
     slo_overrides: Vec<(String, f64)>,
+    threads: usize,
+    fingerprint: bool,
     fine_tick: bool,
     assert_served: bool,
 }
@@ -338,22 +373,28 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         o.seed,
     )?;
     println!(
-        "fleet: {} boards, {} requests ({}), routing {}, horizon {}s, SLO {} ms",
+        "fleet: {} boards, {} requests ({}), routing {}, horizon {}s, SLO {} ms, {} thread(s)",
         o.boards,
         scenario.requests.len(),
         o.pattern.name(),
         o.routing.name(),
         o.horizon,
         o.slo_ms,
+        if o.fine_tick { 1 } else { o.threads },
     );
-    let mode = if o.fine_tick {
-        RunMode::FineTick
-    } else {
-        RunMode::EventDriven
-    };
     let mut fleet = FleetCoordinator::new(cfg, fleet_policy)?;
-    let report = fleet.run_mode(&scenario, mode)?;
+    let report = if o.fine_tick {
+        // the tick-grid reference mode stays on the single-queue path
+        fleet.run_mode(&scenario, RunMode::FineTick)?
+    } else {
+        fleet.run_threads(&scenario, o.threads)?
+    };
     print!("{}", report.render());
+    if o.fingerprint {
+        // stable digest for determinism checks: byte-identical across
+        // thread counts (the CI smoke diffs 1-thread vs N-thread runs)
+        println!("fingerprint {}", report.fingerprint());
+    }
     if o.assert_served {
         // CI smoke contract: the stream drains, nothing is dropped, and
         // latency accounting produced a real tail

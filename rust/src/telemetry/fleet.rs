@@ -31,6 +31,33 @@ pub struct FleetStats {
     pub total_p_arm: f64,
 }
 
+impl FleetStats {
+    /// Fold another aggregate into this one (shard rollup -> fleet
+    /// rollup): totals add, `mean_cpu` recombines weighted by board
+    /// count, `max_cpu` takes the max. Property-tested so that
+    /// `aggregate(all)` and merging per-shard aggregates agree — i.e. a
+    /// collector scraping shard-level exporters can compose them without
+    /// re-reading every board. (Utility API: the simulator's own report
+    /// merge path works on latency histograms and board reports.)
+    pub fn merge(&self, other: &FleetStats) -> FleetStats {
+        let boards = self.boards + other.boards;
+        let mean_cpu = if boards > 0 {
+            (self.mean_cpu * self.boards as f64 + other.mean_cpu * other.boards as f64)
+                / boards as f64
+        } else {
+            0.0
+        };
+        FleetStats {
+            boards,
+            mean_cpu,
+            max_cpu: self.max_cpu.max(other.max_cpu),
+            total_mem_gbs: self.total_mem_gbs + other.total_mem_gbs,
+            total_p_fpga: self.total_p_fpga + other.total_p_fpga,
+            total_p_arm: self.total_p_arm + other.total_p_arm,
+        }
+    }
+}
+
 /// Aggregate per-board samples into fleet totals. Empty input is a
 /// zero-board fleet (all aggregates 0).
 pub fn aggregate(samples: &[Sample]) -> FleetStats {
@@ -144,6 +171,28 @@ mod tests {
         assert!((a.total_p_fpga - 25.0).abs() < 1e-12);
         // 3 boards x 15 ports x 7.5 MB/s... -> (10*5 + 5*5)/1e3 GB/s each
         assert!((a.total_mem_gbs - 3.0 * 0.075).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merging_shard_aggregates_matches_aggregating_everything() {
+        let all = vec![
+            sample(20.0, 6.0),
+            sample(40.0, 8.0),
+            sample(90.0, 11.0),
+            sample(10.0, 4.0),
+        ];
+        let whole = aggregate(&all);
+        let merged = aggregate(&all[..1])
+            .merge(&aggregate(&all[1..3]))
+            .merge(&aggregate(&all[3..]));
+        assert_eq!(merged.boards, whole.boards);
+        assert!((merged.mean_cpu - whole.mean_cpu).abs() < 1e-12);
+        assert!((merged.max_cpu - whole.max_cpu).abs() < 1e-12);
+        assert!((merged.total_p_fpga - whole.total_p_fpga).abs() < 1e-12);
+        assert!((merged.total_mem_gbs - whole.total_mem_gbs).abs() < 1e-12);
+        // merging with an empty shard is the identity
+        let with_empty = whole.merge(&aggregate(&[]));
+        assert_eq!(with_empty, whole);
     }
 
     #[test]

@@ -111,6 +111,21 @@ impl LatencyHistogram {
         }
     }
 
+    /// Merge an ordered sequence of histograms into one. The fold order
+    /// is the caller's (sum_ms is an f64 accumulation), so pass parts in
+    /// a canonical order — e.g. board-index order — when the result must
+    /// be identical across board partitions and thread counts.
+    pub fn merged<'a, I>(parts: I) -> LatencyHistogram
+    where
+        I: IntoIterator<Item = &'a LatencyHistogram>,
+    {
+        let mut out = LatencyHistogram::new();
+        for p in parts {
+            out.merge(p);
+        }
+        out
+    }
+
     /// Fold another histogram into this one (per-board -> fleet rollup).
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
@@ -243,6 +258,26 @@ mod tests {
             assert!(est <= truth * 1.15, "q{q}: {est} over-reports {truth}");
         }
         assert!((h.mean_ms() - 250.075).abs() < 0.05);
+    }
+
+    #[test]
+    fn merged_folds_parts_in_order() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_ms(10.0);
+        a.record_ms(20.0);
+        b.record_ms(300.0);
+        let m = LatencyHistogram::merged([&a, &b]);
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.max_ms(), 300.0);
+        assert_eq!(m.min_ms(), 10.0);
+        let mut byhand = a.clone();
+        byhand.merge(&b);
+        assert_eq!(m.fingerprint(), byhand.fingerprint());
+        assert_eq!(
+            LatencyHistogram::merged(Vec::<&LatencyHistogram>::new()).count(),
+            0
+        );
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! Fleet event-core integration tests: event-vs-tick parity and the
-//! idle-skipping speedup (the tentpole acceptance criteria), the SLO
-//! story (SLO-aware routing beating round-robin on p99 under bursty
-//! load), sleep-state energy economics, routing/policy determinism, and
-//! (artifact-gated) batched-vs-sequential agent equivalence.
+//! idle-skipping speedup, the SLO story (SLO-aware routing beating
+//! round-robin on p99 under bursty load), sleep-state energy economics,
+//! routing/policy determinism, (artifact-gated) batched-vs-sequential
+//! agent equivalence — and the sharded-executor contracts: `--threads N`
+//! fingerprints byte-identical to 1 thread for every RoutingPolicy x
+//! FleetPolicy combo, partition invariance under random board
+//! groupings, physics parity with the single-queue path, and the
+//! event-budget exhaustion error naming the stuck board.
 
 use dpuconfig::coordinator::fleet::{
     least_loaded_pick, FleetConfig, FleetCoordinator, FleetPolicy, FleetRequest, FleetScenario,
@@ -348,6 +352,166 @@ fn trails_and_model_histograms_are_consistent() {
     let by_model_viol: u64 = r.by_model.iter().map(|m| m.violations).sum();
     assert_eq!(by_model_viol, r.slo_violations());
     assert!(r.latency().count() == r.requests_done());
+}
+
+/// Tentpole acceptance: `run_threads(N)` produces a byte-identical
+/// report fingerprint to `run_threads(1)` for every RoutingPolicy x
+/// FleetPolicy combination — thread count is purely a speed knob.
+#[test]
+fn sharded_fingerprint_is_thread_count_invariant_for_every_combo() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 3, 30.0, 8.0, 0.7, 9).unwrap();
+    let fingerprint = |routing: RoutingPolicy, policy: &str, threads: usize| -> String {
+        let cfg = FleetConfig {
+            boards: 3,
+            routing,
+            idle_to_sleep_s: 5.0,
+            seed: 9,
+            ..FleetConfig::default()
+        };
+        let fleet_policy = match policy {
+            "optimal" => FleetPolicy::Static(Baseline::Optimal),
+            "max_fps" => FleetPolicy::Static(Baseline::MaxFps),
+            "min_power" => FleetPolicy::Static(Baseline::MinPower),
+            "random" => FleetPolicy::Static(Baseline::Random),
+            "online" => FleetPolicy::Online(Box::new(
+                OnlineAgent::load_default(9).expect("committed policy weights"),
+            )),
+            other => panic!("unknown test policy {other}"),
+        };
+        FleetCoordinator::new(cfg, fleet_policy)
+            .unwrap()
+            .run_threads(&scenario, threads)
+            .unwrap()
+            .fingerprint()
+    };
+    for routing in RoutingPolicy::all() {
+        for policy in ["optimal", "max_fps", "min_power", "random", "online"] {
+            let one = fingerprint(routing, policy, 1);
+            let four = fingerprint(routing, policy, 4);
+            assert_eq!(one, four, "{policy} x {} invariant", routing.name());
+        }
+    }
+}
+
+/// Tentpole acceptance (property half): arbitrary board partitions —
+/// any number of shards, any grouping, any thread count — produce the
+/// exact fingerprint of the 1-thread run.
+#[test]
+fn prop_random_board_partitions_produce_identical_fingerprints() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 5, 25.0, 6.0, 0.7, 13).unwrap();
+    let mk = || {
+        let cfg = FleetConfig {
+            boards: 5,
+            routing: RoutingPolicy::SloAware,
+            idle_to_sleep_s: 5.0,
+            seed: 13,
+            ..FleetConfig::default()
+        };
+        FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap()
+    };
+    let base = mk().run_threads(&scenario, 1).unwrap().fingerprint();
+    forall(99, 8, |g, case| {
+        let shard_count = 1 + g.usize(5);
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); shard_count];
+        for board in 0..5 {
+            let pick = g.usize(shard_count);
+            groups[pick].push(board);
+        }
+        let threads = 1 + g.usize(4);
+        let mut f = mk();
+        let fp = f.run_partitioned(&scenario, &groups, threads).unwrap().fingerprint();
+        assert_eq!(base, fp, "case {case}: groups {groups:?}, {threads} threads");
+    });
+}
+
+/// The sharded executor is the same physical simulation as the
+/// single-queue path: for an order-independent policy, every routing
+/// policy yields identical frames, energy, per-board latency, wakes,
+/// and decision counts (only the event-counting convention differs).
+#[test]
+fn sharded_executor_matches_single_queue_physics() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, 3, 25.0, 10.0, 0.6, 19).unwrap();
+    for routing in RoutingPolicy::all() {
+        let cfg = FleetConfig {
+            boards: 3,
+            routing,
+            idle_to_sleep_s: 5.0,
+            seed: 19,
+            ..FleetConfig::default()
+        };
+        let sq = optimal_fleet(cfg.clone()).run(&scenario).unwrap();
+        let sh = optimal_fleet(cfg).run_threads(&scenario, 2).unwrap();
+        let name = routing.name();
+        assert_eq!(sq.requests_done(), sh.requests_done(), "{name}: requests");
+        assert_eq!(sq.decisions, sh.decisions, "{name}: decisions");
+        assert_eq!(sq.decision_batches, sh.decision_batches, "{name}: passes");
+        assert!(
+            (sq.total_frames() - sh.total_frames()).abs() < 1e-9,
+            "{name}: frames {} vs {}",
+            sq.total_frames(),
+            sh.total_frames()
+        );
+        let e_rel = ((sq.total_energy_j() - sh.total_energy_j()) / sq.total_energy_j()).abs();
+        assert!(e_rel < 1e-9, "{name}: energy rel err {e_rel:.3e}");
+        let span_diff = (sq.span_s - sh.span_s).abs();
+        assert!(span_diff < 1e-9, "{name}: span {} vs {}", sq.span_s, sh.span_s);
+        for (a, b) in sq.boards.iter().zip(&sh.boards) {
+            assert_eq!(a.board, b.board);
+            assert_eq!(a.wakes, b.wakes, "{name} board {}", a.board);
+            assert_eq!(a.requests_done, b.requests_done, "{name} board {}", a.board);
+            assert_eq!(a.slo_violations, b.slo_violations, "{name} board {}", a.board);
+            assert_eq!(
+                a.latency.fingerprint(),
+                b.latency.fingerprint(),
+                "{name} board {}: per-request latencies must be identical",
+                a.board
+            );
+        }
+    }
+}
+
+/// Event-budget exhaustion through the public API: both serving loops
+/// honor `FleetConfig::event_budget` and the error names the stuck
+/// board and its queue depth (the happy path alone used to be pinned).
+#[test]
+fn event_budget_err_names_stuck_board_on_both_executors() {
+    let scenario = FleetScenario {
+        requests: (0..20).map(|i| req("ResNet18", i as f64 * 0.01)).collect(),
+        schedules: steady_schedules(2),
+        horizon_s: 10.0,
+    };
+    let cfg = FleetConfig {
+        boards: 2,
+        routing: RoutingPolicy::LeastLoaded,
+        seed: 3,
+        event_budget: Some(8),
+        ..FleetConfig::default()
+    };
+    let err = optimal_fleet(cfg.clone()).run(&scenario).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("event budget exhausted"), "{msg}");
+    assert!(msg.contains("board"), "{msg}");
+    assert!(msg.contains("queue depth"), "{msg}");
+
+    let err = optimal_fleet(cfg.clone()).run_threads(&scenario, 2).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("event budget exhausted"), "{msg}");
+    assert!(msg.contains("board"), "{msg}");
+    assert!(msg.contains("queue depth"), "{msg}");
+
+    // the barrier-free fast path (round-robin + static policy drains
+    // everything in one unbounded round) must also trip the budget —
+    // enforced per board inside the drain, not just at barriers
+    let mut rr = cfg;
+    rr.routing = RoutingPolicy::RoundRobin;
+    let err = optimal_fleet(rr).run_threads(&scenario, 2).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("event budget exhausted"), "{msg}");
+    assert!(msg.contains("board"), "{msg}");
+    assert!(msg.contains("queue depth"), "{msg}");
 }
 
 /// Batched fleet decisions must agree with the sequential agent
