@@ -1,0 +1,718 @@
+//! The board physics kernel (DESIGN.md §12): ONE implementation of the
+//! per-board state machine every executor drives.
+//!
+//! Before this module existed the repo carried the same physics twice —
+//! the single-board coordinator integrated energy inline in its serving
+//! loop while the fleet path modeled power-state phases, energy
+//! segmentation and wake/reconfiguration charges in its own `Board`
+//! struct — and every physics change had to be made in both places.
+//! Now `Board` + `advance` are the only place simulated time turns
+//! into energy, busy time, overhead time and constraint-violation time;
+//! the three executors ([`crate::coordinator::server`] single-board,
+//! [`crate::coordinator::fleet`] single-queue fleet,
+//! [`crate::coordinator::shard`] sharded fleet) differ only in how they
+//! schedule events against it.
+//!
+//! The kernel is parameterized by a per-board [`BoardProfile`]: the DPU
+//! fabric size the board's PL can host, first-order power/performance
+//! scaling relative to the calibrated ZCU102, and the board's
+//! sleep-state economics (idle dwell, wake latency). A homogeneous
+//! fleet uses [`BoardProfile::zcu102`] everywhere, which is exactly the
+//! pre-profile behavior; heterogeneous fleets mix classes (e.g.
+//! `B512`/`B1024`/`B4096`-class boards) and the routing layer's
+//! service/power estimates become per-board automatically because every
+//! estimate flows through the profile-aware caches below.
+
+use crate::coordinator::reconfig::ReconfigManager;
+use crate::coordinator::server::Totals;
+use crate::data::{Action, DpuSize};
+use crate::dpusim::energy::{idle_power_w, sleep_power_w, EnergyMeter};
+use crate::dpusim::{DpuSim, Metrics};
+use crate::models::ModelVariant;
+use crate::rl::reward::RewardCalculator;
+use crate::rl::Baseline;
+use crate::telemetry::latency::LatencyHistogram;
+use crate::telemetry::{PlatformState, Sample, Sampler};
+use crate::workload::traffic::state_at;
+use crate::workload::{WorkloadState, XorShift64};
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+/// What one board class looks like to the physics kernel.
+///
+/// `wake_penalty_s` / `idle_to_sleep_s` are `None` to inherit the
+/// fleet-level defaults ([`crate::coordinator::fleet::FleetConfig`]);
+/// a concrete value pins the board class (e.g. a small board that wakes
+/// faster than the rack default).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardProfile {
+    /// Display name: `"zcu102"` for the calibrated reference board, or
+    /// the largest hosted DPU size (`"B512"`, `"B1024"`, ...) for a
+    /// restricted class. `Arc<str>` because the class is part of every
+    /// service-estimate cache key on the routing hot path — cloning it
+    /// is a refcount bump, not an allocation. Two profiles sharing a
+    /// class name MUST be identical (the caches key by class;
+    /// `FleetCoordinator::new` rejects violations).
+    pub class: Arc<str>,
+    /// Fabric cap: peak MACs/cycle of the largest DPU array this
+    /// board's PL hosts. Actions with a bigger array are infeasible on
+    /// the board and get projected onto the allowed subset
+    /// (`fit_action`, DESIGN.md §12). `u32::MAX` = unrestricted.
+    pub max_peak_macs: u32,
+    /// Throughput multiplier relative to the calibrated ZCU102 (same
+    /// DPU configuration, different fabric speed grade). 1.0 = the
+    /// calibrated board.
+    pub perf_scale: f64,
+    /// PL power multiplier relative to the calibrated ZCU102
+    /// (first-order area/process scaling). 1.0 = the calibrated board.
+    pub power_scale: f64,
+    /// Sleep-exit latency (s); `None` inherits the fleet default.
+    pub wake_penalty_s: Option<f64>,
+    /// Idle dwell before dropping to sleep (s); `None` inherits the
+    /// fleet default.
+    pub idle_to_sleep_s: Option<f64>,
+}
+
+impl BoardProfile {
+    /// The calibrated reference board: unrestricted fabric, identity
+    /// scaling, fleet-default sleep economics. A fleet of these is
+    /// bit-identical to the pre-profile homogeneous fleet.
+    pub fn zcu102() -> BoardProfile {
+        BoardProfile {
+            class: Arc::from("zcu102"),
+            max_peak_macs: u32::MAX,
+            perf_scale: 1.0,
+            power_scale: 1.0,
+            wake_penalty_s: None,
+            idle_to_sleep_s: None,
+        }
+    }
+
+    /// A board class named by the largest DPU size its fabric hosts
+    /// (`"B512"`, `"B1024"`, `"B4096"`, ... — any Table-I size). Smaller
+    /// fabric draws proportionally less PL power: `power_scale` follows
+    /// a first-order sqrt-area model, normalized so the largest class is
+    /// exactly the calibrated board (scale 1.0).
+    pub fn of_class(class: &str, sizes: &HashMap<String, DpuSize>) -> Result<BoardProfile> {
+        let size = sizes
+            .get(class)
+            .with_context(|| format!("unknown board class {class:?} (want a Table-I DPU size)"))?;
+        let largest = sizes
+            .values()
+            .map(|s| s.peak_macs)
+            .max()
+            .context("empty DPU size table")? as f64;
+        let frac = size.peak_macs as f64 / largest;
+        Ok(BoardProfile {
+            class: Arc::from(class),
+            max_peak_macs: size.peak_macs,
+            perf_scale: 1.0,
+            power_scale: 0.5 + 0.5 * frac.sqrt(),
+            wake_penalty_s: None,
+            idle_to_sleep_s: None,
+        })
+    }
+
+    /// Whether `action`'s DPU array fits this board's fabric.
+    pub fn allows(&self, sizes: &HashMap<String, DpuSize>, action: &Action) -> bool {
+        sizes
+            .get(&action.size)
+            .is_some_and(|s| s.peak_macs <= self.max_peak_macs)
+    }
+
+    /// Whether every DPU size in the table fits this board — the
+    /// fast-path check that lets the calibrated reference skip the
+    /// allowed-subset machinery entirely.
+    pub fn is_unrestricted(&self, sizes: &HashMap<String, DpuSize>) -> bool {
+        sizes.values().all(|s| s.peak_macs <= self.max_peak_macs)
+    }
+
+    /// Profile-adjusted steady-state metrics. Identity (bit-exact) for
+    /// the calibrated reference scaling.
+    pub fn metrics(&self, m: Metrics) -> Metrics {
+        m.scaled(self.perf_scale, self.power_scale)
+    }
+}
+
+/// Run-wide base constants the kernel resolves a profile against:
+/// calibrated power levels plus the fleet-level sleep-economics
+/// defaults profiles inherit when they don't pin their own.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PowerBase {
+    pub(crate) p_static_w: f64,
+    pub(crate) p_arm_base_w: f64,
+    pub(crate) sleep_w: f64,
+    pub(crate) wake_penalty_s: f64,
+    pub(crate) idle_to_sleep_s: f64,
+}
+
+impl PowerBase {
+    pub(crate) fn from_sim(sim: &DpuSim, wake_penalty_s: f64, idle_to_sleep_s: f64) -> PowerBase {
+        let cal = sim.calibration();
+        PowerBase {
+            p_static_w: cal.get("p_pl_static").copied().unwrap_or(3.0),
+            p_arm_base_w: cal.get("p_arm_base").copied().unwrap_or(1.5),
+            sleep_w: sleep_power_w(cal),
+            wake_penalty_s,
+            idle_to_sleep_s,
+        }
+    }
+}
+
+/// What one board is doing right now (power/accounting regime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// Low-power state; exit pays wake latency + full reconfiguration.
+    Sleeping,
+    /// Paying the sleep-exit latency.
+    Waking,
+    /// Paying decision/reconfiguration overhead.
+    Reconfiguring,
+    /// Serving frames.
+    Serving,
+    /// Awake, queue empty, bitstream retained.
+    Idle,
+    /// Awake with queued work, waiting on a same-instant decision.
+    Holding,
+}
+
+/// One queued request on a board (head = in service or next up).
+#[derive(Debug, Clone)]
+pub(crate) struct QueuedReq {
+    pub(crate) req: usize,
+    pub(crate) model: ModelVariant,
+    pub(crate) at_s: f64,
+}
+
+/// One board: power-state machine, energy segmentation, per-request
+/// latency accounting and reward bookkeeping — the state every executor
+/// drives. All fields are plain owned data (`Send`), so the sharded
+/// executor can move boards onto worker threads between barriers.
+pub(crate) struct Board {
+    /// The board class: fabric cap, power/perf scaling, sleep economics.
+    pub(crate) profile: BoardProfile,
+    /// Resolved static PL power of this board (base × power_scale).
+    pub(crate) p_static_w: f64,
+    /// Resolved sleep-state power (base × power_scale).
+    pub(crate) sleep_w: f64,
+    /// Resolved sleep-exit latency (profile override or fleet default).
+    pub(crate) wake_penalty_s: f64,
+    /// Resolved idle dwell before sleep (profile override or default).
+    pub(crate) idle_to_sleep_s: f64,
+    pub(crate) reconfig: ReconfigManager,
+    pub(crate) sampler: Sampler,
+    pub(crate) rewards: RewardCalculator,
+    pub(crate) phase: Phase,
+    /// Power drawn in the current phase (W) — energy integrates lazily
+    /// between events at this constant power.
+    pub(crate) phase_power_w: f64,
+    /// Energy/time integrated up to this simulated instant.
+    pub(crate) last_t: f64,
+    /// When the current frame/overhead/wake completes.
+    pub(crate) busy_until: f64,
+    pub(crate) queue: VecDeque<QueuedReq>,
+    /// Chosen action for (head model, state), if still valid.
+    pub(crate) decided: Option<(usize, String, WorkloadState)>,
+    /// A DecisionDue event is already scheduled for this board.
+    pub(crate) decision_pending: bool,
+    /// Invalidates SleepTimer events from earlier idle episodes.
+    pub(crate) idle_epoch: u64,
+    pub(crate) serving_meets: bool,
+    /// Occupancy-derived observation inputs (what a node exporter would
+    /// measure *now*): DPU DDR traffic, host coordination CPU, PL power.
+    pub(crate) obs_traffic_bps: f64,
+    pub(crate) obs_host_util: f64,
+    pub(crate) obs_p_fpga: f64,
+    /// Telemetry snapshot at the last decision (reward bookkeeping).
+    pub(crate) last_cpu: f64,
+    pub(crate) last_mem_gbs: f64,
+    // accounting
+    pub(crate) totals: Totals,
+    pub(crate) energy: EnergyMeter,
+    pub(crate) wakes: u64,
+    pub(crate) requests_done: u64,
+    pub(crate) slo_violations: u64,
+    pub(crate) latency: LatencyHistogram,
+    pub(crate) reward_sum: f64,
+    pub(crate) reward_n: u64,
+    pub(crate) qdepth_sum: u64,
+    pub(crate) late_decisions: u64,
+}
+
+impl Board {
+    /// Build a board in its initial state: awake, idle, nothing loaded,
+    /// static power burning. Profile values resolve against `base`.
+    pub(crate) fn new(profile: BoardProfile, sampler: Sampler, base: &PowerBase) -> Board {
+        let p_static_w = base.p_static_w * profile.power_scale;
+        let sleep_w = base.sleep_w * profile.power_scale;
+        let wake_penalty_s = profile.wake_penalty_s.unwrap_or(base.wake_penalty_s);
+        let idle_to_sleep_s = profile.idle_to_sleep_s.unwrap_or(base.idle_to_sleep_s);
+        Board {
+            profile,
+            p_static_w,
+            sleep_w,
+            wake_penalty_s,
+            idle_to_sleep_s,
+            reconfig: ReconfigManager::new(),
+            sampler,
+            rewards: RewardCalculator::new(),
+            phase: Phase::Idle,
+            phase_power_w: p_static_w,
+            last_t: 0.0,
+            busy_until: 0.0,
+            queue: VecDeque::new(),
+            decided: None,
+            decision_pending: false,
+            idle_epoch: 0,
+            serving_meets: true,
+            obs_traffic_bps: 0.0,
+            obs_host_util: 0.0,
+            obs_p_fpga: p_static_w,
+            last_cpu: 0.0,
+            last_mem_gbs: 0.0,
+            totals: Totals::default(),
+            energy: EnergyMeter::new(),
+            wakes: 0,
+            requests_done: 0,
+            slo_violations: 0,
+            latency: LatencyHistogram::new(),
+            reward_sum: 0.0,
+            reward_n: 0,
+            qdepth_sum: 0,
+            late_decisions: 0,
+        }
+    }
+
+    /// Awake idle PL power of whatever configuration the board holds,
+    /// scaled to the board class.
+    pub(crate) fn idle_power_w(&self, sim: &DpuSim) -> f64 {
+        let loaded = self.reconfig.current_action();
+        idle_power_w(sim, loaded.map(|id| &sim.actions()[id])) * self.profile.power_scale
+    }
+}
+
+/// Integrate the board's current regime from `last_t` to `t` — the one
+/// place simulated time becomes energy/busy/overhead/violation totals.
+pub(crate) fn advance(b: &mut Board, t: f64) {
+    let dt = t - b.last_t;
+    if dt <= 0.0 {
+        return;
+    }
+    match b.phase {
+        Phase::Sleeping => b.energy.add_sleep(b.phase_power_w, dt),
+        Phase::Waking => {
+            b.energy.add_wake(b.phase_power_w * dt);
+            b.totals.overhead_s += dt;
+        }
+        Phase::Reconfiguring => {
+            b.energy.add_active(b.phase_power_w, dt);
+            b.totals.overhead_s += dt;
+        }
+        Phase::Serving => {
+            b.energy.add_active(b.phase_power_w, dt);
+            b.totals.busy_s += dt;
+            b.totals.energy_fpga_j += b.phase_power_w * dt;
+            if !b.serving_meets {
+                b.totals.constraint_violation_s += dt;
+            }
+        }
+        Phase::Idle | Phase::Holding => b.energy.add_idle(b.phase_power_w, dt),
+    }
+    b.last_t = t;
+}
+
+/// (board class, model, action, state) -> profile-adjusted steady-state
+/// metrics. Keyed by class because two classes scale the same raw
+/// evaluation differently (same-class profiles are validated identical).
+pub(crate) type MetricsCache = HashMap<(Arc<str>, String, usize, WorkloadState), Metrics>;
+/// (board class, model, state) -> (best allowed action id, its
+/// per-frame service seconds) — the routing predictor's unit.
+pub(crate) type EstCache = HashMap<(Arc<str>, String, WorkloadState), (usize, f64)>;
+
+/// Profile-adjusted steady-state metrics of (model, action, state)
+/// through the caller's cache. Cache placement never changes results —
+/// metrics are a pure function of the key — which is what lets the
+/// sharded executor keep private caches without breaking determinism.
+pub(crate) fn metrics_cached(
+    sim: &DpuSim,
+    cache: &mut MetricsCache,
+    profile: &BoardProfile,
+    model: &ModelVariant,
+    action_id: usize,
+    state: WorkloadState,
+) -> Result<Metrics> {
+    let key = (profile.class.clone(), model.name(), action_id, state);
+    if let Some(m) = cache.get(&key) {
+        return Ok(*m);
+    }
+    let (size, instances) = {
+        let a = &sim.actions()[action_id];
+        (a.size.clone(), a.instances)
+    };
+    let m = profile.metrics(sim.evaluate(model, &size, instances, state)?);
+    cache.insert(key, m);
+    Ok(m)
+}
+
+/// The oracle decision restricted to the board's fabric: best-PPW
+/// allowed action meeting the FPS constraint (fallback: best PPW among
+/// allowed unconditionally — same tie/fallback semantics as
+/// [`DpuSim::optimal_action`], which this reduces to on an unrestricted
+/// identity profile). Returns `(action id, per-frame service seconds)`.
+pub(crate) fn best_allowed_cached(
+    sim: &DpuSim,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    profile: &BoardProfile,
+    model: &ModelVariant,
+    state: WorkloadState,
+) -> Result<(usize, f64)> {
+    let key = (profile.class.clone(), model.name(), state);
+    if let Some(v) = ecache.get(&key) {
+        return Ok(*v);
+    }
+    let allowed: Vec<usize> = (0..sim.actions().len())
+        .filter(|&i| profile.allows(sim.sizes(), &sim.actions()[i]))
+        .collect();
+    anyhow::ensure!(
+        !allowed.is_empty(),
+        "board class {} hosts no action in the {}-action space",
+        profile.class,
+        sim.actions().len()
+    );
+    let mut rows = Vec::with_capacity(allowed.len());
+    for &i in &allowed {
+        rows.push(metrics_cached(sim, mcache, profile, model, i, state)?);
+    }
+    let feasible: Vec<usize> = (0..rows.len())
+        .filter(|&i| rows[i].meets_constraint)
+        .collect();
+    let pool: Vec<usize> = if feasible.is_empty() {
+        (0..rows.len()).collect()
+    } else {
+        feasible
+    };
+    let best = pool
+        .into_iter()
+        .max_by(|&a, &b| rows[a].ppw.partial_cmp(&rows[b].ppw).unwrap())
+        .expect("non-empty action pool");
+    let out = (allowed[best], rows[best].frame_service_s());
+    ecache.insert(key, out);
+    Ok(out)
+}
+
+/// Estimated per-frame service time of `model` under `state` on this
+/// board class (the restricted oracle's throughput), memoized.
+pub(crate) fn est_service_cached(
+    sim: &DpuSim,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    profile: &BoardProfile,
+    model: &ModelVariant,
+    state: WorkloadState,
+) -> Result<f64> {
+    Ok(best_allowed_cached(sim, mcache, ecache, profile, model, state)?.1)
+}
+
+/// Project a policy-chosen action onto the board's fabric: identity when
+/// the array fits, otherwise the restricted oracle's pick for
+/// (model, state). The projection is a pure function of its key, so it
+/// is executor- and partition-invariant. This is the projection for the
+/// *learned* policies (the frozen 26-action PPO head and the online
+/// learner predate heterogeneous fleets — DESIGN.md §12); static
+/// baselines instead re-select under their own objective via
+/// [`select_allowed`], so MaxFps stays max-FPS on a restricted board.
+pub(crate) fn fit_action(
+    sim: &DpuSim,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    profile: &BoardProfile,
+    chosen: usize,
+    model: &ModelVariant,
+    state: WorkloadState,
+) -> Result<usize> {
+    if profile.allows(sim.sizes(), &sim.actions()[chosen]) {
+        return Ok(chosen);
+    }
+    Ok(best_allowed_cached(sim, mcache, ecache, profile, model, state)?.0)
+}
+
+/// A static baseline's selection restricted to the board's fabric,
+/// keeping the baseline's own objective: Optimal = the restricted
+/// oracle, MaxFps = max aggregate FPS among allowed actions, MinPower =
+/// min PL power among allowed, Random = uniform over the allowed
+/// subset. On an unrestricted profile this delegates to
+/// [`Baseline::select`] verbatim (identical tie semantics and RNG
+/// stream — the homogeneous path is bit-exactly the pre-profile one).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn select_allowed(
+    baseline: Baseline,
+    sim: &DpuSim,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    profile: &BoardProfile,
+    model: &ModelVariant,
+    state: WorkloadState,
+    rng: Option<&mut XorShift64>,
+) -> Result<usize> {
+    if profile.is_unrestricted(sim.sizes()) {
+        return baseline.select(sim, model, state, rng);
+    }
+    if baseline == Baseline::Optimal {
+        return Ok(best_allowed_cached(sim, mcache, ecache, profile, model, state)?.0);
+    }
+    let allowed: Vec<usize> = (0..sim.actions().len())
+        .filter(|&i| profile.allows(sim.sizes(), &sim.actions()[i]))
+        .collect();
+    anyhow::ensure!(
+        !allowed.is_empty(),
+        "board class {} hosts no action in the {}-action space",
+        profile.class,
+        sim.actions().len()
+    );
+    match baseline {
+        Baseline::Random => {
+            let rng = rng.expect("Random baseline needs an rng");
+            Ok(allowed[rng.below(allowed.len())])
+        }
+        Baseline::MaxFps | Baseline::MinPower => {
+            let mut rows = Vec::with_capacity(allowed.len());
+            for &i in &allowed {
+                rows.push(metrics_cached(sim, mcache, profile, model, i, state)?);
+            }
+            // same tie semantics as DpuSim::{max_fps,min_power}_action:
+            // max_by keeps the last maximum, min_by the first minimum
+            let pos = match baseline {
+                Baseline::MaxFps => (0..rows.len())
+                    .max_by(|&a, &b| rows[a].fps.partial_cmp(&rows[b].fps).unwrap()),
+                _ => (0..rows.len())
+                    .min_by(|&a, &b| rows[a].p_fpga.partial_cmp(&rows[b].p_fpga).unwrap()),
+            }
+            .expect("non-empty allowed set");
+            Ok(allowed[pos])
+        }
+        Baseline::Optimal => unreachable!("handled above"),
+    }
+}
+
+/// What one decision consumed from the platform: workload state, the
+/// head request's model, queue context, and the telemetry sample taken
+/// at the decision instant.
+pub(crate) struct DecisionObservation {
+    pub(crate) state: WorkloadState,
+    pub(crate) head_model: ModelVariant,
+    pub(crate) queue: crate::coordinator::engine::QueueContext,
+    pub(crate) sample: Sample,
+}
+
+/// The decision-instant observation sequence shared — in bit-exact
+/// lockstep — by the single-queue decide path and both sharded decision
+/// paths (inline static + coordinator cohort): estimate the queue
+/// backlog, build the head request's
+/// [`crate::coordinator::engine::QueueContext`], sample telemetry from
+/// the board's occupancy-derived platform state, and record the
+/// reward-context snapshot (`last_cpu`/`last_mem_gbs`) plus queue-depth
+/// bookkeeping. `est` estimates per-frame service seconds for
+/// (profile, model, state) through the caller's cache. Caller contract:
+/// the board's queue is non-empty.
+pub(crate) fn observe_for_decision(
+    b: &mut Board,
+    schedule: &[(f64, WorkloadState)],
+    slo: &crate::coordinator::fleet::SloConfig,
+    p_arm_base: f64,
+    t: f64,
+    mut est: impl FnMut(&BoardProfile, &ModelVariant, WorkloadState) -> Result<f64>,
+) -> Result<DecisionObservation> {
+    let state = state_at(schedule, t);
+    let (head_model, head_at) = {
+        let head = b.queue.front().expect("non-empty queue");
+        (head.model.clone(), head.at_s)
+    };
+    let depth = b.queue.len();
+    let mut backlog = 0.0;
+    for q in b.queue.iter() {
+        backlog += est(&b.profile, &q.model, state)?;
+    }
+    let slo_s = slo.target_ms(&head_model.name()) * 1e-3;
+    let queue =
+        crate::coordinator::engine::QueueContext::for_head(depth, backlog, slo_s, t - head_at);
+    let platform = PlatformState {
+        workload: state,
+        dpu_traffic_bps: b.obs_traffic_bps,
+        host_cpu_util: b.obs_host_util,
+        p_fpga: b.obs_p_fpga,
+        p_arm: p_arm_base,
+    };
+    let sample = b.sampler.sample((t * 1e6) as u64, &platform);
+    b.last_cpu = sample.cpu_mean();
+    b.last_mem_gbs = sample.mem_total_gbs();
+    b.qdepth_sum += depth as u64;
+    Ok(DecisionObservation {
+        state,
+        head_model,
+        queue,
+        sample,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_models;
+    use crate::dpusim::FPS_CONSTRAINT;
+
+    fn sim() -> DpuSim {
+        DpuSim::load().unwrap()
+    }
+
+    fn variant(name: &str) -> ModelVariant {
+        ModelVariant::new(
+            load_models()
+                .unwrap()
+                .into_iter()
+                .find(|m| m.name == name)
+                .unwrap(),
+            0.0,
+        )
+    }
+
+    #[test]
+    fn class_profiles_parse_and_scale_monotonically() {
+        let s = sim();
+        let b512 = BoardProfile::of_class("B512", s.sizes()).unwrap();
+        let b4096 = BoardProfile::of_class("B4096", s.sizes()).unwrap();
+        assert_eq!(b512.max_peak_macs, 256);
+        assert_eq!(b4096.max_peak_macs, 2048);
+        // the largest class IS the calibrated board
+        assert!((b4096.power_scale - 1.0).abs() < 1e-12);
+        assert!(b512.power_scale < b4096.power_scale);
+        assert!(b512.power_scale > 0.5);
+        assert!(BoardProfile::of_class("B9999", s.sizes()).is_err());
+    }
+
+    #[test]
+    fn fabric_cap_filters_actions() {
+        let s = sim();
+        let b1024 = BoardProfile::of_class("B1024", s.sizes()).unwrap();
+        let allowed: Vec<&Action> = s
+            .actions()
+            .iter()
+            .filter(|a| b1024.allows(s.sizes(), a))
+            .collect();
+        assert!(!allowed.is_empty());
+        assert!(allowed
+            .iter()
+            .all(|a| s.sizes()[&a.size].peak_macs <= 512));
+        // the unrestricted reference allows everything
+        let z = BoardProfile::zcu102();
+        assert!(s.actions().iter().all(|a| z.allows(s.sizes(), a)));
+    }
+
+    #[test]
+    fn default_profile_matches_the_unrestricted_oracle() {
+        let s = sim();
+        let z = BoardProfile::zcu102();
+        let mut mc = MetricsCache::new();
+        let mut ec = EstCache::new();
+        for name in ["ResNet152", "MobileNetV2", "InceptionV3"] {
+            let v = variant(name);
+            for st in crate::workload::ALL_STATES {
+                let (aid, svc) =
+                    best_allowed_cached(&s, &mut mc, &mut ec, &z, &v, st).unwrap();
+                assert_eq!(aid, s.optimal_action(&v, st).unwrap(), "{name} [{st}]");
+                let m = metrics_cached(&s, &mut mc, &z, &v, aid, st).unwrap();
+                assert!((svc - m.frame_service_s()).abs() < 1e-15);
+                // identity profile: adjusted metrics are the raw ones
+                let a = &s.actions()[aid];
+                let raw = s.evaluate(&v, &a.size, a.instances, st).unwrap();
+                assert_eq!(m, raw, "{name} [{st}]");
+            }
+        }
+    }
+
+    #[test]
+    fn fit_action_projects_onto_the_fabric() {
+        let s = sim();
+        let b512 = BoardProfile::of_class("B512", s.sizes()).unwrap();
+        let mut mc = MetricsCache::new();
+        let mut ec = EstCache::new();
+        let v = variant("ResNet152");
+        // the global optimum for ResNet152/N is B4096_1 — too big for a
+        // B512-class board
+        let opt = s.optimal_action(&v, WorkloadState::None).unwrap();
+        let fitted =
+            fit_action(&s, &mut mc, &mut ec, &b512, opt, &v, WorkloadState::None).unwrap();
+        assert_ne!(fitted, opt);
+        assert!(b512.allows(s.sizes(), &s.actions()[fitted]));
+        // an already-allowed action passes through untouched
+        let again =
+            fit_action(&s, &mut mc, &mut ec, &b512, fitted, &v, WorkloadState::None).unwrap();
+        assert_eq!(again, fitted);
+    }
+
+    #[test]
+    fn restricted_baselines_keep_their_objective() {
+        let s = sim();
+        let b512 = BoardProfile::of_class("B512", s.sizes()).unwrap();
+        let mut mc = MetricsCache::new();
+        let mut ec = EstCache::new();
+        let v = variant("ResNet152");
+        let st = WorkloadState::None;
+        let sel = |b: Baseline, mc: &mut MetricsCache, ec: &mut EstCache| {
+            select_allowed(b, &s, mc, ec, &b512, &v, st, None).unwrap()
+        };
+        let maxfps = sel(Baseline::MaxFps, &mut mc, &mut ec);
+        let minpow = sel(Baseline::MinPower, &mut mc, &mut ec);
+        let allowed: Vec<usize> = (0..s.actions().len())
+            .filter(|&i| b512.allows(s.sizes(), &s.actions()[i]))
+            .collect();
+        assert!(allowed.contains(&maxfps) && allowed.contains(&minpow));
+        // each pick is extremal under ITS objective over the allowed set
+        for &i in &allowed {
+            let m = metrics_cached(&s, &mut mc, &b512, &v, i, st).unwrap();
+            let mf = metrics_cached(&s, &mut mc, &b512, &v, maxfps, st).unwrap();
+            let mp = metrics_cached(&s, &mut mc, &b512, &v, minpow, st).unwrap();
+            assert!(mf.fps >= m.fps, "max_fps pick beaten by action {i}");
+            assert!(mp.p_fpga <= m.p_fpga, "min_power pick beaten by action {i}");
+        }
+        // the unrestricted reference delegates to Baseline::select verbatim
+        let z = BoardProfile::zcu102();
+        let direct = Baseline::MaxFps.select(&s, &v, st, None).unwrap();
+        let via = select_allowed(Baseline::MaxFps, &s, &mut mc, &mut ec, &z, &v, st, None).unwrap();
+        assert_eq!(direct, via);
+    }
+
+    #[test]
+    fn scaled_metrics_rescale_power_and_constraint() {
+        let s = sim();
+        let v = variant("MobileNetV2");
+        let raw = s.evaluate(&v, "B512", 1, WorkloadState::None).unwrap();
+        let b512 = BoardProfile::of_class("B512", s.sizes()).unwrap();
+        let adj = b512.metrics(raw);
+        assert!(adj.p_fpga < raw.p_fpga, "smaller class draws less power");
+        assert!((adj.fps - raw.fps).abs() < 1e-12, "perf_scale 1.0 keeps fps");
+        assert!(adj.ppw > raw.ppw);
+        assert_eq!(adj.meets_constraint, adj.fps >= FPS_CONSTRAINT);
+    }
+
+    #[test]
+    fn small_board_serves_heavy_models_slower_than_the_reference() {
+        let s = sim();
+        let mut mc = MetricsCache::new();
+        let mut ec = EstCache::new();
+        let b512 = BoardProfile::of_class("B512", s.sizes()).unwrap();
+        let z = BoardProfile::zcu102();
+        let v = variant("ResNet152");
+        let slow =
+            est_service_cached(&s, &mut mc, &mut ec, &b512, &v, WorkloadState::None).unwrap();
+        let fast = est_service_cached(&s, &mut mc, &mut ec, &z, &v, WorkloadState::None).unwrap();
+        // even with all 4 B512 instances packed, the small fabric cannot
+        // match the big array's per-frame completion spacing on a heavy
+        // model (§III-A measures 5.8x single-instance)
+        assert!(
+            slow > fast * 1.2,
+            "B512-class ResNet152 service {slow:.4}s must be slower than {fast:.4}s"
+        );
+    }
+}

@@ -1,12 +1,17 @@
-//! Discrete-event core of the fleet serving loop (DESIGN.md §10).
+//! Discrete-event executor shared by every serving loop (DESIGN.md §10,
+//! §12).
 //!
-//! The fleet coordinator no longer steps a fixed tick grid; it drains a
-//! binary-heap [`EventQueue`] of typed [`FleetEvent`]s, so simulated time
-//! jumps from event to event and idle stretches cost zero loop
-//! iterations. Determinism contract: events pop in nondecreasing
-//! timestamp order, and events with *equal* timestamps pop in the order
-//! they were pushed (a monotonically increasing sequence number breaks
-//! ties), so a run is a pure function of (scenario, config, seed).
+//! Simulated time is advanced by draining a binary-heap [`EventQueue`]
+//! of typed events, so time jumps from event to event and idle stretches
+//! cost zero loop iterations. The queue is generic over its event
+//! vocabulary: the fleet loops ([`crate::coordinator::fleet`],
+//! [`crate::coordinator::shard`]) drain [`FleetEvent`]s, the single-board
+//! coordinator ([`crate::coordinator::server`]) drains its own
+//! segment-level events — one executor, one determinism contract.
+//! That contract: events pop in nondecreasing timestamp order, and
+//! events with *equal* timestamps pop in the order they were pushed (a
+//! monotonically increasing sequence number breaks ties), so a run is a
+//! pure function of (scenario, config, seed).
 //!
 //! ```
 //! use dpuconfig::coordinator::events::{EventQueue, FleetEvent};
@@ -49,17 +54,19 @@ pub enum FleetEvent {
     Tick,
 }
 
-/// An event bound to a simulated timestamp.
+/// An event bound to a simulated timestamp. Ordering (and therefore
+/// equality) is by `(t_s, seq)` only — the payload never participates,
+/// so any event vocabulary works.
 #[derive(Debug, Clone, Copy)]
-pub struct Scheduled {
+pub struct Scheduled<E> {
     /// Simulated time (seconds) the event fires at.
     pub t_s: f64,
     /// Push-order sequence number (the equal-time tiebreak).
     pub seq: u64,
-    pub event: FleetEvent,
+    pub event: E,
 }
 
-impl PartialEq for Scheduled {
+impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
         // defined via cmp so Eq and Ord stay consistent (a == b iff
         // cmp(a, b) == Equal), as the Ord contract requires
@@ -67,15 +74,15 @@ impl PartialEq for Scheduled {
     }
 }
 
-impl Eq for Scheduled {}
+impl<E> Eq for Scheduled<E> {}
 
-impl PartialOrd for Scheduled {
+impl<E> PartialOrd for Scheduled<E> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl Ord for Scheduled {
+impl<E> Ord for Scheduled<E> {
     /// Reversed comparison: `BinaryHeap` is a max-heap, we want the
     /// earliest timestamp (then lowest sequence number) on top.
     fn cmp(&self, other: &Self) -> Ordering {
@@ -88,27 +95,37 @@ impl Ord for Scheduled {
 }
 
 /// Min-heap of scheduled events with deterministic equal-time ordering.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Scheduled>,
+#[derive(Debug)]
+pub struct EventQueue<E = FleetEvent> {
+    heap: BinaryHeap<Scheduled<E>>,
     seq: u64,
     popped: u64,
 }
 
-impl EventQueue {
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            popped: 0,
+        }
+    }
+}
+
+impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue::default()
     }
 
     /// Schedule `event` at simulated time `t_s`.
-    pub fn push(&mut self, t_s: f64, event: FleetEvent) {
+    pub fn push(&mut self, t_s: f64, event: E) {
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Scheduled { t_s, seq, event });
     }
 
     /// Pop the earliest event (FIFO among equal timestamps).
-    pub fn pop(&mut self) -> Option<Scheduled> {
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
         let s = self.heap.pop();
         if s.is_some() {
             self.popped += 1;
@@ -117,7 +134,7 @@ impl EventQueue {
     }
 
     /// The earliest scheduled event without popping it.
-    pub fn peek(&self) -> Option<&Scheduled> {
+    pub fn peek(&self) -> Option<&Scheduled<E>> {
         self.heap.peek()
     }
 

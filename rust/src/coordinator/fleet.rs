@@ -17,11 +17,15 @@
 //!   (p50/p95/p99), per-model SLO targets with violation counting, and
 //!   an SLO-aware routing policy that sends each request to the board
 //!   with the least predicted queue wait under dpusim's latency model,
-//! * keeps the per-board machinery of the single-board coordinator — a
+//! * drives the shared board physics kernel
+//!   ([`crate::coordinator::board`], DESIGN.md §12) — a
 //!   [`ReconfigManager`] with the paper's measured overheads, a
-//!   telemetry [`Sampler`], Algorithm-1 reward bookkeeping — plus the
+//!   telemetry [`Sampler`], Algorithm-1 reward bookkeeping, and the
 //!   idle→sleep power-state machine of arXiv:2407.12027, now exact
-//!   instead of tick-quantized,
+//!   instead of tick-quantized — parameterized by per-board
+//!   [`BoardProfile`]s, so fleets can mix board classes
+//!   (`FleetConfig::profiles`) and every routing estimate is
+//!   per-board,
 //! * batches RL policy invocations for decisions that fall due at the
 //!   same instant (burst arrivals), via `PolicyRuntime::infer_batch`.
 //!
@@ -40,12 +44,16 @@
 //! assert!(report.latency().p99_ms() > 0.0);
 //! ```
 
+use crate::coordinator::board::{
+    advance, est_service_cached, fit_action, metrics_cached, observe_for_decision, select_allowed,
+    Board, BoardProfile, EstCache, MetricsCache, Phase, PowerBase, QueuedReq,
+};
 use crate::coordinator::engine::QueueContext;
 use crate::coordinator::events::{EventQueue, FleetEvent};
 use crate::coordinator::reconfig::{
     full_decision_overhead_s, ReconfigManager, INSTR_LOAD_US, RL_INFERENCE_US, TELEMETRY_US,
 };
-use crate::dpusim::energy::{idle_power_w, sleep_power_w, EnergyMeter};
+use crate::dpusim::energy::{frames_per_joule, EnergyMeter};
 use crate::dpusim::{DpuSim, Metrics, FPS_CONSTRAINT};
 use crate::models::{load_variants, ModelVariant};
 use crate::rl::features::OBS_DIM;
@@ -53,11 +61,11 @@ use crate::rl::reward::{Outcome, RewardCalculator};
 use crate::rl::{Baseline, Featurizer};
 use crate::runtime::PolicyRuntime;
 use crate::telemetry::latency::LatencyHistogram;
-use crate::telemetry::{PlatformState, Sample, Sampler};
+use crate::telemetry::Sampler;
 use crate::workload::traffic::{correlated_schedules, request_stream, state_at, ArrivalPattern};
 use crate::workload::{WorkloadState, XorShift64};
 use anyhow::Result;
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::BTreeMap;
 
 use super::server::Totals;
 
@@ -206,12 +214,13 @@ pub struct FleetConfig {
     /// seconds). The event-driven mode never reads it.
     pub tick_s: f64,
     /// Idle dwell before a board drops to sleep; `f64::INFINITY`
-    /// disables the sleep state.
+    /// disables the sleep state. Per-board [`BoardProfile`]s may
+    /// override it.
     pub idle_to_sleep_s: f64,
     /// Power-state exit latency charged when a sleeping board is woken
     /// (the subsequent bitstream + instruction reload is charged by the
     /// reconfiguration manager as usual, because sleep loses the PL
-    /// configuration).
+    /// configuration). Per-board [`BoardProfile`]s may override it.
     pub wake_penalty_s: f64,
     /// EnergyAware: queue depth on every awake board that justifies
     /// waking a sleeper.
@@ -224,6 +233,11 @@ pub struct FleetConfig {
     /// scenario-derived formula). Exceeding the budget is an error naming
     /// the stuck board — the knob exists so tests can pin that path.
     pub event_budget: Option<u64>,
+    /// Per-board classes (heterogeneous fleets, DESIGN.md §12). Empty =
+    /// every board is the calibrated [`BoardProfile::zcu102`] reference
+    /// (exactly the pre-profile homogeneous fleet); non-empty must carry
+    /// one profile per board.
+    pub profiles: Vec<BoardProfile>,
 }
 
 impl Default for FleetConfig {
@@ -238,6 +252,7 @@ impl Default for FleetConfig {
             seed: 1,
             slo: SloConfig::default(),
             event_budget: None,
+            profiles: Vec::new(),
         }
     }
 }
@@ -328,108 +343,6 @@ pub struct RequestTrail {
     pub done_s: f64,
 }
 
-/// What one board is doing right now (power/accounting regime).
-///
-/// `pub(crate)` so the sharded executor ([`crate::coordinator::shard`])
-/// can drive the same per-board state machine from worker threads.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub(crate) enum Phase {
-    /// Low-power state; exit pays wake latency + full reconfiguration.
-    Sleeping,
-    /// Paying the sleep-exit latency.
-    Waking,
-    /// Paying decision/reconfiguration overhead.
-    Reconfiguring,
-    /// Serving one frame.
-    Serving,
-    /// Awake, queue empty, bitstream retained.
-    Idle,
-    /// Awake with queued work, waiting on a same-instant decision.
-    Holding,
-}
-
-/// One queued request on a board (head = in service or next up).
-#[derive(Debug, Clone)]
-pub(crate) struct QueuedReq {
-    pub(crate) req: usize,
-    pub(crate) model: ModelVariant,
-    pub(crate) at_s: f64,
-}
-
-/// One board: the per-board halves of the single-board coordinator plus
-/// the fleet power-state machine and latency accounting. Shared with the
-/// sharded executor, which moves boards onto worker threads between
-/// coordination barriers (every field is plain owned data — `Send`).
-pub(crate) struct Board {
-    pub(crate) reconfig: ReconfigManager,
-    pub(crate) sampler: Sampler,
-    pub(crate) rewards: RewardCalculator,
-    pub(crate) phase: Phase,
-    /// Power drawn in the current phase (W) — energy integrates lazily
-    /// between events at this constant power.
-    pub(crate) phase_power_w: f64,
-    /// Energy/time integrated up to this simulated instant.
-    pub(crate) last_t: f64,
-    /// When the current frame/overhead/wake completes.
-    pub(crate) busy_until: f64,
-    pub(crate) queue: VecDeque<QueuedReq>,
-    /// Chosen action for (head model, state), if still valid.
-    pub(crate) decided: Option<(usize, String, WorkloadState)>,
-    /// A DecisionDue event is already scheduled for this board.
-    pub(crate) decision_pending: bool,
-    /// Invalidates SleepTimer events from earlier idle episodes.
-    pub(crate) idle_epoch: u64,
-    pub(crate) serving_meets: bool,
-    /// Occupancy-derived observation inputs (what a node exporter would
-    /// measure *now*): DPU DDR traffic, host coordination CPU, PL power.
-    pub(crate) obs_traffic_bps: f64,
-    pub(crate) obs_host_util: f64,
-    pub(crate) obs_p_fpga: f64,
-    /// Telemetry snapshot at the last decision (reward bookkeeping).
-    pub(crate) last_cpu: f64,
-    pub(crate) last_mem_gbs: f64,
-    // accounting
-    pub(crate) totals: Totals,
-    pub(crate) energy: EnergyMeter,
-    pub(crate) wakes: u64,
-    pub(crate) requests_done: u64,
-    pub(crate) slo_violations: u64,
-    pub(crate) latency: LatencyHistogram,
-    pub(crate) reward_sum: f64,
-    pub(crate) reward_n: u64,
-    pub(crate) qdepth_sum: u64,
-    pub(crate) late_decisions: u64,
-}
-
-/// Integrate the board's current regime from `last_t` to `t`.
-pub(crate) fn advance(b: &mut Board, t: f64) {
-    let dt = t - b.last_t;
-    if dt <= 0.0 {
-        return;
-    }
-    match b.phase {
-        Phase::Sleeping => b.energy.add_sleep(b.phase_power_w, dt),
-        Phase::Waking => {
-            b.energy.add_wake(b.phase_power_w * dt);
-            b.totals.overhead_s += dt;
-        }
-        Phase::Reconfiguring => {
-            b.energy.add_active(b.phase_power_w, dt);
-            b.totals.overhead_s += dt;
-        }
-        Phase::Serving => {
-            b.energy.add_active(b.phase_power_w, dt);
-            b.totals.busy_s += dt;
-            b.totals.energy_fpga_j += b.phase_power_w * dt;
-            if !b.serving_meets {
-                b.totals.constraint_violation_s += dt;
-            }
-        }
-        Phase::Idle | Phase::Holding => b.energy.add_idle(b.phase_power_w, dt),
-    }
-    b.last_t = t;
-}
-
 /// Roll a finished [`Board`] into its report slice. Shared by the
 /// single-queue loop and the sharded executor so derived statistics
 /// (mean reward, mean decision queue depth) are computed identically.
@@ -444,6 +357,7 @@ pub(crate) fn finish_board(i: usize, mut b: Board) -> BoardReport {
     };
     BoardReport {
         board: i,
+        class: b.profile.class.to_string(),
         queue_left: b.queue.len(),
         totals: b.totals,
         energy: b.energy,
@@ -459,6 +373,8 @@ pub(crate) fn finish_board(i: usize, mut b: Board) -> BoardReport {
 /// Per-board slice of the fleet report.
 pub struct BoardReport {
     pub board: usize,
+    /// Board class ([`BoardProfile::class`]).
+    pub class: String,
     pub totals: Totals,
     pub energy: EnergyMeter,
     pub wakes: u64,
@@ -545,12 +461,7 @@ impl FleetReport {
 
     /// Serving-only efficiency (frames per serving joule).
     pub fn serving_ppw(&self) -> f64 {
-        let e = self.serving_energy_j();
-        if e > 0.0 {
-            self.total_frames() / e
-        } else {
-            0.0
-        }
+        frames_per_joule(self.total_frames(), self.serving_energy_j())
     }
 
     pub fn requests_done(&self) -> u64 {
@@ -593,8 +504,9 @@ impl FleetReport {
         for b in &self.boards {
             let _ = write!(
                 s,
-                "|b{}:f={:.3}:e={:.9e}:E={:.9e}:w={}:d={}:v={}:{}",
+                "|b{}[{}]:f={:.3}:e={:.9e}:E={:.9e}:w={}:d={}:v={}:{}",
                 b.board,
+                b.class,
                 b.totals.frames,
                 b.totals.energy_fpga_j,
                 b.energy.total_j(),
@@ -621,7 +533,7 @@ impl FleetReport {
     pub fn render(&self) -> String {
         let mut out = format!(
             "=== fleet report — policy {} / routing {} ({} boards, {} events, {})\n\
-             board   frames   busy_s   idle_s  sleep_s  wakes   reqs  p99_ms   viol  serve_J  total_J  fps/J\n",
+             board  class    frames   busy_s   idle_s  sleep_s  wakes   reqs  p99_ms   viol  serve_J  total_J  fps/J\n",
             self.policy,
             self.routing.name(),
             self.boards.len(),
@@ -629,14 +541,11 @@ impl FleetReport {
             self.mode.name(),
         );
         for b in &self.boards {
-            let ppw = if b.energy.total_j() > 0.0 {
-                b.totals.frames / b.energy.total_j()
-            } else {
-                0.0
-            };
+            let ppw = frames_per_joule(b.totals.frames, b.energy.total_j());
             out.push_str(&format!(
-                "{:>5} {:>8.0} {:>8.1} {:>8.1} {:>8.1} {:>6} {:>6} {:>7.1} {:>6} {:>8.0} {:>8.0} {:>6.2}\n",
+                "{:>5} {:>6} {:>8.0} {:>8.1} {:>8.1} {:>8.1} {:>6} {:>6} {:>7.1} {:>6} {:>8.0} {:>8.0} {:>6.2}\n",
                 b.board,
+                b.class,
                 b.totals.frames,
                 b.totals.busy_s,
                 b.energy.idle_s,
@@ -693,70 +602,15 @@ impl FleetReport {
 
 /// One pending configuration decision in a batch (shared with the
 /// sharded executor, which assembles cohorts sorted by board index).
+/// Carries the deciding board's profile so [`FleetCoordinator::decide_batch`]
+/// can project the policy's pick onto the board's fabric.
 pub(crate) struct DecisionRequest {
     pub(crate) board: usize,
+    pub(crate) profile: BoardProfile,
     pub(crate) model: ModelVariant,
     pub(crate) obs: [f32; OBS_DIM],
     pub(crate) state: WorkloadState,
     pub(crate) queue: QueueContext,
-}
-
-/// What one decision consumed from the platform: workload state, the
-/// head request's model, queue context, and the telemetry sample taken
-/// at the decision instant.
-pub(crate) struct DecisionObservation {
-    pub(crate) state: WorkloadState,
-    pub(crate) head_model: ModelVariant,
-    pub(crate) queue: QueueContext,
-    pub(crate) sample: Sample,
-}
-
-/// The decision-instant observation sequence shared — in bit-exact
-/// lockstep — by the single-queue decide path and both sharded decision
-/// paths (inline static + coordinator cohort): estimate the queue
-/// backlog, build the head request's [`QueueContext`], sample telemetry
-/// from the board's occupancy-derived platform state, and record the
-/// reward-context snapshot (`last_cpu`/`last_mem_gbs`) plus queue-depth
-/// bookkeeping. `est` estimates per-frame service seconds for
-/// (model, state) through the caller's cache. Caller contract: the
-/// board's queue is non-empty.
-pub(crate) fn observe_for_decision(
-    b: &mut Board,
-    schedule: &[(f64, WorkloadState)],
-    slo: &SloConfig,
-    p_arm_base: f64,
-    t: f64,
-    mut est: impl FnMut(&ModelVariant, WorkloadState) -> Result<f64>,
-) -> Result<DecisionObservation> {
-    let state = state_at(schedule, t);
-    let (head_model, head_at) = {
-        let head = b.queue.front().expect("non-empty queue");
-        (head.model.clone(), head.at_s)
-    };
-    let depth = b.queue.len();
-    let mut backlog = 0.0;
-    for q in b.queue.iter() {
-        backlog += est(&q.model, state)?;
-    }
-    let slo_s = slo.target_ms(&head_model.name()) * 1e-3;
-    let queue = QueueContext::for_head(depth, backlog, slo_s, t - head_at);
-    let platform = PlatformState {
-        workload: state,
-        dpu_traffic_bps: b.obs_traffic_bps,
-        host_cpu_util: b.obs_host_util,
-        p_fpga: b.obs_p_fpga,
-        p_arm: p_arm_base,
-    };
-    let sample = b.sampler.sample((t * 1e6) as u64, &platform);
-    b.last_cpu = sample.cpu_mean();
-    b.last_mem_gbs = sample.mem_total_gbs();
-    b.qdepth_sum += depth as u64;
-    Ok(DecisionObservation {
-        state,
-        head_model,
-        queue,
-        sample,
-    })
 }
 
 /// Per-model latency accumulator during a run.
@@ -771,16 +625,14 @@ pub(crate) struct ModelAcc {
 struct RunState<'a> {
     scenario: &'a FleetScenario,
     boards: Vec<Board>,
-    events: EventQueue,
+    events: EventQueue<FleetEvent>,
     trails: Vec<RequestTrail>,
     by_model: BTreeMap<String, ModelAcc>,
     decisions: u64,
     decision_batches: u64,
     remaining: usize,
     end_t: Option<f64>,
-    p_static: f64,
-    p_arm_base: f64,
-    sleep_w: f64,
+    base: PowerBase,
 }
 
 /// The fleet coordinator itself. Fields are `pub(crate)` because the
@@ -797,13 +649,13 @@ pub struct FleetCoordinator {
     /// Fleet-level Algorithm-1 bookkeeping for the shared online agent's
     /// feedback stream.
     pub(crate) online_rewards: RewardCalculator,
-    /// (model, action, state) -> steady-state metrics. The event core
-    /// looks service times up once per combination instead of once per
-    /// tick.
-    pub(crate) metrics_cache: HashMap<(String, usize, WorkloadState), Metrics>,
-    /// (model, state) -> estimated per-frame service time under the
-    /// best feasible configuration (the routing predictor's unit).
-    pub(crate) est_cache: HashMap<(String, WorkloadState), f64>,
+    /// (class, model, action, state) -> profile-adjusted steady-state
+    /// metrics. The event core looks service times up once per
+    /// combination instead of once per tick.
+    pub(crate) metrics_cache: MetricsCache,
+    /// (class, model, state) -> the restricted oracle's action and its
+    /// per-frame service time (the routing predictor's unit).
+    pub(crate) est_cache: EstCache,
 }
 
 impl FleetCoordinator {
@@ -811,17 +663,45 @@ impl FleetCoordinator {
         anyhow::ensure!(config.boards > 0, "fleet needs at least one board");
         anyhow::ensure!(config.tick_s > 0.0, "tick must be positive");
         anyhow::ensure!(config.slo.default_ms > 0.0, "SLO target must be positive");
+        anyhow::ensure!(
+            config.profiles.is_empty() || config.profiles.len() == config.boards,
+            "fleet has {} boards but {} board profiles (empty = homogeneous default)",
+            config.boards,
+            config.profiles.len()
+        );
+        let sim = DpuSim::load()?;
+        let min_macs = sim.sizes().values().map(|s| s.peak_macs).min().unwrap_or(0);
+        for (i, p) in config.profiles.iter().enumerate() {
+            anyhow::ensure!(
+                p.max_peak_macs >= min_macs,
+                "board class {} hosts no DPU size (fabric cap {} MACs/cycle)",
+                p.class,
+                p.max_peak_macs
+            );
+            // the service/metrics caches key by class name, so profiles
+            // sharing a class must be identical in every field
+            for q in &config.profiles[..i] {
+                if q.class == p.class {
+                    anyhow::ensure!(
+                        q == p,
+                        "two different board profiles share class {:?} \
+                         (the per-class caches would alias them)",
+                        p.class
+                    );
+                }
+            }
+        }
         let seed = config.seed;
         Ok(FleetCoordinator {
-            sim: DpuSim::load()?,
+            sim,
             policy,
             config,
             featurizer: Featurizer::new(),
             rng: XorShift64::new(seed ^ 0xf1ee7c0de),
             rr_cursor: 0,
             online_rewards: RewardCalculator::new(),
-            metrics_cache: HashMap::new(),
-            est_cache: HashMap::new(),
+            metrics_cache: MetricsCache::new(),
+            est_cache: EstCache::new(),
         })
     }
 
@@ -833,42 +713,38 @@ impl FleetCoordinator {
         &self.policy
     }
 
+    /// Board `i`'s class profile: the configured one, or the calibrated
+    /// reference for a homogeneous fleet.
+    pub(crate) fn profile_of(&self, i: usize) -> BoardProfile {
+        if self.config.profiles.is_empty() {
+            BoardProfile::zcu102()
+        } else {
+            self.config.profiles[i].clone()
+        }
+    }
+
+    /// The run-wide power/sleep base every board profile resolves
+    /// against.
+    pub(crate) fn power_base(&self) -> PowerBase {
+        PowerBase::from_sim(
+            &self.sim,
+            self.config.wake_penalty_s,
+            self.config.idle_to_sleep_s,
+        )
+    }
+
     /// Build board `i`'s initial state. One constructor shared by the
     /// single-queue loop and the sharded executor so both start from
     /// bit-identical boards (same per-board sampler seed split).
-    pub(crate) fn mk_board(&self, i: usize, p_static: f64) -> Board {
-        Board {
-            reconfig: ReconfigManager::new(),
-            sampler: Sampler::from_calibration(
+    pub(crate) fn mk_board(&self, i: usize, base: &PowerBase) -> Board {
+        Board::new(
+            self.profile_of(i),
+            Sampler::from_calibration(
                 self.config.seed ^ (0xb0a2d + i as u64),
                 self.sim.calibration(),
             ),
-            rewards: RewardCalculator::new(),
-            phase: Phase::Idle,
-            phase_power_w: p_static,
-            last_t: 0.0,
-            busy_until: 0.0,
-            queue: VecDeque::new(),
-            decided: None,
-            decision_pending: false,
-            idle_epoch: 0,
-            serving_meets: true,
-            obs_traffic_bps: 0.0,
-            obs_host_util: 0.0,
-            obs_p_fpga: p_static,
-            last_cpu: 0.0,
-            last_mem_gbs: 0.0,
-            totals: Totals::default(),
-            energy: EnergyMeter::new(),
-            wakes: 0,
-            requests_done: 0,
-            slo_violations: 0,
-            latency: LatencyHistogram::new(),
-            reward_sum: 0.0,
-            reward_n: 0,
-            qdepth_sum: 0,
-            late_decisions: 0,
-        }
+            base,
+        )
     }
 
     /// The serving loop's event budget for `scenario` (a generous
@@ -892,48 +768,48 @@ impl FleetCoordinator {
         budget
     }
 
-    /// Steady-state metrics of (model, action, state), memoized in the
-    /// coordinator's cache (one cache-parameterized implementation in
-    /// [`crate::coordinator::shard`] serves both executors).
+    /// Profile-adjusted steady-state metrics of (model, action, state),
+    /// memoized in the coordinator's cache (one cache-parameterized
+    /// implementation in [`crate::coordinator::board`] serves both
+    /// executors).
     pub(crate) fn metrics_for(
         &mut self,
+        profile: &BoardProfile,
         model: &ModelVariant,
         action_id: usize,
         state: WorkloadState,
     ) -> Result<Metrics> {
-        crate::coordinator::shard::metrics_cached(
+        metrics_cached(
             &self.sim,
             &mut self.metrics_cache,
+            profile,
             model,
             action_id,
             state,
         )
     }
 
-    /// Estimated per-frame service time of `model` under `state` (the
-    /// oracle-best configuration's throughput), memoized.
+    /// Estimated per-frame service time of `model` under `state` on a
+    /// board of `profile`'s class (the restricted oracle's throughput),
+    /// memoized.
     pub(crate) fn est_service_s(
         &mut self,
+        profile: &BoardProfile,
         model: &ModelVariant,
         state: WorkloadState,
     ) -> Result<f64> {
-        crate::coordinator::shard::est_service_cached(
+        est_service_cached(
             &self.sim,
             &mut self.metrics_cache,
             &mut self.est_cache,
+            profile,
             model,
             state,
         )
     }
 
-    /// Awake idle power of whatever configuration `b` holds.
-    pub(crate) fn idle_power_of(&self, b: &Board) -> f64 {
-        let loaded = b.reconfig.current_action();
-        idle_power_w(&self.sim, loaded.map(|id| &self.sim.actions()[id]))
-    }
-
     /// Predicted outstanding work on `b` (seconds): in-flight remainder +
-    /// service estimates of everything queued behind it.
+    /// per-board service estimates of everything queued behind it.
     pub(crate) fn board_backlog_s(
         &mut self,
         b: &Board,
@@ -943,14 +819,16 @@ impl FleetCoordinator {
         let mut w = (b.busy_until - t).max(0.0);
         let skip = usize::from(b.phase == Phase::Serving);
         for q in b.queue.iter().skip(skip) {
-            w += self.est_service_s(&q.model, state)?;
+            w += self.est_service_s(&b.profile, &q.model, state)?;
         }
         Ok(w)
     }
 
     /// Predicted completion wait of `incoming` if routed to `b`:
-    /// backlog + model-switch overheads + (for sleepers) wake latency
-    /// and a full reconfiguration.
+    /// backlog + model-switch overheads + (for sleepers) the board's
+    /// wake latency and a full reconfiguration — all under the board's
+    /// own class profile, which is what makes SLO-aware routing
+    /// heterogeneity-aware.
     pub(crate) fn predicted_wait_s(
         &mut self,
         b: &Board,
@@ -959,9 +837,9 @@ impl FleetCoordinator {
         t: f64,
     ) -> Result<f64> {
         if b.phase == Phase::Sleeping {
-            return Ok(self.config.wake_penalty_s
+            return Ok(b.wake_penalty_s
                 + full_decision_overhead_s()
-                + self.est_service_s(incoming, state)?);
+                + self.est_service_s(&b.profile, incoming, state)?);
         }
         let switch_s = (TELEMETRY_US + RL_INFERENCE_US + INSTR_LOAD_US) as f64 * 1e-6;
         let mut w = (b.busy_until - t).max(0.0);
@@ -972,7 +850,7 @@ impl FleetCoordinator {
             if prev.as_deref() != Some(name.as_str()) {
                 w += switch_s;
             }
-            w += self.est_service_s(&q.model, state)?;
+            w += self.est_service_s(&b.profile, &q.model, state)?;
             prev = Some(name);
         }
         let name = incoming.name();
@@ -983,7 +861,7 @@ impl FleetCoordinator {
                 switch_s
             };
         }
-        w += self.est_service_s(incoming, state)?;
+        w += self.est_service_s(&b.profile, incoming, state)?;
         Ok(w)
     }
 
@@ -1026,8 +904,20 @@ impl FleetCoordinator {
                         return Ok(i);
                     }
                 }
-                // 3. wake a sleeper
-                if let Some(i) = (0..n).find(|&i| boards[i].phase == Phase::Sleeping) {
+                // 3. wake a sleeper — the cheapest-to-run board class
+                // first (per-board static power; ties resolve to the
+                // lowest index, which on a homogeneous fleet reduces to
+                // the first sleeper)
+                if let Some(i) = (0..n)
+                    .filter(|&i| boards[i].phase == Phase::Sleeping)
+                    .min_by(|&a, &b| {
+                        boards[a]
+                            .p_static_w
+                            .partial_cmp(&boards[b].p_static_w)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.cmp(&b))
+                    })
+                {
                     return Ok(i);
                 }
                 // 4. everyone is awake and backlogged: shortest queue
@@ -1052,7 +942,10 @@ impl FleetCoordinator {
     }
 
     /// Decide configurations for a batch of boards. Returns (action ids
-    /// aligned with `requests`, forward passes used). Cohort order is the
+    /// aligned with `requests`, forward passes used). Every chosen
+    /// action is projected onto the deciding board's fabric
+    /// ([`fit_action`]) before it is returned, so no executor can ever
+    /// load an array the board cannot host. Cohort order is the
     /// caller's contract: the single-queue path passes DecisionDue pop
     /// order, the sharded path passes boards sorted by global index (the
     /// partition-invariant order its determinism guarantee rests on).
@@ -1063,7 +956,7 @@ impl FleetCoordinator {
         if requests.is_empty() {
             return Ok((Vec::new(), 0));
         }
-        match &mut self.policy {
+        let (mut actions, passes) = match &mut self.policy {
             FleetPolicy::Agent(rt) => {
                 let mut actions = Vec::with_capacity(requests.len());
                 let mut passes = 0u64;
@@ -1073,16 +966,34 @@ impl FleetCoordinator {
                     passes += 1;
                     actions.extend(outs.iter().map(|o| o.argmax()));
                 }
-                Ok((actions, passes))
+                (actions, passes)
             }
             FleetPolicy::Online(agent) => {
                 // one shared policy decides for every board, and every
-                // board's outcome feeds the same adaptation loop
+                // board's outcome feeds the same adaptation loop; the
+                // outcome is measured on the *fitted* action under the
+                // board's own profile, so the feedback stream reflects
+                // what the fleet actually served
                 let mut actions = Vec::with_capacity(requests.len());
                 for req in requests {
                     let d = agent.decide(&req.obs);
-                    let a = &self.sim.actions()[d.serving];
-                    let m = self.sim.evaluate(&req.model, &a.size, a.instances, req.state)?;
+                    let a = fit_action(
+                        &self.sim,
+                        &mut self.metrics_cache,
+                        &mut self.est_cache,
+                        &req.profile,
+                        d.serving,
+                        &req.model,
+                        req.state,
+                    )?;
+                    let m = metrics_cached(
+                        &self.sim,
+                        &mut self.metrics_cache,
+                        &req.profile,
+                        &req.model,
+                        a,
+                        req.state,
+                    )?;
                     let (cpu_util, mem_util_gbs) = crate::rl::features::context_stats(&req.obs);
                     let r = self.online_rewards.calculate(&Outcome {
                         measured_fps: m.fps,
@@ -1094,24 +1005,45 @@ impl FleetCoordinator {
                         fps_constraint: FPS_CONSTRAINT,
                     });
                     agent.feedback_from_sim(&self.sim, &req.model, req.state, r, &m)?;
-                    actions.push(d.serving);
+                    actions.push(a);
                 }
-                Ok((actions, requests.len() as u64))
+                return Ok((actions, requests.len() as u64));
             }
             FleetPolicy::Static(b) => {
+                // static baselines re-select under their own objective
+                // over the board's allowed subset (select_allowed), so
+                // MaxFps stays max-FPS on a restricted board instead of
+                // being silently projected onto the PPW oracle
                 let baseline = *b;
                 let mut actions = Vec::with_capacity(requests.len());
                 for req in requests {
-                    actions.push(baseline.select(
+                    actions.push(select_allowed(
+                        baseline,
                         &self.sim,
+                        &mut self.metrics_cache,
+                        &mut self.est_cache,
+                        &req.profile,
                         &req.model,
                         req.state,
                         Some(&mut self.rng),
                     )?);
                 }
-                Ok((actions, requests.len() as u64))
+                return Ok((actions, requests.len() as u64));
             }
+        };
+        // learned policies (frozen PPO head) project onto the fabric
+        for (req, a) in requests.iter().zip(actions.iter_mut()) {
+            *a = fit_action(
+                &self.sim,
+                &mut self.metrics_cache,
+                &mut self.est_cache,
+                &req.profile,
+                *a,
+                &req.model,
+                req.state,
+            )?;
         }
+        Ok((actions, passes))
     }
 
     /// Try to make progress on board `i` at time `t`: start serving the
@@ -1127,18 +1059,19 @@ impl FleetCoordinator {
         }
         if rs.boards[i].queue.is_empty() {
             if rs.boards[i].phase != Phase::Idle {
-                let p_idle = self.idle_power_of(&rs.boards[i]);
+                let p_idle = rs.boards[i].idle_power_w(&self.sim);
                 let b = &mut rs.boards[i];
                 b.phase = Phase::Idle;
                 b.phase_power_w = p_idle;
                 b.idle_epoch += 1;
                 b.obs_traffic_bps = 0.0;
                 b.obs_host_util = 0.0;
-                b.obs_p_fpga = rs.p_static;
-                if self.config.idle_to_sleep_s.is_finite() {
+                b.obs_p_fpga = b.p_static_w;
+                if b.idle_to_sleep_s.is_finite() {
                     let epoch = b.idle_epoch;
+                    let dwell = b.idle_to_sleep_s;
                     rs.events.push(
-                        t + self.config.idle_to_sleep_s,
+                        t + dwell,
                         FleetEvent::SleepTimer {
                             board: i,
                             idle_epoch: epoch,
@@ -1161,7 +1094,7 @@ impl FleetCoordinator {
         if valid {
             let action_id = rs.boards[i].decided.as_ref().expect("valid decision").0;
             let instances = self.sim.actions()[action_id].instances;
-            let m = self.metrics_for(&head_model, action_id, state)?;
+            let m = self.metrics_for(&rs.boards[i].profile, &head_model, action_id, state)?;
             let b = &mut rs.boards[i];
             b.phase = Phase::Serving;
             b.phase_power_w = m.p_fpga;
@@ -1231,13 +1164,14 @@ impl FleetCoordinator {
                 &mut rs.boards[i],
                 &rs.scenario.schedules[i],
                 &slo,
-                rs.p_arm_base,
+                rs.base.p_arm_base_w,
                 t,
-                |m, s| self.est_service_s(m, s),
+                |p, m, s| self.est_service_s(p, m, s),
             )?;
             let obs = self.featurizer.observe(&dec.sample, &dec.head_model);
             requests.push(DecisionRequest {
                 board: i,
+                profile: rs.boards[i].profile.clone(),
                 model: dec.head_model,
                 obs,
                 state: dec.state,
@@ -1266,7 +1200,10 @@ impl FleetCoordinator {
             b.decided = Some((action_id, req.model.name(), req.state));
             b.phase = Phase::Reconfiguring;
             b.busy_until = t + overhead.total_s();
-            let p_over = idle_power_w(&self.sim, Some(&self.sim.actions()[action_id]));
+            // the newly applied action is the loaded configuration now,
+            // so the board's own (profile-scaled) idle power is the
+            // overhead power — same helper as the sharded apply site
+            let p_over = rs.boards[i].idle_power_w(&self.sim);
             let b = &mut rs.boards[i];
             b.phase_power_w = p_over;
             let until = b.busy_until;
@@ -1312,22 +1249,10 @@ impl FleetCoordinator {
         self.rr_cursor = 0;
         self.rng = XorShift64::new(self.config.seed ^ 0xf1ee7c0de);
         self.online_rewards = RewardCalculator::new();
-        let sleep_w = sleep_power_w(self.sim.calibration());
-        let p_static = self
-            .sim
-            .calibration()
-            .get("p_pl_static")
-            .copied()
-            .unwrap_or(3.0);
-        let p_arm_base = self
-            .sim
-            .calibration()
-            .get("p_arm_base")
-            .copied()
-            .unwrap_or(1.5);
+        let base = self.power_base();
 
         let boards: Vec<Board> = (0..self.config.boards)
-            .map(|i| self.mk_board(i, p_static))
+            .map(|i| self.mk_board(i, &base))
             .collect();
 
         let trails: Vec<RequestTrail> = scenario
@@ -1355,9 +1280,7 @@ impl FleetCoordinator {
             } else {
                 None
             },
-            p_static,
-            p_arm_base,
-            sleep_w,
+            base,
         };
 
         // seed the timeline: workload shifts, the first arrival, the
@@ -1372,10 +1295,11 @@ impl FleetCoordinator {
         if let Some(first) = scenario.requests.first() {
             rs.events.push(first.at_s, FleetEvent::Arrival { request: 0 });
         }
-        if self.config.idle_to_sleep_s.is_finite() {
-            for i in 0..self.config.boards {
+        for i in 0..self.config.boards {
+            let dwell = rs.boards[i].idle_to_sleep_s;
+            if dwell.is_finite() {
                 rs.events.push(
-                    self.config.idle_to_sleep_s,
+                    dwell,
                     FleetEvent::SleepTimer {
                         board: i,
                         idle_epoch: 0,
@@ -1458,8 +1382,8 @@ impl FleetCoordinator {
                         // reconfiguration
                         let b = &mut rs.boards[target];
                         b.phase = Phase::Waking;
-                        b.phase_power_w = rs.p_static;
-                        b.busy_until = t + self.config.wake_penalty_s;
+                        b.phase_power_w = b.p_static_w;
+                        b.busy_until = t + b.wake_penalty_s;
                         b.reconfig = ReconfigManager::new();
                         b.decided = None;
                         b.wakes += 1;
@@ -1473,12 +1397,12 @@ impl FleetCoordinator {
                 FleetEvent::WakeDone { board } => {
                     advance(&mut rs.boards[board], t);
                     rs.boards[board].phase = Phase::Holding;
-                    rs.boards[board].phase_power_w = rs.p_static;
+                    rs.boards[board].phase_power_w = rs.boards[board].p_static_w;
                     self.kick(&mut rs, board, t)?;
                 }
                 FleetEvent::ReconfigDone { board } => {
                     advance(&mut rs.boards[board], t);
-                    let p_idle = self.idle_power_of(&rs.boards[board]);
+                    let p_idle = rs.boards[board].idle_power_w(&self.sim);
                     rs.boards[board].phase = Phase::Holding;
                     rs.boards[board].phase_power_w = p_idle;
                     self.kick(&mut rs, board, t)?;
@@ -1519,7 +1443,7 @@ impl FleetCoordinator {
                     if rs.remaining == 0 {
                         rs.end_t = Some(scenario.horizon_s.max(t));
                     }
-                    let p_idle = self.idle_power_of(&rs.boards[board]);
+                    let p_idle = rs.boards[board].idle_power_w(&self.sim);
                     rs.boards[board].phase = Phase::Holding;
                     rs.boards[board].phase_power_w = p_idle;
                     self.kick(&mut rs, board, t)?;
@@ -1529,7 +1453,7 @@ impl FleetCoordinator {
                     if b.phase == Phase::Idle && b.idle_epoch == idle_epoch {
                         advance(b, t);
                         b.phase = Phase::Sleeping;
-                        b.phase_power_w = rs.sleep_w;
+                        b.phase_power_w = b.sleep_w;
                     }
                 }
                 FleetEvent::WorkloadShift { board } => {
@@ -1646,6 +1570,7 @@ impl FleetCoordinator {
 mod tests {
     use super::*;
     use crate::data::load_models;
+    use crate::dpusim::energy::sleep_power_w;
 
     fn variant(name: &str) -> ModelVariant {
         ModelVariant::new(

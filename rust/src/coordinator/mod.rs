@@ -1,9 +1,11 @@
 //! The DPUConfig framework (paper Fig 4): decision engine, FPGA
-//! reconfiguration manager, simulated-time serving loop, a threaded
-//! decision service with dynamic micro-batching, and the multi-board
-//! fleet coordinator (DESIGN.md §8) with its sharded multi-threaded
-//! executor (DESIGN.md §11).
+//! reconfiguration manager, the shared board physics kernel
+//! (DESIGN.md §12) with its per-board class profiles, the event-driven
+//! single-board serving loop, a threaded decision service with dynamic
+//! micro-batching, and the multi-board fleet coordinator (DESIGN.md §8)
+//! with its sharded multi-threaded executor (DESIGN.md §11).
 
+pub mod board;
 pub mod engine;
 pub mod events;
 pub mod fleet;
@@ -13,6 +15,7 @@ pub mod server;
 pub mod service;
 pub mod shard;
 
+pub use board::BoardProfile;
 pub use engine::{DecisionEngine, QueueContext, Selector};
 pub use events::{EventQueue, FleetEvent};
 pub use fleet::{
@@ -20,5 +23,5 @@ pub use fleet::{
     SloConfig,
 };
 pub use reconfig::{Overhead, ReconfigManager};
-pub use server::{Arrival, Coordinator, Event, Report, Scenario, Totals};
+pub use server::{Arrival, Coordinator, CoordRunMode, Event, Report, Scenario, Totals};
 pub use service::{DecisionClient, DecisionService};

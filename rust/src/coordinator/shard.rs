@@ -55,37 +55,30 @@
 //! assert_eq!(one.fingerprint(), four.fingerprint());
 //! ```
 
+use crate::coordinator::board::{
+    advance, est_service_cached, metrics_cached, observe_for_decision, select_allowed, Board,
+    EstCache, MetricsCache, Phase, PowerBase, QueuedReq,
+};
 use crate::coordinator::events::{EventQueue, FleetEvent};
 use crate::coordinator::fleet::{
-    advance, finish_board, observe_for_decision, Board, BoardReport, DecisionRequest, FleetConfig,
-    FleetCoordinator, FleetPolicy, FleetReport, FleetRequest, FleetScenario, ModelAcc,
-    ModelLatencyReport, Phase, QueuedReq, RequestTrail, RoutingPolicy, RunMode,
+    finish_board, BoardReport, DecisionRequest, FleetConfig, FleetCoordinator, FleetPolicy,
+    FleetReport, FleetRequest, FleetScenario, ModelAcc, ModelLatencyReport, RequestTrail,
+    RoutingPolicy, RunMode,
 };
 use crate::coordinator::reconfig::ReconfigManager;
-use crate::dpusim::energy::{idle_power_w, sleep_power_w};
-use crate::dpusim::{DpuSim, Metrics, FPS_CONSTRAINT};
-use crate::models::ModelVariant;
+use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
 use crate::rl::reward::Outcome;
 use crate::rl::{Baseline, RewardCalculator};
 use crate::telemetry::latency::LatencyHistogram;
 use crate::workload::traffic::state_at;
 use crate::workload::{WorkloadState, XorShift64};
 use anyhow::Result;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 /// Below this many queued events across all shards a drain round runs
 /// inline on the coordinating thread — spawning workers costs more than
 /// the work (dense admission epochs drain a handful of events each).
 const PAR_MIN_EVENTS: usize = 64;
-
-/// Run-wide scalar constants every shard needs (plain copies, `Copy` so
-/// the context can be rebuilt cheaply around borrow scopes).
-#[derive(Clone, Copy)]
-struct ShardConsts {
-    p_static: f64,
-    p_arm_base: f64,
-    sleep_w: f64,
-}
 
 /// Read-only view shards drain against. Everything here is `Sync`:
 /// shared references to plain data plus `Copy` scalars.
@@ -104,7 +97,9 @@ struct ShardCtx<'a> {
     /// budget bails out mid-drain. Per-board pop counts are partition-
     /// and thread-count-invariant, so the error is deterministic.
     budget: u64,
-    consts: ShardConsts,
+    /// Run-wide power/sleep base (per-board values live on the boards
+    /// themselves, resolved from their profiles).
+    base: PowerBase,
 }
 
 /// One completed request, recorded inside the owning shard and merged in
@@ -146,12 +141,9 @@ struct Slot {
 /// A group of boards sharing one drain unit and one service-time cache.
 struct Shard {
     slots: Vec<Slot>,
-    metrics_cache: HashMap<(String, usize, WorkloadState), Metrics>,
-    est_cache: HashMap<(String, WorkloadState), f64>,
+    metrics_cache: MetricsCache,
+    est_cache: EstCache,
 }
-
-pub(crate) type MetricsCache = HashMap<(String, usize, WorkloadState), Metrics>;
-pub(crate) type EstCache = HashMap<(String, WorkloadState), f64>;
 
 impl Shard {
     fn drain(&mut self, ctx: &ShardCtx<'_>, horizon: f64) -> Result<()> {
@@ -178,57 +170,13 @@ impl Shard {
     }
 }
 
-/// Steady-state metrics of (model, action, state) through the caller's
-/// cache (cache placement never changes results — metrics are a pure
-/// function of the key). Shards pass their private caches; the
-/// coordinator's own `metrics_for` delegates here with its caches.
-pub(crate) fn metrics_cached(
-    sim: &DpuSim,
-    cache: &mut MetricsCache,
-    model: &ModelVariant,
-    action_id: usize,
-    state: WorkloadState,
-) -> Result<Metrics> {
-    let key = (model.name(), action_id, state);
-    if let Some(m) = cache.get(&key) {
-        return Ok(*m);
-    }
-    let (size, instances) = {
-        let a = &sim.actions()[action_id];
-        (a.size.clone(), a.instances)
-    };
-    let m = sim.evaluate(model, &size, instances, state)?;
-    cache.insert(key, m);
-    Ok(m)
-}
-
-/// Estimated per-frame service time of `model` under `state` (oracle
-/// configuration), through the caller's caches.
-pub(crate) fn est_service_cached(
-    sim: &DpuSim,
-    mcache: &mut MetricsCache,
-    ecache: &mut EstCache,
-    model: &ModelVariant,
-    state: WorkloadState,
-) -> Result<f64> {
-    let key = (model.name(), state);
-    if let Some(v) = ecache.get(&key) {
-        return Ok(*v);
-    }
-    let aid = sim.optimal_action(model, state)?;
-    let m = metrics_cached(sim, mcache, model, aid, state)?;
-    let v = m.frame_service_s();
-    ecache.insert(key, v);
-    Ok(v)
-}
-
 /// Sleep-exit path of a board that receives work: pay the wake latency;
 /// the bitstream is lost, so the next decision pays full reconfiguration.
-fn wake_board(slot: &mut Slot, ctx: &ShardCtx<'_>, t: f64) {
+fn wake_board(slot: &mut Slot, t: f64) {
     let b = &mut slot.board;
     b.phase = Phase::Waking;
-    b.phase_power_w = ctx.consts.p_static;
-    b.busy_until = t + ctx.config.wake_penalty_s;
+    b.phase_power_w = b.p_static_w;
+    b.busy_until = t + b.wake_penalty_s;
     b.reconfig = ReconfigManager::new();
     b.decided = None;
     b.wakes += 1;
@@ -242,7 +190,7 @@ fn apply_decision(
     slot: &mut Slot,
     ctx: &ShardCtx<'_>,
     action_id: usize,
-    model: &ModelVariant,
+    model: &crate::models::ModelVariant,
     state: WorkloadState,
     headroom_s: f64,
     t: f64,
@@ -261,15 +209,18 @@ fn apply_decision(
     b.decided = Some((action_id, model.name(), state));
     b.phase = Phase::Reconfiguring;
     b.busy_until = t + overhead.total_s();
-    b.phase_power_w = idle_power_w(ctx.sim, Some(&ctx.sim.actions()[action_id]));
+    // the newly applied action is the loaded configuration now, so the
+    // board's own (profile-scaled) idle power is the overhead power
+    b.phase_power_w = b.idle_power_w(ctx.sim);
     let until = b.busy_until;
     slot.queue.push(until, FleetEvent::ReconfigDone { board: slot.idx });
 }
 
 /// Resolve a decision inline inside the shard (static, order-independent
 /// policies only): the shared [`observe_for_decision`] sequence, then
-/// baseline selection and overhead charge — exactly the single-queue
-/// decide path minus the (unused) policy observation vector.
+/// baseline selection projected onto the board's fabric, and the
+/// overhead charge — exactly the single-queue decide path minus the
+/// (unused) policy observation vector.
 fn decide_local(
     slot: &mut Slot,
     mcache: &mut MetricsCache,
@@ -282,11 +233,20 @@ fn decide_local(
         &mut slot.board,
         &ctx.schedules[slot.idx],
         &ctx.config.slo,
-        ctx.consts.p_arm_base,
+        ctx.base.p_arm_base_w,
         t,
-        |m, s| est_service_cached(ctx.sim, mcache, ecache, m, s),
+        |p, m, s| est_service_cached(ctx.sim, mcache, ecache, p, m, s),
     )?;
-    let action_id = baseline.select(ctx.sim, &dec.head_model, dec.state, None)?;
+    let action_id = select_allowed(
+        baseline,
+        ctx.sim,
+        mcache,
+        ecache,
+        &slot.board.profile,
+        &dec.head_model,
+        dec.state,
+        None,
+    )?;
     apply_decision(slot, ctx, action_id, &dec.head_model, dec.state, dec.queue.headroom_s, t);
     slot.decisions += 1;
     slot.batches += 1;
@@ -312,19 +272,19 @@ fn kick_slot(
     }
     if slot.board.queue.is_empty() {
         if slot.board.phase != Phase::Idle {
-            let loaded = slot.board.reconfig.current_action();
-            let p_idle = idle_power_w(ctx.sim, loaded.map(|id| &ctx.sim.actions()[id]));
+            let p_idle = slot.board.idle_power_w(ctx.sim);
             let b = &mut slot.board;
             b.phase = Phase::Idle;
             b.phase_power_w = p_idle;
             b.idle_epoch += 1;
             b.obs_traffic_bps = 0.0;
             b.obs_host_util = 0.0;
-            b.obs_p_fpga = ctx.consts.p_static;
+            b.obs_p_fpga = b.p_static_w;
             let epoch = b.idle_epoch;
-            if ctx.config.idle_to_sleep_s.is_finite() {
+            if b.idle_to_sleep_s.is_finite() {
+                let dwell = b.idle_to_sleep_s;
                 slot.queue.push(
-                    t + ctx.config.idle_to_sleep_s,
+                    t + dwell,
                     FleetEvent::SleepTimer {
                         board: slot.idx,
                         idle_epoch: epoch,
@@ -347,7 +307,14 @@ fn kick_slot(
     if valid {
         let action_id = slot.board.decided.as_ref().expect("valid decision").0;
         let instances = ctx.sim.actions()[action_id].instances;
-        let m = metrics_cached(ctx.sim, mcache, &head_model, action_id, state)?;
+        let m = metrics_cached(
+            ctx.sim,
+            mcache,
+            &slot.board.profile,
+            &head_model,
+            action_id,
+            state,
+        )?;
         let b = &mut slot.board;
         b.phase = Phase::Serving;
         b.phase_power_w = m.p_fpga;
@@ -412,7 +379,7 @@ fn process_event(
                 at_s: t,
             });
             if slot.board.phase == Phase::Sleeping {
-                wake_board(slot, ctx, t);
+                wake_board(slot, t);
             } else {
                 kick_slot(slot, mcache, ecache, ctx, t)?;
             }
@@ -420,13 +387,12 @@ fn process_event(
         FleetEvent::WakeDone { .. } => {
             advance(&mut slot.board, t);
             slot.board.phase = Phase::Holding;
-            slot.board.phase_power_w = ctx.consts.p_static;
+            slot.board.phase_power_w = slot.board.p_static_w;
             kick_slot(slot, mcache, ecache, ctx, t)?;
         }
         FleetEvent::ReconfigDone { .. } => {
             advance(&mut slot.board, t);
-            let loaded = slot.board.reconfig.current_action();
-            let p_idle = idle_power_w(ctx.sim, loaded.map(|id| &ctx.sim.actions()[id]));
+            let p_idle = slot.board.idle_power_w(ctx.sim);
             slot.board.phase = Phase::Holding;
             slot.board.phase_power_w = p_idle;
             kick_slot(slot, mcache, ecache, ctx, t)?;
@@ -459,8 +425,7 @@ fn process_event(
                 model: name,
                 violated,
             });
-            let loaded = slot.board.reconfig.current_action();
-            let p_idle = idle_power_w(ctx.sim, loaded.map(|id| &ctx.sim.actions()[id]));
+            let p_idle = slot.board.idle_power_w(ctx.sim);
             slot.board.phase = Phase::Holding;
             slot.board.phase_power_w = p_idle;
             kick_slot(slot, mcache, ecache, ctx, t)?;
@@ -470,7 +435,7 @@ fn process_event(
             if b.phase == Phase::Idle && b.idle_epoch == idle_epoch {
                 advance(b, t);
                 b.phase = Phase::Sleeping;
-                b.phase_power_w = ctx.consts.sleep_w;
+                b.phase_power_w = b.sleep_w;
             }
         }
         FleetEvent::WorkloadShift { .. } => {
@@ -679,21 +644,7 @@ impl FleetCoordinator {
         self.rr_cursor = 0;
         self.rng = XorShift64::new(self.config.seed ^ 0xf1ee7c0de);
         self.online_rewards = RewardCalculator::new();
-        let consts = ShardConsts {
-            p_static: self
-                .sim
-                .calibration()
-                .get("p_pl_static")
-                .copied()
-                .unwrap_or(3.0),
-            p_arm_base: self
-                .sim
-                .calibration()
-                .get("p_arm_base")
-                .copied()
-                .unwrap_or(1.5),
-            sleep_w: sleep_power_w(self.sim.calibration()),
-        };
+        let base = self.power_base();
         let local = match &self.policy {
             FleetPolicy::Static(b) if *b != Baseline::Random => Some(*b),
             _ => None,
@@ -709,7 +660,7 @@ impl FleetCoordinator {
                     .iter()
                     .map(|&i| Slot {
                         idx: i,
-                        board: self.mk_board(i, consts.p_static),
+                        board: self.mk_board(i, &base),
                         queue: EventQueue::new(),
                         pending_t: None,
                         future_arrivals: 0,
@@ -720,8 +671,8 @@ impl FleetCoordinator {
                         extra_events: 0,
                     })
                     .collect(),
-                metrics_cache: HashMap::new(),
-                est_cache: HashMap::new(),
+                metrics_cache: MetricsCache::new(),
+                est_cache: EstCache::new(),
             })
             .collect();
         let mut loc = vec![(0usize, 0usize); n];
@@ -743,7 +694,8 @@ impl FleetCoordinator {
             .collect();
 
         // seed every board's local timeline: workload shifts + the
-        // initial idle->sleep timer
+        // initial idle->sleep timer (per-board dwell — board classes may
+        // nap on their own schedule)
         for sh in shards.iter_mut() {
             for slot in sh.slots.iter_mut() {
                 for &(t0, _) in &scenario.schedules[slot.idx] {
@@ -751,9 +703,9 @@ impl FleetCoordinator {
                         slot.queue.push(t0, FleetEvent::WorkloadShift { board: slot.idx });
                     }
                 }
-                if self.config.idle_to_sleep_s.is_finite() {
+                if slot.board.idle_to_sleep_s.is_finite() {
                     slot.queue.push(
-                        self.config.idle_to_sleep_s,
+                        slot.board.idle_to_sleep_s,
                         FleetEvent::SleepTimer {
                             board: slot.idx,
                             idle_epoch: 0,
@@ -796,7 +748,7 @@ impl FleetCoordinator {
                     requests: &scenario.requests,
                     local,
                     budget,
-                    consts,
+                    base,
                 };
                 drain_round(&mut shards, &ctx, horizon, threads)?;
             }
@@ -853,7 +805,7 @@ impl FleetCoordinator {
                         requests: &scenario.requests,
                         local,
                         budget,
-                        consts,
+                        base,
                     };
                     let (si, pi) = loc[target];
                     let Shard {
@@ -869,7 +821,7 @@ impl FleetCoordinator {
                         at_s: t,
                     });
                     if slot.board.phase == Phase::Sleeping {
-                        wake_board(slot, &ctx, t);
+                        wake_board(slot, t);
                     } else {
                         kick_slot(slot, metrics_cache, est_cache, &ctx, t)?;
                     }
@@ -922,7 +874,7 @@ impl FleetCoordinator {
                         requests: &scenario.requests,
                         local,
                         budget,
-                        consts,
+                        base,
                     };
                     kick_slot(slot, metrics_cache, est_cache, &ctx, t)?;
                     continue;
@@ -931,13 +883,14 @@ impl FleetCoordinator {
                     &mut slot.board,
                     &scenario.schedules[i],
                     &self.config.slo,
-                    consts.p_arm_base,
+                    base.p_arm_base_w,
                     t,
-                    |m, s| est_service_cached(&self.sim, metrics_cache, est_cache, m, s),
+                    |p, m, s| est_service_cached(&self.sim, metrics_cache, est_cache, p, m, s),
                 )?;
                 let obs = self.featurizer.observe(&dec.sample, &dec.head_model);
                 requests_out.push(DecisionRequest {
                     board: i,
+                    profile: slot.board.profile.clone(),
                     model: dec.head_model,
                     obs,
                     state: dec.state,
@@ -955,7 +908,7 @@ impl FleetCoordinator {
                         requests: &scenario.requests,
                         local,
                         budget,
-                        consts,
+                        base,
                     };
                     let (si, pi) = loc[req.board];
                     let slot = &mut shards[si].slots[pi];
@@ -1010,7 +963,7 @@ impl FleetCoordinator {
                 requests: &scenario.requests,
                 local,
                 budget,
-                consts,
+                base,
             };
             for &(si, pi) in &loc {
                 let Shard {

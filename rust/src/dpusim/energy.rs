@@ -23,6 +23,19 @@ pub fn sleep_power_w(cal: &HashMap<String, f64>) -> f64 {
     cal.get("p_sleep").copied().unwrap_or(DEFAULT_SLEEP_POWER_W)
 }
 
+/// Frames-per-joule with the shared zero-energy guard. Every PPW-style
+/// summary in the crate — `Totals::avg_ppw`, [`FleetEnergy::fleet_ppw`],
+/// the fleet report's serving/fleet efficiencies, the report renderers —
+/// divides through this one helper, so the convention (0 when no energy
+/// was accounted) cannot drift between reporters.
+pub fn frames_per_joule(frames: f64, energy_j: f64) -> f64 {
+    if energy_j > 0.0 {
+        frames / energy_j
+    } else {
+        0.0
+    }
+}
+
 /// PL power of an awake board that is *not* serving frames: static power
 /// plus the per-instance idle power of the currently-loaded
 /// configuration (nothing loaded -> static only).
@@ -117,12 +130,7 @@ impl FleetEnergy {
     /// (idle + sleep energy counted — that is the point of the fleet
     /// accounting; a board that naps cheaply raises this number).
     pub fn fleet_ppw(&self, total_frames: f64) -> f64 {
-        let e = self.total_j();
-        if e > 0.0 {
-            total_frames / e
-        } else {
-            0.0
-        }
+        frames_per_joule(total_frames, self.total_j())
     }
 }
 

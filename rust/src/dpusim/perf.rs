@@ -72,6 +72,29 @@ impl Metrics {
         }
         (instances as f64 * self.t_host_ms / self.latency_ms).min(1.0) * 100.0
     }
+
+    /// First-order board-class scaling (DESIGN.md §12): `perf` multiplies
+    /// throughput (latency and service time divide through), `power`
+    /// multiplies PL power; PPW and the 30 FPS constraint are
+    /// re-derived. `(1.0, 1.0)` is a bit-exact identity — the calibrated
+    /// ZCU102 reference class goes through unperturbed.
+    pub fn scaled(mut self, perf: f64, power: f64) -> Metrics {
+        if perf == 1.0 && power == 1.0 {
+            return self;
+        }
+        self.fps *= perf;
+        self.latency_ms /= perf;
+        self.t_host_ms /= perf;
+        self.bw_demand_gbs *= perf;
+        self.p_fpga *= power;
+        self.ppw = if self.p_fpga > 0.0 {
+            self.fps / self.p_fpga
+        } else {
+            0.0
+        };
+        self.meets_constraint = self.fps >= FPS_CONSTRAINT;
+        self
+    }
 }
 
 /// Hoisted calibration constants — `evaluate` is the crate's hottest

@@ -17,6 +17,7 @@
 //! Reports embed the git SHA and host thread count so uploaded CI
 //! artifacts stay attributable across runs.
 
+use crate::coordinator::board::BoardProfile;
 use crate::coordinator::fleet::{
     FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy, RunMode,
 };
@@ -121,15 +122,27 @@ fn run_pair(
     correlation: f64,
     seed: u64,
     tick_s: f64,
+    classes: &[&str],
 ) -> Result<ScenarioResult> {
     let scenario =
         FleetScenario::generate(pattern, boards, horizon_s, rate_rps, correlation, seed)?;
+    let profiles: Vec<BoardProfile> = if classes.is_empty() {
+        Vec::new()
+    } else {
+        anyhow::ensure!(classes.len() == boards, "one class per board");
+        let sizes = crate::data::load_dpu_sizes()?;
+        classes
+            .iter()
+            .map(|c| BoardProfile::of_class(c, &sizes))
+            .collect::<Result<_>>()?
+    };
     let mk = || -> Result<FleetCoordinator> {
         let cfg = FleetConfig {
             boards,
             tick_s,
             routing: RoutingPolicy::SloAware,
             seed,
+            profiles: profiles.clone(),
             ..FleetConfig::default()
         };
         FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal))
@@ -243,6 +256,7 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             0.7,
             11,
             tick_s,
+            &[],
         )?,
         run_pair(
             "sparse_diurnal",
@@ -253,6 +267,7 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             0.7,
             12,
             tick_s,
+            &[],
         )?,
         run_pair(
             "bursty",
@@ -263,6 +278,21 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             0.7,
             13,
             tick_s,
+            &[],
+        )?,
+        // heterogeneous fleet (DESIGN.md §12): mixed board classes under
+        // SLO-aware routing — keeps the perf gate pointed at the
+        // profile-aware estimate path and pins its event-vs-tick parity
+        run_pair(
+            "hetero_mixed",
+            ArrivalPattern::Steady,
+            4,
+            dense_h,
+            dense_rate * 0.5,
+            0.7,
+            14,
+            tick_s,
+            &["B512", "B1024", "B4096", "B4096"],
         )?,
     ];
     let scaling = Some(run_scaling(smoke)?);

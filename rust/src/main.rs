@@ -12,6 +12,7 @@
 //! dpuconfig decide  --model ResNet152 --state M # one decision, verbose
 //! dpuconfig fleet   [--boards 4] [--routing energy_aware] [--pattern diurnal]
 //!                   [--rate 20] [--slo-ms 250] [--slo ResNet152=120]
+//!                   [--profiles B512,B1024,B4096,B4096]   # heterogeneous fleet
 //!                   [--threads N] [--fingerprint] [--fine-tick] [--assert-served]
 //! dpuconfig fleet-bench [--full] [--out BENCH_fleet.json] [--check-against BENCH_fleet.json]
 //! dpuconfig adapt   [--kind calibration] [--seed 7]  # online adaptation
@@ -141,8 +142,36 @@ fn run() -> Result<()> {
             colocate_demo(args.positional.clone(), state)?;
         }
         "fleet" => {
+            // --profiles B512,B1024,B4096: one board class per entry (a
+            // heterogeneous fleet); the board count follows the list
+            let profile_classes: Vec<String> = args
+                .opt("profiles")
+                .map(|s| {
+                    s.split(',')
+                        .filter(|c| !c.is_empty())
+                        .map(String::from)
+                        .collect()
+                })
+                .unwrap_or_default();
+            let boards = if profile_classes.is_empty() {
+                args.opt_usize("boards", 4)?
+            } else {
+                if let Some(explicit) = args.opt("boards") {
+                    let n: usize = explicit
+                        .parse()
+                        .with_context(|| format!("--boards {explicit:?} is not an integer"))?;
+                    anyhow::ensure!(
+                        n == profile_classes.len(),
+                        "--boards {n} conflicts with --profiles ({} classes listed); \
+                         drop --boards or make them agree",
+                        profile_classes.len()
+                    );
+                }
+                profile_classes.len()
+            };
             let opts = FleetDemoOpts {
-                boards: args.opt_usize("boards", 4)?,
+                boards,
+                profile_classes,
                 horizon: args.opt_f64("horizon", 120.0)?,
                 rate: args.opt_f64("rate", 20.0)?,
                 routing: args.opt_or("routing", "energy_aware").parse()?,
@@ -323,6 +352,8 @@ fn default_threads() -> usize {
 
 struct FleetDemoOpts {
     boards: usize,
+    /// Board classes for a heterogeneous fleet (empty = homogeneous).
+    profile_classes: Vec<String>,
     horizon: f64,
     rate: f64,
     routing: dpuconfig::coordinator::RoutingPolicy,
@@ -340,7 +371,8 @@ struct FleetDemoOpts {
 
 fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
     use dpuconfig::coordinator::{
-        FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RunMode, SloConfig,
+        BoardProfile, FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RunMode,
+        SloConfig,
     };
     let fleet_policy = match o.policy.as_str() {
         "dpuconfig" | "agent" => {
@@ -354,6 +386,15 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         "random" => FleetPolicy::Static(Baseline::Random),
         other => bail!("unknown policy {other:?}"),
     };
+    let profiles: Vec<BoardProfile> = if o.profile_classes.is_empty() {
+        Vec::new()
+    } else {
+        let sizes = dpuconfig::data::load_dpu_sizes()?;
+        o.profile_classes
+            .iter()
+            .map(|c| BoardProfile::of_class(c, &sizes))
+            .collect::<Result<_>>()?
+    };
     let cfg = FleetConfig {
         boards: o.boards,
         routing: o.routing,
@@ -362,6 +403,7 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
             default_ms: o.slo_ms,
             per_model: o.slo_overrides.clone(),
         },
+        profiles,
         ..FleetConfig::default()
     };
     let scenario = FleetScenario::generate(
@@ -373,8 +415,13 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         o.seed,
     )?;
     println!(
-        "fleet: {} boards, {} requests ({}), routing {}, horizon {}s, SLO {} ms, {} thread(s)",
+        "fleet: {} boards{}, {} requests ({}), routing {}, horizon {}s, SLO {} ms, {} thread(s)",
         o.boards,
+        if o.profile_classes.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", o.profile_classes.join(","))
+        },
         scenario.requests.len(),
         o.pattern.name(),
         o.routing.name(),

@@ -12,6 +12,7 @@ use dpuconfig::coordinator::fleet::{
     least_loaded_pick, FleetConfig, FleetCoordinator, FleetPolicy, FleetRequest, FleetScenario,
     RoutingPolicy, RunMode, SloConfig,
 };
+use dpuconfig::coordinator::BoardProfile;
 use dpuconfig::data::load_models;
 use dpuconfig::models::ModelVariant;
 use dpuconfig::online::OnlineAgent;
@@ -512,6 +513,166 @@ fn event_budget_err_names_stuck_board_on_both_executors() {
     assert!(msg.contains("event budget exhausted"), "{msg}");
     assert!(msg.contains("board"), "{msg}");
     assert!(msg.contains("queue depth"), "{msg}");
+}
+
+fn mixed_profiles(classes: &[&str]) -> Vec<BoardProfile> {
+    let sizes = dpuconfig::data::load_dpu_sizes().unwrap();
+    classes
+        .iter()
+        .map(|c| BoardProfile::of_class(c, &sizes).unwrap())
+        .collect()
+}
+
+/// Heterogeneous tentpole acceptance #1: a mixed-class fleet serves the
+/// whole stream on both executors, and the sharded run's fingerprint is
+/// byte-identical across thread counts for every RoutingPolicy x
+/// FleetPolicy combination — heterogeneity must not cost determinism.
+#[test]
+fn heterogeneous_fleet_fingerprint_is_thread_invariant_for_every_combo() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 3, 30.0, 6.0, 0.7, 15).unwrap();
+    let fingerprint = |routing: RoutingPolicy, policy: &str, threads: usize| -> String {
+        let cfg = FleetConfig {
+            boards: 3,
+            routing,
+            idle_to_sleep_s: 5.0,
+            seed: 15,
+            profiles: mixed_profiles(&["B512", "B1024", "B4096"]),
+            ..FleetConfig::default()
+        };
+        let fleet_policy = match policy {
+            "optimal" => FleetPolicy::Static(Baseline::Optimal),
+            "max_fps" => FleetPolicy::Static(Baseline::MaxFps),
+            "min_power" => FleetPolicy::Static(Baseline::MinPower),
+            "random" => FleetPolicy::Static(Baseline::Random),
+            "online" => FleetPolicy::Online(Box::new(
+                OnlineAgent::load_default(15).expect("committed policy weights"),
+            )),
+            other => panic!("unknown test policy {other}"),
+        };
+        let r = FleetCoordinator::new(cfg, fleet_policy)
+            .unwrap()
+            .run_threads(&scenario, threads)
+            .unwrap();
+        assert_eq!(r.requests_done() as usize, scenario.requests.len());
+        assert_eq!(r.dropped, 0);
+        r.fingerprint()
+    };
+    for routing in RoutingPolicy::all() {
+        for policy in ["optimal", "max_fps", "min_power", "random", "online"] {
+            let one = fingerprint(routing, policy, 1);
+            let four = fingerprint(routing, policy, 4);
+            assert_eq!(one, four, "{policy} x {} hetero invariant", routing.name());
+        }
+    }
+}
+
+/// Heterogeneous tentpole acceptance #2: event-vs-tick parity holds on
+/// a mixed fleet (the FineTick reference runs the same profile-aware
+/// physics on the tick grid).
+#[test]
+fn heterogeneous_fleet_event_core_matches_fine_tick() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, 3, 30.0, 15.0, 0.6, 16).unwrap();
+    let mk = || {
+        let cfg = FleetConfig {
+            boards: 3,
+            tick_s: 0.05,
+            routing: RoutingPolicy::SloAware,
+            seed: 16,
+            profiles: mixed_profiles(&["B1024", "B4096", "B512"]),
+            ..FleetConfig::default()
+        };
+        optimal_fleet(cfg)
+    };
+    let ev = mk().run_mode(&scenario, RunMode::EventDriven).unwrap();
+    let tk = mk().run_mode(&scenario, RunMode::FineTick).unwrap();
+    assert_eq!(ev.requests_done(), tk.requests_done());
+    assert_eq!(ev.decisions, tk.decisions);
+    let frames_rel = ((ev.total_frames() - tk.total_frames()) / tk.total_frames()).abs();
+    assert!(frames_rel < 1e-6, "hetero frames diverge: rel {frames_rel:.3e}");
+    let energy_rel = ((ev.total_energy_j() - tk.total_energy_j()) / tk.total_energy_j()).abs();
+    assert!(energy_rel < 1e-6, "hetero energy diverges: rel {energy_rel:.3e}");
+    // and the board classes surface in the report
+    assert_eq!(ev.boards[0].class, "B1024");
+    assert_eq!(ev.boards[2].class, "B512");
+}
+
+/// Per-board service estimates make the SLO router heterogeneity-aware:
+/// with a B512-class and a B4096-class board both awake, a spaced
+/// ResNet152 stream lands entirely on the big board (its predicted
+/// completion wait is far lower).
+#[test]
+fn slo_router_prefers_capable_boards_for_heavy_models() {
+    let scenario = FleetScenario {
+        requests: (0..6).map(|i| req("ResNet152", i as f64 * 3.0)).collect(),
+        schedules: steady_schedules(2),
+        horizon_s: 30.0,
+    };
+    let cfg = FleetConfig {
+        boards: 2,
+        routing: RoutingPolicy::SloAware,
+        idle_to_sleep_s: f64::INFINITY,
+        seed: 4,
+        profiles: mixed_profiles(&["B512", "B4096"]),
+        ..FleetConfig::default()
+    };
+    let r = optimal_fleet(cfg).run(&scenario).unwrap();
+    assert_eq!(r.requests_done(), 6);
+    assert_eq!(
+        r.boards[1].requests_done, 6,
+        "every ResNet152 belongs on the B4096-class board"
+    );
+    assert_eq!(r.boards[0].requests_done, 0);
+}
+
+/// Fabric caps are physical: a B512-class-only fleet still serves heavy
+/// models (decisions project onto its allowed action subset) but pays
+/// for it with a worse tail than the reference class.
+#[test]
+fn restricted_fabric_serves_with_worse_tail_latency() {
+    let scenario = FleetScenario {
+        requests: (0..5).map(|i| req("ResNet152", i as f64 * 4.0)).collect(),
+        schedules: steady_schedules(1),
+        horizon_s: 30.0,
+    };
+    let run = |classes: &[&str]| {
+        let cfg = FleetConfig {
+            boards: 1,
+            routing: RoutingPolicy::RoundRobin,
+            idle_to_sleep_s: f64::INFINITY,
+            seed: 8,
+            profiles: mixed_profiles(classes),
+            ..FleetConfig::default()
+        };
+        optimal_fleet(cfg).run(&scenario).unwrap()
+    };
+    let small = run(&["B512"]);
+    let big = run(&["B4096"]);
+    assert_eq!(small.requests_done(), 5);
+    assert_eq!(big.requests_done(), 5);
+    // max_ms is exact (tracked outside the buckets), so the ~2% tail gap
+    // between the classes can't alias into one log-linear bucket
+    assert!(
+        small.latency().max_ms() > big.latency().max_ms(),
+        "B512-class tail {:.1} ms must exceed B4096-class {:.1} ms on ResNet152",
+        small.latency().max_ms(),
+        big.latency().max_ms()
+    );
+    assert!(small.boards[0].totals.busy_s > big.boards[0].totals.busy_s);
+}
+
+/// Config validation: a profile list that doesn't match the board count
+/// is rejected up front.
+#[test]
+fn mismatched_profile_count_is_rejected() {
+    let cfg = FleetConfig {
+        boards: 3,
+        profiles: mixed_profiles(&["B512", "B4096"]),
+        ..FleetConfig::default()
+    };
+    let err = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap_err();
+    assert!(format!("{err:#}").contains("board profiles"), "{err:#}");
 }
 
 /// Batched fleet decisions must agree with the sequential agent
