@@ -175,6 +175,9 @@ pub(crate) enum Phase {
     Idle,
     /// Awake with queued work, waiting on a same-instant decision.
     Holding,
+    /// Dead (fault-injected): draws nothing, serves nothing, accrues
+    /// downtime; exits only through `BoardRecover` and comes back cold.
+    Failed,
 }
 
 /// One queued request on a board (head = in service or next up).
@@ -238,6 +241,20 @@ pub(crate) struct Board {
     pub(crate) reward_n: u64,
     pub(crate) qdepth_sum: u64,
     pub(crate) late_decisions: u64,
+    // fault / elasticity accounting (DESIGN.md §13)
+    /// Current thermal derating severity in [0, 1) (0 = nominal).
+    pub(crate) derate: f64,
+    /// Autoscaler-drained (or never provisioned): powered off, 0 W,
+    /// excluded from routing until the autoscaler provisions it.
+    pub(crate) offline: bool,
+    /// Seconds spent in [`Phase::Failed`].
+    pub(crate) downtime_s: f64,
+    /// Times this board died.
+    pub(crate) fails: u64,
+    /// Backlogged requests re-routed *off* this board when it died.
+    pub(crate) requeues: u64,
+    /// Thermal-derate step events applied.
+    pub(crate) derate_events: u64,
 }
 
 impl Board {
@@ -281,6 +298,12 @@ impl Board {
             reward_n: 0,
             qdepth_sum: 0,
             late_decisions: 0,
+            derate: 0.0,
+            offline: false,
+            downtime_s: 0.0,
+            fails: 0,
+            requeues: 0,
+            derate_events: 0,
         }
     }
 
@@ -318,6 +341,8 @@ pub(crate) fn advance(b: &mut Board, t: f64) {
             }
         }
         Phase::Idle | Phase::Holding => b.energy.add_idle(b.phase_power_w, dt),
+        // dead silicon draws nothing; only downtime accrues
+        Phase::Failed => b.downtime_s += dt,
     }
     b.last_t = t;
 }

@@ -48,6 +48,20 @@ pub enum FleetEvent {
     DecisionDue { board: usize },
     /// Board `board`'s co-runner workload schedule steps to a new state.
     WorkloadShift { board: usize },
+    /// Board `board` dies (DESIGN.md §13): its in-flight frame is
+    /// dropped, its backlog re-routed through the active routing policy,
+    /// and it leaves every routing/decision cohort until recovery.
+    BoardFail { board: usize },
+    /// Repair completes on board `board`. The board comes back *cold*:
+    /// bitstream lost, full reconfiguration charged at its next decision.
+    BoardRecover { board: usize },
+    /// Thermal derating on board `board` steps to `level`/1000 of the
+    /// full derating corner (per-mille integer keeps the event `Copy +
+    /// Eq`; the physics follow [`crate::workload::traffic::DriftKind::Thermal`]).
+    ThermalDerate { board: usize, level: u16 },
+    /// Autoscaler heartbeat: measure fleet-wide SLO pressure, then
+    /// cold-provision an offline board or drain an idle one.
+    ScaleCheck,
     /// Fine-tick reference mode only: a no-progress accounting tick (the
     /// tick-driven loop this core replaced; kept to measure the speedup
     /// and to cross-check totals).

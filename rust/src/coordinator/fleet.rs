@@ -62,7 +62,9 @@ use crate::rl::{Baseline, Featurizer};
 use crate::runtime::PolicyRuntime;
 use crate::telemetry::latency::LatencyHistogram;
 use crate::telemetry::Sampler;
-use crate::workload::traffic::{correlated_schedules, request_stream, state_at, ArrivalPattern};
+use crate::workload::traffic::{
+    correlated_schedules, request_stream, state_at, ArrivalPattern, FaultAction, FaultProfile,
+};
 use crate::workload::{WorkloadState, XorShift64};
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -206,6 +208,40 @@ impl SloConfig {
     }
 }
 
+/// SLO-pressure autoscaler (DESIGN.md §13): boards beyond `min_active`
+/// start powered off (0 W, excluded from routing); every
+/// `check_every_s` a `ScaleCheck` event measures the mean predicted
+/// backlog per active board and cold-provisions the cheapest offline
+/// board when it exceeds `pressure_s`, or drains the most expensive
+/// idle one below `drain_below_s` — the configuration-aware idle-vs-off
+/// economics of arXiv:2407.12027 at fleet scale.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Heartbeat of the `ScaleCheck` event (simulated seconds).
+    pub check_every_s: f64,
+    /// Boards kept provisioned at all times (also the initial fleet).
+    pub min_active: usize,
+    /// Mean backlog per active board (seconds) that triggers a
+    /// cold-provision.
+    pub pressure_s: f64,
+    /// Mean backlog per active board (seconds) below which one idle
+    /// board drains to powered-off.
+    pub drain_below_s: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            // off the 5 s/20 s grids the workload generators use, so
+            // scale checks never tie with schedule steps
+            check_every_s: 3.7,
+            min_active: 1,
+            pressure_s: 0.25,
+            drain_below_s: 0.02,
+        }
+    }
+}
+
 /// Fleet shape + power-state + SLO policy.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -238,6 +274,12 @@ pub struct FleetConfig {
     /// (exactly the pre-profile homogeneous fleet); non-empty must carry
     /// one profile per board.
     pub profiles: Vec<BoardProfile>,
+    /// Seeded runtime fault injection (`None` = every board survives the
+    /// run — the exact pre-fault serving loop).
+    pub faults: Option<FaultProfile>,
+    /// SLO-pressure autoscaler (`None` = the whole fleet stays
+    /// provisioned for the whole run).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for FleetConfig {
@@ -253,6 +295,8 @@ impl Default for FleetConfig {
             slo: SloConfig::default(),
             event_budget: None,
             profiles: Vec::new(),
+            faults: None,
+            autoscale: None,
         }
     }
 }
@@ -345,8 +389,9 @@ pub struct RequestTrail {
 
 /// Roll a finished [`Board`] into its report slice. Shared by the
 /// single-queue loop and the sharded executor so derived statistics
-/// (mean reward, mean decision queue depth) are computed identically.
-pub(crate) fn finish_board(i: usize, mut b: Board) -> BoardReport {
+/// (mean reward, mean decision queue depth, availability over `span_s`)
+/// are computed identically.
+pub(crate) fn finish_board(i: usize, mut b: Board, span_s: f64) -> BoardReport {
     if b.reward_n > 0 {
         b.totals.mean_reward = b.reward_sum / b.reward_n as f64;
     }
@@ -354,6 +399,11 @@ pub(crate) fn finish_board(i: usize, mut b: Board) -> BoardReport {
         b.qdepth_sum as f64 / b.totals.decisions as f64
     } else {
         0.0
+    };
+    let availability = if span_s > 0.0 {
+        (1.0 - b.downtime_s / span_s).clamp(0.0, 1.0)
+    } else {
+        1.0
     };
     BoardReport {
         board: i,
@@ -367,6 +417,11 @@ pub(crate) fn finish_board(i: usize, mut b: Board) -> BoardReport {
         latency: b.latency,
         mean_decision_queue_depth: mean_depth,
         late_decisions: b.late_decisions,
+        downtime_s: b.downtime_s,
+        fails: b.fails,
+        requeues: b.requeues,
+        derates: b.derate_events,
+        availability,
     }
 }
 
@@ -388,6 +443,16 @@ pub struct BoardReport {
     /// Decisions taken when the head request's SLO headroom was already
     /// negative (the deadline-headroom feature of the decision path).
     pub late_decisions: u64,
+    /// Seconds spent dead ([`Phase::Failed`]) over the accounted span.
+    pub downtime_s: f64,
+    /// Fault-injected deaths survived.
+    pub fails: u64,
+    /// Backlogged requests re-routed off this board when it died.
+    pub requeues: u64,
+    /// Thermal-derate step events applied.
+    pub derates: u64,
+    /// 1 − downtime/span, clamped to [0, 1].
+    pub availability: f64,
 }
 
 /// Per-model latency/SLO slice of the fleet report.
@@ -419,9 +484,13 @@ pub struct FleetReport {
     /// Policy forward passes (or baseline selections) executed.
     pub decision_batches: u64,
     pub requests_total: usize,
-    /// Requests refused at admission. The current admission layer never
-    /// drops (queues are unbounded); the counter pins that contract —
-    /// the CI smoke asserts it stays zero.
+    /// Requests explicitly dropped: admission (or a dying board's
+    /// backlog re-route) found no routable board — only possible when
+    /// fault injection has every provisioned board dead at once. Without
+    /// a [`FleetConfig::faults`] profile this is always zero (queues are
+    /// unbounded; the CI smoke asserts it). Conservation contract:
+    /// `requests_total == requests_done() + dropped` in every completed
+    /// run.
     pub dropped: u64,
     /// Simulated span accounted on every board (run end, seconds).
     pub span_s: f64,
@@ -484,6 +553,14 @@ impl FleetReport {
         self.by_model.iter().find(|m| m.model == model)
     }
 
+    /// Mean per-board availability (1.0 = no board was ever down).
+    pub fn fleet_availability(&self) -> f64 {
+        if self.boards.is_empty() {
+            return 1.0;
+        }
+        self.boards.iter().map(|b| b.availability).sum::<f64>() / self.boards.len() as f64
+    }
+
     /// Stable digest of everything decision-dependent — two runs of the
     /// same (scenario, config, seed) must produce identical fingerprints
     /// (the determinism tests).
@@ -504,7 +581,7 @@ impl FleetReport {
         for b in &self.boards {
             let _ = write!(
                 s,
-                "|b{}[{}]:f={:.3}:e={:.9e}:E={:.9e}:w={}:d={}:v={}:{}",
+                "|b{}[{}]:f={:.3}:e={:.9e}:E={:.9e}:w={}:d={}:v={}:dt={:.6}:fl={}:rq={}:dr={}:av={:.6}:{}",
                 b.board,
                 b.class,
                 b.totals.frames,
@@ -513,6 +590,11 @@ impl FleetReport {
                 b.wakes,
                 b.requests_done,
                 b.slo_violations,
+                b.downtime_s,
+                b.fails,
+                b.requeues,
+                b.derates,
+                b.availability,
                 b.latency.fingerprint()
             );
         }
@@ -533,7 +615,7 @@ impl FleetReport {
     pub fn render(&self) -> String {
         let mut out = format!(
             "=== fleet report — policy {} / routing {} ({} boards, {} events, {})\n\
-             board  class    frames   busy_s   idle_s  sleep_s  wakes   reqs  p99_ms   viol  serve_J  total_J  fps/J\n",
+             board  class    frames   busy_s   idle_s  sleep_s  wakes   reqs  p99_ms   viol  serve_J  total_J  fps/J  avail\n",
             self.policy,
             self.routing.name(),
             self.boards.len(),
@@ -543,7 +625,7 @@ impl FleetReport {
         for b in &self.boards {
             let ppw = frames_per_joule(b.totals.frames, b.energy.total_j());
             out.push_str(&format!(
-                "{:>5} {:>6} {:>8.0} {:>8.1} {:>8.1} {:>8.1} {:>6} {:>6} {:>7.1} {:>6} {:>8.0} {:>8.0} {:>6.2}\n",
+                "{:>5} {:>6} {:>8.0} {:>8.1} {:>8.1} {:>8.1} {:>6} {:>6} {:>7.1} {:>6} {:>8.0} {:>8.0} {:>6.2} {:>6.3}\n",
                 b.board,
                 b.class,
                 b.totals.frames,
@@ -557,6 +639,7 @@ impl FleetReport {
                 b.totals.energy_fpga_j,
                 b.energy.total_j(),
                 ppw,
+                b.availability,
             ));
         }
         out.push_str(
@@ -580,6 +663,7 @@ impl FleetReport {
             "fleet: {:.0} frames / {:.0} J = {:.2} fps/W (serving-only {:.2}); \
              latency p50 {:.1} p95 {:.1} p99 {:.1} ms; \
              requests {}/{} done, dropped {}, SLO violations {}; \
+             availability {:.4}; \
              {} decisions in {} policy passes over {} events\n",
             self.total_frames(),
             self.total_energy_j(),
@@ -592,6 +676,7 @@ impl FleetReport {
             self.requests_total,
             self.dropped,
             self.slo_violations(),
+            self.fleet_availability(),
             self.decisions,
             self.decision_batches,
             self.events,
@@ -631,6 +716,8 @@ struct RunState<'a> {
     decisions: u64,
     decision_batches: u64,
     remaining: usize,
+    /// Requests explicitly dropped (no routable board existed).
+    dropped: u64,
     end_t: Option<f64>,
     base: PowerBase,
 }
@@ -663,6 +750,22 @@ impl FleetCoordinator {
         anyhow::ensure!(config.boards > 0, "fleet needs at least one board");
         anyhow::ensure!(config.tick_s > 0.0, "tick must be positive");
         anyhow::ensure!(config.slo.default_ms > 0.0, "SLO target must be positive");
+        if let Some(asc) = &config.autoscale {
+            anyhow::ensure!(
+                asc.check_every_s > 0.0,
+                "autoscale check interval must be positive"
+            );
+            anyhow::ensure!(
+                asc.min_active >= 1,
+                "autoscaler must keep at least one board active"
+            );
+            anyhow::ensure!(
+                asc.drain_below_s <= asc.pressure_s,
+                "autoscale drain threshold {} above provision threshold {} (would flap)",
+                asc.drain_below_s,
+                asc.pressure_s
+            );
+        }
         anyhow::ensure!(
             config.profiles.is_empty() || config.profiles.len() == config.boards,
             "fleet has {} boards but {} board profiles (empty = homogeneous default)",
@@ -764,6 +867,18 @@ impl FleetCoordinator {
             budget = budget
                 .saturating_add((drain_bound / self.config.tick_s.max(1e-6)) as u64)
                 .saturating_add(64);
+        }
+        if let Some(f) = &self.config.faults {
+            // every fault event costs itself + re-routes, wakes and the
+            // decisions the re-routed work re-triggers
+            let tl = f.timeline(self.config.boards, scenario.horizon_s).len() as u64;
+            budget = budget.saturating_add(64).saturating_add(32u64.saturating_mul(tl));
+        }
+        if let Some(a) = &self.config.autoscale {
+            // the ScaleCheck chain keeps beating while requests remain,
+            // which can run well past the horizon during a backlog drain
+            let checks = (4.0 * scenario.horizon_s / a.check_every_s.max(1e-6)) as u64 + 8;
+            budget = budget.saturating_add(8u64.saturating_mul(checks));
         }
         budget
     }
@@ -868,40 +983,63 @@ impl FleetCoordinator {
     /// Pick the target board for a newly arrived request. Takes a slice
     /// of references (in global board order) so the sharded executor can
     /// present boards that live scattered across shard-owned storage.
+    ///
+    /// Failed and autoscaler-offline boards are invisible to every
+    /// policy. `Ok(None)` means no routable board exists right now (the
+    /// whole provisioned fleet is dead) — the caller counts the request
+    /// as explicitly dropped. Without fault injection every board is
+    /// always routable and the selection is bit-identical to the
+    /// pre-fault router.
     pub(crate) fn route(
         &mut self,
         boards: &[&Board],
         schedules: &[Vec<(f64, WorkloadState)>],
         model: &ModelVariant,
         t: f64,
-    ) -> Result<usize> {
+    ) -> Result<Option<usize>> {
         let n = boards.len();
+        let routable = |b: &Board| !b.offline && b.phase != Phase::Failed;
         match self.config.routing {
             RoutingPolicy::RoundRobin => {
-                let i = self.rr_cursor % n;
-                self.rr_cursor += 1;
-                Ok(i)
+                // first routable board at-or-after the cursor; with a
+                // fully healthy fleet this is exactly `cursor % n`
+                let start = self.rr_cursor;
+                for k in 0..n {
+                    let i = (start + k) % n;
+                    if routable(boards[i]) {
+                        self.rr_cursor = start + k + 1;
+                        return Ok(Some(i));
+                    }
+                }
+                Ok(None)
             }
             RoutingPolicy::LeastLoaded => {
                 let mut backlogs = Vec::with_capacity(n);
                 for (i, b) in boards.iter().enumerate() {
-                    let state = state_at(&schedules[i], t);
-                    backlogs.push(self.board_backlog_s(b, state, t)?);
+                    if routable(b) {
+                        let state = state_at(&schedules[i], t);
+                        backlogs.push(self.board_backlog_s(b, state, t)?);
+                    } else {
+                        backlogs.push(f64::INFINITY);
+                    }
                 }
-                Ok(least_loaded_pick(&backlogs).expect("fleet has boards"))
+                match least_loaded_pick(&backlogs) {
+                    Some(i) if backlogs[i].is_finite() => Ok(Some(i)),
+                    _ => Ok(None),
+                }
             }
             RoutingPolicy::EnergyAware => {
                 let awake: Vec<usize> = (0..n)
-                    .filter(|&i| boards[i].phase != Phase::Sleeping)
+                    .filter(|&i| routable(boards[i]) && boards[i].phase != Phase::Sleeping)
                     .collect();
                 // 1. an awake board with an empty queue
                 if let Some(&i) = awake.iter().find(|&&i| boards[i].queue.is_empty()) {
-                    return Ok(i);
+                    return Ok(Some(i));
                 }
                 // 2. the least-backlogged awake board, if acceptable
                 if let Some(&i) = awake.iter().min_by_key(|&&i| (boards[i].queue.len(), i)) {
                     if boards[i].queue.len() < self.config.wake_backlog {
-                        return Ok(i);
+                        return Ok(Some(i));
                     }
                 }
                 // 3. wake a sleeper — the cheapest-to-run board class
@@ -909,7 +1047,7 @@ impl FleetCoordinator {
                 // lowest index, which on a homogeneous fleet reduces to
                 // the first sleeper)
                 if let Some(i) = (0..n)
-                    .filter(|&i| boards[i].phase == Phase::Sleeping)
+                    .filter(|&i| routable(boards[i]) && boards[i].phase == Phase::Sleeping)
                     .min_by(|&a, &b| {
                         boards[a]
                             .p_static_w
@@ -918,21 +1056,25 @@ impl FleetCoordinator {
                             .then(a.cmp(&b))
                     })
                 {
-                    return Ok(i);
+                    return Ok(Some(i));
                 }
-                // 4. everyone is awake and backlogged: shortest queue
+                // 4. everyone alive is awake and backlogged: shortest
+                // queue (None iff nothing is routable at all)
                 Ok((0..n)
-                    .min_by_key(|&i| (boards[i].queue.len(), i))
-                    .expect("fleet has boards"))
+                    .filter(|&i| routable(boards[i]))
+                    .min_by_key(|&i| (boards[i].queue.len(), i)))
             }
             RoutingPolicy::SloAware => {
-                let mut best = 0usize;
+                let mut best: Option<usize> = None;
                 let mut best_wait = f64::INFINITY;
                 for (i, b) in boards.iter().enumerate() {
+                    if !routable(b) {
+                        continue;
+                    }
                     let state = state_at(&schedules[i], t);
                     let w = self.predicted_wait_s(b, state, model, t)?;
                     if w < best_wait - 1e-12 {
-                        best = i;
+                        best = Some(i);
                         best_wait = w;
                     }
                 }
@@ -1052,9 +1194,11 @@ impl FleetCoordinator {
     /// is empty. No-op while the board is busy or asleep.
     fn kick(&mut self, rs: &mut RunState<'_>, i: usize, t: f64) -> Result<()> {
         match rs.boards[i].phase {
-            Phase::Sleeping | Phase::Waking | Phase::Reconfiguring | Phase::Serving => {
-                return Ok(())
-            }
+            Phase::Sleeping
+            | Phase::Waking
+            | Phase::Reconfiguring
+            | Phase::Serving
+            | Phase::Failed => return Ok(()),
             Phase::Idle | Phase::Holding => {}
         }
         if rs.boards[i].queue.is_empty() {
@@ -1096,13 +1240,19 @@ impl FleetCoordinator {
             let instances = self.sim.actions()[action_id].instances;
             let m = self.metrics_for(&rs.boards[i].profile, &head_model, action_id, state)?;
             let b = &mut rs.boards[i];
+            // thermal derating at severity m: PL clock ×(1−0.4m) →
+            // service ×1/(1−0.4m); static + dynamic power ×(1+m) — the
+            // DriftKind::Thermal corner applied per board, per frame.
+            // At derate 0 both factors are exact identities, so fault-
+            // free runs stay bit-identical to the pre-fault kernel.
+            let p_serve = m.p_fpga * (1.0 + b.derate);
             b.phase = Phase::Serving;
-            b.phase_power_w = m.p_fpga;
+            b.phase_power_w = p_serve;
             b.serving_meets = m.meets_constraint;
-            b.busy_until = t + m.frame_service_s();
+            b.busy_until = t + m.frame_service_s() / (1.0 - 0.4 * b.derate);
             b.obs_traffic_bps = m.dpu_traffic_bps(instances);
             b.obs_host_util = m.host_util_pct(instances);
-            b.obs_p_fpga = m.p_fpga;
+            b.obs_p_fpga = p_serve;
             // Algorithm-1 reward bookkeeping per served frame
             let r = b.rewards.calculate(&Outcome {
                 measured_fps: m.fps,
@@ -1131,6 +1281,121 @@ impl FleetCoordinator {
             b.decision_pending = true;
             b.phase = Phase::Holding;
             rs.events.push(t, FleetEvent::DecisionDue { board: i });
+        }
+        Ok(())
+    }
+
+    /// Hand a queued request to board `target` at time `t`: enqueue, and
+    /// either wake a sleeper (exit latency now, full reconfiguration at
+    /// the next decision — sleep loses the bitstream) or kick the board.
+    /// One helper shared by admission and the dying-board re-route so
+    /// both paths age requests from their ORIGINAL arrival (`q.at_s`).
+    fn enqueue_on(&mut self, rs: &mut RunState<'_>, target: usize, q: QueuedReq, t: f64) -> Result<()> {
+        {
+            let b = &mut rs.boards[target];
+            advance(b, t);
+            b.queue.push_back(q);
+        }
+        if rs.boards[target].phase == Phase::Sleeping {
+            let b = &mut rs.boards[target];
+            b.phase = Phase::Waking;
+            b.phase_power_w = b.p_static_w;
+            b.busy_until = t + b.wake_penalty_s;
+            b.reconfig = ReconfigManager::new();
+            b.decided = None;
+            b.wakes += 1;
+            let until = b.busy_until;
+            rs.events
+                .push(until, FleetEvent::WakeDone { board: target });
+        } else {
+            self.kick(rs, target, t)?;
+        }
+        Ok(())
+    }
+
+    /// Count request `req` as explicitly dropped (no routable board
+    /// existed) — the only way a request leaves the system unserved.
+    fn drop_request(rs: &mut RunState<'_>, req: usize, t: f64) {
+        rs.dropped += 1;
+        rs.remaining -= 1;
+        if rs.remaining == 0 {
+            rs.end_t = Some(rs.scenario.horizon_s.max(t));
+        }
+    }
+
+    /// One autoscaler heartbeat: measure mean predicted backlog per
+    /// active (routable) board, then provision the cheapest offline
+    /// board under pressure or drain the most expensive idle board in a
+    /// trough. At most one board changes state per check (rate limit).
+    fn scale_check(&mut self, rs: &mut RunState<'_>, t: f64) -> Result<()> {
+        let asc = match self.config.autoscale.clone() {
+            Some(a) => a,
+            None => return Ok(()),
+        };
+        let n = rs.boards.len();
+        let active: Vec<usize> = (0..n)
+            .filter(|&i| !rs.boards[i].offline && rs.boards[i].phase != Phase::Failed)
+            .collect();
+        let mut per = 0.0;
+        if !active.is_empty() {
+            let mut total = 0.0;
+            for &i in &active {
+                let state = state_at(&rs.scenario.schedules[i], t);
+                total += self.board_backlog_s(&rs.boards[i], state, t)?;
+            }
+            per = total / active.len() as f64;
+        }
+        if active.is_empty() || per > asc.pressure_s {
+            // cold-provision the cheapest offline board (lowest static
+            // power, ties to the lowest index); boot = the wake path
+            if let Some(j) = (0..n).filter(|&j| rs.boards[j].offline).min_by(|&a, &b| {
+                rs.boards[a]
+                    .p_static_w
+                    .partial_cmp(&rs.boards[b].p_static_w)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            }) {
+                let b = &mut rs.boards[j];
+                advance(b, t);
+                b.offline = false;
+                b.phase = Phase::Waking;
+                b.phase_power_w = b.p_static_w;
+                b.busy_until = t + b.wake_penalty_s;
+                b.reconfig = ReconfigManager::new();
+                b.decided = None;
+                b.wakes += 1;
+                let until = b.busy_until;
+                rs.events.push(until, FleetEvent::WakeDone { board: j });
+            }
+        } else if per < asc.drain_below_s && active.len() > asc.min_active {
+            // drain the most expensive empty idle/sleeping board (an
+            // offline board costs 0 W vs its idle/sleep floor)
+            if let Some(j) = active
+                .iter()
+                .copied()
+                .filter(|&j| {
+                    rs.boards[j].queue.is_empty()
+                        && matches!(rs.boards[j].phase, Phase::Idle | Phase::Sleeping)
+                })
+                .max_by(|&a, &b| {
+                    // highest static power wins; exact ties resolve to
+                    // the highest index (provision low, drain high)
+                    rs.boards[a]
+                        .p_static_w
+                        .partial_cmp(&rs.boards[b].p_static_w)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                })
+            {
+                let b = &mut rs.boards[j];
+                advance(b, t);
+                b.offline = true;
+                b.phase = Phase::Sleeping;
+                b.phase_power_w = 0.0;
+                b.reconfig = ReconfigManager::new();
+                b.decided = None;
+                b.idle_epoch += 1;
+            }
         }
         Ok(())
     }
@@ -1275,6 +1540,7 @@ impl FleetCoordinator {
             decisions: 0,
             decision_batches: 0,
             remaining: scenario.requests.len(),
+            dropped: 0,
             end_t: if scenario.requests.is_empty() {
                 Some(scenario.horizon_s)
             } else {
@@ -1283,8 +1549,23 @@ impl FleetCoordinator {
             base,
         };
 
-        // seed the timeline: workload shifts, the first arrival, the
-        // initial idle->sleep timers, and (reference mode) the tick grid
+        // autoscale: boards beyond min_active start powered off (0 W,
+        // unroutable) — the autoscaler's ScaleCheck provisions them
+        if let Some(asc) = &self.config.autoscale {
+            for i in asc.min_active.min(self.config.boards)..self.config.boards {
+                let b = &mut rs.boards[i];
+                b.offline = true;
+                b.phase = Phase::Sleeping;
+                b.phase_power_w = 0.0;
+            }
+        }
+
+        // seed the timeline: workload shifts, the fault timeline + the
+        // autoscaler heartbeat (both BEFORE the first arrival, so at an
+        // exactly-equal timestamp a fault resolves ahead of admission —
+        // the same precedence the sharded executor's barrier epochs
+        // use), the first arrival, the initial idle->sleep timers, and
+        // (reference mode) the tick grid
         for (i, sched) in scenario.schedules.iter().enumerate() {
             for &(t0, _) in sched {
                 if t0 > 0.0 {
@@ -1292,10 +1573,29 @@ impl FleetCoordinator {
                 }
             }
         }
+        if let Some(fp) = &self.config.faults {
+            for fe in fp.timeline(self.config.boards, scenario.horizon_s) {
+                let ev = match fe.action {
+                    FaultAction::Fail => FleetEvent::BoardFail { board: fe.board },
+                    FaultAction::Recover => FleetEvent::BoardRecover { board: fe.board },
+                    FaultAction::Derate { level } => FleetEvent::ThermalDerate {
+                        board: fe.board,
+                        level,
+                    },
+                };
+                rs.events.push(fe.at_s, ev);
+            }
+        }
+        if let Some(asc) = &self.config.autoscale {
+            rs.events.push(asc.check_every_s, FleetEvent::ScaleCheck);
+        }
         if let Some(first) = scenario.requests.first() {
             rs.events.push(first.at_s, FleetEvent::Arrival { request: 0 });
         }
         for i in 0..self.config.boards {
+            if rs.boards[i].offline {
+                continue; // powered off, not napping — no dwell timer
+            }
             let dwell = rs.boards[i].idle_to_sleep_s;
             if dwell.is_finite() {
                 rs.events.push(
@@ -1340,7 +1640,7 @@ impl FleetCoordinator {
                 anyhow::bail!(
                     "fleet event budget exhausted after {} events at t={:.3}s \
                      (policy {}, routing {}): board {} is stuck with queue depth {} \
-                     ({} of {} requests still unserved)",
+                     ({} of {} requests still unserved){}",
                     rs.events.popped(),
                     t,
                     self.policy.name(),
@@ -1349,6 +1649,7 @@ impl FleetCoordinator {
                     depth,
                     rs.remaining,
                     scenario.requests.len(),
+                    failed_note(&rs.boards),
                 );
             }
             match ev.event {
@@ -1366,41 +1667,48 @@ impl FleetCoordinator {
                         let refs: Vec<&Board> = rs.boards.iter().collect();
                         self.route(&refs, &scenario.schedules, &model, t)?
                     };
-                    rs.trails[request].board = target;
-                    {
-                        let b = &mut rs.boards[target];
-                        advance(b, t);
-                        b.queue.push_back(QueuedReq {
-                            req: request,
-                            model,
-                            at_s: t,
-                        });
-                    }
-                    if rs.boards[target].phase == Phase::Sleeping {
-                        // wake: pay exit latency now; the bitstream is
-                        // lost, so the next decision pays a full
-                        // reconfiguration
-                        let b = &mut rs.boards[target];
-                        b.phase = Phase::Waking;
-                        b.phase_power_w = b.p_static_w;
-                        b.busy_until = t + b.wake_penalty_s;
-                        b.reconfig = ReconfigManager::new();
-                        b.decided = None;
-                        b.wakes += 1;
-                        let until = b.busy_until;
-                        rs.events
-                            .push(until, FleetEvent::WakeDone { board: target });
-                    } else {
-                        self.kick(&mut rs, target, t)?;
+                    match target {
+                        Some(target) => {
+                            rs.trails[request].board = target;
+                            self.enqueue_on(
+                                &mut rs,
+                                target,
+                                QueuedReq {
+                                    req: request,
+                                    model,
+                                    at_s: t,
+                                },
+                                t,
+                            )?;
+                        }
+                        None => {
+                            // every provisioned board is dead: the
+                            // request is refused, loudly accounted
+                            Self::drop_request(&mut rs, request, t);
+                        }
                     }
                 }
                 FleetEvent::WakeDone { board } => {
+                    // stale if the board died mid-wake (fault injection
+                    // interrupts the completion this event announced);
+                    // in fault-free runs the guard never fires
+                    if rs.boards[board].phase != Phase::Waking
+                        || (t - rs.boards[board].busy_until).abs() > 1e-9
+                    {
+                        continue;
+                    }
                     advance(&mut rs.boards[board], t);
                     rs.boards[board].phase = Phase::Holding;
                     rs.boards[board].phase_power_w = rs.boards[board].p_static_w;
                     self.kick(&mut rs, board, t)?;
                 }
                 FleetEvent::ReconfigDone { board } => {
+                    // stale if the board died mid-reconfiguration
+                    if rs.boards[board].phase != Phase::Reconfiguring
+                        || (t - rs.boards[board].busy_until).abs() > 1e-9
+                    {
+                        continue;
+                    }
                     advance(&mut rs.boards[board], t);
                     let p_idle = rs.boards[board].idle_power_w(&self.sim);
                     rs.boards[board].phase = Phase::Holding;
@@ -1408,6 +1716,18 @@ impl FleetCoordinator {
                     self.kick(&mut rs, board, t)?;
                 }
                 FleetEvent::FrameDone { board, request } => {
+                    // stale if the board died mid-frame (the in-flight
+                    // frame was dropped with the board; its request
+                    // re-routed or explicitly counted)
+                    let fresh = rs.boards[board].phase == Phase::Serving
+                        && (t - rs.boards[board].busy_until).abs() <= 1e-9
+                        && rs.boards[board]
+                            .queue
+                            .front()
+                            .is_some_and(|q| q.req == request);
+                    if !fresh {
+                        continue;
+                    }
                     advance(&mut rs.boards[board], t);
                     let done = {
                         let b = &mut rs.boards[board];
@@ -1509,6 +1829,85 @@ impl FleetCoordinator {
                     }
                     self.decide_due(&mut rs, &due, t)?;
                 }
+                FleetEvent::BoardFail { board } => {
+                    if rs.boards[board].phase == Phase::Failed || rs.boards[board].offline {
+                        // already dead, or drained before the fault
+                        // landed: the event is orphaned
+                        continue;
+                    }
+                    let backlog: Vec<QueuedReq> = {
+                        let b = &mut rs.boards[board];
+                        advance(b, t);
+                        b.fails += 1;
+                        b.phase = Phase::Failed;
+                        b.phase_power_w = 0.0;
+                        b.busy_until = t;
+                        b.decided = None;
+                        b.decision_pending = false;
+                        b.reconfig = ReconfigManager::new();
+                        b.serving_meets = true;
+                        b.obs_traffic_bps = 0.0;
+                        b.obs_host_util = 0.0;
+                        b.obs_p_fpga = 0.0;
+                        b.queue.drain(..).collect()
+                    };
+                    // the in-flight frame dies with the board (partial
+                    // service energy already spent, frame not counted),
+                    // but every request survives: the whole backlog —
+                    // head included — re-routes through the active
+                    // policy, aging from its ORIGINAL arrival time
+                    for q in backlog {
+                        let target = {
+                            let refs: Vec<&Board> = rs.boards.iter().collect();
+                            self.route(&refs, &scenario.schedules, &q.model, t)?
+                        };
+                        match target {
+                            Some(j) => {
+                                rs.boards[board].requeues += 1;
+                                rs.trails[q.req].board = j;
+                                self.enqueue_on(&mut rs, j, q, t)?;
+                            }
+                            None => Self::drop_request(&mut rs, q.req, t),
+                        }
+                    }
+                }
+                FleetEvent::BoardRecover { board } => {
+                    if rs.boards[board].phase != Phase::Failed {
+                        // orphaned repair (overlapping correlated storms
+                        // schedule one repair per hit — the earliest
+                        // repair wins, later ones are no-ops)
+                        continue;
+                    }
+                    {
+                        let b = &mut rs.boards[board];
+                        advance(b, t);
+                        b.phase = Phase::Holding;
+                        b.phase_power_w = b.p_static_w;
+                        b.busy_until = t;
+                        // recovery is COLD: the bitstream is gone, the
+                        // next decision charges a full reconfiguration
+                        b.reconfig = ReconfigManager::new();
+                        b.decided = None;
+                    }
+                    self.kick(&mut rs, board, t)?;
+                }
+                FleetEvent::ThermalDerate { board, level } => {
+                    let b = &mut rs.boards[board];
+                    advance(b, t);
+                    b.derate = f64::from(level) / 1000.0;
+                    b.derate_events += 1;
+                    // the in-flight frame finishes at the rate fixed at
+                    // its serve start; the NEXT serve start derates
+                }
+                FleetEvent::ScaleCheck => {
+                    if rs.remaining > 0 {
+                        self.scale_check(&mut rs, t)?;
+                        if let Some(asc) = &self.config.autoscale {
+                            rs.events
+                                .push(t + asc.check_every_s, FleetEvent::ScaleCheck);
+                        }
+                    }
+                }
                 FleetEvent::Tick => {
                     for b in rs.boards.iter_mut() {
                         advance(b, t);
@@ -1535,7 +1934,7 @@ impl FleetCoordinator {
             .boards
             .into_iter()
             .enumerate()
-            .map(|(i, b)| finish_board(i, b))
+            .map(|(i, b)| finish_board(i, b, span))
             .collect();
         let by_model = rs
             .by_model
@@ -1558,11 +1957,34 @@ impl FleetCoordinator {
             decisions: rs.decisions,
             decision_batches: rs.decision_batches,
             requests_total: scenario.requests.len(),
-            dropped: 0,
+            dropped: rs.dropped,
             span_s: span,
             by_model,
             trails: rs.trails,
         })
+    }
+}
+
+/// "; board N has failed and not recovered" when dead boards exist —
+/// appended to both executors' event-budget errors so a wedged run
+/// names the hardware that wedged it.
+pub(crate) fn failed_note(boards: &[Board]) -> String {
+    let dead: Vec<usize> = boards
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| b.phase == Phase::Failed)
+        .map(|(i, _)| i)
+        .collect();
+    failed_note_for(&dead)
+}
+
+/// [`failed_note`] from pre-collected dead board indices (the sharded
+/// executor's boards live scattered across shard-owned slots).
+pub(crate) fn failed_note_for(dead: &[usize]) -> String {
+    match dead {
+        [] => String::new(),
+        [i] => format!("; board {i} has failed and not recovered"),
+        many => format!("; boards {many:?} have failed and not recovered"),
     }
 }
 

@@ -19,8 +19,8 @@ pub use board::BoardProfile;
 pub use engine::{DecisionEngine, QueueContext, Selector};
 pub use events::{EventQueue, FleetEvent};
 pub use fleet::{
-    FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetScenario, RoutingPolicy, RunMode,
-    SloConfig,
+    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetScenario,
+    RoutingPolicy, RunMode, SloConfig,
 };
 pub use reconfig::{Overhead, ReconfigManager};
 pub use server::{Arrival, Coordinator, CoordRunMode, Event, Report, Scenario, Totals};

@@ -61,16 +61,16 @@ use crate::coordinator::board::{
 };
 use crate::coordinator::events::{EventQueue, FleetEvent};
 use crate::coordinator::fleet::{
-    finish_board, BoardReport, DecisionRequest, FleetConfig, FleetCoordinator, FleetPolicy,
-    FleetReport, FleetRequest, FleetScenario, ModelAcc, ModelLatencyReport, RequestTrail,
-    RoutingPolicy, RunMode,
+    failed_note_for, finish_board, BoardReport, DecisionRequest, FleetConfig, FleetCoordinator,
+    FleetPolicy, FleetReport, FleetRequest, FleetScenario, ModelAcc, ModelLatencyReport,
+    RequestTrail, RoutingPolicy, RunMode,
 };
 use crate::coordinator::reconfig::ReconfigManager;
 use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
 use crate::rl::reward::Outcome;
 use crate::rl::{Baseline, RewardCalculator};
 use crate::telemetry::latency::LatencyHistogram;
-use crate::workload::traffic::state_at;
+use crate::workload::traffic::{state_at, FaultAction};
 use crate::workload::{WorkloadState, XorShift64};
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -267,7 +267,9 @@ fn kick_slot(
     t: f64,
 ) -> Result<()> {
     match slot.board.phase {
-        Phase::Sleeping | Phase::Waking | Phase::Reconfiguring | Phase::Serving => return Ok(()),
+        Phase::Sleeping | Phase::Waking | Phase::Reconfiguring | Phase::Serving | Phase::Failed => {
+            return Ok(())
+        }
         Phase::Idle | Phase::Holding => {}
     }
     if slot.board.queue.is_empty() {
@@ -316,13 +318,17 @@ fn kick_slot(
             state,
         )?;
         let b = &mut slot.board;
+        // thermal derating mirror of the single-queue serve start: clock
+        // ×(1−0.4m) → service ×1/(1−0.4m), power ×(1+m); exact
+        // identities at derate 0 keep fault-free runs bit-identical
+        let p_serve = m.p_fpga * (1.0 + b.derate);
         b.phase = Phase::Serving;
-        b.phase_power_w = m.p_fpga;
+        b.phase_power_w = p_serve;
         b.serving_meets = m.meets_constraint;
-        b.busy_until = t + m.frame_service_s();
+        b.busy_until = t + m.frame_service_s() / (1.0 - 0.4 * b.derate);
         b.obs_traffic_bps = m.dpu_traffic_bps(instances);
         b.obs_host_util = m.host_util_pct(instances);
-        b.obs_p_fpga = m.p_fpga;
+        b.obs_p_fpga = p_serve;
         // Algorithm-1 reward bookkeeping per served frame
         let r = b.rewards.calculate(&Outcome {
             measured_fps: m.fps,
@@ -385,12 +391,26 @@ fn process_event(
             }
         }
         FleetEvent::WakeDone { .. } => {
+            // stale if the board died mid-wake (a fault barrier
+            // interrupted the completion this event announced); never
+            // fires in fault-free runs
+            if slot.board.phase != Phase::Waking
+                || (t - slot.board.busy_until).abs() > 1e-9
+            {
+                return Ok(());
+            }
             advance(&mut slot.board, t);
             slot.board.phase = Phase::Holding;
             slot.board.phase_power_w = slot.board.p_static_w;
             kick_slot(slot, mcache, ecache, ctx, t)?;
         }
         FleetEvent::ReconfigDone { .. } => {
+            // stale if the board died mid-reconfiguration
+            if slot.board.phase != Phase::Reconfiguring
+                || (t - slot.board.busy_until).abs() > 1e-9
+            {
+                return Ok(());
+            }
             advance(&mut slot.board, t);
             let p_idle = slot.board.idle_power_w(ctx.sim);
             slot.board.phase = Phase::Holding;
@@ -398,6 +418,15 @@ fn process_event(
             kick_slot(slot, mcache, ecache, ctx, t)?;
         }
         FleetEvent::FrameDone { request, .. } => {
+            // stale if the board died mid-frame (the in-flight frame
+            // was dropped with the board; its request re-routed or
+            // explicitly counted at the fault barrier)
+            let fresh = slot.board.phase == Phase::Serving
+                && (t - slot.board.busy_until).abs() <= 1e-9
+                && slot.board.queue.front().is_some_and(|q| q.req == request);
+            if !fresh {
+                return Ok(());
+            }
             advance(&mut slot.board, t);
             let done = {
                 let b = &mut slot.board;
@@ -454,6 +483,39 @@ fn process_event(
                 kick_slot(slot, mcache, ecache, ctx, t)?;
             }
         }
+        FleetEvent::BoardRecover { .. } => {
+            if slot.board.phase != Phase::Failed {
+                // orphaned repair (overlapping correlated storms
+                // schedule one repair per hit — the earliest repair
+                // wins, later ones are no-ops)
+                return Ok(());
+            }
+            {
+                let b = &mut slot.board;
+                advance(b, t);
+                b.phase = Phase::Holding;
+                b.phase_power_w = b.p_static_w;
+                b.busy_until = t;
+                // recovery is COLD: the bitstream is gone, the next
+                // decision charges a full reconfiguration
+                b.reconfig = ReconfigManager::new();
+                b.decided = None;
+            }
+            kick_slot(slot, mcache, ecache, ctx, t)?;
+        }
+        FleetEvent::ThermalDerate { level, .. } => {
+            let b = &mut slot.board;
+            advance(b, t);
+            b.derate = f64::from(level) / 1000.0;
+            b.derate_events += 1;
+            // the in-flight frame finishes at the rate fixed at its
+            // serve start; the NEXT serve start derates
+        }
+        FleetEvent::BoardFail { .. } | FleetEvent::ScaleCheck => {
+            unreachable!(
+                "fault/scale barriers resolve on the coordinating thread, never on shard timelines"
+            )
+        }
         FleetEvent::DecisionDue { .. } | FleetEvent::Tick => {
             unreachable!("sharded executor never schedules DecisionDue/Tick events")
         }
@@ -498,13 +560,19 @@ fn drain_slot(
         let ev = slot.queue.pop().expect("peeked event");
         process_event(slot, mcache, ecache, ctx, ev.t_s, ev.event)?;
         if slot.queue.popped() + slot.extra_events > ctx.budget {
+            let note = if slot.board.phase == Phase::Failed {
+                failed_note_for(&[slot.idx])
+            } else {
+                String::new()
+            };
             anyhow::bail!(
                 "fleet event budget exhausted after {} events on one timeline: \
-                 board {} is stuck with queue depth {} at t={:.3}s",
+                 board {} is stuck with queue depth {} at t={:.3}s{}",
                 slot.queue.popped() + slot.extra_events,
                 slot.idx,
                 slot.board.queue.len(),
                 ev.t_s,
+                note,
             );
         }
     }
@@ -649,7 +717,12 @@ impl FleetCoordinator {
             FleetPolicy::Static(b) if *b != Baseline::Random => Some(*b),
             _ => None,
         };
-        let preassigned = self.config.routing == RoutingPolicy::RoundRobin;
+        // round-robin admission is only state-independent while every
+        // board stays routable: faults and the autoscaler both make
+        // membership dynamic, so they force admission epochs
+        let preassigned = self.config.routing == RoutingPolicy::RoundRobin
+            && self.config.faults.is_none()
+            && self.config.autoscale.is_none();
         let budget = self.event_budget_for(scenario, RunMode::EventDriven);
         let total = scenario.requests.len();
 
@@ -682,6 +755,39 @@ impl FleetCoordinator {
             }
         }
 
+        // autoscale: boards beyond min_active start powered off (0 W,
+        // unroutable), exactly as in the single-queue path — ScaleCheck
+        // barriers provision them
+        if let Some(asc) = &self.config.autoscale {
+            for i in asc.min_active.min(n)..n {
+                let (si, pi) = loc[i];
+                let b = &mut shards[si].slots[pi].board;
+                b.offline = true;
+                b.phase = Phase::Sleeping;
+                b.phase_power_w = 0.0;
+            }
+        }
+
+        // the fault timeline splits by coupling: recoveries and derates
+        // are board-local (pre-seeded into the owning slot's queue, like
+        // workload shifts), failures re-route backlog across boards and
+        // so resolve as coordinator barrier epochs in (time, board) order
+        let fault_timeline = match &self.config.faults {
+            Some(fp) => fp.timeline(n, scenario.horizon_s),
+            None => Vec::new(),
+        };
+        let fails: Vec<(f64, usize)> = fault_timeline
+            .iter()
+            .filter(|fe| fe.action == FaultAction::Fail)
+            .map(|fe| (fe.at_s, fe.board))
+            .collect();
+        let mut fail_idx: usize = 0;
+        let mut next_scale = match &self.config.autoscale {
+            Some(asc) => asc.check_every_s,
+            None => f64::INFINITY,
+        };
+        let mut dropped: u64 = 0;
+
         let mut trails: Vec<RequestTrail> = scenario
             .requests
             .iter()
@@ -702,6 +808,25 @@ impl FleetCoordinator {
                     if t0 > 0.0 {
                         slot.queue.push(t0, FleetEvent::WorkloadShift { board: slot.idx });
                     }
+                }
+                for fe in fault_timeline.iter().filter(|fe| fe.board == slot.idx) {
+                    match fe.action {
+                        FaultAction::Fail => {} // barrier epoch, not slot-local
+                        FaultAction::Recover => slot.queue.push(
+                            fe.at_s,
+                            FleetEvent::BoardRecover { board: slot.idx },
+                        ),
+                        FaultAction::Derate { level } => slot.queue.push(
+                            fe.at_s,
+                            FleetEvent::ThermalDerate {
+                                board: slot.idx,
+                                level,
+                            },
+                        ),
+                    }
+                }
+                if slot.board.offline {
+                    continue; // powered off, not napping — no dwell timer
                 }
                 if slot.board.idle_to_sleep_s.is_finite() {
                     slot.queue.push(
@@ -739,7 +864,12 @@ impl FleetCoordinator {
                 f64::INFINITY
             };
             let t_dec = min_pending(&shards);
-            let horizon = t_arr.min(t_dec);
+            let t_fail = if fail_idx < fails.len() {
+                fails[fail_idx].0
+            } else {
+                f64::INFINITY
+            };
+            let horizon = t_arr.min(t_dec).min(t_fail).min(next_scale);
             {
                 let ctx = ShardCtx {
                     sim: &self.sim,
@@ -755,18 +885,26 @@ impl FleetCoordinator {
             let popped: u64 = shards.iter().map(Shard::popped).sum::<u64>() + global_events;
             if popped > budget {
                 let (worst, depth) = worst_queue(&shards);
+                let mut dead: Vec<usize> = shards
+                    .iter()
+                    .flat_map(|sh| sh.slots.iter())
+                    .filter(|s| s.board.phase == Phase::Failed)
+                    .map(|s| s.idx)
+                    .collect();
+                dead.sort_unstable();
                 anyhow::bail!(
                     "fleet event budget exhausted after {} events \
                      (policy {}, routing {}, {} threads): board {} is stuck with \
-                     queue depth {} ({} of {} requests still unserved)",
+                     queue depth {} ({} of {} requests still unserved){}",
                     popped,
                     self.policy.name(),
                     self.config.routing.name(),
                     threads,
                     worst,
                     depth,
-                    total - done_count(&shards),
+                    total.saturating_sub(done_count(&shards) + dropped as usize),
                     total,
+                    failed_note_for(&dead),
                 );
             }
             // drains may surface decisions earlier than the chosen
@@ -780,6 +918,182 @@ impl FleetCoordinator {
                     continue;
                 }
                 break; // quiescent: no arrivals, no pending decisions
+            }
+            if fail_idx < fails.len() && fails[fail_idx].0 <= horizon {
+                // fault barrier epoch: boards die here, ahead of every
+                // same-instant admission/scale/decision (the precedence
+                // the single-queue path gets from fault events seeded
+                // before the first arrival). The dead board's in-flight
+                // frame drops; its whole backlog re-routes through the
+                // live routing policy, aging from ORIGINAL arrival.
+                let t = horizon;
+                while fail_idx < fails.len() && fails[fail_idx].0 <= t {
+                    let board = fails[fail_idx].1;
+                    fail_idx += 1;
+                    global_events += 1;
+                    let (si, pi) = loc[board];
+                    let backlog: Vec<QueuedReq> = {
+                        let slot = &mut shards[si].slots[pi];
+                        if slot.board.phase == Phase::Failed || slot.board.offline {
+                            // already dead, or drained before the fault
+                            // landed: the event is orphaned
+                            continue;
+                        }
+                        slot.pending_t = None;
+                        let b = &mut slot.board;
+                        advance(b, t);
+                        b.fails += 1;
+                        b.phase = Phase::Failed;
+                        b.phase_power_w = 0.0;
+                        b.busy_until = t;
+                        b.decided = None;
+                        b.decision_pending = false;
+                        b.reconfig = ReconfigManager::new();
+                        b.serving_meets = true;
+                        b.obs_traffic_bps = 0.0;
+                        b.obs_host_util = 0.0;
+                        b.obs_p_fpga = 0.0;
+                        b.queue.drain(..).collect()
+                    };
+                    for q in backlog {
+                        let target = {
+                            let refs: Vec<&Board> = (0..n)
+                                .map(|i| {
+                                    let (si, pi) = loc[i];
+                                    &shards[si].slots[pi].board
+                                })
+                                .collect();
+                            self.route(&refs, &scenario.schedules, &q.model, t)?
+                        };
+                        match target {
+                            Some(j) => {
+                                shards[si].slots[pi].board.requeues += 1;
+                                trails[q.req].board = j;
+                                let ctx = ShardCtx {
+                                    sim: &self.sim,
+                                    config: &self.config,
+                                    schedules: &scenario.schedules,
+                                    requests: &scenario.requests,
+                                    local,
+                                    budget,
+                                    base,
+                                };
+                                let (sj, pj) = loc[j];
+                                let Shard {
+                                    slots,
+                                    metrics_cache,
+                                    est_cache,
+                                } = &mut shards[sj];
+                                let slot = &mut slots[pj];
+                                advance(&mut slot.board, t);
+                                slot.board.queue.push_back(q);
+                                if slot.board.phase == Phase::Sleeping {
+                                    wake_board(slot, t);
+                                } else {
+                                    kick_slot(slot, metrics_cache, est_cache, &ctx, t)?;
+                                }
+                            }
+                            // every provisioned board is dead: refused,
+                            // loudly accounted
+                            None => dropped += 1,
+                        }
+                    }
+                }
+                continue;
+            }
+            if next_scale <= horizon {
+                // autoscaler barrier epoch: measure fleet-wide pressure
+                // against globally consistent state, change at most one
+                // board, re-arm while requests remain outstanding
+                let t = horizon;
+                global_events += 1;
+                if done_count(&shards) + dropped as usize >= total {
+                    next_scale = f64::INFINITY;
+                    continue;
+                }
+                let asc = self
+                    .config
+                    .autoscale
+                    .clone()
+                    .expect("scale barrier implies autoscale config");
+                next_scale = t + asc.check_every_s;
+                let active: Vec<usize> = (0..n)
+                    .filter(|&i| {
+                        let (si, pi) = loc[i];
+                        let b = &shards[si].slots[pi].board;
+                        !b.offline && b.phase != Phase::Failed
+                    })
+                    .collect();
+                let mut per = 0.0;
+                if !active.is_empty() {
+                    let mut sum = 0.0;
+                    for &i in &active {
+                        let state = state_at(&scenario.schedules[i], t);
+                        let (si, pi) = loc[i];
+                        sum += {
+                            let b = &shards[si].slots[pi].board;
+                            self.board_backlog_s(b, state, t)?
+                        };
+                    }
+                    per = sum / active.len() as f64;
+                }
+                let p_static = |shards: &[Shard], j: usize| {
+                    let (si, pi) = loc[j];
+                    shards[si].slots[pi].board.p_static_w
+                };
+                if active.is_empty() || per > asc.pressure_s {
+                    // cold-provision the cheapest offline board (lowest
+                    // static power, ties to the lowest index)
+                    let pick = (0..n)
+                        .filter(|&j| {
+                            let (si, pi) = loc[j];
+                            shards[si].slots[pi].board.offline
+                        })
+                        .min_by(|&a, &b| {
+                            p_static(&shards, a)
+                                .partial_cmp(&p_static(&shards, b))
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                                .then(a.cmp(&b))
+                        });
+                    if let Some(j) = pick {
+                        let (si, pi) = loc[j];
+                        let slot = &mut shards[si].slots[pi];
+                        advance(&mut slot.board, t);
+                        slot.board.offline = false;
+                        wake_board(slot, t);
+                    }
+                } else if per < asc.drain_below_s && active.len() > asc.min_active {
+                    // drain the most expensive empty idle/sleeping board
+                    // (highest static power; exact ties resolve to the
+                    // highest index — provision low, drain high)
+                    let pick = active
+                        .iter()
+                        .copied()
+                        .filter(|&j| {
+                            let (si, pi) = loc[j];
+                            let b = &shards[si].slots[pi].board;
+                            b.queue.is_empty()
+                                && matches!(b.phase, Phase::Idle | Phase::Sleeping)
+                        })
+                        .max_by(|&a, &b| {
+                            p_static(&shards, a)
+                                .partial_cmp(&p_static(&shards, b))
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                                .then(a.cmp(&b))
+                        });
+                    if let Some(j) = pick {
+                        let (si, pi) = loc[j];
+                        let b = &mut shards[si].slots[pi].board;
+                        advance(b, t);
+                        b.offline = true;
+                        b.phase = Phase::Sleeping;
+                        b.phase_power_w = 0.0;
+                        b.reconfig = ReconfigManager::new();
+                        b.decided = None;
+                        b.idle_epoch += 1;
+                    }
+                }
+                continue;
             }
             if arr_idx < total && scenario.requests[arr_idx].at_s <= horizon {
                 // admission epoch: route every arrival at this instant
@@ -796,6 +1110,17 @@ impl FleetCoordinator {
                             })
                             .collect();
                         self.route(&refs, &scenario.schedules, &model, t)?
+                    };
+                    let target = match target {
+                        Some(j) => j,
+                        None => {
+                            // every provisioned board is dead: the
+                            // request is refused, loudly accounted
+                            dropped += 1;
+                            global_events += 1;
+                            arr_idx += 1;
+                            continue;
+                        }
                     };
                     trails[arr_idx].board = target;
                     let ctx = ShardCtx {
@@ -927,18 +1252,26 @@ impl FleetCoordinator {
         }
 
         let done = done_count(&shards);
-        if done < total {
+        if done + dropped as usize < total {
             let (worst, depth) = worst_queue(&shards);
+            let mut dead: Vec<usize> = shards
+                .iter()
+                .flat_map(|sh| sh.slots.iter())
+                .filter(|s| s.board.phase == Phase::Failed)
+                .map(|s| s.idx)
+                .collect();
+            dead.sort_unstable();
             anyhow::bail!(
                 "fleet stalled with {} of {} requests unserved \
-                 (policy {}, routing {}, {} threads): board {} is stuck with queue depth {}",
-                total - done,
+                 (policy {}, routing {}, {} threads): board {} is stuck with queue depth {}{}",
+                total - done - dropped as usize,
                 total,
                 self.policy.name(),
                 self.config.routing.name(),
                 threads,
                 worst,
                 depth,
+                failed_note_for(&dead),
             );
         }
 
@@ -992,7 +1325,10 @@ impl FleetCoordinator {
                 decisions += slot.decisions;
                 batches += slot.batches;
                 for &(req, t0) in &slot.starts {
-                    if trails[req].start_s < 0.0 {
+                    // earliest serve start wins — a re-routed request may
+                    // carry starts on two boards, and slot iteration
+                    // order is partition-dependent, so take the min
+                    if trails[req].start_s < 0.0 || t0 < trails[req].start_s {
                         trails[req].start_s = t0;
                     }
                 }
@@ -1023,7 +1359,7 @@ impl FleetCoordinator {
         boards_raw.sort_by_key(|(i, _)| *i);
         let boards_out: Vec<BoardReport> = boards_raw
             .into_iter()
-            .map(|(i, b)| finish_board(i, b))
+            .map(|(i, b)| finish_board(i, b, end))
             .collect();
         let by_model_out: Vec<ModelLatencyReport> = by_model
             .into_iter()
@@ -1045,7 +1381,7 @@ impl FleetCoordinator {
             decisions,
             decision_batches: batches,
             requests_total: total,
-            dropped: 0,
+            dropped,
             span_s: end,
             by_model: by_model_out,
             trails,

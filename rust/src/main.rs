@@ -13,6 +13,7 @@
 //! dpuconfig fleet   [--boards 4] [--routing energy_aware] [--pattern diurnal]
 //!                   [--rate 20] [--slo-ms 250] [--slo ResNet152=120]
 //!                   [--profiles B512,B1024,B4096,B4096]   # heterogeneous fleet
+//!                   [--faults independent|correlated|thermal] [--autoscale]
 //!                   [--threads N] [--fingerprint] [--fine-tick] [--assert-served]
 //! dpuconfig fleet-bench [--full] [--out BENCH_fleet.json] [--check-against BENCH_fleet.json]
 //! dpuconfig adapt   [--kind calibration] [--seed 7]  # online adaptation
@@ -181,6 +182,8 @@ fn run() -> Result<()> {
                 policy: args.opt_or("policy", "optimal").to_string(),
                 slo_ms: args.opt_f64("slo-ms", 250.0)?,
                 slo_overrides: args.opt_pairs("slo")?,
+                faults: args.opt("faults").map(str::to_string),
+                autoscale: args.flag("autoscale"),
                 threads: args.opt_usize("threads", default_threads())?,
                 fingerprint: args.flag("fingerprint"),
                 fine_tick: args.flag("fine-tick"),
@@ -363,6 +366,11 @@ struct FleetDemoOpts {
     policy: String,
     slo_ms: f64,
     slo_overrides: Vec<(String, f64)>,
+    /// Fault-injection kind (independent|correlated|thermal), if any.
+    faults: Option<String>,
+    /// Elastic capacity: boards beyond the autoscaler's floor start
+    /// powered off and provision on sustained SLO pressure.
+    autoscale: bool,
     threads: usize,
     fingerprint: bool,
     fine_tick: bool,
@@ -371,9 +379,10 @@ struct FleetDemoOpts {
 
 fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
     use dpuconfig::coordinator::{
-        BoardProfile, FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RunMode,
-        SloConfig,
+        AutoscaleConfig, BoardProfile, FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario,
+        RunMode, SloConfig,
     };
+    use dpuconfig::workload::traffic::FaultProfile;
     let fleet_policy = match o.policy.as_str() {
         "dpuconfig" | "agent" => {
             // batched artifact: one forward pass covers up to 8 boards
@@ -395,6 +404,14 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
             .map(|c| BoardProfile::of_class(c, &sizes))
             .collect::<Result<_>>()?
     };
+    let faults = match &o.faults {
+        Some(kind) => Some(FaultProfile::named(kind, o.seed)?),
+        None => None,
+    };
+    anyhow::ensure!(
+        !(o.fine_tick && (faults.is_some() || o.autoscale)),
+        "--fine-tick is the pre-fault reference mode; drop --faults/--autoscale"
+    );
     let cfg = FleetConfig {
         boards: o.boards,
         routing: o.routing,
@@ -404,6 +421,8 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
             per_model: o.slo_overrides.clone(),
         },
         profiles,
+        faults,
+        autoscale: o.autoscale.then(AutoscaleConfig::default),
         ..FleetConfig::default()
     };
     let scenario = FleetScenario::generate(
@@ -415,7 +434,7 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         o.seed,
     )?;
     println!(
-        "fleet: {} boards{}, {} requests ({}), routing {}, horizon {}s, SLO {} ms, {} thread(s)",
+        "fleet: {} boards{}, {} requests ({}), routing {}, horizon {}s, SLO {} ms, {} thread(s){}{}",
         o.boards,
         if o.profile_classes.is_empty() {
             String::new()
@@ -428,6 +447,11 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         o.horizon,
         o.slo_ms,
         if o.fine_tick { 1 } else { o.threads },
+        match &o.faults {
+            Some(kind) => format!(", faults {kind}"),
+            None => String::new(),
+        },
+        if o.autoscale { ", autoscale" } else { "" },
     );
     let mut fleet = FleetCoordinator::new(cfg, fleet_policy)?;
     let report = if o.fine_tick {
@@ -443,15 +467,20 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         println!("fingerprint {}", report.fingerprint());
     }
     if o.assert_served {
-        // CI smoke contract: the stream drains, nothing is dropped, and
+        // CI smoke contract: conservation — every request is served or
+        // explicitly counted dropped (drops only exist under fault
+        // injection, when the whole provisioned fleet can be dead), and
         // latency accounting produced a real tail
         anyhow::ensure!(
-            report.requests_done() as usize == report.requests_total,
-            "fleet left {} of {} requests unserved",
-            report.requests_total - report.requests_done() as usize,
+            report.requests_done() as usize + report.dropped as usize == report.requests_total,
+            "fleet conservation broken: {} served + {} dropped != {} total",
+            report.requests_done(),
+            report.dropped,
             report.requests_total
         );
-        anyhow::ensure!(report.dropped == 0, "fleet dropped {} requests", report.dropped);
+        if o.faults.is_none() {
+            anyhow::ensure!(report.dropped == 0, "fleet dropped {} requests", report.dropped);
+        }
         anyhow::ensure!(
             report.latency().p99_ms() > 0.0,
             "p99 latency is zero — no requests were measured"

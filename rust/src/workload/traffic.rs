@@ -350,6 +350,259 @@ impl DriftProfile {
     }
 }
 
+/// Family of runtime hardware faults injected into a fleet run
+/// (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Each board fails on its own exponential clock (MTBF) and repairs
+    /// on an exponential repair clock (MTTR).
+    Independent,
+    /// Fleet-wide failure storms: storm onsets follow one exponential
+    /// clock and every board joins a given storm with probability
+    /// [`FaultProfile::storm_hit`] — rack-level correlated death.
+    Correlated,
+    /// No outright death: per-board thermal-derate ramps (the PR 2
+    /// [`DriftKind::Thermal`] machinery, quantized into step events).
+    Thermal,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Independent => "independent",
+            FaultKind::Correlated => "correlated",
+            FaultKind::Thermal => "thermal",
+        }
+    }
+}
+
+impl std::str::FromStr for FaultKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "independent" | "ind" => Ok(FaultKind::Independent),
+            "correlated" | "corr" => Ok(FaultKind::Correlated),
+            "thermal" => Ok(FaultKind::Thermal),
+            other => anyhow::bail!(
+                "unknown fault kind {other:?} (want independent|correlated|thermal)"
+            ),
+        }
+    }
+}
+
+/// What happens to one board at one instant on the fault timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The board dies: in-flight frame dropped, backlog re-routed.
+    Fail,
+    /// Repair completes: the board returns cold (full reconfiguration).
+    Recover,
+    /// Thermal severity steps to `level`/1000 of the full derating
+    /// corner (integer per-mille so the event stays `Copy + Eq`).
+    Derate { level: u16 },
+}
+
+/// One entry of a precomputed fault timeline, sorted by `(at_s, board)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    pub board: usize,
+    pub action: FaultAction,
+}
+
+/// Seeded generator of per-board fault timelines. The whole timeline is
+/// precomputed before a run starts, so every executor (single-queue,
+/// sharded at any thread count) replays byte-identical fault schedules —
+/// the determinism contract extends over faults unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultProfile {
+    pub kind: FaultKind,
+    pub seed: u64,
+    /// Mean time between failures (per board for independent faults,
+    /// per storm for correlated ones), seconds.
+    pub mtbf_s: f64,
+    /// Mean time to repair, seconds. `f64::INFINITY` = permanent death.
+    pub mttr_s: f64,
+    /// Correlated only: probability a board joins a given storm.
+    pub storm_hit: f64,
+    /// Thermal only: terminal severity (1.0 = the full derating corner
+    /// of [`DriftKind::Thermal`]).
+    pub magnitude: f64,
+    /// Thermal only: ramp length from onset to full severity, seconds.
+    pub ramp_s: f64,
+}
+
+/// Steps each thermal ramp is quantized into (one Derate event per step).
+const DERATE_STEPS: usize = 8;
+
+impl FaultProfile {
+    /// Independent per-board failures with moderate repair times.
+    pub fn independent(seed: u64) -> FaultProfile {
+        FaultProfile {
+            kind: FaultKind::Independent,
+            seed,
+            mtbf_s: 40.0,
+            mttr_s: 8.0,
+            storm_hit: 0.0,
+            magnitude: 0.0,
+            ramp_s: 0.0,
+        }
+    }
+
+    /// Fleet-wide correlated failure storms.
+    pub fn correlated(seed: u64) -> FaultProfile {
+        FaultProfile {
+            kind: FaultKind::Correlated,
+            seed,
+            mtbf_s: 30.0,
+            mttr_s: 6.0,
+            storm_hit: 0.6,
+            magnitude: 0.0,
+            ramp_s: 0.0,
+        }
+    }
+
+    /// Per-board thermal-derate ramps (no outright death).
+    pub fn thermal(seed: u64) -> FaultProfile {
+        FaultProfile {
+            kind: FaultKind::Thermal,
+            seed,
+            mtbf_s: 25.0,
+            mttr_s: f64::INFINITY,
+            storm_hit: 0.0,
+            magnitude: 0.8,
+            ramp_s: 15.0,
+        }
+    }
+
+    /// The default profile of a named kind (the `fleet --faults <kind>`
+    /// CLI entry point).
+    pub fn named(kind: &str, seed: u64) -> anyhow::Result<FaultProfile> {
+        Ok(match kind.parse::<FaultKind>()? {
+            FaultKind::Independent => FaultProfile::independent(seed),
+            FaultKind::Correlated => FaultProfile::correlated(seed),
+            FaultKind::Thermal => FaultProfile::thermal(seed),
+        })
+    }
+
+    /// The full fault timeline for a `boards`-board fleet over
+    /// `[0, horizon_s)`, sorted by `(time, board)`. Deterministic in
+    /// `self.seed`; recovery events may spill past the horizon and are
+    /// clipped (the board stays down to the end of the accounted span).
+    pub fn timeline(&self, boards: usize, horizon_s: f64) -> Vec<FaultEvent> {
+        assert!(boards > 0 && horizon_s > 0.0);
+        let exp = |rng: &mut XorShift64, mean: f64| -> f64 {
+            if mean.is_finite() {
+                -rng.next_f64().max(1e-12).ln() * mean
+            } else {
+                f64::INFINITY
+            }
+        };
+        let mut out: Vec<FaultEvent> = Vec::new();
+        match self.kind {
+            FaultKind::Independent => {
+                for b in 0..boards {
+                    let mut rng = XorShift64::new(
+                        self.seed
+                            .wrapping_mul(0xFA_17_5EED)
+                            .wrapping_add(b as u64 + 1),
+                    );
+                    let mut t = 0.0f64;
+                    loop {
+                        t += exp(&mut rng, self.mtbf_s).max(1e-3);
+                        if t >= horizon_s {
+                            break;
+                        }
+                        out.push(FaultEvent {
+                            at_s: t,
+                            board: b,
+                            action: FaultAction::Fail,
+                        });
+                        let down = exp(&mut rng, self.mttr_s).max(1e-3);
+                        t += down;
+                        if !t.is_finite() || t >= horizon_s {
+                            break; // permanent (or past-horizon) death
+                        }
+                        out.push(FaultEvent {
+                            at_s: t,
+                            board: b,
+                            action: FaultAction::Recover,
+                        });
+                    }
+                }
+            }
+            FaultKind::Correlated => {
+                let mut rng = XorShift64::new(self.seed ^ 0x5708_3141);
+                let mut t = 0.0f64;
+                loop {
+                    t += exp(&mut rng, self.mtbf_s).max(1e-3);
+                    if t >= horizon_s {
+                        break;
+                    }
+                    for b in 0..boards {
+                        if rng.next_f64() < self.storm_hit {
+                            out.push(FaultEvent {
+                                at_s: t,
+                                board: b,
+                                action: FaultAction::Fail,
+                            });
+                            let up = t + exp(&mut rng, self.mttr_s).max(1e-3);
+                            if up.is_finite() && up < horizon_s {
+                                out.push(FaultEvent {
+                                    at_s: up,
+                                    board: b,
+                                    action: FaultAction::Recover,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            FaultKind::Thermal => {
+                for b in 0..boards {
+                    let mut rng = XorShift64::new(
+                        self.seed
+                            .wrapping_mul(0xD5_2A7E)
+                            .wrapping_add(b as u64 + 1),
+                    );
+                    let onset = exp(&mut rng, self.mtbf_s).max(1e-3);
+                    if onset >= horizon_s {
+                        continue;
+                    }
+                    // quantize the PR 2 thermal drift ramp into step events
+                    let drift = DriftProfile {
+                        kind: DriftKind::Thermal,
+                        at_s: onset,
+                        ramp_s: self.ramp_s,
+                        magnitude: self.magnitude,
+                    };
+                    for k in 1..=DERATE_STEPS {
+                        let ts =
+                            onset + self.ramp_s.max(0.0) * k as f64 / DERATE_STEPS as f64;
+                        if ts >= horizon_s {
+                            break;
+                        }
+                        let m = drift.magnitude * drift.severity(ts + 1e-12);
+                        let level = (m * 1000.0).round().clamp(0.0, 1000.0) as u16;
+                        out.push(FaultEvent {
+                            at_s: ts,
+                            board: b,
+                            action: FaultAction::Derate { level },
+                        });
+                    }
+                }
+            }
+        }
+        out.sort_by(|a, b| {
+            a.at_s
+                .partial_cmp(&b.at_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.board.cmp(&b.board))
+        });
+        out
+    }
+}
+
 /// Workload state active at time `t` in a step-function schedule
 /// (same contract as `coordinator::server::Scenario::state_at`).
 pub fn state_at(schedule: &[(f64, WorkloadState)], t: f64) -> WorkloadState {
@@ -564,6 +817,96 @@ mod tests {
         assert!(cal["f_clk_hz"] < 3e8);
         assert!(cal["p_pl_static"] > 1.5);
         assert!(cal["e_mac_j_per_gmac"] > 0.01);
+    }
+
+    #[test]
+    fn fault_timeline_is_deterministic_sorted_and_sane() {
+        for mk in [
+            FaultProfile::independent as fn(u64) -> FaultProfile,
+            FaultProfile::correlated,
+            FaultProfile::thermal,
+        ] {
+            let p = mk(7);
+            let a = p.timeline(4, 120.0);
+            let b = p.timeline(4, 120.0);
+            assert_eq!(a, b, "{:?} must be deterministic", p.kind);
+            assert!(
+                a.windows(2).all(|w| w[0].at_s <= w[1].at_s),
+                "{:?} sorted",
+                p.kind
+            );
+            assert!(a.iter().all(|e| e.board < 4 && e.at_s > 0.0 && e.at_s < 120.0));
+            let c = mk(8).timeline(4, 120.0);
+            assert!(a != c, "{:?}: seed must matter", p.kind);
+        }
+    }
+
+    #[test]
+    fn fault_timeline_alternates_fail_recover_per_board() {
+        let p = FaultProfile::independent(3);
+        let tl = p.timeline(3, 500.0);
+        assert!(!tl.is_empty(), "500 s at MTBF 40 must fail sometimes");
+        for b in 0..3 {
+            let mut up = true;
+            for e in tl.iter().filter(|e| e.board == b) {
+                match e.action {
+                    FaultAction::Fail => {
+                        assert!(up, "board {b}: double Fail");
+                        up = false;
+                    }
+                    FaultAction::Recover => {
+                        assert!(!up, "board {b}: Recover while up");
+                        up = true;
+                    }
+                    FaultAction::Derate { .. } => panic!("independent kind derates"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_mttr_means_permanent_death() {
+        let p = FaultProfile {
+            mttr_s: f64::INFINITY,
+            ..FaultProfile::independent(5)
+        };
+        let tl = p.timeline(4, 1000.0);
+        assert!(!tl.is_empty());
+        assert!(tl.iter().all(|e| e.action == FaultAction::Fail));
+        // at most one Fail per board: a dead board cannot die again
+        for b in 0..4 {
+            assert!(tl.iter().filter(|e| e.board == b).count() <= 1);
+        }
+    }
+
+    #[test]
+    fn thermal_timeline_levels_ramp_monotonically() {
+        let p = FaultProfile::thermal(11);
+        let tl = p.timeline(4, 400.0);
+        assert!(!tl.is_empty());
+        for b in 0..4 {
+            let mut last = 0u16;
+            for e in tl.iter().filter(|e| e.board == b) {
+                match e.action {
+                    FaultAction::Derate { level } => {
+                        assert!(level >= last, "board {b}: ramp must not cool");
+                        assert!(level <= 1000);
+                        last = level;
+                    }
+                    _ => panic!("thermal kind must only derate"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fault_kind_round_trips_and_rejects_junk() {
+        for k in [FaultKind::Independent, FaultKind::Correlated, FaultKind::Thermal] {
+            assert_eq!(k.name().parse::<FaultKind>().unwrap(), k);
+        }
+        assert_eq!("corr".parse::<FaultKind>().unwrap(), FaultKind::Correlated);
+        let err = "meteor".parse::<FaultKind>().unwrap_err().to_string();
+        assert!(err.contains("meteor") && err.contains("independent"), "{err}");
     }
 
     #[test]

@@ -1,12 +1,36 @@
-//! Failure-injection tests: the system must fail loudly and precisely,
-//! never with a panic or a silent zero.
+//! Failure-injection tests, in both senses of the word.
+//!
+//! Load-time failures: the system must fail loudly and precisely, never
+//! with a panic or a silent zero (missing artifacts, malformed HLO,
+//! truncated calibration, junk CSV).
+//!
+//! Runtime failures (DESIGN.md §13): seeded board deaths, correlated
+//! failure storms and the SLO-pressure autoscaler on the fleet event
+//! core. The contracts under test: no request is ever lost silently
+//! (arrivals == served + explicitly dropped, per model), SLO-aware
+//! routing beats round-robin on p99 through a storm, the autoscaler
+//! provisions under a flash crowd and drains on the trough, fault runs
+//! keep the cross-thread-count fingerprint contract for every
+//! RoutingPolicy x baseline combo, and event-budget exhaustion names
+//! the dead board.
 
+use dpuconfig::coordinator::fleet::{
+    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetRequest,
+    FleetScenario, RoutingPolicy,
+};
 use dpuconfig::csvutil::Table;
+use dpuconfig::data::load_models;
 use dpuconfig::dpusim::DpuSim;
 use dpuconfig::models::ModelVariant;
+use dpuconfig::rl::Baseline;
 use dpuconfig::runtime::PolicyRuntime;
+use dpuconfig::workload::traffic::{ArrivalPattern, FaultProfile};
 use dpuconfig::workload::WorkloadState;
 use std::collections::HashMap;
+
+// ---------------------------------------------------------------------
+// Load-time failures
+// ---------------------------------------------------------------------
 
 #[test]
 fn missing_artifact_names_the_fix() {
@@ -45,8 +69,8 @@ fn csv_failures_are_descriptive() {
     let t = Table::parse("a,b\n1,2\n").unwrap();
     let err = t.col("zzz").unwrap_err().to_string();
     assert!(err.contains("zzz"));
-    let err = t.get_f64(&t.rows[0], "a").is_ok();
-    assert!(err);
+    let a = t.get_f64(&t.rows[0], "a").expect("numeric cell must parse");
+    assert_eq!(a, 1.0);
     let bad = Table::parse("a\nxyz\n").unwrap();
     assert!(bad.get_f64(&bad.rows[0], "a").is_err());
 }
@@ -73,4 +97,366 @@ fn evaluate_rejects_unknown_model_gracefully() {
 fn workload_parse_rejects_junk() {
     assert!("Q".parse::<WorkloadState>().is_err());
     assert!("".parse::<WorkloadState>().is_err());
+}
+
+// ---------------------------------------------------------------------
+// Runtime failures: fault-injected fleets (DESIGN.md §13)
+// ---------------------------------------------------------------------
+
+fn variant(name: &str) -> ModelVariant {
+    ModelVariant::new(
+        load_models()
+            .unwrap()
+            .into_iter()
+            .find(|m| m.name == name)
+            .unwrap(),
+        0.0,
+    )
+}
+
+fn req(name: &str, at: f64) -> FleetRequest {
+    FleetRequest {
+        model: variant(name),
+        at_s: at,
+    }
+}
+
+fn fleet(cfg: FleetConfig, baseline: Baseline) -> FleetCoordinator {
+    FleetCoordinator::new(cfg, FleetPolicy::Static(baseline)).unwrap()
+}
+
+/// Fleet-level and per-model request conservation: every arrival is
+/// served or explicitly dropped, with trails and the per-model report
+/// telling the same story.
+fn assert_conserved(r: &FleetReport, scenario: &FleetScenario) {
+    assert_eq!(
+        r.requests_done() + r.dropped,
+        r.requests_total as u64,
+        "conservation broken: {} served + {} dropped != {} arrivals",
+        r.requests_done(),
+        r.dropped,
+        r.requests_total
+    );
+    let served = r.trails.iter().filter(|t| t.done_s >= 0.0).count() as u64;
+    let lost = r.trails.iter().filter(|t| t.done_s < 0.0).count() as u64;
+    assert_eq!(served, r.requests_done(), "trails disagree with board counters");
+    assert_eq!(lost, r.dropped, "unfinished trails must all be explicit drops");
+
+    // per model: arrivals == served + dropped, and the latency report
+    // counts exactly the served ones
+    let mut arrivals: HashMap<String, u64> = HashMap::new();
+    let mut served_m: HashMap<String, u64> = HashMap::new();
+    for (i, q) in scenario.requests.iter().enumerate() {
+        *arrivals.entry(q.model.name()).or_default() += 1;
+        if r.trails[i].done_s >= 0.0 {
+            *served_m.entry(q.model.name()).or_default() += 1;
+        }
+    }
+    for (model, &n) in &arrivals {
+        let s = served_m.get(model).copied().unwrap_or(0);
+        let reported = r.model_latency(model).map(|m| m.done).unwrap_or(0);
+        assert_eq!(reported, s, "{model}: report says {reported} done, trails say {s}");
+        assert!(s <= n, "{model}: served {s} of {n} arrivals");
+    }
+
+    // served trails stay physically consistent even after a re-route
+    for (i, t) in r.trails.iter().enumerate() {
+        if t.done_s >= 0.0 {
+            assert!(t.board < r.boards.len(), "request {i} on unknown board");
+            assert!(t.start_s >= t.at_s - 1e-9, "request {i} started before arrival");
+            assert!(t.done_s > t.start_s, "request {i} done before start");
+        }
+    }
+}
+
+/// A board dying mid-frame drops nothing silently: the in-flight frame
+/// is the board's loss, but the *request* backlog re-routes and every
+/// arrival is accounted served or explicitly dropped — per model.
+#[test]
+fn board_death_mid_frame_loses_no_request() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 4, 30.0, 12.0, 0.5, 7).unwrap();
+    let cfg = FleetConfig {
+        boards: 4,
+        routing: RoutingPolicy::SloAware,
+        seed: 7,
+        // mtbf 6 s over a 30 s horizon: every board fails w.p. ~99% —
+        // the test cannot pass vacuously
+        faults: Some(FaultProfile {
+            mtbf_s: 6.0,
+            mttr_s: 4.0,
+            ..FaultProfile::independent(7)
+        }),
+        ..FleetConfig::default()
+    };
+    let r = fleet(cfg, Baseline::Optimal).run(&scenario).unwrap();
+
+    let fails: u64 = r.boards.iter().map(|b| b.fails).sum();
+    assert!(fails >= 1, "fault profile must actually kill a board");
+    let downtime: f64 = r.boards.iter().map(|b| b.downtime_s).sum();
+    assert!(downtime > 0.0, "a death must accrue downtime");
+    assert!(
+        r.fleet_availability() < 1.0,
+        "availability must reflect the downtime"
+    );
+
+    assert_conserved(&r, &scenario);
+}
+
+/// Under a correlated failure storm the SLO-aware router beats
+/// round-robin on p99: round-robin blindly cycles requests onto
+/// just-recovered cold boards (wake + full reconfiguration in the
+/// request's critical path) and spreads re-routed backlog evenly, while
+/// the SLO-aware router sends work where the predicted completion wait
+/// actually is lowest. The fault timeline is routing-independent, so
+/// both runs face byte-identical storms.
+#[test]
+fn slo_aware_beats_round_robin_p99_under_correlated_storm() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 4, 40.0, 15.0, 0.7, 9).unwrap();
+    // dense storms (mtbf 6 s, 90% hit rate) so deaths are certain and
+    // the routing policies have something to disagree about
+    let storm = FaultProfile {
+        mtbf_s: 6.0,
+        storm_hit: 0.9,
+        ..FaultProfile::correlated(9)
+    };
+    let run = |routing: RoutingPolicy| {
+        let cfg = FleetConfig {
+            boards: 4,
+            routing,
+            seed: 9,
+            faults: Some(storm.clone()),
+            ..FleetConfig::default()
+        };
+        fleet(cfg, Baseline::Optimal).run(&scenario).unwrap()
+    };
+    let slo = run(RoutingPolicy::SloAware);
+    let rr = run(RoutingPolicy::RoundRobin);
+
+    let deaths = |r: &FleetReport| r.boards.iter().map(|b| b.fails).sum::<u64>();
+    assert!(deaths(&slo) >= 1, "storm must kill at least one board");
+    assert_eq!(
+        deaths(&slo),
+        deaths(&rr),
+        "the fault timeline must not depend on routing"
+    );
+    assert_conserved(&slo, &scenario);
+    assert_conserved(&rr, &scenario);
+
+    let slo_p99 = slo.latency().p99_ms();
+    let rr_p99 = rr.latency().p99_ms();
+    assert!(slo_p99 > 0.0);
+    assert!(
+        slo_p99 < rr_p99,
+        "SLO-aware p99 {slo_p99:.1} ms must beat round-robin {rr_p99:.1} ms through the storm"
+    );
+}
+
+/// Flash crowd + diurnal trough for the autoscaler tests: a dense
+/// request wave in [0, 10) s far beyond one board's capacity, then a
+/// 1 rps trickle to the 60 s horizon (so ScaleCheck keeps beating and
+/// the drain side of the policy is actually exercised).
+fn flash_crowd(boards: usize) -> FleetScenario {
+    let crowd = FleetScenario::generate(ArrivalPattern::Steady, 4, 10.0, 200.0, 0.0, 21).unwrap();
+    let mut requests = crowd.requests;
+    let mut t = 11.0;
+    while t < 58.0 {
+        requests.push(req("MobileNetV2", t));
+        t += 1.0;
+    }
+    FleetScenario {
+        requests,
+        schedules: vec![vec![(0.0, WorkloadState::None)]; boards],
+        horizon_s: 60.0,
+    }
+}
+
+/// The autoscaler provisions offline boards under the flash crowd
+/// (strictly fewer SLO violations than the fixed fleet it started as)
+/// and drains them on the trough (drained boards park in the 0 W
+/// offline state instead of burning idle watts to the horizon).
+#[test]
+fn autoscaler_provisions_under_flash_crowd_and_drains_on_trough() {
+    // sleep disabled: any sleep seconds on boards 1..4 can only come
+    // from the autoscaler's offline parking, which makes the drain
+    // observable in the report
+    let auto_cfg = FleetConfig {
+        boards: 4,
+        routing: RoutingPolicy::SloAware,
+        idle_to_sleep_s: f64::INFINITY,
+        seed: 21,
+        autoscale: Some(AutoscaleConfig::default()),
+        ..FleetConfig::default()
+    };
+    let auto = fleet(auto_cfg, Baseline::Optimal)
+        .run(&flash_crowd(4))
+        .unwrap();
+    assert_conserved(&auto, &flash_crowd(4));
+    assert_eq!(auto.dropped, 0, "no faults: nothing may drop");
+
+    // provision side: the crowd forced capacity beyond min_active
+    let extra_served: u64 = auto.boards[1..].iter().map(|b| b.requests_done).sum();
+    assert!(
+        extra_served > 0,
+        "flash crowd must force the autoscaler to provision beyond min_active"
+    );
+
+    // drain side: some provisioned board was parked again on the trough
+    // (served requests AND spent a substantial slice of the horizon in
+    // the 0 W offline state — impossible with sleep disabled unless the
+    // autoscaler drained it)
+    assert!(
+        auto.boards[1..]
+            .iter()
+            .any(|b| b.requests_done > 0 && b.energy.sleep_s > 20.0),
+        "no provisioned board was drained back to offline on the trough"
+    );
+
+    // versus the fixed fleet the autoscaler started as (min_active = 1):
+    // strictly fewer SLO violations
+    let fixed1_cfg = FleetConfig {
+        boards: 1,
+        routing: RoutingPolicy::SloAware,
+        idle_to_sleep_s: f64::INFINITY,
+        seed: 21,
+        ..FleetConfig::default()
+    };
+    let fixed1 = fleet(fixed1_cfg, Baseline::Optimal)
+        .run(&flash_crowd(1))
+        .unwrap();
+    assert!(fixed1.slo_violations() > 0, "the crowd must overwhelm one board");
+    assert!(
+        auto.slo_violations() < fixed1.slo_violations(),
+        "autoscaler violations {} must be strictly below the fixed min-fleet's {}",
+        auto.slo_violations(),
+        fixed1.slo_violations()
+    );
+
+    // versus the fully-provisioned fixed fleet: the same work served,
+    // but the trough idle watts of three parked boards saved
+    let fixed4_cfg = FleetConfig {
+        boards: 4,
+        routing: RoutingPolicy::SloAware,
+        idle_to_sleep_s: f64::INFINITY,
+        seed: 21,
+        ..FleetConfig::default()
+    };
+    let fixed4 = fleet(fixed4_cfg, Baseline::Optimal)
+        .run(&flash_crowd(4))
+        .unwrap();
+    assert_eq!(fixed4.requests_done(), auto.requests_done());
+    assert!(
+        auto.total_energy_j() < fixed4.total_energy_j(),
+        "autoscaled fleet ({:.0} J) must undercut the always-on fleet ({:.0} J)",
+        auto.total_energy_j(),
+        fixed4.total_energy_j()
+    );
+}
+
+/// The determinism contract survives fault injection: for every
+/// RoutingPolicy x baseline combo, a faulted run's report fingerprint
+/// is byte-identical across 1/2/4 worker threads.
+#[test]
+fn fault_fingerprints_identical_across_threads_for_every_combo() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 4, 20.0, 10.0, 0.6, 13).unwrap();
+    let mk = |routing: RoutingPolicy, baseline: Baseline| {
+        let cfg = FleetConfig {
+            boards: 4,
+            routing,
+            seed: 13,
+            faults: Some(FaultProfile::independent(13)),
+            ..FleetConfig::default()
+        };
+        fleet(cfg, baseline)
+    };
+    for routing in RoutingPolicy::all() {
+        for baseline in [
+            Baseline::Optimal,
+            Baseline::MaxFps,
+            Baseline::MinPower,
+            Baseline::Random,
+        ] {
+            let base = mk(routing, baseline)
+                .run_threads(&scenario, 1)
+                .unwrap()
+                .fingerprint();
+            for threads in [2, 4] {
+                let fp = mk(routing, baseline)
+                    .run_threads(&scenario, threads)
+                    .unwrap()
+                    .fingerprint();
+                assert_eq!(
+                    base,
+                    fp,
+                    "{} x {} diverges at {threads} threads",
+                    routing.name(),
+                    baseline.name()
+                );
+            }
+        }
+    }
+}
+
+/// Faults + autoscaler together keep the contract too (the CI smoke
+/// pins the same property end-to-end through the CLI).
+#[test]
+fn fault_plus_autoscale_fingerprints_identical_across_threads() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 4, 25.0, 12.0, 0.6, 17).unwrap();
+    let mk = || {
+        let cfg = FleetConfig {
+            boards: 4,
+            routing: RoutingPolicy::SloAware,
+            seed: 17,
+            faults: Some(FaultProfile::correlated(17)),
+            autoscale: Some(AutoscaleConfig::default()),
+            ..FleetConfig::default()
+        };
+        fleet(cfg, Baseline::Optimal)
+    };
+    let base = mk().run_threads(&scenario, 1).unwrap().fingerprint();
+    for threads in [2, 4] {
+        let fp = mk().run_threads(&scenario, threads).unwrap().fingerprint();
+        assert_eq!(base, fp, "faults+autoscale diverge at {threads} threads");
+    }
+}
+
+/// Event-budget exhaustion with a permanently-dead board names the
+/// board: the operator reading the error learns *why* the run could not
+/// finish, not just that it ran long.
+#[test]
+fn event_budget_exhaustion_names_the_failed_board() {
+    // every board dies almost immediately (mtbf 10 ms) and never
+    // recovers; the budget is far too small for the arrival backlog
+    let requests: Vec<FleetRequest> = (0..40)
+        .map(|i| req("ResNet18", 1.0 + 0.05 * i as f64))
+        .collect();
+    let scenario = FleetScenario {
+        requests,
+        schedules: vec![vec![(0.0, WorkloadState::None)]; 2],
+        horizon_s: 10.0,
+    };
+    let cfg = FleetConfig {
+        boards: 2,
+        routing: RoutingPolicy::LeastLoaded,
+        seed: 3,
+        event_budget: Some(10),
+        faults: Some(FaultProfile {
+            mtbf_s: 0.01,
+            mttr_s: f64::INFINITY,
+            ..FaultProfile::independent(3)
+        }),
+        ..FleetConfig::default()
+    };
+    let err = fleet(cfg, Baseline::Optimal)
+        .run(&scenario)
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("failed and not recovered"),
+        "budget error must name the dead board: {err}"
+    );
+    assert!(err.contains("board"), "budget error must point at a board: {err}");
 }

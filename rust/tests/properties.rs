@@ -1,13 +1,19 @@
 //! Property-based tests (mini-proptest harness, rust/src/testutil.rs) on
 //! the coordinator's invariants: decision routing, reconfiguration state,
-//! scenario time accounting, reward bounds, and dpusim physical laws.
+//! scenario time accounting, reward bounds, dpusim physical laws — and
+//! the fault-injection laws of DESIGN.md §13 (deaths only ever cost
+//! frames and energy; availability is a true fraction).
 
+use dpuconfig::coordinator::fleet::{
+    FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+};
 use dpuconfig::coordinator::{Arrival, Coordinator, Event, ReconfigManager, Scenario, Selector};
 use dpuconfig::dpusim::{DpuSim, FPS_CONSTRAINT};
 use dpuconfig::rl::reward::{Outcome, RewardCalculator};
 use dpuconfig::rl::{Baseline, Featurizer};
 use dpuconfig::telemetry::{PlatformState, Sampler};
 use dpuconfig::testutil::forall;
+use dpuconfig::workload::traffic::{ArrivalPattern, FaultProfile};
 use dpuconfig::workload::WorkloadState;
 
 #[test]
@@ -250,6 +256,107 @@ fn prop_baselines_agree_with_sweep_extremes() {
         for r in &rows {
             assert!(rows[maxf].fps >= r.fps - 1e-12);
             assert!(rows[minp].p_fpga <= r.p_fpga + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_faults_only_ever_cost_frames_and_energy() {
+    // Against the fault-free run of the same scenario + seed, any
+    // death-dealing fault profile can only lose served frames (dropped
+    // requests) and energy (dead boards draw 0 W, and with sleep
+    // disabled the fault-free fleet burns idle watts in their place);
+    // per-board availability is a true fraction; conservation holds.
+    forall(120, 6, |g, _| {
+        let seed = 1 + g.usize(1_000_000) as u64;
+        let horizon = g.f64(25.0, 40.0);
+        let rate = g.f64(3.0, 8.0);
+        let pattern = if g.bool() {
+            ArrivalPattern::Steady
+        } else {
+            ArrivalPattern::Bursty
+        };
+        let scenario = FleetScenario::generate(pattern, 4, horizon, rate, 0.3, seed).unwrap();
+        let mk = |faults: Option<FaultProfile>| {
+            let cfg = FleetConfig {
+                boards: 4,
+                routing: RoutingPolicy::LeastLoaded,
+                idle_to_sleep_s: f64::INFINITY,
+                seed,
+                faults,
+                ..FleetConfig::default()
+            };
+            FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap()
+        };
+
+        let free = mk(None).run(&scenario).unwrap();
+        assert_eq!(free.dropped, 0, "fault-free runs never drop");
+        for b in &free.boards {
+            assert!((b.availability - 1.0).abs() < 1e-12, "fault-free availability");
+        }
+
+        // repair times well above the reconfiguration scale, so the 0 W
+        // downtime always outweighs the re-route/recovery overheads
+        let profile = if g.bool() {
+            FaultProfile {
+                mtbf_s: g.f64(8.0, 25.0),
+                mttr_s: g.f64(8.0, 20.0),
+                ..FaultProfile::independent(seed)
+            }
+        } else {
+            FaultProfile {
+                mtbf_s: g.f64(8.0, 25.0),
+                mttr_s: g.f64(8.0, 20.0),
+                storm_hit: g.f64(0.3, 0.8),
+                ..FaultProfile::correlated(seed)
+            }
+        };
+        let faulted = mk(Some(profile)).run(&scenario).unwrap();
+        assert_eq!(
+            faulted.requests_done() + faulted.dropped,
+            faulted.requests_total as u64,
+            "conservation under faults"
+        );
+        for b in &faulted.boards {
+            assert!(
+                (0.0..=1.0).contains(&b.availability),
+                "board {} availability {} out of [0,1]",
+                b.board,
+                b.availability
+            );
+            assert!(b.downtime_s >= 0.0);
+        }
+        assert!(
+            faulted.total_frames() <= free.total_frames() + 1e-9,
+            "faults must not mint frames: {} > {}",
+            faulted.total_frames(),
+            free.total_frames()
+        );
+        // Slack covers the one legitimate corner: a death clipped by the
+        // horizon (fail in the run's final moments) re-serves its
+        // in-flight frame elsewhere (~1 J of switch + serve overhead)
+        // while the 0 W downtime that normally dwarfs it got truncated.
+        // Any un-clipped death saves >= mttr_s * p_pl_static ~ 12 J.
+        assert!(
+            faulted.total_energy_j() <= free.total_energy_j() + 2.5,
+            "faults must not mint energy: {} J > {} J",
+            faulted.total_energy_j(),
+            free.total_energy_j()
+        );
+
+        // thermal derating slows and heats but never kills: everything
+        // is served, nothing drops, availability stays 1.0
+        let thermal = mk(Some(FaultProfile {
+            mtbf_s: g.f64(5.0, 15.0),
+            ..FaultProfile::thermal(seed)
+        }))
+        .run(&scenario)
+        .unwrap();
+        assert_eq!(thermal.dropped, 0, "thermal derating never drops requests");
+        assert_eq!(thermal.requests_done() as usize, thermal.requests_total);
+        for b in &thermal.boards {
+            assert_eq!(b.fails, 0, "thermal derating never kills a board");
+            assert!((b.availability - 1.0).abs() < 1e-12);
         }
     });
 }
