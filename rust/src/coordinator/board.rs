@@ -32,6 +32,7 @@ use crate::models::ModelVariant;
 use crate::rl::reward::RewardCalculator;
 use crate::rl::Baseline;
 use crate::telemetry::latency::LatencyHistogram;
+use crate::telemetry::stream::{GaugePoint, GaugeRing};
 use crate::telemetry::{PlatformState, Sample, Sampler};
 use crate::workload::traffic::state_at;
 use crate::workload::{WorkloadState, XorShift64};
@@ -180,6 +181,25 @@ pub(crate) enum Phase {
     Failed,
 }
 
+impl Phase {
+    /// Stable lowercase label (gauge rings, the `/metrics` plane).
+    pub(crate) fn name(&self) -> &'static str {
+        match self {
+            Phase::Sleeping => "sleeping",
+            Phase::Waking => "waking",
+            Phase::Reconfiguring => "reconfiguring",
+            Phase::Serving => "serving",
+            Phase::Idle => "idle",
+            Phase::Holding => "holding",
+            Phase::Failed => "failed",
+        }
+    }
+}
+
+/// Points each board's decision-instant gauge ring retains (DESIGN.md
+/// §14): enough history for a profile table, O(1) per board.
+pub(crate) const GAUGE_RING_CAP: usize = 256;
+
 /// One queued request on a board (head = in service or next up).
 #[derive(Debug, Clone)]
 pub(crate) struct QueuedReq {
@@ -255,6 +275,13 @@ pub(crate) struct Board {
     pub(crate) requeues: u64,
     /// Thermal-derate step events applied.
     pub(crate) derate_events: u64,
+    /// Current link degradation severity in [0, 1] (0 = full-rate link):
+    /// effective service/transfer time inflates by `1 + link`.
+    pub(crate) link: f64,
+    /// Link-degradation step events applied.
+    pub(crate) link_events: u64,
+    /// Bounded decision-instant time series (DESIGN.md §14).
+    pub(crate) gauges: GaugeRing,
 }
 
 impl Board {
@@ -304,6 +331,9 @@ impl Board {
             fails: 0,
             requeues: 0,
             derate_events: 0,
+            link: 0.0,
+            link_events: 0,
+            gauges: GaugeRing::new(GAUGE_RING_CAP),
         }
     }
 
@@ -573,6 +603,18 @@ pub(crate) fn observe_for_decision(
     b.last_cpu = sample.cpu_mean();
     b.last_mem_gbs = sample.mem_total_gbs();
     b.qdepth_sum += depth as u64;
+    // decision instants are the paper's telemetry sampling points: fold
+    // this observation into the board's bounded profile table
+    b.gauges.push(GaugePoint {
+        t_s: t,
+        phase: b.phase.name(),
+        queue_depth: depth as u32,
+        backlog_s: backlog,
+        power_w: b.phase_power_w,
+        derate: b.derate,
+        link: b.link,
+        headroom_s: queue.headroom_s,
+    });
     Ok(DecisionObservation {
         state,
         head_model,

@@ -59,6 +59,12 @@ pub enum FleetEvent {
     /// full derating corner (per-mille integer keeps the event `Copy +
     /// Eq`; the physics follow [`crate::workload::traffic::DriftKind::Thermal`]).
     ThermalDerate { board: usize, level: u16 },
+    /// Link degradation on board `board` steps to `permille`/1000: the
+    /// board's effective service/transfer time inflates by
+    /// `1 + permille/1000` until the next step (0 restores full
+    /// bandwidth). Per-mille integer for the same `Copy + Eq` reason as
+    /// [`FleetEvent::ThermalDerate`].
+    LinkDegrade { board: usize, permille: u16 },
     /// Autoscaler heartbeat: measure fleet-wide SLO pressure, then
     /// cold-provision an offline board or drain an idle one.
     ScaleCheck,

@@ -61,6 +61,7 @@ use crate::rl::reward::{Outcome, RewardCalculator};
 use crate::rl::{Baseline, Featurizer};
 use crate::runtime::PolicyRuntime;
 use crate::telemetry::latency::LatencyHistogram;
+use crate::telemetry::stream::{GaugePoint, OrderedFold, ReservoirSpec, SampledTrail, TrailTracker};
 use crate::telemetry::Sampler;
 use crate::workload::traffic::{
     correlated_schedules, request_stream, state_at, ArrivalPattern, FaultAction, FaultProfile,
@@ -280,6 +281,13 @@ pub struct FleetConfig {
     /// SLO-pressure autoscaler (`None` = the whole fleet stays
     /// provisioned for the whole run).
     pub autoscale: Option<AutoscaleConfig>,
+    /// Cap of the deterministic request-trail reservoir (DESIGN.md §14):
+    /// at most this many sampled arrival→start→done trails are retained
+    /// per run, whatever the request count. 0 disables trail sampling
+    /// entirely. Membership is seeded by [`FleetConfig::seed`] and
+    /// merge-closed, so the sharded executor retains the identical
+    /// sample.
+    pub trail_sample: usize,
 }
 
 impl Default for FleetConfig {
@@ -297,6 +305,7 @@ impl Default for FleetConfig {
             profiles: Vec::new(),
             faults: None,
             autoscale: None,
+            trail_sample: 512,
         }
     }
 }
@@ -376,17 +385,6 @@ impl FleetScenario {
     }
 }
 
-/// The arrival→start→done trail of one request (indexed like
-/// [`FleetScenario::requests`]). `start_s`/`done_s` are −1 until the
-/// respective transition happened (they never are in a completed run).
-#[derive(Debug, Clone, Copy)]
-pub struct RequestTrail {
-    pub board: usize,
-    pub at_s: f64,
-    pub start_s: f64,
-    pub done_s: f64,
-}
-
 /// Roll a finished [`Board`] into its report slice. Shared by the
 /// single-queue loop and the sharded executor so derived statistics
 /// (mean reward, mean decision queue depth, availability over `span_s`)
@@ -421,7 +419,9 @@ pub(crate) fn finish_board(i: usize, mut b: Board, span_s: f64) -> BoardReport {
         fails: b.fails,
         requeues: b.requeues,
         derates: b.derate_events,
+        link_events: b.link_events,
         availability,
+        gauges: b.gauges.to_vec(),
     }
 }
 
@@ -451,8 +451,13 @@ pub struct BoardReport {
     pub requeues: u64,
     /// Thermal-derate step events applied.
     pub derates: u64,
+    /// Link-degradation step events applied.
+    pub link_events: u64,
     /// 1 − downtime/span, clamped to [0, 1].
     pub availability: f64,
+    /// Bounded decision-instant gauge time series (the newest
+    /// [`crate::coordinator::board`] ring capacity points).
+    pub gauges: Vec<GaugePoint>,
 }
 
 /// Per-model latency/SLO slice of the fleet report.
@@ -496,8 +501,14 @@ pub struct FleetReport {
     pub span_s: f64,
     /// Per-model latency + SLO accounting, sorted by model name.
     pub by_model: Vec<ModelLatencyReport>,
-    /// Per-request arrival→start→done trails.
-    pub trails: Vec<RequestTrail>,
+    /// Deterministic reservoir sample of request trails, sorted by
+    /// request id (at most [`FleetConfig::trail_sample`] entries —
+    /// constant memory whatever the request count, DESIGN.md §14).
+    pub trails: Vec<SampledTrail>,
+    /// Rolling streaming fingerprint over every served request folded in
+    /// canonical `(done_s, req)` order — byte-identical across executors
+    /// and thread counts; appended to [`Self::fingerprint`].
+    pub stream: String,
 }
 
 impl FleetReport {
@@ -553,6 +564,47 @@ impl FleetReport {
         self.by_model.iter().find(|m| m.model == model)
     }
 
+    /// Roll this report into the point-in-time view `/metrics` serves
+    /// (DESIGN.md §14). Per-board phase/power/queue depth come from the
+    /// newest decision-instant gauge point; `online_text` carries
+    /// pre-rendered `dpuonline_*` exposition when the run used the
+    /// online policy (empty otherwise).
+    pub fn snapshot(&self, online_text: String) -> crate::telemetry::FleetSnapshot {
+        use crate::telemetry::stream::BoardGauge;
+        let hist = self.latency();
+        crate::telemetry::FleetSnapshot {
+            t_s: self.span_s,
+            requests_total: self.requests_total,
+            served: self.requests_done(),
+            dropped: self.dropped,
+            violations: self.slo_violations(),
+            p50_ms: hist.p50_ms(),
+            p95_ms: hist.p95_ms(),
+            p99_ms: hist.p99_ms(),
+            boards: self
+                .boards
+                .iter()
+                .map(|b| {
+                    let last = b.gauges.last();
+                    BoardGauge {
+                        board: b.board,
+                        class: b.class.clone(),
+                        phase: last.map_or("idle", |g| g.phase).to_string(),
+                        power_w: last.map_or(0.0, |g| g.power_w),
+                        queue_depth: last.map_or(b.queue_left, |g| g.queue_depth as usize),
+                        done: b.requests_done,
+                        fails: b.fails,
+                        requeues: b.requeues,
+                        derates: b.derates,
+                        link_events: b.link_events,
+                        wakes: b.wakes,
+                    }
+                })
+                .collect(),
+            online_text,
+        }
+    }
+
     /// Mean per-board availability (1.0 = no board was ever down).
     pub fn fleet_availability(&self) -> f64 {
         if self.boards.is_empty() {
@@ -581,7 +633,7 @@ impl FleetReport {
         for b in &self.boards {
             let _ = write!(
                 s,
-                "|b{}[{}]:f={:.3}:e={:.9e}:E={:.9e}:w={}:d={}:v={}:dt={:.6}:fl={}:rq={}:dr={}:av={:.6}:{}",
+                "|b{}[{}]:f={:.3}:e={:.9e}:E={:.9e}:w={}:d={}:v={}:dt={:.6}:fl={}:rq={}:dr={}:lk={}:av={:.6}:{}",
                 b.board,
                 b.class,
                 b.totals.frames,
@@ -594,6 +646,7 @@ impl FleetReport {
                 b.fails,
                 b.requeues,
                 b.derates,
+                b.link_events,
                 b.availability,
                 b.latency.fingerprint()
             );
@@ -608,6 +661,7 @@ impl FleetReport {
                 m.violations
             );
         }
+        let _ = write!(s, "|sfp={}", self.stream);
         s
     }
 
@@ -711,7 +765,10 @@ struct RunState<'a> {
     scenario: &'a FleetScenario,
     boards: Vec<Board>,
     events: EventQueue<FleetEvent>,
-    trails: Vec<RequestTrail>,
+    /// Constant-memory sampled request trails (reservoir members only).
+    tracker: TrailTracker,
+    /// Rolling served-request fingerprint, fed at every `FrameDone`.
+    fold: OrderedFold,
     by_model: BTreeMap<String, ModelAcc>,
     decisions: u64,
     decision_batches: u64,
@@ -746,6 +803,12 @@ pub struct FleetCoordinator {
 }
 
 impl FleetCoordinator {
+    /// Online-adaptation statistics, when the fleet runs the online
+    /// policy — what the `/metrics` plane renders as `dpuonline_*`.
+    pub fn online_stats(&self) -> Option<&crate::online::OnlineStats> {
+        self.policy.online_stats()
+    }
+
     pub fn new(config: FleetConfig, policy: FleetPolicy) -> Result<FleetCoordinator> {
         anyhow::ensure!(config.boards > 0, "fleet needs at least one board");
         anyhow::ensure!(config.tick_s > 0.0, "tick must be positive");
@@ -932,9 +995,13 @@ impl FleetCoordinator {
         t: f64,
     ) -> Result<f64> {
         let mut w = (b.busy_until - t).max(0.0);
+        // link degradation inflates effective service/transfer time by
+        // (1 + severity); at severity 0 the factor is an exact IEEE
+        // identity, so fault-free estimates are bit-identical
+        let lk = 1.0 + b.link;
         let skip = usize::from(b.phase == Phase::Serving);
         for q in b.queue.iter().skip(skip) {
-            w += self.est_service_s(&b.profile, &q.model, state)?;
+            w += self.est_service_s(&b.profile, &q.model, state)? * lk;
         }
         Ok(w)
     }
@@ -951,10 +1018,14 @@ impl FleetCoordinator {
         incoming: &ModelVariant,
         t: f64,
     ) -> Result<f64> {
+        // link degradation inflates every service estimate (not the
+        // reconfiguration overheads — those move no frame data); the
+        // factor is an exact identity at severity 0
+        let lk = 1.0 + b.link;
         if b.phase == Phase::Sleeping {
             return Ok(b.wake_penalty_s
                 + full_decision_overhead_s()
-                + self.est_service_s(&b.profile, incoming, state)?);
+                + self.est_service_s(&b.profile, incoming, state)? * lk);
         }
         let switch_s = (TELEMETRY_US + RL_INFERENCE_US + INSTR_LOAD_US) as f64 * 1e-6;
         let mut w = (b.busy_until - t).max(0.0);
@@ -965,7 +1036,7 @@ impl FleetCoordinator {
             if prev.as_deref() != Some(name.as_str()) {
                 w += switch_s;
             }
-            w += self.est_service_s(&b.profile, &q.model, state)?;
+            w += self.est_service_s(&b.profile, &q.model, state)? * lk;
             prev = Some(name);
         }
         let name = incoming.name();
@@ -976,7 +1047,7 @@ impl FleetCoordinator {
                 switch_s
             };
         }
-        w += self.est_service_s(&b.profile, incoming, state)?;
+        w += self.est_service_s(&b.profile, incoming, state)? * lk;
         Ok(w)
     }
 
@@ -1243,13 +1314,16 @@ impl FleetCoordinator {
             // thermal derating at severity m: PL clock ×(1−0.4m) →
             // service ×1/(1−0.4m); static + dynamic power ×(1+m) — the
             // DriftKind::Thermal corner applied per board, per frame.
-            // At derate 0 both factors are exact identities, so fault-
-            // free runs stay bit-identical to the pre-fault kernel.
+            // Link degradation at severity l stretches the effective
+            // frame service/transfer time by ×(1+l). At severity 0 every
+            // factor is an exact identity, so fault-free runs stay
+            // bit-identical to the pre-fault kernel.
             let p_serve = m.p_fpga * (1.0 + b.derate);
             b.phase = Phase::Serving;
             b.phase_power_w = p_serve;
             b.serving_meets = m.meets_constraint;
-            b.busy_until = t + m.frame_service_s() / (1.0 - 0.4 * b.derate);
+            b.busy_until =
+                t + m.frame_service_s() / (1.0 - 0.4 * b.derate) * (1.0 + b.link);
             b.obs_traffic_bps = m.dpu_traffic_bps(instances);
             b.obs_host_util = m.host_util_pct(instances);
             b.obs_p_fpga = p_serve;
@@ -1265,9 +1339,7 @@ impl FleetCoordinator {
             });
             b.reward_sum += r;
             b.reward_n += 1;
-            if rs.trails[head_req].start_s < 0.0 {
-                rs.trails[head_req].start_s = t;
-            }
+            rs.tracker.on_start(head_req, t);
             let until = rs.boards[i].busy_until;
             rs.events.push(
                 until,
@@ -1316,6 +1388,7 @@ impl FleetCoordinator {
     /// Count request `req` as explicitly dropped (no routable board
     /// existed) — the only way a request leaves the system unserved.
     fn drop_request(rs: &mut RunState<'_>, req: usize, t: f64) {
+        rs.tracker.on_drop(req, t);
         rs.dropped += 1;
         rs.remaining -= 1;
         if rs.remaining == 0 {
@@ -1520,22 +1593,21 @@ impl FleetCoordinator {
             .map(|i| self.mk_board(i, &base))
             .collect();
 
-        let trails: Vec<RequestTrail> = scenario
-            .requests
-            .iter()
-            .map(|r| RequestTrail {
-                board: usize::MAX,
-                at_s: r.at_s,
-                start_s: -1.0,
-                done_s: -1.0,
-            })
-            .collect();
+        // constant-memory trail sampling: the reservoir spec is a pure
+        // function of (seed, request count, cap), so the sharded
+        // executor reproduces the identical member set
+        let spec = ReservoirSpec::for_requests(
+            self.config.seed,
+            scenario.requests.len(),
+            self.config.trail_sample,
+        );
 
         let mut rs = RunState {
             scenario,
             boards,
             events: EventQueue::new(),
-            trails,
+            tracker: TrailTracker::new(spec),
+            fold: OrderedFold::new(),
             by_model: BTreeMap::new(),
             decisions: 0,
             decision_batches: 0,
@@ -1581,6 +1653,10 @@ impl FleetCoordinator {
                     FaultAction::Derate { level } => FleetEvent::ThermalDerate {
                         board: fe.board,
                         level,
+                    },
+                    FaultAction::LinkDegrade { permille } => FleetEvent::LinkDegrade {
+                        board: fe.board,
+                        permille,
                     },
                 };
                 rs.events.push(fe.at_s, ev);
@@ -1669,7 +1745,7 @@ impl FleetCoordinator {
                     };
                     match target {
                         Some(target) => {
-                            rs.trails[request].board = target;
+                            rs.tracker.on_route(request, t, target);
                             self.enqueue_on(
                                 &mut rs,
                                 target,
@@ -1737,8 +1813,12 @@ impl FleetCoordinator {
                         b.requests_done += 1;
                         q
                     };
-                    let latency_ms = (t - rs.trails[request].at_s) * 1e3;
-                    rs.trails[request].done_s = t;
+                    // `done.at_s` is the ORIGINAL arrival (preserved
+                    // across re-routes by the enqueue_on contract) —
+                    // exactly what the per-request trail vector recorded
+                    let latency_ms = (t - done.at_s) * 1e3;
+                    rs.tracker.on_done(request, t);
+                    rs.fold.push(request, t, latency_ms);
                     let name = done.model.name();
                     let slo_ms = self.config.slo.target_ms(&name);
                     let violated = latency_ms > slo_ms;
@@ -1864,7 +1944,7 @@ impl FleetCoordinator {
                         match target {
                             Some(j) => {
                                 rs.boards[board].requeues += 1;
-                                rs.trails[q.req].board = j;
+                                rs.tracker.on_requeue(q.req, j);
                                 self.enqueue_on(&mut rs, j, q, t)?;
                             }
                             None => Self::drop_request(&mut rs, q.req, t),
@@ -1899,6 +1979,15 @@ impl FleetCoordinator {
                     // the in-flight frame finishes at the rate fixed at
                     // its serve start; the NEXT serve start derates
                 }
+                FleetEvent::LinkDegrade { board, permille } => {
+                    let b = &mut rs.boards[board];
+                    advance(b, t);
+                    b.link = f64::from(permille) / 1000.0;
+                    b.link_events += 1;
+                    // like derating: the in-flight frame keeps the
+                    // transfer rate fixed at its serve start, the NEXT
+                    // serve start (and routing estimate) pays the factor
+                }
                 FleetEvent::ScaleCheck => {
                     if rs.remaining > 0 {
                         self.scale_check(&mut rs, t)?;
@@ -1930,6 +2019,7 @@ impl FleetCoordinator {
         }
 
         let events = rs.events.popped();
+        let stream = rs.fold.finish().digest();
         let boards_out = rs
             .boards
             .into_iter()
@@ -1960,7 +2050,8 @@ impl FleetCoordinator {
             dropped: rs.dropped,
             span_s: span,
             by_model,
-            trails: rs.trails,
+            trails: rs.tracker.into_trails(),
+            stream,
         })
     }
 }
@@ -2210,12 +2301,19 @@ mod tests {
         let m = r.model_latency("ResNet18_PR0").expect("model report");
         assert_eq!(m.done, 5);
         assert_eq!(m.violations, 5);
-        // trails are complete and ordered
+        // the default trail cap (512) retains every request of a
+        // test-sized scenario; trails are complete and ordered
+        assert_eq!(r.trails.len(), 5);
         for trail in &r.trails {
             assert_eq!(trail.board, 0);
             assert!(trail.start_s >= trail.at_s);
             assert!(trail.done_s > trail.start_s);
+            assert!(!trail.dropped);
+            assert!(trail.latency_ms().unwrap() > 0.0);
         }
+        // the streaming fingerprint counted every completion
+        assert!(r.stream.ends_with("x5"), "stream digest {}", r.stream);
+        assert!(r.fingerprint().contains("|sfp="));
 
         // a lenient per-model override silences the violations
         let mut cfg = config(RoutingPolicy::RoundRobin, 1);

@@ -30,6 +30,7 @@ use crate::dpusim::energy::{frames_per_joule, EnergyMeter};
 use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
 use crate::models::ModelVariant;
 use crate::rl::reward::Outcome;
+use crate::telemetry::stream::StreamFingerprint;
 use crate::telemetry::{PlatformState, Sampler};
 use crate::workload::traffic::DriftProfile;
 use crate::workload::WorkloadState;
@@ -165,6 +166,11 @@ pub struct Report {
     /// idle between arrivals), from the kernel's per-board meter — the
     /// legacy loop never accounted idle energy at all.
     pub energy: EnergyMeter,
+    /// Streaming fingerprint of the serve-segment timeline (same
+    /// constant-memory digest the fleet executors emit): folded in
+    /// completion order, so identical runs produce identical digests
+    /// without retaining the event list.
+    pub stream: String,
 }
 
 /// How the single-board loop advances simulated time.
@@ -351,11 +357,19 @@ impl Coordinator {
         if board.reward_n > 0 {
             totals.mean_reward = board.reward_sum / board.reward_n as f64;
         }
+        // serve segments are already in completion order on one board
+        let mut sfp = StreamFingerprint::new();
+        for (i, e) in events.iter().enumerate() {
+            if let Event::Serve { t_s, dur_s, .. } = e {
+                sfp.fold(i, t_s + dur_s, dur_s * 1e3);
+            }
+        }
         Ok(Report {
             policy,
             events,
             totals,
             energy: board.energy,
+            stream: sfp.digest(),
         })
     }
 
@@ -579,6 +593,13 @@ mod tests {
         // (no idle gaps in this back-to-back scenario beyond roundoff)
         assert!(r.energy.total_j() >= r.totals.energy_fpga_j);
         assert!((r.energy.total_s() - covered).abs() < 1e-6);
+        // the streaming digest covers every serve segment
+        let serves = r
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::Serve { .. }))
+            .count();
+        assert!(r.stream.ends_with(&format!("x{serves}")), "{}", r.stream);
     }
 
     #[test]

@@ -63,13 +63,14 @@ use crate::coordinator::events::{EventQueue, FleetEvent};
 use crate::coordinator::fleet::{
     failed_note_for, finish_board, BoardReport, DecisionRequest, FleetConfig, FleetCoordinator,
     FleetPolicy, FleetReport, FleetRequest, FleetScenario, ModelAcc, ModelLatencyReport,
-    RequestTrail, RoutingPolicy, RunMode,
+    RoutingPolicy, RunMode,
 };
 use crate::coordinator::reconfig::ReconfigManager;
 use crate::dpusim::{DpuSim, FPS_CONSTRAINT};
 use crate::rl::reward::Outcome;
 use crate::rl::{Baseline, RewardCalculator};
 use crate::telemetry::latency::LatencyHistogram;
+use crate::telemetry::stream::{ReservoirSpec, StreamFingerprint, TrailTracker};
 use crate::workload::traffic::{state_at, FaultAction};
 use crate::workload::{WorkloadState, XorShift64};
 use anyhow::Result;
@@ -100,6 +101,9 @@ struct ShardCtx<'a> {
     /// Run-wide power/sleep base (per-board values live on the boards
     /// themselves, resolved from their profiles).
     base: PowerBase,
+    /// The run's trail-reservoir spec: shards record serve starts only
+    /// for member requests, so `Slot::starts` stays O(sample cap).
+    spec: ReservoirSpec,
 }
 
 /// One completed request, recorded inside the owning shard and merged in
@@ -127,7 +131,8 @@ struct Slot {
     /// mode). A live sleep timer with future arrivals behind it is safe
     /// to fire; with none, its fate depends on the global end of span.
     future_arrivals: usize,
-    /// (request, serve-start time), applied to trails at merge.
+    /// (request, serve-start time) for reservoir members only, applied
+    /// to the trail tracker at merge.
     starts: Vec<(usize, f64)>,
     completions: Vec<Completion>,
     /// Locally resolved decisions / policy passes (static fast path).
@@ -318,14 +323,15 @@ fn kick_slot(
             state,
         )?;
         let b = &mut slot.board;
-        // thermal derating mirror of the single-queue serve start: clock
-        // ×(1−0.4m) → service ×1/(1−0.4m), power ×(1+m); exact
-        // identities at derate 0 keep fault-free runs bit-identical
+        // thermal-derate + link-degrade mirror of the single-queue serve
+        // start: clock ×(1−0.4m) → service ×1/(1−0.4m), power ×(1+m),
+        // transfer ×(1+l); exact identities at severity 0 keep
+        // fault-free runs bit-identical
         let p_serve = m.p_fpga * (1.0 + b.derate);
         b.phase = Phase::Serving;
         b.phase_power_w = p_serve;
         b.serving_meets = m.meets_constraint;
-        b.busy_until = t + m.frame_service_s() / (1.0 - 0.4 * b.derate);
+        b.busy_until = t + m.frame_service_s() / (1.0 - 0.4 * b.derate) * (1.0 + b.link);
         b.obs_traffic_bps = m.dpu_traffic_bps(instances);
         b.obs_host_util = m.host_util_pct(instances);
         b.obs_p_fpga = p_serve;
@@ -342,7 +348,9 @@ fn kick_slot(
         b.reward_sum += r;
         b.reward_n += 1;
         let until = b.busy_until;
-        slot.starts.push((head_req, t));
+        if ctx.spec.contains(head_req) {
+            slot.starts.push((head_req, t));
+        }
         slot.queue.push(
             until,
             FleetEvent::FrameDone {
@@ -510,6 +518,14 @@ fn process_event(
             b.derate_events += 1;
             // the in-flight frame finishes at the rate fixed at its
             // serve start; the NEXT serve start derates
+        }
+        FleetEvent::LinkDegrade { permille, .. } => {
+            let b = &mut slot.board;
+            advance(b, t);
+            b.link = f64::from(permille) / 1000.0;
+            b.link_events += 1;
+            // board-local like derating: the in-flight frame keeps its
+            // transfer rate, the NEXT serve start pays the factor
         }
         FleetEvent::BoardFail { .. } | FleetEvent::ScaleCheck => {
             unreachable!(
@@ -788,16 +804,15 @@ impl FleetCoordinator {
         };
         let mut dropped: u64 = 0;
 
-        let mut trails: Vec<RequestTrail> = scenario
-            .requests
-            .iter()
-            .map(|r| RequestTrail {
-                board: usize::MAX,
-                at_s: r.at_s,
-                start_s: -1.0,
-                done_s: -1.0,
-            })
-            .collect();
+        // the same pure (seed, request count, cap) reservoir spec the
+        // single-queue path builds — member sets are identical, so the
+        // merged trail sample is identical by construction
+        let spec = ReservoirSpec::for_requests(
+            self.config.seed,
+            scenario.requests.len(),
+            self.config.trail_sample,
+        );
+        let mut tracker = TrailTracker::new(spec);
 
         // seed every board's local timeline: workload shifts + the
         // initial idle->sleep timer (per-board dwell — board classes may
@@ -823,6 +838,13 @@ impl FleetCoordinator {
                                 level,
                             },
                         ),
+                        FaultAction::LinkDegrade { permille } => slot.queue.push(
+                            fe.at_s,
+                            FleetEvent::LinkDegrade {
+                                board: slot.idx,
+                                permille,
+                            },
+                        ),
                     }
                 }
                 if slot.board.offline {
@@ -844,7 +866,7 @@ impl FleetCoordinator {
         if preassigned {
             for (k, r) in scenario.requests.iter().enumerate() {
                 let target = k % n;
-                trails[k].board = target;
+                tracker.on_route(k, r.at_s, target);
                 let (si, pi) = loc[target];
                 let slot = &mut shards[si].slots[pi];
                 slot.future_arrivals += 1;
@@ -879,6 +901,7 @@ impl FleetCoordinator {
                     local,
                     budget,
                     base,
+                    spec,
                 };
                 drain_round(&mut shards, &ctx, horizon, threads)?;
             }
@@ -968,7 +991,7 @@ impl FleetCoordinator {
                         match target {
                             Some(j) => {
                                 shards[si].slots[pi].board.requeues += 1;
-                                trails[q.req].board = j;
+                                tracker.on_requeue(q.req, j);
                                 let ctx = ShardCtx {
                                     sim: &self.sim,
                                     config: &self.config,
@@ -977,6 +1000,7 @@ impl FleetCoordinator {
                                     local,
                                     budget,
                                     base,
+                                    spec,
                                 };
                                 let (sj, pj) = loc[j];
                                 let Shard {
@@ -995,7 +1019,10 @@ impl FleetCoordinator {
                             }
                             // every provisioned board is dead: refused,
                             // loudly accounted
-                            None => dropped += 1,
+                            None => {
+                                tracker.on_drop(q.req, t);
+                                dropped += 1;
+                            }
                         }
                     }
                 }
@@ -1116,13 +1143,14 @@ impl FleetCoordinator {
                         None => {
                             // every provisioned board is dead: the
                             // request is refused, loudly accounted
+                            tracker.on_drop(arr_idx, t);
                             dropped += 1;
                             global_events += 1;
                             arr_idx += 1;
                             continue;
                         }
                     };
-                    trails[arr_idx].board = target;
+                    tracker.on_route(arr_idx, t, target);
                     let ctx = ShardCtx {
                         sim: &self.sim,
                         config: &self.config,
@@ -1131,6 +1159,7 @@ impl FleetCoordinator {
                         local,
                         budget,
                         base,
+                        spec,
                     };
                     let (si, pi) = loc[target];
                     let Shard {
@@ -1200,6 +1229,7 @@ impl FleetCoordinator {
                         local,
                         budget,
                         base,
+                        spec,
                     };
                     kick_slot(slot, metrics_cache, est_cache, &ctx, t)?;
                     continue;
@@ -1234,6 +1264,7 @@ impl FleetCoordinator {
                         local,
                         budget,
                         base,
+                        spec,
                     };
                     let (si, pi) = loc[req.board];
                     let slot = &mut shards[si].slots[pi];
@@ -1297,6 +1328,7 @@ impl FleetCoordinator {
                 local,
                 budget,
                 base,
+                spec,
             };
             for &(si, pi) in &loc {
                 let Shard {
@@ -1327,10 +1359,9 @@ impl FleetCoordinator {
                 for &(req, t0) in &slot.starts {
                     // earliest serve start wins — a re-routed request may
                     // carry starts on two boards, and slot iteration
-                    // order is partition-dependent, so take the min
-                    if trails[req].start_s < 0.0 || t0 < trails[req].start_s {
-                        trails[req].start_s = t0;
-                    }
+                    // order is partition-dependent, so on_start keeps
+                    // the min
+                    tracker.on_start(req, t0);
                 }
                 comps.extend(slot.completions);
                 boards_raw.push((slot.idx, slot.board));
@@ -1343,8 +1374,13 @@ impl FleetCoordinator {
                 .then(a.req.cmp(&b.req))
         });
         let mut by_model: BTreeMap<String, ModelAcc> = BTreeMap::new();
+        // comps are sorted by (done_s, req) — the canonical streaming
+        // order — so folding them directly reproduces the single-queue
+        // executor's OrderedFold digest byte for byte
+        let mut sfp = StreamFingerprint::new();
         for c in &comps {
-            trails[c.req].done_s = c.done_s;
+            tracker.on_done(c.req, c.done_s);
+            sfp.fold(c.req, c.done_s, c.latency_ms);
             let acc = by_model.entry(c.model.clone()).or_insert_with(|| ModelAcc {
                 hist: LatencyHistogram::new(),
                 violations: 0,
@@ -1384,7 +1420,8 @@ impl FleetCoordinator {
             dropped,
             span_s: end,
             by_model: by_model_out,
-            trails,
+            trails: tracker.into_trails(),
+            stream: sfp.digest(),
         })
     }
 }
@@ -1432,11 +1469,16 @@ mod tests {
         assert_eq!(r.requests_done() as usize, s.requests.len());
         assert_eq!(r.dropped, 0);
         assert!(r.latency().p99_ms() > 0.0);
+        // the scenario is far below the default reservoir cap, so every
+        // request's trail is retained — and all were served
+        assert_eq!(r.trails.len(), s.requests.len());
         for trail in &r.trails {
             assert!(trail.board < 4);
             assert!(trail.start_s >= trail.at_s);
             assert!(trail.done_s > trail.start_s);
+            assert!(!trail.dropped);
         }
+        assert!(r.fingerprint().contains("|sfp="));
     }
 
     #[test]

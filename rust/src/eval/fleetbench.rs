@@ -48,6 +48,10 @@ pub struct ScenarioResult {
     pub p99_ms: f64,
     pub slo_violations: u64,
     pub dropped: u64,
+    /// Process peak RSS (MiB) after the run — recorded on the
+    /// `high_volume_stream` row to keep the constant-memory reporting
+    /// bound observable in CI (0.0 = not recorded for this row).
+    pub peak_rss_mb: f64,
 }
 
 /// One thread count's measurement on the scaling scenario.
@@ -171,6 +175,56 @@ fn run_pair(
         p99_ms: ev.latency().p99_ms(),
         slo_violations: ev.slo_violations(),
         dropped: ev.dropped,
+        peak_rss_mb: 0.0,
+    })
+}
+
+/// Constant-memory streaming row (DESIGN.md §14): a high-volume run on
+/// the event path only — no tick pairing, the reference grid would
+/// dominate the bench — with a small trail-reservoir cap, recording the
+/// process peak RSS so the bounded-reporting contract stays observable
+/// in CI numbers.
+fn run_stream(smoke: bool, tick_s: f64) -> Result<ScenarioResult> {
+    let boards = 8;
+    let (horizon, rate) = if smoke { (60.0, 150.0) } else { (240.0, 400.0) };
+    let seed = 31;
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, boards, horizon, rate, 0.5, seed)?;
+    let cap = 256;
+    let cfg = FleetConfig {
+        boards,
+        tick_s,
+        routing: RoutingPolicy::RoundRobin,
+        seed,
+        trail_sample: cap,
+        ..FleetConfig::default()
+    };
+    let mut f = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal))?;
+    let t0 = Instant::now();
+    let r = f.run_mode(&scenario, RunMode::EventDriven)?;
+    let wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        r.trails.len() <= cap,
+        "trail reservoir exceeded its cap: {} > {cap}",
+        r.trails.len()
+    );
+    Ok(ScenarioResult {
+        name: "high_volume_stream",
+        pattern: ArrivalPattern::Steady.name(),
+        requests: scenario.requests.len(),
+        event_iterations: r.events,
+        tick_iterations: 0,
+        event_wall_s: wall,
+        tick_wall_s: 0.0,
+        events_per_sec: r.events as f64 / wall.max(1e-9),
+        iteration_speedup: 0.0,
+        wall_speedup: 0.0,
+        frames_rel_err: 0.0,
+        energy_rel_err: 0.0,
+        p99_ms: r.latency().p99_ms(),
+        slo_violations: r.slo_violations(),
+        dropped: r.dropped,
+        peak_rss_mb: crate::telemetry::stream::peak_rss_mb(),
     })
 }
 
@@ -316,6 +370,9 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             &[],
             Some(FaultProfile::correlated(15)),
         )?,
+        // streaming telemetry (DESIGN.md §14): high request volume with a
+        // small trail-reservoir cap — records peak RSS, pins O(cap) memory
+        run_stream(smoke, tick_s)?,
     ];
     let scaling = Some(run_scaling(smoke)?);
     Ok(FleetBenchReport {
@@ -389,7 +446,7 @@ pub fn to_json(r: &FleetBenchReport) -> String {
              \"events_per_sec\": {:.1}, \"iteration_speedup\": {:.3}, \
              \"wall_speedup\": {:.3}, \"frames_rel_err\": {:.3e}, \
              \"energy_rel_err\": {:.3e}, \"p99_ms\": {:.3}, \
-             \"slo_violations\": {}, \"dropped\": {}}}{}\n",
+             \"slo_violations\": {}, \"dropped\": {}, \"peak_rss_mb\": {:.1}}}{}\n",
             s.name,
             s.pattern,
             s.requests,
@@ -405,6 +462,7 @@ pub fn to_json(r: &FleetBenchReport) -> String {
             s.p99_ms,
             s.slo_violations,
             s.dropped,
+            s.peak_rss_mb,
             if i + 1 < r.scenarios.len() { "," } else { "" },
         ));
     }
@@ -566,6 +624,7 @@ mod tests {
             p99_ms: 42.0,
             slo_violations: 0,
             dropped: 0,
+            peak_rss_mb: 0.0,
         }
     }
 

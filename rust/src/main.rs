@@ -13,8 +13,10 @@
 //! dpuconfig fleet   [--boards 4] [--routing energy_aware] [--pattern diurnal]
 //!                   [--rate 20] [--slo-ms 250] [--slo ResNet152=120]
 //!                   [--profiles B512,B1024,B4096,B4096]   # heterogeneous fleet
-//!                   [--faults independent|correlated|thermal] [--autoscale]
+//!                   [--faults independent|correlated|thermal|link] [--autoscale]
 //!                   [--threads N] [--fingerprint] [--fine-tick] [--assert-served]
+//!                   [--metrics-port 0] [--metrics-hold 5] [--trace-out traces.jsonl]
+//!                   [--trail-sample 512]
 //! dpuconfig fleet-bench [--full] [--out BENCH_fleet.json] [--check-against BENCH_fleet.json]
 //! dpuconfig adapt   [--kind calibration] [--seed 7]  # online adaptation
 //! ```
@@ -188,6 +190,22 @@ fn run() -> Result<()> {
                 fingerprint: args.flag("fingerprint"),
                 fine_tick: args.flag("fine-tick"),
                 assert_served: args.flag("assert-served"),
+                trail_sample: args
+                    .opt("trail-sample")
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .with_context(|| format!("--trail-sample {s:?} is not an integer"))
+                    })
+                    .transpose()?,
+                metrics_port: args
+                    .opt("metrics-port")
+                    .map(|s| {
+                        s.parse::<u16>()
+                            .with_context(|| format!("--metrics-port {s:?} is not a port"))
+                    })
+                    .transpose()?,
+                metrics_hold: args.opt_u64("metrics-hold", 5)?,
+                trace_out: args.opt("trace-out").map(str::to_string),
             };
             fleet_demo(&opts)?;
         }
@@ -375,6 +393,15 @@ struct FleetDemoOpts {
     fingerprint: bool,
     fine_tick: bool,
     assert_served: bool,
+    /// Override of the trail-reservoir cap (None = the config default).
+    trail_sample: Option<usize>,
+    /// Serve the fleet `/metrics` plane on 127.0.0.1:<port> after the
+    /// run (0 = ephemeral port, printed).
+    metrics_port: Option<u16>,
+    /// Seconds to keep the metrics endpoint up for scrapes.
+    metrics_hold: u64,
+    /// Write sampled request traces as JSON lines to this path.
+    trace_out: Option<String>,
 }
 
 fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
@@ -412,7 +439,7 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         !(o.fine_tick && (faults.is_some() || o.autoscale)),
         "--fine-tick is the pre-fault reference mode; drop --faults/--autoscale"
     );
-    let cfg = FleetConfig {
+    let mut cfg = FleetConfig {
         boards: o.boards,
         routing: o.routing,
         seed: o.seed,
@@ -425,6 +452,9 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         autoscale: o.autoscale.then(AutoscaleConfig::default),
         ..FleetConfig::default()
     };
+    if let Some(cap) = o.trail_sample {
+        cfg.trail_sample = cap;
+    }
     let scenario = FleetScenario::generate(
         o.pattern,
         o.boards,
@@ -486,6 +516,38 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
             "p99 latency is zero — no requests were measured"
         );
         println!("assert-served: ok");
+    }
+    if let Some(path) = &o.trace_out {
+        // span-style request traces from the sampled trails, one JSON
+        // line per request, sorted by request id
+        let mut out = String::new();
+        for t in &report.trails {
+            let model = scenario.requests[t.req].model.name();
+            let class = report
+                .boards
+                .iter()
+                .find(|b| b.board == t.board)
+                .map_or("unrouted", |b| b.class.as_str());
+            out.push_str(&dpuconfig::telemetry::stream::span_json(t, &model, class));
+            out.push('\n');
+        }
+        std::fs::write(path, &out)
+            .with_context(|| format!("writing traces to {path}"))?;
+        println!("trace: wrote {} spans to {path}", report.trails.len());
+    }
+    if let Some(port) = o.metrics_port {
+        use dpuconfig::telemetry::Exporter;
+        let online_text = fleet
+            .online_stats()
+            .map(dpuconfig::telemetry::prometheus_text_online)
+            .unwrap_or_default();
+        let exporter = Exporter::spawn(port)?;
+        exporter.hub().publish(report.snapshot(online_text));
+        println!(
+            "metrics: http://{}/metrics (holding {}s)",
+            exporter.addr, o.metrics_hold
+        );
+        std::thread::sleep(Duration::from_secs(o.metrics_hold));
     }
     Ok(())
 }

@@ -1,14 +1,42 @@
 //! Prometheus exposition endpoint — the stand-in for the node-exporter
-//! instance the paper runs on the ZCU102 (§V-A). Serves the latest
-//! telemetry sample over HTTP on a background thread; scrape with
+//! instance the paper runs on the ZCU102 (§V-A), extended to the fleet
+//! scale (DESIGN.md §14). Serves the latest telemetry over HTTP on a
+//! background thread; scrape with
 //! `curl http://127.0.0.1:<port>/metrics`.
+//!
+//! Two publishers feed the endpoint:
+//!
+//! * [`MetricsSlot`] — the original single-board [`Sample`] slot
+//!   (`zcu102_*` families).
+//! * [`FleetHub`] — the fleet-wide [`FleetSnapshot`] hub
+//!   (`dpufleet_*` per-class and per-board families, latency quantiles,
+//!   fault/autoscale counters, plus the online-learning `dpuonline_*`
+//!   gauges carried in the snapshot). When a fleet snapshot has been
+//!   published it takes precedence over the single-board sample — the
+//!   fleet plane subsumes the board plane.
+//!
+//! The request loop reads the full HTTP request head before responding
+//! (earlier versions raced the client's write and could reply to a
+//! half-received request), answers with a byte-accurate
+//! `Content-Length`, and accepts with an exponential poll backoff
+//! (1 ms → 50 ms, reset on every accepted connection) instead of a
+//! fixed busy-sleep.
 
+use crate::telemetry::stream::{prometheus_text_snapshot, FleetHub};
 use crate::telemetry::{prometheus_text, Sample};
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+/// Largest request head the exporter will buffer before giving up on a
+/// client. Scrapers send a one-line GET; anything bigger is garbage.
+const MAX_REQUEST_BYTES: usize = 8192;
+
+/// Accept-poll backoff bounds (milliseconds).
+const POLL_MIN_MS: u64 = 1;
+const POLL_MAX_MS: u64 = 50;
 
 /// Shared slot the sampler publishes into.
 #[derive(Clone, Default)]
@@ -28,6 +56,7 @@ impl MetricsSlot {
 pub struct Exporter {
     pub addr: std::net::SocketAddr,
     slot: MetricsSlot,
+    hub: FleetHub,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
     worker: Option<JoinHandle<()>>,
 }
@@ -40,20 +69,27 @@ impl Exporter {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let slot = MetricsSlot::default();
+        let hub = FleetHub::new();
         let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let worker = {
             let slot = slot.clone();
+            let hub = hub.clone();
             let shutdown = shutdown.clone();
             std::thread::Builder::new()
                 .name("metrics-exporter".into())
                 .spawn(move || {
+                    let mut backoff_ms = POLL_MIN_MS;
                     while !shutdown.load(std::sync::atomic::Ordering::Relaxed) {
                         match listener.accept() {
                             Ok((stream, _)) => {
-                                let _ = handle(stream, &slot);
+                                backoff_ms = POLL_MIN_MS;
+                                let _ = handle(stream, &slot, &hub);
                             }
                             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(std::time::Duration::from_millis(5));
+                                std::thread::sleep(std::time::Duration::from_millis(
+                                    backoff_ms,
+                                ));
+                                backoff_ms = (backoff_ms * 2).min(POLL_MAX_MS);
                             }
                             Err(_) => break,
                         }
@@ -63,6 +99,7 @@ impl Exporter {
         Ok(Exporter {
             addr,
             slot,
+            hub,
             shutdown,
             worker: Some(worker),
         })
@@ -71,6 +108,11 @@ impl Exporter {
     /// The slot the telemetry loop publishes samples into.
     pub fn slot(&self) -> MetricsSlot {
         self.slot.clone()
+    }
+
+    /// The hub the fleet executors publish snapshots into.
+    pub fn hub(&self) -> FleetHub {
+        self.hub.clone()
     }
 }
 
@@ -84,32 +126,57 @@ impl Drop for Exporter {
     }
 }
 
-fn handle(mut stream: TcpStream, slot: &MetricsSlot) -> Result<()> {
+/// Read until the request head terminator (`\r\n\r\n`), a size cap, or
+/// the read timeout — whichever comes first. Returns what was read;
+/// routing only needs the request line, but waiting for the terminator
+/// stops us racing a client that writes the head in several chunks.
+fn read_request_head(stream: &mut TcpStream) -> String {
+    let mut head: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&chunk[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() >= MAX_REQUEST_BYTES {
+                    break;
+                }
+            }
+            Err(_) => break, // timeout or reset: route on what we have
+        }
+    }
+    String::from_utf8_lossy(&head).into_owned()
+}
+
+fn handle(mut stream: TcpStream, slot: &MetricsSlot, hub: &FleetHub) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
-    let mut buf = [0u8; 1024];
-    let n = stream.read(&mut buf).unwrap_or(0);
-    let req = String::from_utf8_lossy(&buf[..n]);
+    let req = read_request_head(&mut stream);
     let (status, body) = if req.starts_with("GET /metrics") {
-        match slot.latest() {
-            Some(s) => ("200 OK", prometheus_text(&s)),
-            None => ("200 OK", String::from("# no samples yet\n")),
+        // fleet snapshot first; fall back to the single-board sample
+        match (hub.latest(), slot.latest()) {
+            (Some(snap), _) => ("200 OK", prometheus_text_snapshot(&snap)),
+            (None, Some(s)) => ("200 OK", prometheus_text(&s)),
+            (None, None) => ("200 OK", String::from("# no samples yet\n")),
         }
     } else if req.starts_with("GET /healthz") {
         ("200 OK", String::from("ok\n"))
     } else {
         ("404 Not Found", String::from("not found\n"))
     };
-    let resp = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
-    stream.write_all(resp.as_bytes())?;
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
     Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::telemetry::stream::{BoardGauge, FleetSnapshot};
 
     fn sample() -> Sample {
         Sample {
@@ -122,12 +189,56 @@ mod tests {
         }
     }
 
+    fn snapshot() -> FleetSnapshot {
+        FleetSnapshot {
+            t_s: 30.0,
+            requests_total: 100,
+            served: 97,
+            dropped: 3,
+            violations: 5,
+            p50_ms: 12.0,
+            p95_ms: 40.0,
+            p99_ms: 80.0,
+            boards: vec![BoardGauge {
+                board: 0,
+                class: "zcu102".into(),
+                phase: "serving".into(),
+                power_w: 9.5,
+                queue_depth: 2,
+                done: 97,
+                fails: 1,
+                requeues: 4,
+                derates: 2,
+                link_events: 3,
+                wakes: 1,
+            }],
+            online_text: String::from("dpuonline_decisions_total 7\n"),
+        }
+    }
+
     fn get(addr: std::net::SocketAddr, path: &str) -> String {
         let mut s = TcpStream::connect(addr).unwrap();
         write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
         out
+    }
+
+    /// A client that writes the request head in two chunks with a pause
+    /// in between — the race the old single-read handler lost.
+    fn get_slowly(addr: std::net::SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTT").unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        write!(s, "P/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn body_of(resp: &str) -> &str {
+        resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("")
     }
 
     #[test]
@@ -143,6 +254,44 @@ mod tests {
 
         assert!(get(exp.addr, "/healthz").contains("ok"));
         assert!(get(exp.addr, "/nope").starts_with("HTTP/1.1 404"));
+    }
+
+    #[test]
+    fn fleet_snapshot_takes_precedence_and_carries_online_gauges() {
+        let exp = Exporter::spawn(0).unwrap();
+        exp.slot().publish(sample());
+        exp.hub().publish(snapshot());
+        let resp = get(exp.addr, "/metrics");
+        assert!(resp.contains("dpufleet_requests_served_total 97"));
+        assert!(resp.contains("board=\"0\""));
+        assert!(resp.contains("dpufleet_board_link_events_total"));
+        assert!(resp.contains("dpuonline_decisions_total 7"));
+        // the board sample is subsumed, not interleaved
+        assert!(!resp.contains("zcu102_power_watts"));
+    }
+
+    /// Regression: two consecutive scrapes both get complete,
+    /// Content-Length-accurate responses (the old handler could answer
+    /// before the request finished arriving, truncating the exchange),
+    /// even when the client dribbles the request head.
+    #[test]
+    fn double_scrape_returns_complete_responses() {
+        let exp = Exporter::spawn(0).unwrap();
+        exp.hub().publish(snapshot());
+        for fetch in [get, get_slowly] {
+            let resp = fetch(exp.addr, "/metrics");
+            assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+            let body = body_of(&resp);
+            let declared: usize = resp
+                .lines()
+                .find_map(|l| l.strip_prefix("Content-Length: "))
+                .unwrap()
+                .trim()
+                .parse()
+                .unwrap();
+            assert_eq!(body.len(), declared, "body must match Content-Length");
+            assert!(body.contains("dpufleet_latency_ms{quantile=\"0.99\"}"));
+        }
     }
 
     #[test]

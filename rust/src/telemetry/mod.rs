@@ -10,11 +10,16 @@ pub mod exporter;
 pub mod fleet;
 pub mod latency;
 pub mod online;
+pub mod stream;
 
 pub use exporter::{Exporter, MetricsSlot};
 pub use fleet::FleetStats;
 pub use latency::LatencyHistogram;
 pub use online::prometheus_text_online;
+pub use stream::{
+    FleetHub, FleetSnapshot, GaugePoint, GaugeRing, OrderedFold, ReservoirSpec, SampledTrail,
+    StreamFingerprint, TrailTracker,
+};
 
 use crate::workload::{WorkloadState, XorShift64};
 use std::collections::VecDeque;

@@ -1,0 +1,899 @@
+//! Streaming fleet telemetry (DESIGN.md §14): constant-memory request
+//! trails, a rolling served-request fingerprint, per-board gauge rings,
+//! and the live fleet `/metrics` snapshot.
+//!
+//! The unbounded `FleetReport::trails` bookkeeping this replaces grew one
+//! entry per request — gigabytes at the 10k-board / 100M-request scale the
+//! ROADMAP targets. Everything here is O(sample cap) or O(boards):
+//!
+//! - [`ReservoirSpec`] picks a deterministic, *merge-closed* weighted
+//!   sample of request ids: membership is a pure predicate of
+//!   `(seed, req)` plus a precomputed threshold, so per-shard trackers
+//!   observe exactly the same member set the single-queue path does and
+//!   their union IS the merge — no cross-shard coordination, no
+//!   order-dependent replacement.
+//! - [`TrailTracker`] records arrival→route→(requeue)→start→done spans
+//!   for members only.
+//! - [`OrderedFold`] / [`StreamFingerprint`] fold served-request records
+//!   into a digest in canonical `(done_s, req)` order as they complete,
+//!   buffering only co-instantaneous completions (O(boards)).
+//! - [`GaugeRing`] retains a bounded per-board time series sampled at
+//!   decision instants.
+//! - [`FleetSnapshot`] + [`prometheus_text_snapshot`] are the fleet-wide
+//!   scrape plane served by [`crate::telemetry::exporter::Exporter`].
+
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Deterministic per-request sampling priority: a splitmix64 finalizer
+/// over `(seed, req)`. Pure — every executor, shard, and thread computes
+/// the identical value, which is what makes the reservoir merge-closed.
+pub fn trail_priority(seed: u64, req: usize) -> u64 {
+    let mut z = seed ^ (req as u64).wrapping_add(1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A deterministic weighted reservoir over the request ids `0..n`: the
+/// `cap` requests with the smallest `(trail_priority(seed, req), req)`
+/// keys are members. Because the key is a pure function of `(seed, req)`
+/// and the threshold is fixed up front from the scenario size, membership
+/// is an O(1) predicate any shard can evaluate locally — the union of
+/// per-shard samples over any partition of the requests equals the
+/// single-queue sample by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReservoirSpec {
+    seed: u64,
+    cap: usize,
+    /// Largest `(priority, req)` key that is IN the sample; `None` means
+    /// the sample is empty (cap 0 or no requests).
+    threshold: Option<(u64, usize)>,
+}
+
+impl ReservoirSpec {
+    /// Build the spec for a scenario of `n_requests` requests.
+    pub fn for_requests(seed: u64, n_requests: usize, cap: usize) -> Self {
+        if cap == 0 || n_requests == 0 {
+            return ReservoirSpec {
+                seed,
+                cap,
+                threshold: None,
+            };
+        }
+        if cap >= n_requests {
+            // every request is a member — common for test-sized scenarios
+            return ReservoirSpec {
+                seed,
+                cap,
+                threshold: Some((u64::MAX, usize::MAX)),
+            };
+        }
+        // bounded max-heap of the cap smallest keys: O(n log cap) time,
+        // O(cap) memory — never materializes the full key list
+        let mut heap: BinaryHeap<(u64, usize)> = BinaryHeap::with_capacity(cap + 1);
+        for req in 0..n_requests {
+            let key = (trail_priority(seed, req), req);
+            if heap.len() < cap {
+                heap.push(key);
+            } else if key < *heap.peek().expect("heap holds cap keys") {
+                heap.pop();
+                heap.push(key);
+            }
+        }
+        ReservoirSpec {
+            seed,
+            cap,
+            threshold: heap.peek().copied(),
+        }
+    }
+
+    /// Is request `req` in the sample? Pure and O(1).
+    pub fn contains(&self, req: usize) -> bool {
+        match self.threshold {
+            None => false,
+            Some(th) => (trail_priority(self.seed, req), req) <= th,
+        }
+    }
+
+    /// The configured sample cap (member count is `min(cap, n_requests)`).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+/// One sampled request trail: the span skeleton of a request's life.
+/// Unset timestamps are negative; `board` is `usize::MAX` until routed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampledTrail {
+    /// Index into the scenario request stream.
+    pub req: usize,
+    /// Board that (last) owned the request.
+    pub board: usize,
+    /// Arrival time at the admission layer.
+    pub at_s: f64,
+    /// First serve start (earliest across re-routes).
+    pub start_s: f64,
+    /// Completion time.
+    pub done_s: f64,
+    /// Times the request was re-routed off a dying board.
+    pub requeues: u32,
+    /// True iff the request was explicitly dropped (no routable board).
+    pub dropped: bool,
+}
+
+impl SampledTrail {
+    fn fresh(req: usize) -> Self {
+        SampledTrail {
+            req,
+            board: usize::MAX,
+            at_s: -1.0,
+            start_s: -1.0,
+            done_s: -1.0,
+            requeues: 0,
+            dropped: false,
+        }
+    }
+
+    /// End-to-end latency in ms, if the request completed.
+    pub fn latency_ms(&self) -> Option<f64> {
+        if self.done_s >= 0.0 && self.at_s >= 0.0 {
+            Some((self.done_s - self.at_s) * 1e3)
+        } else {
+            None
+        }
+    }
+}
+
+/// Collects [`SampledTrail`]s for reservoir members as executor hooks
+/// fire. Memory is O(cap) regardless of request count; a shard-local
+/// tracker over a subset of the requests produces a subset of the trails,
+/// and [`TrailTracker::absorb`] unions them back losslessly.
+#[derive(Debug, Clone)]
+pub struct TrailTracker {
+    spec: ReservoirSpec,
+    slots: HashMap<usize, usize>,
+    trails: Vec<SampledTrail>,
+}
+
+impl TrailTracker {
+    pub fn new(spec: ReservoirSpec) -> Self {
+        let hint = spec.cap.min(4096);
+        TrailTracker {
+            spec,
+            slots: HashMap::with_capacity(hint),
+            trails: Vec::with_capacity(hint),
+        }
+    }
+
+    pub fn spec(&self) -> ReservoirSpec {
+        self.spec
+    }
+
+    fn slot(&mut self, req: usize) -> Option<usize> {
+        if !self.spec.contains(req) {
+            return None;
+        }
+        if let Some(&i) = self.slots.get(&req) {
+            return Some(i);
+        }
+        let i = self.trails.len();
+        self.trails.push(SampledTrail::fresh(req));
+        self.slots.insert(req, i);
+        Some(i)
+    }
+
+    /// Request `req` (which arrived at `at_s`) was routed to `board`.
+    pub fn on_route(&mut self, req: usize, at_s: f64, board: usize) {
+        if let Some(i) = self.slot(req) {
+            self.trails[i].at_s = at_s;
+            self.trails[i].board = board;
+        }
+    }
+
+    /// Request `req` was re-routed off a dying board onto `board`.
+    pub fn on_requeue(&mut self, req: usize, board: usize) {
+        if let Some(i) = self.slot(req) {
+            self.trails[i].board = board;
+            self.trails[i].requeues += 1;
+        }
+    }
+
+    /// Request `req` started service at `t_s`. The earliest start wins so
+    /// the sharded merge (which may see a post-requeue start first) lands
+    /// on the same trail as the single-queue path.
+    pub fn on_start(&mut self, req: usize, t_s: f64) {
+        if let Some(i) = self.slot(req) {
+            let tr = &mut self.trails[i];
+            if tr.start_s < 0.0 || t_s < tr.start_s {
+                tr.start_s = t_s;
+            }
+        }
+    }
+
+    /// Request `req` completed at `t_s`.
+    pub fn on_done(&mut self, req: usize, t_s: f64) {
+        if let Some(i) = self.slot(req) {
+            self.trails[i].done_s = t_s;
+        }
+    }
+
+    /// Request `req` (arrived `at_s`) was explicitly dropped.
+    pub fn on_drop(&mut self, req: usize, at_s: f64) {
+        if let Some(i) = self.slot(req) {
+            if self.trails[i].at_s < 0.0 {
+                self.trails[i].at_s = at_s;
+            }
+            self.trails[i].dropped = true;
+        }
+    }
+
+    /// Union another tracker's observations into this one (the sharded
+    /// merge). Field-wise: earliest start wins, latest board/done wins,
+    /// requeues add — the same outcome the single-queue tracker records.
+    pub fn absorb(&mut self, other: TrailTracker) {
+        for tr in other.trails {
+            if let Some(i) = self.slot(tr.req) {
+                let mine = &mut self.trails[i];
+                if mine.at_s < 0.0 {
+                    mine.at_s = tr.at_s;
+                }
+                if tr.board != usize::MAX {
+                    mine.board = tr.board;
+                }
+                if tr.start_s >= 0.0 && (mine.start_s < 0.0 || tr.start_s < mine.start_s) {
+                    mine.start_s = tr.start_s;
+                }
+                if tr.done_s >= 0.0 {
+                    mine.done_s = tr.done_s;
+                }
+                mine.requeues += tr.requeues;
+                mine.dropped |= tr.dropped;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.trails.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trails.is_empty()
+    }
+
+    /// Finish: the sampled trails in request-id order (the canonical
+    /// report order, identical for every executor and thread count).
+    pub fn into_trails(self) -> Vec<SampledTrail> {
+        let mut v = self.trails;
+        v.sort_by_key(|t| t.req);
+        v
+    }
+}
+
+/// Rolling fingerprint over served-request records: an FNV-1a chain over
+/// `(req, done_s bits, latency_ms bits)` words folded in canonical
+/// `(done_s, req)` order. Constant memory; byte-identical across thread
+/// counts because every executor folds the same records in the same
+/// canonical order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamFingerprint {
+    hash: u64,
+    count: u64,
+}
+
+impl StreamFingerprint {
+    pub fn new() -> Self {
+        StreamFingerprint {
+            hash: 0xcbf2_9ce4_8422_2325,
+            count: 0,
+        }
+    }
+
+    fn mix(&mut self, word: u64) {
+        let mut h = self.hash;
+        for b in word.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        self.hash = h;
+    }
+
+    /// Fold one served-request record.
+    pub fn fold(&mut self, req: usize, done_s: f64, latency_ms: f64) {
+        self.mix(req as u64);
+        self.mix(done_s.to_bits());
+        self.mix(latency_ms.to_bits());
+        self.count += 1;
+    }
+
+    /// Records folded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The digest string embedded in [`crate::coordinator::fleet::FleetReport::fingerprint`].
+    pub fn digest(&self) -> String {
+        format!("{:016x}x{}", self.hash, self.count)
+    }
+}
+
+impl Default for StreamFingerprint {
+    fn default() -> Self {
+        StreamFingerprint::new()
+    }
+}
+
+/// Feeds a [`StreamFingerprint`] from a stream of completions that is
+/// nondecreasing in time but unordered among equal timestamps (the
+/// single-queue event loop pops equal-time `FrameDone`s in push order).
+/// Records sharing the current completion instant are buffered and
+/// flushed sorted by request id when time advances — O(simultaneous
+/// completions) = O(boards) memory, never O(requests). The sharded
+/// executor folds its merged, `(done_s, req)`-sorted completion list
+/// directly and lands on the same digest.
+#[derive(Debug, Clone)]
+pub struct OrderedFold {
+    fp: StreamFingerprint,
+    t: f64,
+    pending: Vec<(usize, f64, f64)>,
+}
+
+impl OrderedFold {
+    pub fn new() -> Self {
+        OrderedFold {
+            fp: StreamFingerprint::new(),
+            t: f64::NEG_INFINITY,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Record a completion. `done_s` must be nondecreasing across calls.
+    pub fn push(&mut self, req: usize, done_s: f64, latency_ms: f64) {
+        debug_assert!(
+            done_s >= self.t,
+            "completions must arrive in nondecreasing time"
+        );
+        if done_s > self.t {
+            self.flush();
+            self.t = done_s;
+        }
+        self.pending.push((req, done_s, latency_ms));
+    }
+
+    fn flush(&mut self) {
+        self.pending.sort_by_key(|&(req, _, _)| req);
+        for &(req, done_s, latency_ms) in &self.pending {
+            self.fp.fold(req, done_s, latency_ms);
+        }
+        self.pending.clear();
+    }
+
+    /// Flush the final instant and return the fingerprint.
+    pub fn finish(mut self) -> StreamFingerprint {
+        self.flush();
+        self.fp
+    }
+}
+
+impl Default for OrderedFold {
+    fn default() -> Self {
+        OrderedFold::new()
+    }
+}
+
+/// One point of a board's decision-instant time series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaugePoint {
+    /// Decision instant (simulated seconds).
+    pub t_s: f64,
+    /// Board phase name at the instant (e.g. "holding").
+    pub phase: &'static str,
+    /// Requests queued on the board.
+    pub queue_depth: u32,
+    /// Predicted backlog ahead of the queue head (seconds).
+    pub backlog_s: f64,
+    /// Instantaneous phase power draw (W).
+    pub power_w: f64,
+    /// Thermal derate severity, 0..1.
+    pub derate: f64,
+    /// Link degradation severity, 0..1.
+    pub link: f64,
+    /// SLO headroom of the queue head (seconds; negative = already late).
+    pub headroom_s: f64,
+}
+
+/// Fixed-capacity ring of [`GaugePoint`]s — the bounded per-board profile
+/// table the online learner and autoscaler can read instead of
+/// instantaneous peeks.
+#[derive(Debug, Clone)]
+pub struct GaugeRing {
+    cap: usize,
+    buf: VecDeque<GaugePoint>,
+}
+
+impl GaugeRing {
+    pub fn new(cap: usize) -> Self {
+        GaugeRing {
+            cap,
+            buf: VecDeque::with_capacity(cap.min(256)),
+        }
+    }
+
+    pub fn push(&mut self, p: GaugePoint) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(p);
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn latest(&self) -> Option<&GaugePoint> {
+        self.buf.back()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &GaugePoint> {
+        self.buf.iter()
+    }
+
+    pub fn to_vec(&self) -> Vec<GaugePoint> {
+        self.buf.iter().copied().collect()
+    }
+}
+
+/// Per-board row of a [`FleetSnapshot`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BoardGauge {
+    pub board: usize,
+    pub class: String,
+    pub phase: String,
+    pub power_w: f64,
+    pub queue_depth: usize,
+    pub done: u64,
+    pub fails: u64,
+    pub requeues: u64,
+    pub derates: u64,
+    pub link_events: u64,
+    pub wakes: u64,
+}
+
+/// A point-in-time view of the whole fleet: what `/metrics` serves.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetSnapshot {
+    /// Simulated time of the snapshot (seconds).
+    pub t_s: f64,
+    /// Requests in the scenario stream.
+    pub requests_total: usize,
+    /// Requests served so far.
+    pub served: u64,
+    /// Requests explicitly dropped so far.
+    pub dropped: u64,
+    /// SLO violations so far.
+    pub violations: u64,
+    /// Latency quantiles from the merged per-board histograms (ms).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub boards: Vec<BoardGauge>,
+    /// Pre-rendered `dpuonline_*` exposition text (empty when the run has
+    /// no online agent) — appended verbatim to the scrape body.
+    pub online_text: String,
+}
+
+/// Shared slot the fleet executors publish [`FleetSnapshot`]s into and
+/// the exporter reads from — the fleet-wide analog of
+/// [`crate::telemetry::exporter::MetricsSlot`].
+#[derive(Debug, Clone, Default)]
+pub struct FleetHub {
+    inner: Arc<Mutex<Option<FleetSnapshot>>>,
+}
+
+impl FleetHub {
+    pub fn new() -> Self {
+        FleetHub::default()
+    }
+
+    pub fn publish(&self, s: FleetSnapshot) {
+        *self.inner.lock().expect("fleet hub poisoned") = Some(s);
+    }
+
+    pub fn latest(&self) -> Option<FleetSnapshot> {
+        self.inner.lock().expect("fleet hub poisoned").clone()
+    }
+}
+
+/// Render a fleet snapshot in Prometheus text exposition format: fleet
+/// counters + latency quantiles, then per-class and per-board series
+/// (`dpufleet_*` families), then any online-adaptation gauges.
+pub fn prometheus_text_snapshot(s: &FleetSnapshot) -> String {
+    let mut out = String::with_capacity(4096);
+    let family = |out: &mut String, name: &str, kind: &str, help: &str| {
+        out.push_str(&format!("# HELP dpufleet_{name} {help}\n"));
+        out.push_str(&format!("# TYPE dpufleet_{name} {kind}\n"));
+    };
+    family(&mut out, "snapshot_time_seconds", "gauge", "Simulated time of this snapshot");
+    out.push_str(&format!("dpufleet_snapshot_time_seconds {}\n", s.t_s));
+    family(&mut out, "requests_total", "counter", "Requests in the scenario stream");
+    out.push_str(&format!("dpufleet_requests_total {}\n", s.requests_total));
+    family(&mut out, "requests_served_total", "counter", "Requests served");
+    out.push_str(&format!("dpufleet_requests_served_total {}\n", s.served));
+    family(&mut out, "requests_dropped_total", "counter", "Requests explicitly dropped");
+    out.push_str(&format!("dpufleet_requests_dropped_total {}\n", s.dropped));
+    family(&mut out, "slo_violations_total", "counter", "Requests served past their SLO");
+    out.push_str(&format!("dpufleet_slo_violations_total {}\n", s.violations));
+    family(&mut out, "latency_ms", "gauge", "End-to-end latency quantiles (merged histograms)");
+    for (q, v) in [("0.5", s.p50_ms), ("0.95", s.p95_ms), ("0.99", s.p99_ms)] {
+        out.push_str(&format!("dpufleet_latency_ms{{quantile=\"{q}\"}} {v}\n"));
+    }
+
+    // per-class aggregates (BTreeMap for a stable label order)
+    let mut by_class: std::collections::BTreeMap<&str, (u64, f64, usize)> =
+        std::collections::BTreeMap::new();
+    for b in &s.boards {
+        let e = by_class.entry(b.class.as_str()).or_insert((0, 0.0, 0));
+        e.0 += b.done;
+        e.1 += b.power_w;
+        e.2 += 1;
+    }
+    family(&mut out, "class_requests_done_total", "counter", "Requests served per board class");
+    for (class, (done, _, _)) in &by_class {
+        out.push_str(&format!(
+            "dpufleet_class_requests_done_total{{class=\"{class}\"}} {done}\n"
+        ));
+    }
+    family(&mut out, "class_power_watts", "gauge", "Aggregate instantaneous power per board class");
+    for (class, (_, watts, _)) in &by_class {
+        out.push_str(&format!(
+            "dpufleet_class_power_watts{{class=\"{class}\"}} {watts}\n"
+        ));
+    }
+    family(&mut out, "class_boards", "gauge", "Provisioned boards per class");
+    for (class, (_, _, n)) in &by_class {
+        out.push_str(&format!("dpufleet_class_boards{{class=\"{class}\"}} {n}\n"));
+    }
+
+    // per-board series
+    let board_family = |out: &mut String, name: &str, kind: &str, help: &str, f: &dyn Fn(&BoardGauge) -> String| {
+        family(out, name, kind, help);
+        for b in &s.boards {
+            out.push_str(&format!(
+                "dpufleet_{name}{{board=\"{}\",class=\"{}\"}} {}\n",
+                b.board,
+                b.class,
+                f(b)
+            ));
+        }
+    };
+    board_family(&mut out, "board_power_watts", "gauge", "Instantaneous board power", &|b| {
+        format!("{}", b.power_w)
+    });
+    board_family(&mut out, "board_queue_depth", "gauge", "Requests queued on the board", &|b| {
+        b.queue_depth.to_string()
+    });
+    board_family(&mut out, "board_requests_done_total", "counter", "Requests served by the board", &|b| {
+        b.done.to_string()
+    });
+    board_family(&mut out, "board_fails_total", "counter", "Board-death fault events", &|b| {
+        b.fails.to_string()
+    });
+    board_family(&mut out, "board_requeues_total", "counter", "Requests re-routed off the board at death", &|b| {
+        b.requeues.to_string()
+    });
+    board_family(&mut out, "board_derate_events_total", "counter", "Thermal derate steps applied", &|b| {
+        b.derates.to_string()
+    });
+    board_family(&mut out, "board_link_events_total", "counter", "Link degradation steps applied", &|b| {
+        b.link_events.to_string()
+    });
+    board_family(&mut out, "board_wakes_total", "counter", "Sleep-to-active transitions (incl. autoscale provisions)", &|b| {
+        b.wakes.to_string()
+    });
+    family(&mut out, "board_phase", "gauge", "1 for the board's current phase label");
+    for b in &s.boards {
+        out.push_str(&format!(
+            "dpufleet_board_phase{{board=\"{}\",class=\"{}\",phase=\"{}\"}} 1\n",
+            b.board, b.class, b.phase
+        ));
+    }
+
+    out.push_str(&s.online_text);
+    out
+}
+
+/// Render one sampled trail as a span-style JSON line: the request's
+/// queue and serve spans with board/class/fault annotations. Hand-rolled
+/// JSON like the rest of the repo (no serde).
+pub fn span_json(t: &SampledTrail, model: &str, class: &str) -> String {
+    let board = if t.board == usize::MAX {
+        -1
+    } else {
+        t.board as i64
+    };
+    let latency_ms = t.latency_ms().unwrap_or(-1.0);
+    let mut spans = String::new();
+    if t.start_s >= 0.0 {
+        spans.push_str(&format!(
+            "{{\"name\":\"queue\",\"t0_s\":{:.9},\"t1_s\":{:.9}}}",
+            t.at_s, t.start_s
+        ));
+    }
+    if t.start_s >= 0.0 && t.done_s >= 0.0 {
+        spans.push_str(&format!(
+            ",{{\"name\":\"serve\",\"t0_s\":{:.9},\"t1_s\":{:.9}}}",
+            t.start_s, t.done_s
+        ));
+    }
+    format!(
+        "{{\"req\":{},\"model\":\"{}\",\"board\":{},\"class\":\"{}\",\"at_s\":{:.9},\"start_s\":{:.9},\"done_s\":{:.9},\"latency_ms\":{:.6},\"requeues\":{},\"dropped\":{},\"spans\":[{}]}}",
+        t.req, model, board, class, t.at_s, t.start_s, t.done_s, latency_ms, t.requeues, t.dropped, spans
+    )
+}
+
+/// Peak resident set size of this process in MiB (`VmHWM` from
+/// `/proc/self/status`), or 0.0 where that interface does not exist.
+pub fn peak_rss_mb() -> f64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb = rest.trim().trim_end_matches("kB").trim();
+                if let Ok(kb) = kb.parse::<f64>() {
+                    return kb / 1024.0;
+                }
+            }
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_membership_is_exactly_the_cap_smallest_keys() {
+        let (seed, n, cap) = (42u64, 1000usize, 64usize);
+        let spec = ReservoirSpec::for_requests(seed, n, cap);
+        let mut keys: Vec<(u64, usize)> =
+            (0..n).map(|r| (trail_priority(seed, r), r)).collect();
+        keys.sort();
+        let want: std::collections::HashSet<usize> =
+            keys[..cap].iter().map(|&(_, r)| r).collect();
+        let got: std::collections::HashSet<usize> =
+            (0..n).filter(|&r| spec.contains(r)).collect();
+        assert_eq!(got, want);
+        assert_eq!(got.len(), cap);
+    }
+
+    #[test]
+    fn reservoir_is_merge_closed_over_any_partition() {
+        let (seed, n, cap) = (7u64, 500usize, 32usize);
+        let spec = ReservoirSpec::for_requests(seed, n, cap);
+        let single: Vec<usize> = (0..n).filter(|&r| spec.contains(r)).collect();
+        // any partition: shard by req % 3 — each shard evaluates the same
+        // pure predicate, so the union is identical
+        let mut union: Vec<usize> = Vec::new();
+        for shard in 0..3usize {
+            union.extend((0..n).filter(|&r| r % 3 == shard && spec.contains(r)));
+        }
+        union.sort_unstable();
+        assert_eq!(union, single);
+    }
+
+    #[test]
+    fn reservoir_edge_cases() {
+        assert!(!ReservoirSpec::for_requests(1, 0, 8).contains(0));
+        assert!(!ReservoirSpec::for_requests(1, 100, 0).contains(5));
+        let all = ReservoirSpec::for_requests(1, 10, 10);
+        assert!((0..10).all(|r| all.contains(r)));
+        let seeds_differ = ReservoirSpec::for_requests(1, 1000, 10);
+        let other = ReservoirSpec::for_requests(2, 1000, 10);
+        let a: Vec<usize> = (0..1000).filter(|&r| seeds_differ.contains(r)).collect();
+        let b: Vec<usize> = (0..1000).filter(|&r| other.contains(r)).collect();
+        assert_ne!(a, b, "different seeds pick different samples");
+    }
+
+    #[test]
+    fn tracker_memory_is_bounded_by_cap_on_a_million_requests() {
+        let n = 1_000_000usize;
+        let cap = 256usize;
+        let spec = ReservoirSpec::for_requests(9, n, cap);
+        let mut tracker = TrailTracker::new(spec);
+        for req in 0..n {
+            let at = req as f64 * 1e-3;
+            tracker.on_route(req, at, req % 16);
+            tracker.on_start(req, at + 0.001);
+            tracker.on_done(req, at + 0.002);
+        }
+        assert_eq!(tracker.len(), cap, "exactly cap members tracked");
+        let trails = tracker.into_trails();
+        assert_eq!(trails.len(), cap);
+        assert!(trails.windows(2).all(|w| w[0].req < w[1].req));
+        for t in &trails {
+            assert!(spec.contains(t.req));
+            assert!(t.done_s > t.start_s && t.start_s > t.at_s);
+        }
+    }
+
+    #[test]
+    fn tracker_absorb_unions_shard_observations() {
+        let spec = ReservoirSpec::for_requests(3, 100, 100); // all members
+        let mut a = TrailTracker::new(spec);
+        let mut b = TrailTracker::new(spec);
+        a.on_route(5, 1.0, 0);
+        b.on_start(5, 2.0);
+        b.on_done(5, 3.0);
+        a.on_requeue(5, 1);
+        a.absorb(b);
+        let trails = a.into_trails();
+        let t = trails.iter().find(|t| t.req == 5).unwrap();
+        assert_eq!(t.board, 1);
+        assert_eq!(t.at_s, 1.0);
+        assert_eq!(t.start_s, 2.0);
+        assert_eq!(t.done_s, 3.0);
+        assert_eq!(t.requeues, 1);
+    }
+
+    #[test]
+    fn ordered_fold_matches_direct_fold_on_sorted_records() {
+        // canonical order: (done_s, req)
+        let records = [
+            (3usize, 1.0f64, 10.0f64),
+            (7, 1.0, 11.0),
+            (1, 2.0, 12.0),
+            (0, 3.0, 13.0),
+            (2, 3.0, 14.0),
+        ];
+        let mut direct = StreamFingerprint::new();
+        for &(req, d, l) in &records {
+            direct.fold(req, d, l);
+        }
+        // same records, equal-time pairs presented in scrambled order
+        let scrambled = [
+            (7usize, 1.0f64, 11.0f64),
+            (3, 1.0, 10.0),
+            (1, 2.0, 12.0),
+            (2, 3.0, 14.0),
+            (0, 3.0, 13.0),
+        ];
+        let mut fold = OrderedFold::new();
+        for &(req, d, l) in &scrambled {
+            fold.push(req, d, l);
+        }
+        assert_eq!(fold.finish().digest(), direct.digest());
+    }
+
+    #[test]
+    fn stream_fingerprint_is_order_sensitive_and_counts() {
+        let mut a = StreamFingerprint::new();
+        a.fold(0, 1.0, 5.0);
+        a.fold(1, 2.0, 6.0);
+        let mut b = StreamFingerprint::new();
+        b.fold(1, 2.0, 6.0);
+        b.fold(0, 1.0, 5.0);
+        assert_ne!(a.digest(), b.digest());
+        assert_eq!(a.count(), 2);
+        assert!(a.digest().ends_with("x2"));
+    }
+
+    #[test]
+    fn gauge_ring_keeps_the_newest_cap_points() {
+        let mut ring = GaugeRing::new(4);
+        for i in 0..10 {
+            ring.push(GaugePoint {
+                t_s: i as f64,
+                phase: "holding",
+                queue_depth: i as u32,
+                backlog_s: 0.0,
+                power_w: 1.0,
+                derate: 0.0,
+                link: 0.0,
+                headroom_s: 0.1,
+            });
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.cap(), 4);
+        assert_eq!(ring.latest().unwrap().t_s, 9.0);
+        let ts: Vec<f64> = ring.iter().map(|p| p.t_s).collect();
+        assert_eq!(ts, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn snapshot_exposition_names_every_board_and_class() {
+        let snap = FleetSnapshot {
+            t_s: 12.5,
+            requests_total: 100,
+            served: 90,
+            dropped: 2,
+            violations: 5,
+            p50_ms: 10.0,
+            p95_ms: 50.0,
+            p99_ms: 80.0,
+            boards: vec![
+                BoardGauge {
+                    board: 0,
+                    class: "B4096".into(),
+                    phase: "serving".into(),
+                    power_w: 9.5,
+                    queue_depth: 3,
+                    done: 60,
+                    fails: 1,
+                    requeues: 2,
+                    derates: 4,
+                    link_events: 1,
+                    wakes: 2,
+                },
+                BoardGauge {
+                    board: 1,
+                    class: "B512".into(),
+                    phase: "idle".into(),
+                    power_w: 2.5,
+                    queue_depth: 0,
+                    done: 30,
+                    fails: 0,
+                    requeues: 0,
+                    derates: 0,
+                    link_events: 0,
+                    wakes: 1,
+                },
+            ],
+            online_text: String::new(),
+        };
+        let txt = prometheus_text_snapshot(&snap);
+        assert!(txt.contains("dpufleet_requests_served_total 90"));
+        assert!(txt.contains("dpufleet_latency_ms{quantile=\"0.99\"} 80"));
+        assert!(txt.contains("dpufleet_board_power_watts{board=\"0\",class=\"B4096\"} 9.5"));
+        assert!(txt.contains("dpufleet_board_fails_total{board=\"0\",class=\"B4096\"} 1"));
+        assert!(txt.contains("dpufleet_board_link_events_total{board=\"0\",class=\"B4096\"} 1"));
+        assert!(txt.contains("dpufleet_class_boards{class=\"B512\"} 1"));
+        assert!(txt.contains("dpufleet_board_phase{board=\"1\",class=\"B512\",phase=\"idle\"} 1"));
+        // every sample line belongs to a declared family
+        for line in txt.lines() {
+            if !line.starts_with('#') && !line.is_empty() {
+                assert!(line.starts_with("dpufleet_"), "stray line {line:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn span_json_round_trips_the_key_fields() {
+        let t = SampledTrail {
+            req: 17,
+            board: 2,
+            at_s: 1.0,
+            start_s: 1.5,
+            done_s: 2.0,
+            requeues: 1,
+            dropped: false,
+        };
+        let line = span_json(&t, "ResNet18_PR0", "B4096");
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        assert!(line.contains("\"req\":17"));
+        assert!(line.contains("\"model\":\"ResNet18_PR0\""));
+        assert!(line.contains("\"board\":2"));
+        assert!(line.contains("\"latency_ms\":1000.000000"));
+        assert!(line.contains("\"name\":\"queue\""));
+        assert!(line.contains("\"name\":\"serve\""));
+        let unrouted = SampledTrail::fresh(3);
+        let line = span_json(&unrouted, "m", "c");
+        assert!(line.contains("\"board\":-1"));
+        assert!(line.contains("\"spans\":[]"));
+    }
+
+    #[test]
+    fn peak_rss_is_nonnegative() {
+        assert!(peak_rss_mb() >= 0.0);
+    }
+}

@@ -364,6 +364,11 @@ pub enum FaultKind {
     /// No outright death: per-board thermal-derate ramps (the PR 2
     /// [`DriftKind::Thermal`] machinery, quantized into step events).
     Thermal,
+    /// No outright death: per-board link-degradation episodes that
+    /// inflate effective service/transfer time by `1 + permille/1000`
+    /// until the restore event (a congested or renegotiated-down
+    /// board-to-host link).
+    Link,
 }
 
 impl FaultKind {
@@ -372,6 +377,7 @@ impl FaultKind {
             FaultKind::Independent => "independent",
             FaultKind::Correlated => "correlated",
             FaultKind::Thermal => "thermal",
+            FaultKind::Link => "link",
         }
     }
 }
@@ -383,8 +389,9 @@ impl std::str::FromStr for FaultKind {
             "independent" | "ind" => Ok(FaultKind::Independent),
             "correlated" | "corr" => Ok(FaultKind::Correlated),
             "thermal" => Ok(FaultKind::Thermal),
+            "link" => Ok(FaultKind::Link),
             other => anyhow::bail!(
-                "unknown fault kind {other:?} (want independent|correlated|thermal)"
+                "unknown fault kind {other:?} (want independent|correlated|thermal|link)"
             ),
         }
     }
@@ -400,6 +407,9 @@ pub enum FaultAction {
     /// Thermal severity steps to `level`/1000 of the full derating
     /// corner (integer per-mille so the event stays `Copy + Eq`).
     Derate { level: u16 },
+    /// Link degradation steps to `permille`/1000: service/transfer time
+    /// inflates by `1 + permille/1000`; 0 restores the full-rate link.
+    LinkDegrade { permille: u16 },
 }
 
 /// One entry of a precomputed fault timeline, sorted by `(at_s, board)`.
@@ -475,6 +485,20 @@ impl FaultProfile {
         }
     }
 
+    /// Per-board link-degradation episodes (no outright death):
+    /// `magnitude` scales the worst-case service-time inflation.
+    pub fn link(seed: u64) -> FaultProfile {
+        FaultProfile {
+            kind: FaultKind::Link,
+            seed,
+            mtbf_s: 20.0,
+            mttr_s: 10.0,
+            storm_hit: 0.0,
+            magnitude: 0.75,
+            ramp_s: 0.0,
+        }
+    }
+
     /// The default profile of a named kind (the `fleet --faults <kind>`
     /// CLI entry point).
     pub fn named(kind: &str, seed: u64) -> anyhow::Result<FaultProfile> {
@@ -482,6 +506,7 @@ impl FaultProfile {
             FaultKind::Independent => FaultProfile::independent(seed),
             FaultKind::Correlated => FaultProfile::correlated(seed),
             FaultKind::Thermal => FaultProfile::thermal(seed),
+            FaultKind::Link => FaultProfile::link(seed),
         })
     }
 
@@ -588,6 +613,41 @@ impl FaultProfile {
                             at_s: ts,
                             board: b,
                             action: FaultAction::Derate { level },
+                        });
+                    }
+                }
+            }
+            FaultKind::Link => {
+                for b in 0..boards {
+                    let mut rng = XorShift64::new(
+                        self.seed
+                            .wrapping_mul(0x11_4B_DE64)
+                            .wrapping_add(b as u64 + 1),
+                    );
+                    let mut t = 0.0f64;
+                    loop {
+                        t += exp(&mut rng, self.mtbf_s).max(1e-3);
+                        if t >= horizon_s {
+                            break;
+                        }
+                        // each episode draws its own severity in
+                        // [magnitude/2, magnitude] — links degrade by
+                        // varying amounts, deaths never happen here
+                        let sev = self.magnitude * (0.5 + 0.5 * rng.next_f64());
+                        let permille = (sev * 1000.0).round().clamp(0.0, 1000.0) as u16;
+                        out.push(FaultEvent {
+                            at_s: t,
+                            board: b,
+                            action: FaultAction::LinkDegrade { permille },
+                        });
+                        t += exp(&mut rng, self.mttr_s).max(1e-3);
+                        if !t.is_finite() || t >= horizon_s {
+                            break; // degraded to the end of the span
+                        }
+                        out.push(FaultEvent {
+                            at_s: t,
+                            board: b,
+                            action: FaultAction::LinkDegrade { permille: 0 },
                         });
                     }
                 }
@@ -825,6 +885,7 @@ mod tests {
             FaultProfile::independent as fn(u64) -> FaultProfile,
             FaultProfile::correlated,
             FaultProfile::thermal,
+            FaultProfile::link,
         ] {
             let p = mk(7);
             let a = p.timeline(4, 120.0);
@@ -858,7 +919,35 @@ mod tests {
                         assert!(!up, "board {b}: Recover while up");
                         up = true;
                     }
-                    FaultAction::Derate { .. } => panic!("independent kind derates"),
+                    other => panic!("independent kind emitted {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn link_timeline_alternates_degrade_restore_per_board() {
+        let p = FaultProfile::link(13);
+        let tl = p.timeline(3, 500.0);
+        assert!(!tl.is_empty(), "500 s at MTBF 20 must degrade sometimes");
+        for b in 0..3 {
+            let mut healthy = true;
+            for e in tl.iter().filter(|e| e.board == b) {
+                match e.action {
+                    FaultAction::LinkDegrade { permille } => {
+                        if healthy {
+                            // onset: severity in [magnitude/2, magnitude]
+                            assert!(
+                                permille > 0 && permille <= 750,
+                                "board {b}: onset severity {permille}"
+                            );
+                            healthy = false;
+                        } else {
+                            assert_eq!(permille, 0, "board {b}: restore must be 0");
+                            healthy = true;
+                        }
+                    }
+                    other => panic!("link kind emitted {other:?}"),
                 }
             }
         }
@@ -901,7 +990,12 @@ mod tests {
 
     #[test]
     fn fault_kind_round_trips_and_rejects_junk() {
-        for k in [FaultKind::Independent, FaultKind::Correlated, FaultKind::Thermal] {
+        for k in [
+            FaultKind::Independent,
+            FaultKind::Correlated,
+            FaultKind::Thermal,
+            FaultKind::Link,
+        ] {
             assert_eq!(k.name().parse::<FaultKind>().unwrap(), k);
         }
         assert_eq!("corr".parse::<FaultKind>().unwrap(), FaultKind::Correlated);

@@ -5,14 +5,15 @@
 //! truncated calibration, junk CSV).
 //!
 //! Runtime failures (DESIGN.md §13): seeded board deaths, correlated
-//! failure storms and the SLO-pressure autoscaler on the fleet event
-//! core. The contracts under test: no request is ever lost silently
-//! (arrivals == served + explicitly dropped, per model), SLO-aware
-//! routing beats round-robin on p99 through a storm, the autoscaler
-//! provisions under a flash crowd and drains on the trough, fault runs
-//! keep the cross-thread-count fingerprint contract for every
-//! RoutingPolicy x baseline combo, and event-budget exhaustion names
-//! the dead board.
+//! failure storms, link-degradation episodes and the SLO-pressure
+//! autoscaler on the fleet event core. The contracts under test: no
+//! request is ever lost silently (arrivals == served + explicitly
+//! dropped, per model), SLO-aware routing beats round-robin on p99
+//! through a storm, link degradation slows service without dropping
+//! anything, the autoscaler provisions under a flash crowd and drains
+//! on the trough, fault runs keep the cross-thread-count fingerprint
+//! contract for every RoutingPolicy x baseline combo, and event-budget
+//! exhaustion names the dead board.
 
 use dpuconfig::coordinator::fleet::{
     AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetRequest,
@@ -126,8 +127,13 @@ fn fleet(cfg: FleetConfig, baseline: Baseline) -> FleetCoordinator {
 }
 
 /// Fleet-level and per-model request conservation: every arrival is
-/// served or explicitly dropped, with trails and the per-model report
-/// telling the same story.
+/// served or explicitly dropped, with the per-model report and the
+/// sampled trails telling the same story. Trails are a deterministic
+/// reservoir sample since DESIGN.md §14 — the ledger lives in the
+/// counters; each sampled trail must still be internally consistent
+/// with the scenario, and when the sample happens to be exhaustive
+/// (request count under the cap) its served/dropped split must match
+/// the counters exactly.
 fn assert_conserved(r: &FleetReport, scenario: &FleetScenario) {
     assert_eq!(
         r.requests_done() + r.dropped,
@@ -137,35 +143,52 @@ fn assert_conserved(r: &FleetReport, scenario: &FleetScenario) {
         r.dropped,
         r.requests_total
     );
-    let served = r.trails.iter().filter(|t| t.done_s >= 0.0).count() as u64;
-    let lost = r.trails.iter().filter(|t| t.done_s < 0.0).count() as u64;
-    assert_eq!(served, r.requests_done(), "trails disagree with board counters");
-    assert_eq!(lost, r.dropped, "unfinished trails must all be explicit drops");
-
-    // per model: arrivals == served + dropped, and the latency report
-    // counts exactly the served ones
+    // the per-model latency report accounts every served request
+    let reported: u64 = r.by_model.iter().map(|m| m.done).sum();
+    assert_eq!(
+        reported,
+        r.requests_done(),
+        "per-model report disagrees with board counters"
+    );
     let mut arrivals: HashMap<String, u64> = HashMap::new();
-    let mut served_m: HashMap<String, u64> = HashMap::new();
-    for (i, q) in scenario.requests.iter().enumerate() {
+    for q in &scenario.requests {
         *arrivals.entry(q.model.name()).or_default() += 1;
-        if r.trails[i].done_s >= 0.0 {
-            *served_m.entry(q.model.name()).or_default() += 1;
-        }
     }
-    for (model, &n) in &arrivals {
-        let s = served_m.get(model).copied().unwrap_or(0);
-        let reported = r.model_latency(model).map(|m| m.done).unwrap_or(0);
-        assert_eq!(reported, s, "{model}: report says {reported} done, trails say {s}");
-        assert!(s <= n, "{model}: served {s} of {n} arrivals");
+    for m in &r.by_model {
+        let n = arrivals.get(&m.model).copied().unwrap_or(0);
+        assert!(m.done <= n, "{}: served {} of {} arrivals", m.model, m.done, n);
     }
 
-    // served trails stay physically consistent even after a re-route
-    for (i, t) in r.trails.iter().enumerate() {
+    // sampled trails: bounded, sorted+unique by request id, and each one
+    // physically consistent with the scenario's arrival stream
+    assert!(r.trails.len() <= r.requests_total, "sample larger than the stream");
+    for w in r.trails.windows(2) {
+        assert!(w[0].req < w[1].req, "trails must be sorted and unique by req");
+    }
+    for t in &r.trails {
+        assert!(t.req < scenario.requests.len(), "trail for unknown request {}", t.req);
+        assert!(
+            (t.at_s - scenario.requests[t.req].at_s).abs() < 1e-9,
+            "request {}: trail at_s {} disagrees with arrival {}",
+            t.req,
+            t.at_s,
+            scenario.requests[t.req].at_s
+        );
         if t.done_s >= 0.0 {
-            assert!(t.board < r.boards.len(), "request {i} on unknown board");
-            assert!(t.start_s >= t.at_s - 1e-9, "request {i} started before arrival");
-            assert!(t.done_s > t.start_s, "request {i} done before start");
+            assert!(!t.dropped, "request {} both served and dropped", t.req);
+            assert!(t.board < r.boards.len(), "request {} on unknown board", t.req);
+            assert!(t.start_s >= t.at_s - 1e-9, "request {} started before arrival", t.req);
+            assert!(t.done_s > t.start_s, "request {} done before start", t.req);
+        } else {
+            assert!(t.dropped, "request {} unfinished but not marked dropped", t.req);
         }
+    }
+    // an exhaustive sample must reproduce the ledger exactly
+    if r.trails.len() == r.requests_total {
+        let served = r.trails.iter().filter(|t| t.done_s >= 0.0).count() as u64;
+        let lost = r.trails.iter().filter(|t| t.dropped).count() as u64;
+        assert_eq!(served, r.requests_done(), "trails disagree with board counters");
+        assert_eq!(lost, r.dropped, "unfinished trails must all be explicit drops");
     }
 }
 
@@ -251,6 +274,83 @@ fn slo_aware_beats_round_robin_p99_under_correlated_storm() {
         slo_p99 < rr_p99,
         "SLO-aware p99 {slo_p99:.1} ms must beat round-robin {rr_p99:.1} ms through the storm"
     );
+}
+
+/// Link degradation (DESIGN.md §13/§14) slows boards without killing
+/// them: episodes fire on every board class, no request is dropped, the
+/// conservation ledger holds, and the run stays fingerprint-identical
+/// across 1/2/4 worker threads for every routing policy.
+#[test]
+fn link_degradation_conserves_and_is_deterministic_across_threads() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Bursty, 4, 40.0, 10.0, 0.6, 19).unwrap();
+    let mk = |routing: RoutingPolicy| {
+        let cfg = FleetConfig {
+            boards: 4,
+            routing,
+            seed: 19,
+            faults: Some(FaultProfile::link(19)),
+            ..FleetConfig::default()
+        };
+        fleet(cfg, Baseline::Optimal)
+    };
+    for routing in RoutingPolicy::all() {
+        let r = mk(routing).run_threads(&scenario, 1).unwrap();
+        let link_events: u64 = r.boards.iter().map(|b| b.link_events).sum();
+        assert!(
+            link_events >= 1,
+            "{}: the link profile must actually degrade a link",
+            routing.name()
+        );
+        assert_eq!(r.dropped, 0, "link degradation slows service, never kills it");
+        let fails: u64 = r.boards.iter().map(|b| b.fails).sum();
+        assert_eq!(fails, 0, "link faults must not register as board deaths");
+        assert_conserved(&r, &scenario);
+        let base = r.fingerprint();
+        assert!(base.contains(":lk="), "fingerprint must carry link-event counts");
+        for threads in [2, 4] {
+            let fp = mk(routing).run_threads(&scenario, threads).unwrap().fingerprint();
+            assert_eq!(base, fp, "{} diverges at {threads} threads", routing.name());
+        }
+    }
+}
+
+/// A degraded link inflates effective service time: the same scenario
+/// with the link timeline enabled finishes its span no earlier, serves
+/// everything, and accrues at least as much total busy time as the
+/// clean run.
+#[test]
+fn link_degradation_inflates_service_time() {
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, 2, 30.0, 12.0, 0.5, 23).unwrap();
+    let run = |faults: Option<FaultProfile>| {
+        let cfg = FleetConfig {
+            boards: 2,
+            routing: RoutingPolicy::RoundRobin,
+            seed: 23,
+            faults,
+            ..FleetConfig::default()
+        };
+        fleet(cfg, Baseline::Optimal).run(&scenario).unwrap()
+    };
+    let clean = run(None);
+    let degraded = run(Some(FaultProfile {
+        // one long, near-total degradation per board so the slowdown is
+        // visible above scheduling noise
+        mtbf_s: 10.0,
+        mttr_s: 15.0,
+        magnitude: 1.0,
+        ..FaultProfile::link(23)
+    }));
+    assert_eq!(clean.requests_done(), degraded.requests_done());
+    let busy = |r: &FleetReport| r.boards.iter().map(|b| b.totals.busy_s).sum::<f64>();
+    assert!(
+        busy(&degraded) > busy(&clean) + 1e-6,
+        "degraded links must stretch busy time: {} vs {}",
+        busy(&degraded),
+        busy(&clean)
+    );
+    assert_conserved(&degraded, &scenario);
 }
 
 /// Flash crowd + diurnal trough for the autoscaler tests: a dense
