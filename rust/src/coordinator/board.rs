@@ -38,7 +38,42 @@ use crate::workload::traffic::state_at;
 use crate::workload::{WorkloadState, XorShift64};
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Interned board-class identifier (DESIGN.md §15): a dense `u16` that
+/// stands in for the class name on the routing hot path, so the
+/// service-estimate caches hash two bytes instead of a string. The
+/// mapping is process-global and append-only; `intern` is idempotent
+/// (same name → same id, which keeps `BoardProfile: PartialEq`
+/// consistent with name equality) and `resolve` recovers the `Arc<str>`
+/// for the report/fingerprint boundary, where names stay authoritative.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassId(pub u16);
+
+fn class_registry() -> &'static Mutex<Vec<Arc<str>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<str>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+impl ClassId {
+    /// Id for `name`, registering it on first sight. A linear scan over
+    /// the registry is deliberate: fleets hold a handful of classes and
+    /// interning happens at profile construction, never per event.
+    pub fn intern(name: &str) -> ClassId {
+        let mut reg = class_registry().lock().expect("class registry poisoned");
+        if let Some(i) = reg.iter().position(|c| &**c == name) {
+            return ClassId(i as u16);
+        }
+        let id = u16::try_from(reg.len()).expect("more than u16::MAX board classes");
+        reg.push(Arc::from(name));
+        ClassId(id)
+    }
+
+    /// The class name this id was interned under.
+    pub fn resolve(self) -> Arc<str> {
+        class_registry().lock().expect("class registry poisoned")[self.0 as usize].clone()
+    }
+}
 
 /// What one board class looks like to the physics kernel.
 ///
@@ -50,12 +85,15 @@ use std::sync::Arc;
 pub struct BoardProfile {
     /// Display name: `"zcu102"` for the calibrated reference board, or
     /// the largest hosted DPU size (`"B512"`, `"B1024"`, ...) for a
-    /// restricted class. `Arc<str>` because the class is part of every
-    /// service-estimate cache key on the routing hot path — cloning it
-    /// is a refcount bump, not an allocation. Two profiles sharing a
+    /// restricted class. Lives at the report/fingerprint boundary only;
+    /// the hot-path caches key by `class_id`. Two profiles sharing a
     /// class name MUST be identical (the caches key by class;
     /// `FleetCoordinator::new` rejects violations).
     pub class: Arc<str>,
+    /// Interned twin of `class` — what the service-estimate caches hash
+    /// on the routing hot path (DESIGN.md §15). Always
+    /// `ClassId::intern(&class)`; both constructors guarantee it.
+    pub class_id: ClassId,
     /// Fabric cap: peak MACs/cycle of the largest DPU array this
     /// board's PL hosts. Actions with a bigger array are infeasible on
     /// the board and get projected onto the allowed subset
@@ -82,6 +120,7 @@ impl BoardProfile {
     pub fn zcu102() -> BoardProfile {
         BoardProfile {
             class: Arc::from("zcu102"),
+            class_id: ClassId::intern("zcu102"),
             max_peak_macs: u32::MAX,
             perf_scale: 1.0,
             power_scale: 1.0,
@@ -107,6 +146,7 @@ impl BoardProfile {
         let frac = size.peak_macs as f64 / largest;
         Ok(BoardProfile {
             class: Arc::from(class),
+            class_id: ClassId::intern(class),
             max_peak_macs: size.peak_macs,
             perf_scale: 1.0,
             power_scale: 0.5 + 0.5 * frac.sqrt(),
@@ -380,10 +420,13 @@ pub(crate) fn advance(b: &mut Board, t: f64) {
 /// (board class, model, action, state) -> profile-adjusted steady-state
 /// metrics. Keyed by class because two classes scale the same raw
 /// evaluation differently (same-class profiles are validated identical).
-pub(crate) type MetricsCache = HashMap<(Arc<str>, String, usize, WorkloadState), Metrics>;
+/// The class component is the interned [`ClassId`], not the name: these
+/// lookups sit on the routing hot path and hash per candidate board per
+/// arrival (DESIGN.md §15).
+pub(crate) type MetricsCache = HashMap<(ClassId, String, usize, WorkloadState), Metrics>;
 /// (board class, model, state) -> (best allowed action id, its
 /// per-frame service seconds) — the routing predictor's unit.
-pub(crate) type EstCache = HashMap<(Arc<str>, String, WorkloadState), (usize, f64)>;
+pub(crate) type EstCache = HashMap<(ClassId, String, WorkloadState), (usize, f64)>;
 
 /// Profile-adjusted steady-state metrics of (model, action, state)
 /// through the caller's cache. Cache placement never changes results —
@@ -397,7 +440,7 @@ pub(crate) fn metrics_cached(
     action_id: usize,
     state: WorkloadState,
 ) -> Result<Metrics> {
-    let key = (profile.class.clone(), model.name(), action_id, state);
+    let key = (profile.class_id, model.name(), action_id, state);
     if let Some(m) = cache.get(&key) {
         return Ok(*m);
     }
@@ -423,7 +466,7 @@ pub(crate) fn best_allowed_cached(
     model: &ModelVariant,
     state: WorkloadState,
 ) -> Result<(usize, f64)> {
-    let key = (profile.class.clone(), model.name(), state);
+    let key = (profile.class_id, model.name(), state);
     if let Some(v) = ecache.get(&key) {
         return Ok(*v);
     }
@@ -642,6 +685,32 @@ mod tests {
                 .unwrap(),
             0.0,
         )
+    }
+
+    #[test]
+    fn class_ids_intern_and_round_trip() {
+        // idempotent: same name -> same id, every time
+        let a = ClassId::intern("test-class-a");
+        let b = ClassId::intern("test-class-b");
+        assert_ne!(a, b);
+        assert_eq!(a, ClassId::intern("test-class-a"));
+        assert_eq!(b, ClassId::intern("test-class-b"));
+        // resolve recovers the exact name
+        assert_eq!(&*a.resolve(), "test-class-a");
+        assert_eq!(&*b.resolve(), "test-class-b");
+        // profiles carry their interned twin, and same-class profiles
+        // stay identical (the invariant FleetCoordinator::new validates)
+        let s = sim();
+        let z1 = BoardProfile::zcu102();
+        let z2 = BoardProfile::zcu102();
+        assert_eq!(z1.class_id, ClassId::intern("zcu102"));
+        assert_eq!(z1, z2);
+        let p1 = BoardProfile::of_class("B512", s.sizes()).unwrap();
+        let p2 = BoardProfile::of_class("B512", s.sizes()).unwrap();
+        assert_eq!(p1.class_id, p2.class_id);
+        assert_eq!(p1, p2);
+        assert_ne!(p1.class_id, z1.class_id);
+        assert_eq!(&*p1.class_id.resolve(), "B512");
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Discrete-event executor shared by every serving loop (DESIGN.md §10,
-//! §12).
+//! §12, §15).
 //!
 //! Simulated time is advanced by draining a binary-heap [`EventQueue`]
 //! of typed events, so time jumps from event to event and idle stretches
@@ -12,6 +12,15 @@
 //! events with *equal* timestamps pop in the order they were pushed (a
 //! monotonically increasing sequence number breaks ties), so a run is a
 //! pure function of (scenario, config, seed).
+//!
+//! Layout (DESIGN.md §15): the heap itself holds only small `Copy`
+//! ordering keys — `(t_s, seq)` plus an index-generation handle into a
+//! slab arena where the payloads live. Sift-up/sift-down therefore moves
+//! 24-byte keys instead of full event payloads, and popped arena slots
+//! are recycled through a free list so a steady-state queue stops
+//! allocating entirely. The generation counter makes a stale handle
+//! (slot recycled since the key was minted) detectable — an invariant
+//! violation we check on every pop.
 //!
 //! ```
 //! use dpuconfig::coordinator::events::{EventQueue, FleetEvent};
@@ -114,10 +123,59 @@ impl<E> Ord for Scheduled<E> {
     }
 }
 
+/// What actually sits in the heap: the ordering key plus an
+/// index-generation handle into the payload arena. `Copy` and payload
+/// free, so heap sifts move 24 bytes regardless of the event type.
+#[derive(Debug, Clone, Copy)]
+struct HeapKey {
+    t_s: f64,
+    seq: u64,
+    slot: u32,
+    gen: u32,
+}
+
+impl PartialEq for HeapKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapKey {}
+
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapKey {
+    /// Same reversed `(t_s, seq)` order as [`Scheduled`] — the arena
+    /// handle never participates.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t_s
+            .partial_cmp(&self.t_s)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// One arena cell: the payload (taken on pop) and the generation the
+/// current occupant was stored under.
+#[derive(Debug)]
+struct ArenaSlot<E> {
+    gen: u32,
+    event: Option<E>,
+}
+
 /// Min-heap of scheduled events with deterministic equal-time ordering.
+/// Payloads live in a recycled slab arena; see the module docs for the
+/// layout rationale.
 #[derive(Debug)]
 pub struct EventQueue<E = FleetEvent> {
-    heap: BinaryHeap<Scheduled<E>>,
+    heap: BinaryHeap<HeapKey>,
+    arena: Vec<ArenaSlot<E>>,
+    free: Vec<u32>,
     seq: u64,
     popped: u64,
 }
@@ -126,6 +184,8 @@ impl<E> Default for EventQueue<E> {
     fn default() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
+            arena: Vec::new(),
+            free: Vec::new(),
             seq: 0,
             popped: 0,
         }
@@ -141,27 +201,69 @@ impl<E> EventQueue<E> {
     pub fn push(&mut self, t_s: f64, event: E) {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Scheduled { t_s, seq, event });
+        let (slot, gen) = match self.free.pop() {
+            Some(slot) => {
+                let cell = &mut self.arena[slot as usize];
+                debug_assert!(cell.event.is_none(), "free-listed slot still occupied");
+                cell.event = Some(event);
+                (slot, cell.gen)
+            }
+            None => {
+                let slot = u32::try_from(self.arena.len())
+                    .expect("event arena exceeds u32 slots");
+                self.arena.push(ArenaSlot {
+                    gen: 0,
+                    event: Some(event),
+                });
+                (slot, 0)
+            }
+        };
+        self.heap.push(HeapKey { t_s, seq, slot, gen });
     }
 
     /// Pop the earliest event (FIFO among equal timestamps).
     pub fn pop(&mut self) -> Option<Scheduled<E>> {
-        let s = self.heap.pop();
-        if s.is_some() {
-            self.popped += 1;
-        }
-        s
+        let key = self.heap.pop()?;
+        let cell = &mut self.arena[key.slot as usize];
+        assert_eq!(cell.gen, key.gen, "stale event handle survived in the heap");
+        let event = cell
+            .event
+            .take()
+            .expect("heap key pointed at an empty arena slot");
+        // bump the generation *now* so any aliasing handle is caught,
+        // then recycle the slot
+        cell.gen = cell.gen.wrapping_add(1);
+        self.free.push(key.slot);
+        self.popped += 1;
+        Some(Scheduled {
+            t_s: key.t_s,
+            seq: key.seq,
+            event,
+        })
     }
 
-    /// The earliest scheduled event without popping it.
-    pub fn peek(&self) -> Option<&Scheduled<E>> {
-        self.heap.peek()
+    /// The earliest scheduled event without popping it. By value: heap
+    /// keys don't carry the payload, so a borrowed view doesn't exist —
+    /// and every event vocabulary in the repo is `Copy` anyway.
+    pub fn peek(&self) -> Option<Scheduled<E>>
+    where
+        E: Copy,
+    {
+        let key = self.heap.peek()?;
+        let cell = &self.arena[key.slot as usize];
+        debug_assert_eq!(cell.gen, key.gen, "stale event handle at heap top");
+        Some(Scheduled {
+            t_s: key.t_s,
+            seq: key.seq,
+            event: cell.event.expect("heap key pointed at an empty arena slot"),
+        })
     }
 
     /// Timestamp of the earliest scheduled event, if any — what the
-    /// sharded executor's drain loop compares against its horizon.
+    /// sharded executor's drain loop compares against its horizon. Reads
+    /// the heap key alone: no arena touch, no payload bound.
     pub fn next_time(&self) -> Option<f64> {
-        self.heap.peek().map(|s| s.t_s)
+        self.heap.peek().map(|k| k.t_s)
     }
 
     pub fn len(&self) -> usize {
@@ -216,7 +318,7 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(7.0, FleetEvent::Tick);
         q.push(2.0, FleetEvent::WakeDone { board: 3 });
-        let peeked = *q.peek().unwrap();
+        let peeked = q.peek().unwrap();
         let popped = q.pop().unwrap();
         assert_eq!(peeked.t_s, popped.t_s);
         assert_eq!(peeked.event, popped.event);
@@ -236,5 +338,31 @@ mod tests {
         assert_eq!(q.pop().unwrap().t_s, 3.0);
         assert!(q.pop().is_none());
         assert_eq!(q.popped(), 3);
+    }
+
+    #[test]
+    fn arena_slots_recycle_with_fresh_generations() {
+        let mut q: EventQueue<FleetEvent> = EventQueue::new();
+        // fill, drain, refill: the arena must not grow past the high-water
+        // mark, and recycled slots must come back under a new generation
+        for round in 0..4u64 {
+            for b in 0..8 {
+                q.push(round as f64 + b as f64 * 0.1, FleetEvent::DecisionDue { board: b });
+            }
+            assert!(q.arena.len() <= 8, "arena grew past high-water mark");
+            for _ in 0..8 {
+                q.pop().unwrap();
+            }
+            assert_eq!(q.free.len(), 8, "all slots back on the free list");
+        }
+        // every live slot has been recycled several times
+        assert!(q.arena.iter().all(|c| c.gen >= 3));
+        assert_eq!(q.popped(), 32);
+        // payload integrity across recycling
+        q.push(1.0, FleetEvent::LinkDegrade { board: 5, permille: 250 });
+        assert_eq!(
+            q.pop().unwrap().event,
+            FleetEvent::LinkDegrade { board: 5, permille: 250 }
+        );
     }
 }

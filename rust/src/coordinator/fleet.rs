@@ -509,6 +509,22 @@ pub struct FleetReport {
     /// canonical `(done_s, req)` order — byte-identical across executors
     /// and thread counts; appended to [`Self::fingerprint`].
     pub stream: String,
+    /// Arrivals the sharded executor routed speculatively — past an
+    /// admission barrier instant, against the hazard frontier (DESIGN.md
+    /// §15). Executor observability, deliberately NOT in
+    /// [`Self::fingerprint`]: the single-queue path has nothing to
+    /// speculate about and always reports zero.
+    pub spec_routes: u64,
+    /// Estimate-invalidating conflicts the speculative router detected
+    /// (chosen board had unprocessed state strictly before the route
+    /// instant, or was dead/offline). Zero by construction while the
+    /// hazard frontier is sound — a nonzero value is a loud bug signal,
+    /// not a tuning knob.
+    pub spec_conflicts: u64,
+    /// Speculative spans handed back for a re-drain after a conflict
+    /// (time-warp-lite rollback). Like `spec_conflicts`, zero unless the
+    /// frontier invariant breaks.
+    pub spec_redrains: u64,
 }
 
 impl FleetReport {
@@ -602,6 +618,9 @@ impl FleetReport {
                 })
                 .collect(),
             online_text,
+            spec_routes: self.spec_routes,
+            spec_conflicts: self.spec_conflicts,
+            spec_redrains: self.spec_redrains,
         }
     }
 
@@ -735,6 +754,13 @@ impl FleetReport {
             self.decision_batches,
             self.events,
         ));
+        if self.spec_routes + self.spec_conflicts + self.spec_redrains > 0 {
+            out.push_str(&format!(
+                "speculative routing: {} routes past admission barriers, \
+                 {} conflicts, {} span re-drains\n",
+                self.spec_routes, self.spec_conflicts, self.spec_redrains,
+            ));
+        }
         out
     }
 }
@@ -1186,10 +1212,17 @@ impl FleetCoordinator {
                 // board's outcome feeds the same adaptation loop; the
                 // outcome is measured on the *fitted* action under the
                 // board's own profile, so the feedback stream reflects
-                // what the fleet actually served
+                // what the fleet actually served. The frozen-incumbent
+                // forwards for the whole cohort run as one batched,
+                // cache-hot pass (DESIGN.md §15); decide_hinted falls
+                // back per-row if a consolidation mid-cohort invalidates
+                // them, so the decisions stay bit-identical to the
+                // unbatched path.
+                let cohort: Vec<[f32; OBS_DIM]> = requests.iter().map(|r| r.obs).collect();
+                let frozen = agent.precompute_frozen(&cohort);
                 let mut actions = Vec::with_capacity(requests.len());
-                for req in requests {
-                    let d = agent.decide(&req.obs);
+                for (row, req) in requests.iter().enumerate() {
+                    let d = agent.decide_hinted(&req.obs, &frozen, row);
                     let a = fit_action(
                         &self.sim,
                         &mut self.metrics_cache,
@@ -2052,6 +2085,11 @@ impl FleetCoordinator {
             by_model,
             trails: rs.tracker.into_trails(),
             stream,
+            // the single-queue path routes at fully drained state by
+            // construction: nothing speculative to count
+            spec_routes: 0,
+            spec_conflicts: 0,
+            spec_redrains: 0,
         })
     }
 }

@@ -14,7 +14,13 @@
 //! * **routing** — state-dependent policies (least-loaded, energy-aware,
 //!   SLO-aware) read every board's queue at each arrival, so arrivals
 //!   are admission epochs resolved on the coordinating thread between
-//!   drains. Round-robin routing is state-independent, so its arrivals
+//!   drains. Each epoch routes *speculatively* past its barrier instant
+//!   (DESIGN.md §15): subsequent arrivals keep routing without a drain
+//!   barrier as long as they land strictly before the **hazard
+//!   frontier** — the earliest queued event, pending decision, fault or
+//!   autoscale barrier anywhere in the fleet — at which point no board
+//!   has state left to change, so the read is exact, not stale.
+//!   Round-robin routing is state-independent, so its arrivals
 //!   are pre-assigned into the owning shard's queue at init and the
 //!   whole run needs no admission barrier at all;
 //! * **decisions** — the RL agent / online learner / seeded-random
@@ -644,6 +650,31 @@ fn min_pending(shards: &[Shard]) -> f64 {
     m
 }
 
+/// One pass over every slot: `(earliest pending decision, earliest
+/// queued event)` — the two fleet-state frontiers the speculative
+/// admission span prices its hazard from (DESIGN.md §15). A single scan
+/// instead of two keeps the per-epoch coordinator cost at exactly one
+/// touch of each board's hot lane.
+fn fleet_pulse(shards: &[Shard]) -> (f64, f64) {
+    let mut pending = f64::INFINITY;
+    let mut event = f64::INFINITY;
+    for sh in shards {
+        for slot in &sh.slots {
+            if let Some(p) = slot.pending_t {
+                if p < pending {
+                    pending = p;
+                }
+            }
+            if let Some(x) = slot.queue.next_time() {
+                if x < event {
+                    event = x;
+                }
+            }
+        }
+    }
+    (pending, event)
+}
+
 fn done_count(shards: &[Shard]) -> usize {
     shards
         .iter()
@@ -878,6 +909,14 @@ impl FleetCoordinator {
         let mut global_events: u64 = 0;
         let mut decisions: u64 = 0;
         let mut batches: u64 = 0;
+        // speculative-admission observability (DESIGN.md §15): routes
+        // taken past the barrier instant, conflicts detected against the
+        // hazard frontier, and spans handed back for a re-drain. Counters
+        // only — they never enter the fingerprint (the single-queue path
+        // has nothing to speculate about and always reports zeros).
+        let mut spec_routes: u64 = 0;
+        let mut spec_conflicts: u64 = 0;
+        let mut spec_redrains: u64 = 0;
 
         loop {
             let t_arr = if arr_idx < total {
@@ -1123,11 +1162,38 @@ impl FleetCoordinator {
                 continue;
             }
             if arr_idx < total && scenario.requests[arr_idx].at_s <= horizon {
-                // admission epoch: route every arrival at this instant
+                // admission epoch: route the arrivals at this instant
                 // against globally consistent board state (all shards
-                // drained to `horizon`), in request order
+                // drained to `horizon`), in request order — then keep
+                // routing *speculatively* past the barrier instant
+                // (DESIGN.md §15). The hazard frontier is the earliest
+                // instant at which any fleet state the router reads can
+                // still change: the earliest queued event or unresolved
+                // decision on any slot, the next fault barrier, the next
+                // autoscaler heartbeat. An arrival strictly before that
+                // frontier sees board state that is already final — no
+                // slot has anything left to do before it — so routing it
+                // without another drain barrier reads byte-for-byte the
+                // state a fully synchronized run would. Arrivals sharing
+                // the last routed instant always batch with it (the
+                // single-queue same-instant admission-group rule), which
+                // also covers the barrier group itself: its arrivals all
+                // land exactly at `t`.
                 let t = horizon;
-                while arr_idx < total && scenario.requests[arr_idx].at_s <= t {
+                let mut group_t = t;
+                let t_fail_next = if fail_idx < fails.len() {
+                    fails[fail_idx].0
+                } else {
+                    f64::INFINITY
+                };
+                let (pend, ev) = fleet_pulse(&shards);
+                let mut hazard = pend.min(ev).min(t_fail_next).min(next_scale);
+                while arr_idx < total {
+                    let at = scenario.requests[arr_idx].at_s;
+                    if at != group_t && at >= hazard {
+                        break; // the next instant may couple: re-drain first
+                    }
+                    group_t = at;
                     let model = scenario.requests[arr_idx].model.clone();
                     let target = {
                         let refs: Vec<&Board> = (0..n)
@@ -1136,21 +1202,47 @@ impl FleetCoordinator {
                                 &shards[si].slots[pi].board
                             })
                             .collect();
-                        self.route(&refs, &scenario.schedules, &model, t)?
+                        self.route(&refs, &scenario.schedules, &model, at)?
                     };
                     let target = match target {
                         Some(j) => j,
                         None => {
                             // every provisioned board is dead: the
-                            // request is refused, loudly accounted
-                            tracker.on_drop(arr_idx, t);
+                            // request is refused, loudly accounted (a
+                            // drop touches no board state, so the hazard
+                            // frontier is unchanged)
+                            tracker.on_drop(arr_idx, at);
                             dropped += 1;
                             global_events += 1;
                             arr_idx += 1;
                             continue;
                         }
                     };
-                    tracker.on_route(arr_idx, t, target);
+                    if at > t {
+                        spec_routes += 1;
+                    }
+                    let (si, pi) = loc[target];
+                    // conflict check (DESIGN.md §15): a chosen board with
+                    // an unprocessed event or unresolved decision
+                    // *strictly before* `at` — or one that is dead or
+                    // offline — would mean the router read an invalidated
+                    // estimate. Impossible while the hazard frontier is
+                    // maintained (faults and scale changes only happen at
+                    // barriers the frontier prices in); if a bookkeeping
+                    // bug ever breaks the invariant this counts it loudly
+                    // and falls back to the barrier loop, which re-drains
+                    // the affected span before anything else routes.
+                    let stale = {
+                        let s = &shards[si].slots[pi];
+                        s.queue.next_time().is_some_and(|x| x < at)
+                            || s.pending_t.is_some_and(|p| p < at)
+                            || s.board.phase == Phase::Failed
+                            || s.board.offline
+                    };
+                    if stale {
+                        spec_conflicts += 1;
+                    }
+                    tracker.on_route(arr_idx, at, target);
                     let ctx = ShardCtx {
                         sim: &self.sim,
                         config: &self.config,
@@ -1161,26 +1253,38 @@ impl FleetCoordinator {
                         base,
                         spec,
                     };
-                    let (si, pi) = loc[target];
                     let Shard {
                         slots,
                         metrics_cache,
                         est_cache,
                     } = &mut shards[si];
                     let slot = &mut slots[pi];
-                    advance(&mut slot.board, t);
+                    advance(&mut slot.board, at);
                     slot.board.queue.push_back(QueuedReq {
                         req: arr_idx,
                         model,
-                        at_s: t,
+                        at_s: at,
                     });
                     if slot.board.phase == Phase::Sleeping {
-                        wake_board(slot, t);
+                        wake_board(slot, at);
                     } else {
-                        kick_slot(slot, metrics_cache, est_cache, &ctx, t)?;
+                        kick_slot(slot, metrics_cache, est_cache, &ctx, at)?;
+                    }
+                    // the routed slot is the only state that moved: fold
+                    // its new frontier into the hazard so the next-instant
+                    // check stays exact without another full scan
+                    if let Some(x) = slot.queue.next_time() {
+                        hazard = hazard.min(x);
+                    }
+                    if let Some(p) = slot.pending_t {
+                        hazard = hazard.min(p);
                     }
                     global_events += 1;
                     arr_idx += 1;
+                    if stale && at > t {
+                        spec_redrains += 1;
+                        break; // re-drain the span time-warp style
+                    }
                 }
                 continue;
             }
@@ -1422,6 +1526,9 @@ impl FleetCoordinator {
             by_model: by_model_out,
             trails: tracker.into_trails(),
             stream: sfp.digest(),
+            spec_routes,
+            spec_conflicts,
+            spec_redrains,
         })
     }
 }
@@ -1479,6 +1586,28 @@ mod tests {
             assert!(!trail.dropped);
         }
         assert!(r.fingerprint().contains("|sfp="));
+    }
+
+    #[test]
+    fn speculative_admission_engages_and_never_conflicts() {
+        // a dense bursty stream on a state-dependent router must route a
+        // healthy fraction of its arrivals speculatively (the whole point
+        // of the span), and the defensive conflict counter must stay at
+        // zero — a nonzero value means the hazard frontier lied
+        let s = scenario();
+        let r = coord(RoutingPolicy::SloAware, Baseline::Optimal)
+            .run_threads(&s, 4)
+            .unwrap();
+        assert!(
+            r.spec_routes > 0,
+            "no arrival ever routed past an admission barrier"
+        );
+        assert_eq!(r.spec_conflicts, 0);
+        assert_eq!(r.spec_redrains, 0);
+        // the counters are observability, not physics: they never enter
+        // the fingerprint (pinned against the single-queue run, which
+        // reports zeros, by thread_count_never_changes_the_fingerprint)
+        assert!(!r.fingerprint().contains("spec"));
     }
 
     #[test]

@@ -49,9 +49,15 @@ pub struct ScenarioResult {
     pub slo_violations: u64,
     pub dropped: u64,
     /// Process peak RSS (MiB) after the run — recorded on the
-    /// `high_volume_stream` row to keep the constant-memory reporting
-    /// bound observable in CI (0.0 = not recorded for this row).
+    /// `high_volume_stream` and `dense_10k` rows to keep the
+    /// constant-memory reporting bound observable in CI (0.0 = not
+    /// recorded for this row).
     pub peak_rss_mb: f64,
+    /// Absolute events/sec floor this row commits to (0.0 = none).
+    /// Serialized into the JSON so `--check-against` can gate on an
+    /// absolute number per row, not just the relative non-regression —
+    /// a placeholder baseline (events_per_sec 0.0) still enforces it.
+    pub min_events_per_sec: f64,
 }
 
 /// One thread count's measurement on the scaling scenario.
@@ -176,6 +182,7 @@ fn run_pair(
         slo_violations: ev.slo_violations(),
         dropped: ev.dropped,
         peak_rss_mb: 0.0,
+        min_events_per_sec: 0.0,
     })
 }
 
@@ -225,6 +232,79 @@ fn run_stream(smoke: bool, tick_s: f64) -> Result<ScenarioResult> {
         slo_violations: r.slo_violations(),
         dropped: r.dropped,
         peak_rss_mb: crate::telemetry::stream::peak_rss_mb(),
+        min_events_per_sec: 0.0,
+    })
+}
+
+/// Deliberately conservative: the floor exists to catch order-of-
+/// magnitude collapses (a re-introduced arrival barrier, an accidental
+/// O(B) scan per event) on the slowest CI runner, not to benchmark the
+/// host.
+const DENSE_10K_FLOOR_EPS: f64 = 1_000.0;
+
+/// Scale row (DESIGN.md §15): 10k boards under SLO-aware routing and
+/// dense steady traffic on the sharded executor — the configuration the
+/// speculative admission path exists for. No tick pairing at this scale
+/// (the reference grid would dominate the bench); instead the row runs
+/// single-thread and multi-thread, pins their fingerprints identical,
+/// reports the multi-thread events/sec plus the process peak RSS (the
+/// `high_volume_stream` memory-bound discipline), and commits to the
+/// absolute `min_events_per_sec` floor the CI gate enforces. The
+/// `wall_speedup` slot carries the N-thread over 1-thread events/sec
+/// ratio, since there is no tick wall-clock to compare against.
+fn run_dense_10k(smoke: bool, tick_s: f64) -> Result<ScenarioResult> {
+    let boards = 10_000;
+    let (horizon, rate) = if smoke { (2.0, 1500.0) } else { (6.0, 4000.0) };
+    let seed = 41;
+    let scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, boards, horizon, rate, 0.5, seed)?;
+    let mk = || -> Result<FleetCoordinator> {
+        let cfg = FleetConfig {
+            boards,
+            tick_s,
+            routing: RoutingPolicy::SloAware,
+            seed,
+            trail_sample: 256,
+            ..FleetConfig::default()
+        };
+        FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal))
+    };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4);
+    let mut f1 = mk()?;
+    let t0 = Instant::now();
+    let r1 = f1.run_threads(&scenario, 1)?;
+    let wall1 = t0.elapsed().as_secs_f64();
+    let mut fm = mk()?;
+    let t1 = Instant::now();
+    let rn = fm.run_threads(&scenario, threads)?;
+    let walln = t1.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        r1.fingerprint() == rn.fingerprint(),
+        "dense_10k: {threads}-thread fingerprint diverged from single-thread"
+    );
+    let eps1 = r1.events as f64 / wall1.max(1e-9);
+    let epsn = rn.events as f64 / walln.max(1e-9);
+    Ok(ScenarioResult {
+        name: "dense_10k",
+        pattern: ArrivalPattern::Steady.name(),
+        requests: scenario.requests.len(),
+        event_iterations: rn.events,
+        tick_iterations: 0,
+        event_wall_s: walln,
+        tick_wall_s: 0.0,
+        events_per_sec: epsn,
+        iteration_speedup: 0.0,
+        wall_speedup: if eps1 > 0.0 { epsn / eps1 } else { 0.0 },
+        frames_rel_err: 0.0,
+        energy_rel_err: 0.0,
+        p99_ms: rn.latency().p99_ms(),
+        slo_violations: rn.slo_violations(),
+        dropped: rn.dropped,
+        peak_rss_mb: crate::telemetry::stream::peak_rss_mb(),
+        min_events_per_sec: DENSE_10K_FLOOR_EPS,
     })
 }
 
@@ -373,6 +453,9 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
         // streaming telemetry (DESIGN.md §14): high request volume with a
         // small trail-reservoir cap — records peak RSS, pins O(cap) memory
         run_stream(smoke, tick_s)?,
+        // scale (DESIGN.md §15): 10k boards, SLO-aware, speculative
+        // admission — events/sec + peak RSS + an absolute CI floor
+        run_dense_10k(smoke, tick_s)?,
     ];
     let scaling = Some(run_scaling(smoke)?);
     Ok(FleetBenchReport {
@@ -446,7 +529,8 @@ pub fn to_json(r: &FleetBenchReport) -> String {
              \"events_per_sec\": {:.1}, \"iteration_speedup\": {:.3}, \
              \"wall_speedup\": {:.3}, \"frames_rel_err\": {:.3e}, \
              \"energy_rel_err\": {:.3e}, \"p99_ms\": {:.3}, \
-             \"slo_violations\": {}, \"dropped\": {}, \"peak_rss_mb\": {:.1}}}{}\n",
+             \"slo_violations\": {}, \"dropped\": {}, \"peak_rss_mb\": {:.1}, \
+             \"min_events_per_sec\": {:.1}}}{}\n",
             s.name,
             s.pattern,
             s.requests,
@@ -463,6 +547,7 @@ pub fn to_json(r: &FleetBenchReport) -> String {
             s.slo_violations,
             s.dropped,
             s.peak_rss_mb,
+            s.min_events_per_sec,
             if i + 1 < r.scenarios.len() { "," } else { "" },
         ));
     }
@@ -516,8 +601,11 @@ impl GateReport {
 /// dropped requests (outside `fault_*` scenarios, where explicit drops
 /// are part of the model), a non-deterministic scaling run, or (on
 /// hosts with >=4 cores) a 4-thread events/sec speedup below the 1.5x
-/// floor. A missing/placeholder baseline (events_per_sec 0.0) only
-/// warns — the first push to main commits real numbers.
+/// floor. A baseline row may also carry an absolute
+/// `min_events_per_sec` floor, which is enforced even while its
+/// `events_per_sec` is still a placeholder. Otherwise a
+/// missing/placeholder baseline (events_per_sec 0.0) only warns — the
+/// first push to main commits real numbers.
 pub fn check_against(current: &FleetBenchReport, baseline_json: &str) -> GateReport {
     let mut failures = Vec::new();
     let mut warnings = Vec::new();
@@ -595,6 +683,19 @@ pub fn check_against(current: &FleetBenchReport, baseline_json: &str) -> GateRep
                                 cur.events_per_sec, eps
                             ));
                         }
+                        // absolute floor: enforced even on placeholder
+                        // rows (events_per_sec 0.0), which is the point —
+                        // the row commits to a minimum before the first
+                        // measured baseline lands
+                        if let Some(floor) = bs.num("min_events_per_sec") {
+                            if floor > 0.0 && cur.events_per_sec < floor {
+                                failures.push(format!(
+                                    "{name}: events/sec {:.0} is below the absolute \
+                                     floor {floor:.0}",
+                                    cur.events_per_sec
+                                ));
+                            }
+                        }
                     }
                 }
             }
@@ -625,6 +726,7 @@ mod tests {
             slo_violations: 0,
             dropped: 0,
             peak_rss_mb: 0.0,
+            min_events_per_sec: 0.0,
         }
     }
 
@@ -696,6 +798,50 @@ mod tests {
         let g = check_against(&current, "not json");
         assert!(g.ok());
         assert!(!g.warnings.is_empty());
+    }
+
+    #[test]
+    fn gate_tolerates_unknown_baseline_rows_and_fields() {
+        // a baseline written by a newer main — extra fields and a row
+        // this branch doesn't run — must warn, never fail (no flag-day
+        // when BENCH_fleet.json grows)
+        let current = report(5000.0);
+        let base = r#"{"scenarios": [
+            {"name": "x", "events_per_sec": 4900.0, "a_future_metric": 1.0},
+            {"name": "a_future_row", "events_per_sec": 123.0, "min_events_per_sec": 99.0}
+        ]}"#;
+        let g = check_against(&current, base);
+        assert!(g.ok(), "failures: {:?}", g.failures);
+        assert!(
+            g.warnings.iter().any(|w| w.contains("a_future_row")),
+            "unknown row downgraded to a warning: {:?}",
+            g.warnings
+        );
+    }
+
+    #[test]
+    fn gate_enforces_the_absolute_floor_even_on_placeholder_rows() {
+        let current = report(5000.0);
+        // a schema-true placeholder row (events_per_sec 0.0) skips the
+        // relative compare but still enforces its absolute floor
+        let base = r#"{"scenarios": [
+            {"name": "x", "events_per_sec": 0.0, "min_events_per_sec": 9000.0}
+        ]}"#;
+        let g = check_against(&current, base);
+        assert!(!g.ok());
+        assert!(g.failures[0].contains("absolute"), "{:?}", g.failures);
+        // current above the floor passes
+        let base = r#"{"scenarios": [
+            {"name": "x", "events_per_sec": 0.0, "min_events_per_sec": 1000.0}
+        ]}"#;
+        let g = check_against(&current, base);
+        assert!(g.ok(), "failures: {:?}", g.failures);
+        // floor 0.0 (or absent) means no absolute gate
+        let base = r#"{"scenarios": [
+            {"name": "x", "events_per_sec": 0.0, "min_events_per_sec": 0.0}
+        ]}"#;
+        let g = check_against(&current, base);
+        assert!(g.ok(), "failures: {:?}", g.failures);
     }
 
     #[test]

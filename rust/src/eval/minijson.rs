@@ -4,6 +4,15 @@
 //! null, standard escapes. Writer-side stays the hand-rolled
 //! `fleetbench::to_json`; this is the matching reader.
 //!
+//! Forward compatibility is part of the contract: objects preserve every
+//! key and all access is by name ([`Json::get`]/[`Json::num`]/
+//! [`Json::str_of`]), so a baseline that grows new fields or new
+//! scenario rows on main still parses and compares cleanly on older
+//! branches — unknown fields are simply never asked for, and
+//! `fleetbench::check_against` downgrades unknown rows to warnings.
+//! There is no schema to version and no flag-day when `BENCH_fleet.json`
+//! gains a row.
+//!
 //! ```
 //! use dpuconfig::eval::minijson::{parse, Json};
 //! let v = parse(r#"{"name": "dense", "events_per_sec": 1250.5, "ok": true}"#).unwrap();
@@ -286,6 +295,32 @@ mod tests {
         let v = parse(r#"{"s": "a\"b\\c\ndA", "x": -2.5e3}"#).unwrap();
         assert_eq!(v.str_of("s"), Some("a\"b\\c\ndA"));
         assert_eq!(v.num("x"), Some(-2500.0));
+    }
+
+    #[test]
+    fn tolerates_unknown_fields_and_rows() {
+        // a baseline from a newer main: extra per-row fields, an extra
+        // top-level section, and a scenario row this branch never ran —
+        // everything parses, known keys read cleanly, unknown keys are
+        // just absent
+        let v = parse(
+            r#"{
+                "bench": "fleet_event_core",
+                "a_future_section": {"knob": [1, 2, 3]},
+                "scenarios": [
+                    {"name": "dense", "events_per_sec": 100.0,
+                     "a_future_metric": 7.5, "min_events_per_sec": 1.0},
+                    {"name": "a_future_row", "events_per_sec": 5.0}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let sc = v.get("scenarios").and_then(Json::as_arr).unwrap();
+        assert_eq!(sc[0].num("events_per_sec"), Some(100.0));
+        assert_eq!(sc[0].num("a_future_metric"), Some(7.5));
+        assert_eq!(sc[0].num("not_a_field"), None);
+        assert_eq!(sc[1].str_of("name"), Some("a_future_row"));
+        assert!(v.get("a_future_section").is_some());
     }
 
     #[test]

@@ -128,9 +128,22 @@ struct Pending {
     logp: f64,
 }
 
+/// A cohort of frozen-incumbent forward passes precomputed in one
+/// batched call (DESIGN.md §15), tagged with the incumbent's version.
+/// A consolidation between precompute and use bumps the version, so a
+/// stale batch silently falls back to a fresh per-row forward instead of
+/// serving the previous incumbent's logits.
+pub struct FrozenBatch {
+    version: u64,
+    fwds: Vec<policy::Forward>,
+}
+
 /// The online-adaptation agent: frozen incumbent + adapting challenger.
 pub struct OnlineAgent {
     frozen: MlpPolicy,
+    /// Bumped every time `frozen` is reassigned (consolidation) —
+    /// validity token for [`FrozenBatch`] hints.
+    frozen_version: u64,
     adapting: MlpPolicy,
     trainer: PpoTrainer,
     buffer: ReplayBuffer,
@@ -154,6 +167,7 @@ impl OnlineAgent {
         let adapting = frozen.clone();
         OnlineAgent {
             frozen,
+            frozen_version: 0,
             adapting,
             trainer: PpoTrainer::new(cfg.trainer),
             buffer: ReplayBuffer::new(cfg.trainer.rollout.max(1)),
@@ -213,8 +227,46 @@ impl OnlineAgent {
     /// Decide actions for one observation. Must be followed by exactly
     /// one [`Self::feedback`] (or [`Self::feedback_from_sim`]) call.
     pub fn decide(&mut self, obs: &[f32; OBS_DIM]) -> OnlineDecision {
-        self.stats.decisions += 1;
         let f_frozen = self.frozen.forward(obs);
+        self.decide_with_frozen(obs, f_frozen)
+    }
+
+    /// Batch the frozen-incumbent forwards for a decision cohort — one
+    /// cache-hot pass instead of K interleaved with simulator work. Use
+    /// the result with [`Self::decide_hinted`].
+    pub(crate) fn precompute_frozen(&self, obs: &[[f32; OBS_DIM]]) -> FrozenBatch {
+        FrozenBatch {
+            version: self.frozen_version,
+            fwds: self.frozen.forward_batch(obs),
+        }
+    }
+
+    /// [`Self::decide`] with a precomputed frozen forward. The hint is
+    /// used only while its version matches the live incumbent —
+    /// feedback between cohort rows can consolidate a promoted
+    /// challenger into `frozen`, at which point the remaining hints are
+    /// stale and each row falls back to a fresh forward. Either way the
+    /// decision is bit-identical to an unhinted [`Self::decide`].
+    pub(crate) fn decide_hinted(
+        &mut self,
+        obs: &[f32; OBS_DIM],
+        batch: &FrozenBatch,
+        row: usize,
+    ) -> OnlineDecision {
+        let f_frozen = if batch.version == self.frozen_version {
+            batch.fwds[row].clone()
+        } else {
+            self.frozen.forward(obs)
+        };
+        self.decide_with_frozen(obs, f_frozen)
+    }
+
+    fn decide_with_frozen(
+        &mut self,
+        obs: &[f32; OBS_DIM],
+        f_frozen: policy::Forward,
+    ) -> OnlineDecision {
+        self.stats.decisions += 1;
         let frozen_greedy = f_frozen.argmax();
         let d = match self.mode {
             Mode::Monitoring => OnlineDecision {
@@ -287,6 +339,7 @@ impl OnlineAgent {
     fn end_adaptation(&mut self) {
         if self.gate.promoted {
             self.frozen = self.adapting.clone();
+            self.frozen_version += 1; // invalidate outstanding FrozenBatch hints
             self.gate.reset();
             self.stats.consolidations += 1;
         }
@@ -533,6 +586,33 @@ mod tests {
             }
         }
         assert_eq!(a.stats().promotions, 0);
+    }
+
+    #[test]
+    fn hinted_decisions_match_unhinted_bit_for_bit() {
+        let mut hinted = agent();
+        let mut plain = agent(); // same seed => identical rng stream
+        let cohort = [[0.3f32; OBS_DIM], [0.7f32; OBS_DIM], [0.05f32; OBS_DIM]];
+        let batch = hinted.precompute_frozen(&cohort);
+        for (row, obs) in cohort.iter().enumerate() {
+            let dh = hinted.decide_hinted(obs, &batch, row);
+            let dp = plain.decide(obs);
+            assert_eq!(dh.serving, dp.serving);
+            assert_eq!(dh.frozen_greedy, dp.frozen_greedy);
+            assert_eq!(dh.value.to_bits(), dp.value.to_bits(), "bit-identical value");
+            hinted.feedback(&healthy_feedback(0.0));
+            plain.feedback(&healthy_feedback(0.0));
+        }
+        // a version bump (consolidation) invalidates the batch: the
+        // fallback forward must still agree with an unhinted decide
+        hinted.frozen_version += 1;
+        let dh = hinted.decide_hinted(&cohort[0], &batch, 0);
+        let dp = plain.decide(&cohort[0]);
+        assert_eq!(dh.serving, dp.serving);
+        assert_eq!(dh.value.to_bits(), dp.value.to_bits());
+        hinted.feedback(&healthy_feedback(0.0));
+        plain.feedback(&healthy_feedback(0.0));
+        assert_eq!(hinted.stats().decisions, plain.stats().decisions);
     }
 
     #[test]

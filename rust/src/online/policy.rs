@@ -146,6 +146,16 @@ impl MlpPolicy {
         }
     }
 
+    /// Forward a whole decision cohort in one call (DESIGN.md §15). The
+    /// rows are evaluated with exactly the same per-row kernel as
+    /// [`Self::forward`] — same operation order, bit-identical logits —
+    /// so the batched path can never perturb a fingerprint; the win is
+    /// one pass over the weight matrices while they are cache-hot
+    /// instead of K cold re-walks interleaved with simulator work.
+    pub fn forward_batch(&self, obs: &[[f32; OBS_DIM]]) -> Vec<Forward> {
+        obs.iter().map(|o| self.forward(o)).collect()
+    }
+
     /// Entropy-reset: soften the policy head by `tau` so fine-tuning can
     /// explore again (a near-deterministic head makes PPO's importance
     /// ratios vanish for every alternative action — see DESIGN.md §9).

@@ -213,6 +213,9 @@ mod tests {
                 wakes: 1,
             }],
             online_text: String::from("dpuonline_decisions_total 7\n"),
+            spec_routes: 2,
+            spec_conflicts: 0,
+            spec_redrains: 0,
         }
     }
 

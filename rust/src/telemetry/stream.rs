@@ -491,6 +491,15 @@ pub struct FleetSnapshot {
     /// Pre-rendered `dpuonline_*` exposition text (empty when the run has
     /// no online agent) — appended verbatim to the scrape body.
     pub online_text: String,
+    /// Arrivals routed speculatively past the admission barrier
+    /// (sharded executor only; DESIGN.md §15).
+    pub spec_routes: u64,
+    /// Speculative routes whose staleness predicate fired — impossible
+    /// by construction, so nonzero means a bug, and the exposition makes
+    /// a re-drain storm visible on the dashboard.
+    pub spec_conflicts: u64,
+    /// Admission spans broken early and re-drained after a conflict.
+    pub spec_redrains: u64,
 }
 
 /// Shared slot the fleet executors publish [`FleetSnapshot`]s into and
@@ -534,6 +543,12 @@ pub fn prometheus_text_snapshot(s: &FleetSnapshot) -> String {
     out.push_str(&format!("dpufleet_requests_dropped_total {}\n", s.dropped));
     family(&mut out, "slo_violations_total", "counter", "Requests served past their SLO");
     out.push_str(&format!("dpufleet_slo_violations_total {}\n", s.violations));
+    family(&mut out, "spec_routes_total", "counter", "Arrivals routed speculatively past admission barriers");
+    out.push_str(&format!("dpufleet_spec_routes_total {}\n", s.spec_routes));
+    family(&mut out, "spec_conflicts_total", "counter", "Speculative routes flagged stale at the merge (bug signal)");
+    out.push_str(&format!("dpufleet_spec_conflicts_total {}\n", s.spec_conflicts));
+    family(&mut out, "spec_redrains_total", "counter", "Admission spans re-drained after a speculation conflict");
+    out.push_str(&format!("dpufleet_spec_redrains_total {}\n", s.spec_redrains));
     family(&mut out, "latency_ms", "gauge", "End-to-end latency quantiles (merged histograms)");
     for (q, v) in [("0.5", s.p50_ms), ("0.95", s.p95_ms), ("0.99", s.p99_ms)] {
         out.push_str(&format!("dpufleet_latency_ms{{quantile=\"{q}\"}} {v}\n"));
@@ -850,9 +865,15 @@ mod tests {
                 },
             ],
             online_text: String::new(),
+            spec_routes: 42,
+            spec_conflicts: 0,
+            spec_redrains: 0,
         };
         let txt = prometheus_text_snapshot(&snap);
         assert!(txt.contains("dpufleet_requests_served_total 90"));
+        assert!(txt.contains("dpufleet_spec_routes_total 42"));
+        assert!(txt.contains("dpufleet_spec_conflicts_total 0"));
+        assert!(txt.contains("dpufleet_spec_redrains_total 0"));
         assert!(txt.contains("dpufleet_latency_ms{quantile=\"0.99\"} 80"));
         assert!(txt.contains("dpufleet_board_power_watts{board=\"0\",class=\"B4096\"} 9.5"));
         assert!(txt.contains("dpufleet_board_fails_total{board=\"0\",class=\"B4096\"} 1"));

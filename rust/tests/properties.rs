@@ -5,7 +5,7 @@
 //! frames and energy; availability is a true fraction).
 
 use dpuconfig::coordinator::fleet::{
-    FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
 };
 use dpuconfig::coordinator::{Arrival, Coordinator, Event, ReconfigManager, Scenario, Selector};
 use dpuconfig::dpusim::{DpuSim, FPS_CONSTRAINT};
@@ -256,6 +256,71 @@ fn prop_baselines_agree_with_sweep_extremes() {
         for r in &rows {
             assert!(rows[maxf].fps >= r.fps - 1e-12);
             assert!(rows[minp].p_fpga <= r.p_fpga + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_speculative_sharded_fingerprint_matches_single_queue() {
+    // DESIGN.md §15: speculative admission must be invisible in the
+    // report. For the state-dependent routers (the policies that used to
+    // barrier at every arrival), any random partition × thread count
+    // must reproduce the single-queue fingerprint — including the |sfp=
+    // stream digest — byte for byte, with deaths or link degradation
+    // plus the autoscaler all active.
+    forall(121, 6, |g, _| {
+        let seed = 1 + g.usize(1_000_000) as u64;
+        let horizon = g.f64(15.0, 25.0);
+        let rate = g.f64(4.0, 8.0);
+        let boards = 6;
+        let pattern = if g.bool() {
+            ArrivalPattern::Steady
+        } else {
+            ArrivalPattern::Bursty
+        };
+        let scenario =
+            FleetScenario::generate(pattern, boards, horizon, rate, 0.4, seed).unwrap();
+        let faults = if g.bool() {
+            FaultProfile::link(seed)
+        } else {
+            FaultProfile::correlated(seed)
+        };
+        // random partition of the fleet into 1..=4 non-empty shards
+        let shard_count = 1 + g.usize(4);
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); shard_count];
+        for b in 0..boards {
+            groups[g.usize(shard_count)].push(b);
+        }
+        groups.retain(|gr| !gr.is_empty());
+        let threads = 1 + g.usize(4);
+        for routing in [RoutingPolicy::SloAware, RoutingPolicy::LeastLoaded] {
+            let mk = || {
+                let cfg = FleetConfig {
+                    boards,
+                    routing,
+                    seed,
+                    faults: Some(faults.clone()),
+                    autoscale: Some(AutoscaleConfig::default()),
+                    ..FleetConfig::default()
+                };
+                FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap()
+            };
+            let single = mk().run(&scenario).unwrap();
+            assert_eq!(
+                (single.spec_routes, single.spec_conflicts, single.spec_redrains),
+                (0, 0, 0),
+                "the single-queue path never speculates"
+            );
+            let sharded = mk().run_partitioned(&scenario, &groups, threads).unwrap();
+            assert_eq!(
+                single.fingerprint(),
+                sharded.fingerprint(),
+                "{routing:?} diverged on groups {groups:?} x {threads} threads (seed {seed})"
+            );
+            assert_eq!(
+                sharded.spec_conflicts, 0,
+                "speculation conflicts are impossible by construction"
+            );
         }
     });
 }
