@@ -26,7 +26,7 @@
 //! ```
 
 use dpuconfig::coordinator::{
-    BoardProfile, FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+    BoardProfile, FleetConfig, FleetCoordinator, FleetPolicy, FleetSpec, RoutingPolicy,
     SloConfig,
 };
 use dpuconfig::rl::Baseline;
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
 
     for (pattern, rate, correlation) in scenarios {
         let scenario =
-            FleetScenario::generate(pattern, BOARDS, HORIZON_S, rate, correlation, 42)?;
+            FleetSpec::new().pattern(pattern).boards(BOARDS).horizon_s(HORIZON_S).rate_rps(rate).correlation(correlation).seed(42).scenario()?;
         println!(
             "\n================ scenario {} — {} requests over {HORIZON_S}s, correlation {correlation}",
             pattern.name(),
@@ -156,7 +156,7 @@ fn heterogeneous_fleet_demo() -> anyhow::Result<()> {
         .iter()
         .map(|c| BoardProfile::of_class(c, &sizes))
         .collect::<anyhow::Result<_>>()?;
-    let scenario = FleetScenario::generate(ArrivalPattern::Steady, 4, HORIZON_S, 10.0, 0.6, 42)?;
+    let scenario = FleetSpec::new().pattern(ArrivalPattern::Steady).boards(4).horizon_s(HORIZON_S).rate_rps(10.0).correlation(0.6).seed(42).scenario()?;
     println!(
         "\n================ heterogeneous fleet [{}] — {} requests over {HORIZON_S}s",
         classes.join(","),

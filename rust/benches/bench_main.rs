@@ -271,11 +271,11 @@ fn main() -> anyhow::Result<()> {
     // `dpuconfig fleet-bench` / `make bench-fleet` for the JSON record)
     if wants("fleet_event") {
         use dpuconfig::coordinator::fleet::{
-            FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy, RunMode,
+            FleetConfig, FleetCoordinator, FleetPolicy, FleetSpec, RoutingPolicy, RunMode,
         };
         use dpuconfig::workload::traffic::ArrivalPattern;
         let scenario =
-            FleetScenario::generate(ArrivalPattern::Diurnal, 8, 300.0, 2.0, 0.7, 3)?;
+            FleetSpec::new().pattern(ArrivalPattern::Diurnal).boards(8).horizon_s(300.0).rate_rps(2.0).correlation(0.7).seed(3).scenario()?;
         let mk = || {
             let cfg = FleetConfig {
                 boards: 8,

@@ -23,7 +23,8 @@
 //! service/power estimates become per-board automatically because every
 //! estimate flows through the profile-aware caches below.
 
-use crate::coordinator::reconfig::ReconfigManager;
+use crate::coordinator::events::SLOT_ALL;
+use crate::coordinator::reconfig::{ReconfigManager, INSTR_LOAD_US, RECONFIG_US};
 use crate::coordinator::server::Totals;
 use crate::data::{Action, DpuSize};
 use crate::dpusim::energy::{idle_power_w, sleep_power_w, EnergyMeter};
@@ -248,6 +249,53 @@ pub(crate) struct QueuedReq {
     pub(crate) at_s: f64,
 }
 
+/// One auxiliary DPU slot of a multi-slot board (DESIGN.md §16): slots
+/// 1..K-1 of a board whose PL hosts K concurrently-instantiated DPUs.
+/// Slot 0 ("the lead slot") is the board's original state machine — its
+/// fields live directly on [`Board`], which is what makes a K=1 board
+/// bit-identical to the pre-slot kernel (every aux loop is a no-op on an
+/// empty vec). Aux slots run a reduced phase machine
+/// (`Idle`/`Serving`/`Reconfiguring`, plus `Sleeping` = powered off
+/// alongside the board) and pull work from the *shared* board queue;
+/// their in-service request moves out of the queue into `current`, so
+/// the lead slot's head-of-queue serving convention is untouched.
+#[derive(Debug, Clone)]
+pub(crate) struct AuxSlot {
+    pub(crate) phase: Phase,
+    /// Power drawn in the current phase (W) — integrated lazily by
+    /// [`advance`] into the joule-only `slot_j` bucket.
+    pub(crate) power_w: f64,
+    /// When the current frame / partial reconfiguration completes.
+    pub(crate) busy_until: f64,
+    /// The request in service on this slot (popped out of the board
+    /// queue at serve start).
+    pub(crate) current: Option<QueuedReq>,
+    /// Action whose bitstream this slot currently holds (`None` = cold:
+    /// the next dispatch pays a partial reconfiguration).
+    pub(crate) action: Option<usize>,
+    /// Slot-granular thermal derating severity in [0, 1).
+    pub(crate) derate: f64,
+    /// Frames served by this slot.
+    pub(crate) served: u64,
+    /// Partial reconfigurations paid by this slot.
+    pub(crate) reconfigs: u64,
+}
+
+impl AuxSlot {
+    fn new(idle_w: f64) -> AuxSlot {
+        AuxSlot {
+            phase: Phase::Idle,
+            power_w: idle_w,
+            busy_until: 0.0,
+            current: None,
+            action: None,
+            derate: 0.0,
+            served: 0,
+            reconfigs: 0,
+        }
+    }
+}
+
 /// One board: power-state machine, energy segmentation, per-request
 /// latency accounting and reward bookkeeping — the state every executor
 /// drives. All fields are plain owned data (`Send`), so the sharded
@@ -322,6 +370,13 @@ pub(crate) struct Board {
     pub(crate) link_events: u64,
     /// Bounded decision-instant time series (DESIGN.md §14).
     pub(crate) gauges: GaugeRing,
+    // multi-slot (DESIGN.md §16)
+    /// Auxiliary DPU slots 1..K-1 (empty = the classic one-DPU board).
+    pub(crate) aux: Vec<AuxSlot>,
+    /// Times a slot entered reconfiguration while a sibling slot was
+    /// serving — the partial-reconfiguration overlap the multi-slot
+    /// model exists to capture.
+    pub(crate) pr_overlap: u64,
 }
 
 impl Board {
@@ -374,6 +429,8 @@ impl Board {
             link: 0.0,
             link_events: 0,
             gauges: GaugeRing::new(GAUGE_RING_CAP),
+            aux: Vec::new(),
+            pr_overlap: 0,
         }
     }
 
@@ -382,6 +439,153 @@ impl Board {
     pub(crate) fn idle_power_w(&self, sim: &DpuSim) -> f64 {
         let loaded = self.reconfig.current_action();
         idle_power_w(sim, loaded.map(|id| &sim.actions()[id])) * self.profile.power_scale
+    }
+
+    /// Idle retention power of one auxiliary slot: a first-order fraction
+    /// of the board's static PL power (the slot keeps its partial region
+    /// configured but clock-gated — cheap idle retention per
+    /// arXiv:2407.12027; power-off is modeled as the board-level sleep).
+    pub(crate) fn aux_idle_w(&self) -> f64 {
+        0.25 * self.p_static_w
+    }
+
+    /// Total DPU slots on this board (1 = the classic pre-slot board).
+    pub(crate) fn slot_count(&self) -> usize {
+        1 + self.aux.len()
+    }
+
+    /// Provision this board with `k` DPU slots (k ≥ 1). Aux slots start
+    /// idle-retained and cold (no bitstream loaded).
+    pub(crate) fn set_slots(&mut self, k: usize) {
+        let idle_w = self.aux_idle_w();
+        self.aux = (1..k).map(|_| AuxSlot::new(idle_w)).collect();
+    }
+
+    /// No auxiliary slot is mid-frame or mid-reconfiguration — the
+    /// board-level sleep/drain gate.
+    pub(crate) fn aux_all_idle(&self) -> bool {
+        self.aux
+            .iter()
+            .all(|s| !matches!(s.phase, Phase::Serving | Phase::Reconfiguring))
+    }
+
+    /// Power every auxiliary slot off (board sleeps, drains, fails or
+    /// starts offline): 0 W, bitstream lost.
+    pub(crate) fn power_off_aux(&mut self) {
+        for s in &mut self.aux {
+            s.phase = Phase::Sleeping;
+            s.power_w = 0.0;
+            s.busy_until = 0.0;
+            s.current = None;
+            s.action = None;
+        }
+    }
+
+    /// Bring every auxiliary slot back to idle retention, cold (wake,
+    /// recovery, autoscale provision).
+    pub(crate) fn wake_aux(&mut self) {
+        let idle_w = self.aux_idle_w();
+        for s in &mut self.aux {
+            s.phase = Phase::Idle;
+            s.power_w = idle_w;
+            s.busy_until = 0.0;
+            s.current = None;
+            s.action = None;
+        }
+    }
+
+    /// Pull the in-service request off every auxiliary slot (board
+    /// failure: these re-route with the backlog).
+    pub(crate) fn take_aux_inflight(&mut self) -> Vec<QueuedReq> {
+        self.aux.iter_mut().filter_map(|s| s.current.take()).collect()
+    }
+
+    /// Apply a thermal-derate step to one slot ([`SLOT_ALL`] = the whole
+    /// board, which is what the fault generator emits — K=1 behavior is
+    /// exactly the pre-slot board-wide derate).
+    pub(crate) fn apply_derate(&mut self, slot: u16, severity: f64) {
+        if slot == SLOT_ALL {
+            self.derate = severity;
+            for s in &mut self.aux {
+                s.derate = severity;
+            }
+        } else if slot == 0 {
+            self.derate = severity;
+        } else if let Some(s) = self.aux.get_mut(slot as usize - 1) {
+            s.derate = severity;
+        }
+    }
+
+    /// Aggregate peak MACs/cycle of every *actively serving* slot's
+    /// loaded array — what contends for the shared fabric budget.
+    pub(crate) fn active_peak_macs(&self, sim: &DpuSim) -> u64 {
+        let peak = |aid: usize| {
+            let a = &sim.actions()[aid];
+            sim.sizes()
+                .get(&a.size)
+                .map(|s| s.peak_macs as u64 * a.instances as u64)
+                .unwrap_or(0)
+        };
+        let mut agg = 0u64;
+        if self.phase == Phase::Serving {
+            if let Some(aid) = self.reconfig.current_action() {
+                agg += peak(aid);
+            }
+        }
+        for s in &self.aux {
+            if s.phase == Phase::Serving {
+                if let Some(aid) = s.action {
+                    agg += peak(aid);
+                }
+            }
+        }
+        agg
+    }
+
+    /// Shared-fabric contention multiplier at a serve start: 1.0 while
+    /// the aggregate active peak MACs fit the board's fabric cap,
+    /// `aggregate / cap` service-time inflation when oversubscribed.
+    /// Exactly 1.0 on single-slot boards (the K=1 float path is
+    /// untouched) and on unrestricted fabrics.
+    pub(crate) fn fabric_factor(&self, sim: &DpuSim) -> f64 {
+        if self.aux.is_empty() || self.profile.max_peak_macs == u32::MAX {
+            return 1.0;
+        }
+        let agg = self.active_peak_macs(sim);
+        let cap = self.profile.max_peak_macs as u64;
+        if agg <= cap {
+            1.0
+        } else {
+            agg as f64 / cap as f64
+        }
+    }
+
+    /// Which slot to blame when the event budget runs dry: the serving
+    /// slot with the latest completion, else the lead slot.
+    pub(crate) fn stuck_slot(&self) -> usize {
+        let mut slot = 0usize;
+        let mut worst = if self.phase == Phase::Serving {
+            self.busy_until
+        } else {
+            f64::NEG_INFINITY
+        };
+        for (k, s) in self.aux.iter().enumerate() {
+            if s.phase == Phase::Serving && s.busy_until > worst {
+                worst = s.busy_until;
+                slot = k + 1;
+            }
+        }
+        slot
+    }
+
+    /// Record a partial-reconfiguration overlap if any *auxiliary* slot
+    /// is serving right now (called when the lead slot enters
+    /// reconfiguration; aux-slot reconfigurations check their siblings
+    /// inside [`kick_aux_slots`]).
+    pub(crate) fn note_lead_reconfig_overlap(&mut self) {
+        if self.aux.iter().any(|s| s.phase == Phase::Serving) {
+            self.pr_overlap += 1;
+        }
     }
 }
 
@@ -414,7 +618,189 @@ pub(crate) fn advance(b: &mut Board, t: f64) {
         // dead silicon draws nothing; only downtime accrues
         Phase::Failed => b.downtime_s += dt,
     }
+    // auxiliary DPU slots overlap the lead slot in time: integrate their
+    // power over the same window into the joule-only slot bucket (the
+    // wall-time conservation invariant stays owned by the lead regime
+    // above). No-op on single-slot boards.
+    for k in 0..b.aux.len() {
+        let (phase, p_w) = (b.aux[k].phase, b.aux[k].power_w);
+        match phase {
+            Phase::Serving => {
+                b.energy.add_slot(p_w, dt);
+                b.totals.energy_fpga_j += p_w * dt;
+            }
+            Phase::Reconfiguring | Phase::Idle => b.energy.add_slot(p_w, dt),
+            _ => {}
+        }
+    }
     b.last_t = t;
+}
+
+/// What an auxiliary-slot dispatch wants the executor to schedule.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum AuxEmitKind {
+    /// Slot started serving `request`; schedule its `FrameDone`.
+    Frame { request: usize },
+    /// Slot started a partial reconfiguration; schedule `ReconfigDone`.
+    Reconfig,
+}
+
+/// One event an executor must schedule after [`kick_aux_slots`]: slot
+/// indices are board-level (aux slot k → event slot k+1).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct AuxEmit {
+    pub(crate) slot: u16,
+    pub(crate) at: f64,
+    pub(crate) kind: AuxEmitKind,
+}
+
+/// The intra-board scheduler for auxiliary slots (DESIGN.md §16), shared
+/// verbatim by both fleet executors so multi-slot event streams stay
+/// byte-identical across thread counts. For every idle aux slot, find
+/// the first queued request matching the board's decided model (skipping
+/// the lead slot's in-service head); a cold or differently-configured
+/// slot first pays a *partial* reconfiguration (bitstream + instruction
+/// load only — the board-level decision already paid telemetry + RL
+/// inference), otherwise the request leaves the queue and serves under
+/// the same derate/link physics as the lead slot, inflated by the
+/// shared-fabric contention factor when the aggregate active array
+/// oversubscribes the fabric cap. Caller contract: `advance(b, t)` has
+/// run; emitted events are pushed in returned order.
+pub(crate) fn kick_aux_slots(
+    sim: &DpuSim,
+    mcache: &mut MetricsCache,
+    b: &mut Board,
+    state: WorkloadState,
+    t: f64,
+) -> Result<Vec<AuxEmit>> {
+    let mut out = Vec::new();
+    if b.aux.is_empty()
+        || b.offline
+        || matches!(b.phase, Phase::Sleeping | Phase::Waking | Phase::Failed)
+    {
+        return Ok(out);
+    }
+    let Some((aid, dmodel, dstate)) = b.decided.clone() else {
+        return Ok(out);
+    };
+    // a decision made under an earlier workload state is stale for fresh
+    // dispatches — same validity rule the lead slot applies to its head
+    if dstate != state {
+        return Ok(out);
+    }
+    for k in 0..b.aux.len() {
+        if b.aux[k].phase != Phase::Idle {
+            continue;
+        }
+        // the lead slot owns the queue head while serving; aux slots
+        // dispatch from behind it
+        let skip = usize::from(b.phase == Phase::Serving);
+        let Some(off) = b
+            .queue
+            .iter()
+            .skip(skip)
+            .position(|q| q.model.name() == dmodel)
+        else {
+            continue;
+        };
+        let idx = skip + off;
+        if b.aux[k].action != Some(aid) {
+            // partial reconfiguration: this slot swaps its array while
+            // siblings keep serving
+            let dur = (RECONFIG_US + INSTR_LOAD_US) as f64 * 1e-6;
+            let sibling_serving = b.phase == Phase::Serving
+                || b
+                    .aux
+                    .iter()
+                    .enumerate()
+                    .any(|(j, s)| j != k && s.phase == Phase::Serving);
+            let slot = &mut b.aux[k];
+            slot.phase = Phase::Reconfiguring;
+            slot.busy_until = t + dur;
+            slot.action = Some(aid);
+            slot.reconfigs += 1;
+            if sibling_serving {
+                b.pr_overlap += 1;
+            }
+            out.push(AuxEmit {
+                slot: (k + 1) as u16,
+                at: t + dur,
+                kind: AuxEmitKind::Reconfig,
+            });
+            continue;
+        }
+        let q = b.queue.remove(idx).expect("indexed queue entry");
+        let m = metrics_cached(sim, mcache, &b.profile, &q.model, aid, dstate)?;
+        let p_serve = m.p_fpga * (1.0 + b.aux[k].derate);
+        let mut dur = m.frame_service_s() / (1.0 - 0.4 * b.aux[k].derate) * (1.0 + b.link);
+        {
+            let slot = &mut b.aux[k];
+            slot.phase = Phase::Serving;
+            slot.power_w = p_serve;
+        }
+        let factor = b.fabric_factor(sim);
+        if factor > 1.0 {
+            dur *= factor;
+        }
+        let req = q.req;
+        let slot = &mut b.aux[k];
+        slot.busy_until = t + dur;
+        slot.current = Some(q);
+        out.push(AuxEmit {
+            slot: (k + 1) as u16,
+            at: t + dur,
+            kind: AuxEmitKind::Frame { request: req },
+        });
+    }
+    Ok(out)
+}
+
+/// Complete one frame on an auxiliary slot: stale-event guards (phase,
+/// completion instant, request identity) mirror the lead slot's
+/// `FrameDone` guards. Returns the completed request (`None` = stale
+/// event, ignore). Advances the board to `t` on the live path.
+pub(crate) fn aux_frame_done(b: &mut Board, slot: u16, request: usize, t: f64) -> Option<QueuedReq> {
+    let k = (slot as usize).checked_sub(1)?;
+    if k >= b.aux.len() {
+        return None;
+    }
+    let live = b.aux[k].phase == Phase::Serving
+        && (t - b.aux[k].busy_until).abs() <= 1e-9
+        && b.aux[k].current.as_ref().map(|q| q.req) == Some(request);
+    if !live {
+        return None;
+    }
+    advance(b, t);
+    let idle_w = b.aux_idle_w();
+    let s = &mut b.aux[k];
+    let done = s.current.take();
+    s.phase = Phase::Idle;
+    s.power_w = idle_w;
+    s.served += 1;
+    done
+}
+
+/// Complete a partial reconfiguration on an auxiliary slot (stale-event
+/// guarded). Returns whether the event was live; the caller re-kicks the
+/// board so the freshly-configured slot can dispatch.
+pub(crate) fn aux_reconfig_done(b: &mut Board, slot: u16, t: f64) -> bool {
+    let Some(k) = (slot as usize).checked_sub(1) else {
+        return false;
+    };
+    if k >= b.aux.len() {
+        return false;
+    }
+    let live =
+        b.aux[k].phase == Phase::Reconfiguring && (t - b.aux[k].busy_until).abs() <= 1e-9;
+    if !live {
+        return false;
+    }
+    advance(b, t);
+    let idle_w = b.aux_idle_w();
+    let s = &mut b.aux[k];
+    s.phase = Phase::Idle;
+    s.power_w = idle_w;
+    true
 }
 
 /// (board class, model, action, state) -> profile-adjusted steady-state
@@ -830,6 +1216,103 @@ mod tests {
         assert!((adj.fps - raw.fps).abs() < 1e-12, "perf_scale 1.0 keeps fps");
         assert!(adj.ppw > raw.ppw);
         assert_eq!(adj.meets_constraint, adj.fps >= FPS_CONSTRAINT);
+    }
+
+    #[test]
+    fn aux_slots_dispatch_and_pay_partial_reconfig() {
+        let s = sim();
+        let base = PowerBase::from_sim(&s, 0.1, 10.0);
+        let mut b = Board::new(
+            BoardProfile::of_class("B4096", s.sizes()).unwrap(),
+            Sampler::from_calibration(1, s.calibration()),
+            &base,
+        );
+        b.set_slots(2);
+        assert_eq!(b.slot_count(), 2);
+        let v = variant("ResNet152");
+        let st = WorkloadState::None;
+        let mut mc = MetricsCache::new();
+        let mut ec = EstCache::new();
+        let (aid, _) = best_allowed_cached(&s, &mut mc, &mut ec, &b.profile, &v, st).unwrap();
+        b.decided = Some((aid, v.name(), st));
+        // lead slot busy with the head; the aux slot must pick up req 1
+        b.phase = Phase::Serving;
+        b.queue.push_back(QueuedReq {
+            req: 0,
+            model: v.clone(),
+            at_s: 0.0,
+        });
+        b.queue.push_back(QueuedReq {
+            req: 1,
+            model: v.clone(),
+            at_s: 0.0,
+        });
+        // cold aux slot: the first kick pays a partial reconfiguration
+        // while the lead keeps serving (= a PR overlap)
+        let emits = kick_aux_slots(&s, &mut mc, &mut b, st, 1.0).unwrap();
+        assert_eq!(emits.len(), 1);
+        assert!(matches!(emits[0].kind, AuxEmitKind::Reconfig));
+        assert_eq!(b.aux[0].phase, Phase::Reconfiguring);
+        assert_eq!(b.aux[0].reconfigs, 1);
+        assert_eq!(b.pr_overlap, 1);
+        let t_done = emits[0].at;
+        assert!(aux_reconfig_done(&mut b, 1, t_done));
+        // ...then dispatches the queued request under the decided action
+        let emits = kick_aux_slots(&s, &mut mc, &mut b, st, t_done).unwrap();
+        assert_eq!(emits.len(), 1);
+        let AuxEmitKind::Frame { request } = emits[0].kind else {
+            panic!("expected a frame dispatch");
+        };
+        assert_eq!(request, 1, "aux must skip the lead's in-service head");
+        assert_eq!(b.queue.len(), 1, "aux pulled its request off the queue");
+        let done = aux_frame_done(&mut b, 1, request, emits[0].at).unwrap();
+        assert_eq!(done.req, 1);
+        assert_eq!(b.aux[0].served, 1);
+        assert_eq!(b.aux[0].phase, Phase::Idle);
+        assert!(
+            b.energy.slot_j > 0.0,
+            "aux-slot energy lands in the joule-only slot bucket"
+        );
+        // stale completions are ignored
+        assert!(aux_frame_done(&mut b, 1, request, emits[0].at).is_none());
+    }
+
+    #[test]
+    fn fabric_factor_inflates_when_oversubscribed() {
+        let s = sim();
+        let base = PowerBase::from_sim(&s, 0.1, 10.0);
+        let mut b = Board::new(
+            BoardProfile::of_class("B512", s.sizes()).unwrap(),
+            Sampler::from_calibration(2, s.calibration()),
+            &base,
+        );
+        b.set_slots(3);
+        assert!((b.fabric_factor(&s) - 1.0).abs() < 1e-12, "nothing serving");
+        let aid = (0..s.actions().len())
+            .find(|&i| b.profile.allows(s.sizes(), &s.actions()[i]))
+            .unwrap();
+        b.aux[0].phase = Phase::Serving;
+        b.aux[0].action = Some(aid);
+        let f1 = b.fabric_factor(&s);
+        b.aux[1].phase = Phase::Serving;
+        b.aux[1].action = Some(aid);
+        let f2 = b.fabric_factor(&s);
+        assert!(f2 >= f1, "more active slots can only add contention");
+        let agg = b.active_peak_macs(&s);
+        assert!(agg > u64::from(b.profile.max_peak_macs), "two arrays oversubscribe B512");
+        assert!((f2 - agg as f64 / f64::from(b.profile.max_peak_macs)).abs() < 1e-12);
+        // the unrestricted reference board never inflates
+        let mut z = Board::new(
+            BoardProfile::zcu102(),
+            Sampler::from_calibration(3, s.calibration()),
+            &base,
+        );
+        z.set_slots(4);
+        for k in 0..3 {
+            z.aux[k].phase = Phase::Serving;
+            z.aux[k].action = Some(aid);
+        }
+        assert_eq!(z.fabric_factor(&s), 1.0);
     }
 
     #[test]

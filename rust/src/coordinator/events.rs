@@ -27,7 +27,7 @@
 //! let mut q = EventQueue::new();
 //! q.push(2.0, FleetEvent::DecisionDue { board: 1 });
 //! q.push(1.0, FleetEvent::Arrival { request: 0 });
-//! q.push(2.0, FleetEvent::FrameDone { board: 0, request: 0 });
+//! q.push(2.0, FleetEvent::FrameDone { board: 0, slot: 0, request: 0 });
 //! let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|s| s.t_s)).collect();
 //! assert_eq!(order, vec![1.0, 2.0, 2.0]);
 //! ```
@@ -35,17 +35,30 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+/// Slot wildcard for slot-carrying events: "applies to the whole board"
+/// (the fault generator derates boards, not individual DPU slots; a
+/// directly constructed event can still target one slot).
+pub const SLOT_ALL: u16 = u16::MAX;
+
 /// Everything that can happen on the fleet timeline.
+///
+/// Events that resolve on one DPU slot of a multi-slot board carry a
+/// `slot` index (`0` = the lead slot; K=1 boards only ever see slot 0,
+/// so single-slot event streams are unchanged).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FleetEvent {
     /// Request `request` (index into the scenario stream) reaches the
     /// admission layer. Arrivals are chained: processing one schedules
     /// the next, so the heap holds at most one at a time.
     Arrival { request: usize },
-    /// Board `board` finishes serving one frame of `request`.
-    FrameDone { board: usize, request: usize },
-    /// Board `board` finishes paying decision/reconfiguration overhead.
-    ReconfigDone { board: usize },
+    /// DPU slot `slot` of board `board` finishes serving one frame of
+    /// `request`.
+    FrameDone { board: usize, slot: u16, request: usize },
+    /// Board `board` finishes paying decision/reconfiguration overhead
+    /// on slot `slot` (slot 0 = the full board-level decision path;
+    /// slots ≥ 1 are partial reconfigurations that leave siblings
+    /// serving).
+    ReconfigDone { board: usize, slot: u16 },
     /// Board `board` finishes its sleep-exit latency.
     WakeDone { board: usize },
     /// Idle-dwell expiry check: board `board` drops to sleep *iff* it has
@@ -67,7 +80,9 @@ pub enum FleetEvent {
     /// Thermal derating on board `board` steps to `level`/1000 of the
     /// full derating corner (per-mille integer keeps the event `Copy +
     /// Eq`; the physics follow [`crate::workload::traffic::DriftKind::Thermal`]).
-    ThermalDerate { board: usize, level: u16 },
+    /// `slot` is [`SLOT_ALL`] for a board-wide step (what the fault
+    /// generator emits) or a specific DPU slot for slot-granular derate.
+    ThermalDerate { board: usize, slot: u16, level: u16 },
     /// Link degradation on board `board` steps to `permille`/1000: the
     /// board's effective service/transfer time inflates by
     /// `1 + permille/1000` until the next step (0 restores full
@@ -333,7 +348,7 @@ mod tests {
         q.push(3.0, FleetEvent::Arrival { request: 1 });
         assert_eq!(q.pop().unwrap().t_s, 1.0);
         // scheduling into the past of the heap head still orders correctly
-        q.push(2.0, FleetEvent::FrameDone { board: 0, request: 0 });
+        q.push(2.0, FleetEvent::FrameDone { board: 0, slot: 0, request: 0 });
         assert_eq!(q.pop().unwrap().t_s, 2.0);
         assert_eq!(q.pop().unwrap().t_s, 3.0);
         assert!(q.pop().is_none());

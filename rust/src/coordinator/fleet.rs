@@ -30,12 +30,11 @@
 //!   same instant (burst arrivals), via `PolicyRuntime::infer_batch`.
 //!
 //! ```
-//! use dpuconfig::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario};
+//! use dpuconfig::coordinator::fleet::{FleetCoordinator, FleetPolicy, FleetSpec};
 //! use dpuconfig::rl::Baseline;
-//! use dpuconfig::workload::traffic::ArrivalPattern;
 //!
-//! let cfg = FleetConfig { boards: 2, ..FleetConfig::default() };
-//! let scenario = FleetScenario::generate(ArrivalPattern::Steady, 2, 20.0, 5.0, 0.5, 7).unwrap();
+//! let spec = FleetSpec::new().boards(2).horizon_s(20.0).rate_rps(5.0).seed(7);
+//! let (cfg, scenario) = spec.realize().unwrap();
 //! let mut fleet = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap();
 //! let report = fleet.run(&scenario).unwrap();
 //! assert_eq!(report.boards.len(), 2);
@@ -45,11 +44,12 @@
 //! ```
 
 use crate::coordinator::board::{
-    advance, est_service_cached, fit_action, metrics_cached, observe_for_decision, select_allowed,
-    Board, BoardProfile, EstCache, MetricsCache, Phase, PowerBase, QueuedReq,
+    advance, aux_frame_done, aux_reconfig_done, est_service_cached, fit_action, kick_aux_slots,
+    metrics_cached, observe_for_decision, select_allowed, AuxEmitKind, Board, BoardProfile,
+    EstCache, MetricsCache, Phase, PowerBase, QueuedReq,
 };
 use crate::coordinator::engine::QueueContext;
-use crate::coordinator::events::{EventQueue, FleetEvent};
+use crate::coordinator::events::{EventQueue, FleetEvent, SLOT_ALL};
 use crate::coordinator::reconfig::{
     full_decision_overhead_s, ReconfigManager, INSTR_LOAD_US, RL_INFERENCE_US, TELEMETRY_US,
 };
@@ -275,6 +275,12 @@ pub struct FleetConfig {
     /// (exactly the pre-profile homogeneous fleet); non-empty must carry
     /// one profile per board.
     pub profiles: Vec<BoardProfile>,
+    /// Per-board DPU slot counts (DESIGN.md §16). Empty = one DPU slot
+    /// per board (exactly the pre-slot kernel, bit for bit); non-empty
+    /// must carry one count ≥ 1 per board. Prefer building this via
+    /// [`FleetSpec`] — `FleetSpec::new().board(BoardSpec::of_class("B4096").slots(2))`
+    /// — which owns the validation.
+    pub slots: Vec<usize>,
     /// Seeded runtime fault injection (`None` = every board survives the
     /// run — the exact pre-fault serving loop).
     pub faults: Option<FaultProfile>,
@@ -303,6 +309,7 @@ impl Default for FleetConfig {
             slo: SloConfig::default(),
             event_budget: None,
             profiles: Vec::new(),
+            slots: Vec::new(),
             faults: None,
             autoscale: None,
             trail_sample: 512,
@@ -352,12 +359,14 @@ pub struct FleetScenario {
 }
 
 impl FleetScenario {
-    /// Generate a scenario: an open-loop `pattern` request stream at an
-    /// aggregate `rate_rps` requests/s over `horizon_s` (one independent
-    /// sub-stream per model — Poisson for steady/diurnal,
-    /// Markov-modulated for bursty), plus co-runner schedules correlated
-    /// across boards with probability `correlation`. Deterministic in
-    /// `seed`.
+    /// Generate a scenario from positional parameters. Thin shim over
+    /// the typed builder: behavior (streams, schedules, error strings)
+    /// is byte-identical to [`FleetSpec::scenario`] with the same
+    /// parameters.
+    #[deprecated(
+        since = "0.9.0",
+        note = "build a FleetSpec (`FleetSpec::new().boards(n).pattern(..)`) and call `.scenario()`"
+    )]
     pub fn generate(
         pattern: ArrivalPattern,
         boards: usize,
@@ -366,23 +375,287 @@ impl FleetScenario {
         correlation: f64,
         seed: u64,
     ) -> Result<FleetScenario> {
-        anyhow::ensure!(boards > 0, "fleet needs at least one board");
-        anyhow::ensure!(rate_rps > 0.0, "request rate must be positive");
+        FleetSpec::new()
+            .pattern(pattern)
+            .boards(boards)
+            .horizon_s(horizon_s)
+            .rate_rps(rate_rps)
+            .correlation(correlation)
+            .seed(seed)
+            .scenario()
+    }
+}
+
+/// One board entry of a [`FleetSpec`]: a class plus how many DPU slots
+/// the board's fabric hosts concurrently (DESIGN.md §16).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BoardSpec {
+    class: Option<String>,
+    slots: usize,
+}
+
+impl BoardSpec {
+    /// The calibrated zcu102 reference board (unrestricted fabric), one
+    /// DPU slot — the board every pre-profile fleet was made of.
+    pub fn reference() -> BoardSpec {
+        BoardSpec {
+            class: None,
+            slots: 1,
+        }
+    }
+
+    /// A board class named by the largest DPU size its fabric hosts
+    /// (`"B512"`, `"B1024"`, ... — Table I of the paper), or `"zcu102"`
+    /// for the unrestricted reference. The name is resolved (and
+    /// validated) when the spec is realized into a [`FleetConfig`].
+    pub fn of_class(class: &str) -> BoardSpec {
+        if class == "zcu102" {
+            BoardSpec::reference()
+        } else {
+            BoardSpec {
+                class: Some(class.to_string()),
+                slots: 1,
+            }
+        }
+    }
+
+    /// Host `k` concurrently-serving DPU slots on this board (slot 0 is
+    /// the lead slot; siblings share the fabric contention budget).
+    pub fn slots(mut self, k: usize) -> BoardSpec {
+        self.slots = k;
+        self
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots
+    }
+
+    pub fn class_name(&self) -> &str {
+        self.class.as_deref().unwrap_or("zcu102")
+    }
+}
+
+/// Typed fleet construction: board list (class + slot count per board),
+/// workload shape, and routing, with validation owned in one place.
+/// Replaces positional [`FleetScenario::generate`] + hand-rolled
+/// [`FleetConfig`] literals:
+///
+/// ```
+/// use dpuconfig::coordinator::fleet::{BoardSpec, FleetSpec};
+///
+/// let spec = FleetSpec::new()
+///     .board(BoardSpec::of_class("B4096").slots(2))
+///     .board(BoardSpec::of_class("B512"))
+///     .horizon_s(10.0)
+///     .rate_rps(4.0)
+///     .seed(3);
+/// let (cfg, scenario) = spec.realize().unwrap();
+/// assert_eq!(cfg.boards, 2);
+/// assert_eq!(cfg.slots, vec![2, 1]);
+/// assert_eq!(scenario.schedules.len(), 2);
+/// ```
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    boards: Vec<BoardSpec>,
+    pattern: ArrivalPattern,
+    horizon_s: f64,
+    rate_rps: f64,
+    correlation: f64,
+    seed: u64,
+    routing: RoutingPolicy,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec::new()
+    }
+}
+
+impl FleetSpec {
+    /// An empty spec with the crate-default workload shape
+    /// (steady arrivals, 60 s horizon, 10 req/s, correlation 0.5,
+    /// seed 1, energy-aware routing). Add boards before realizing.
+    pub fn new() -> FleetSpec {
+        FleetSpec {
+            boards: Vec::new(),
+            pattern: ArrivalPattern::Steady,
+            horizon_s: 60.0,
+            rate_rps: 10.0,
+            correlation: 0.5,
+            seed: 1,
+            routing: RoutingPolicy::EnergyAware,
+        }
+    }
+
+    /// Append one board.
+    pub fn board(mut self, b: BoardSpec) -> FleetSpec {
+        self.boards.push(b);
+        self
+    }
+
+    /// Append `n` reference boards (the homogeneous pre-profile fleet).
+    pub fn boards(mut self, n: usize) -> FleetSpec {
+        for _ in 0..n {
+            self.boards.push(BoardSpec::reference());
+        }
+        self
+    }
+
+    pub fn pattern(mut self, p: ArrivalPattern) -> FleetSpec {
+        self.pattern = p;
+        self
+    }
+
+    pub fn horizon_s(mut self, s: f64) -> FleetSpec {
+        self.horizon_s = s;
+        self
+    }
+
+    pub fn rate_rps(mut self, r: f64) -> FleetSpec {
+        self.rate_rps = r;
+        self
+    }
+
+    pub fn correlation(mut self, c: f64) -> FleetSpec {
+        self.correlation = c;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> FleetSpec {
+        self.seed = s;
+        self
+    }
+
+    pub fn routing(mut self, r: RoutingPolicy) -> FleetSpec {
+        self.routing = r;
+        self
+    }
+
+    pub fn board_count(&self) -> usize {
+        self.boards.len()
+    }
+
+    /// Realize the fleet shape into a [`FleetConfig`], resolving class
+    /// names against Table I and validating slot counts. Boards that are
+    /// all-reference/all-single-slot produce EMPTY `profiles`/`slots`
+    /// vectors — exactly the homogeneous pre-profile/pre-slot fast
+    /// paths, so fingerprints cannot drift through the builder.
+    pub fn config(&self) -> Result<FleetConfig> {
+        anyhow::ensure!(!self.boards.is_empty(), "fleet needs at least one board");
+        for (i, b) in self.boards.iter().enumerate() {
+            anyhow::ensure!(
+                b.slots >= 1,
+                "board {} slot count is 0 (class {}; every board hosts at least its lead slot)",
+                i,
+                b.class_name()
+            );
+        }
+        let profiles = if self.boards.iter().all(|b| b.class.is_none()) {
+            Vec::new()
+        } else {
+            let sizes = crate::data::load_dpu_sizes()?;
+            self.boards
+                .iter()
+                .map(|b| match &b.class {
+                    None => Ok(BoardProfile::zcu102()),
+                    Some(c) => BoardProfile::of_class(c, &sizes),
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        let slots = if self.boards.iter().all(|b| b.slots == 1) {
+            Vec::new()
+        } else {
+            self.boards.iter().map(|b| b.slots).collect()
+        };
+        Ok(FleetConfig {
+            boards: self.boards.len(),
+            routing: self.routing,
+            seed: self.seed,
+            profiles,
+            slots,
+            ..FleetConfig::default()
+        })
+    }
+
+    /// Generate the matching scenario: an open-loop `pattern` request
+    /// stream at an aggregate `rate_rps` requests/s over `horizon_s`
+    /// (one independent sub-stream per model — Poisson for
+    /// steady/diurnal, Markov-modulated for bursty), plus co-runner
+    /// schedules correlated across boards with probability
+    /// `correlation`. Deterministic in `seed`.
+    pub fn scenario(&self) -> Result<FleetScenario> {
+        anyhow::ensure!(!self.boards.is_empty(), "fleet needs at least one board");
+        anyhow::ensure!(self.rate_rps > 0.0, "request rate must be positive");
         let variants = load_variants()?;
-        let requests = request_stream(pattern, seed, horizon_s, rate_rps, variants.len())
-            .into_iter()
-            .map(|r| FleetRequest {
-                model: variants[r.model_idx].clone(),
-                at_s: r.at_s,
-            })
-            .collect();
-        let schedules = correlated_schedules(seed, boards, horizon_s, 20.0, correlation);
+        let requests = request_stream(
+            self.pattern,
+            self.seed,
+            self.horizon_s,
+            self.rate_rps,
+            variants.len(),
+        )
+        .into_iter()
+        .map(|r| FleetRequest {
+            model: variants[r.model_idx].clone(),
+            at_s: r.at_s,
+        })
+        .collect();
+        let schedules = correlated_schedules(
+            self.seed,
+            self.boards.len(),
+            self.horizon_s,
+            20.0,
+            self.correlation,
+        );
         Ok(FleetScenario {
             requests,
             schedules,
-            horizon_s,
+            horizon_s: self.horizon_s,
         })
     }
+
+    /// Both halves in one call.
+    pub fn realize(&self) -> Result<(FleetConfig, FleetScenario)> {
+        Ok((self.config()?, self.scenario()?))
+    }
+}
+
+/// Parse the CLI fleet grammar: comma-separated `CLASS[xK]` entries,
+/// e.g. `"B4096x2,B512,B1024x4"` — a B4096-class board with 2 DPU
+/// slots, then a single-slot B512, then a B1024 with 4 slots.
+/// `"zcu102"` names the unrestricted reference board. Errors are
+/// positional and precise: unknown class, zero slots, empty entry
+/// (trailing/doubled comma).
+pub fn parse_fleet_spec(s: &str) -> Result<Vec<BoardSpec>> {
+    let sizes = crate::data::load_dpu_sizes()?;
+    let mut out = Vec::new();
+    for (pos, raw) in s.split(',').enumerate() {
+        let entry = raw.trim();
+        anyhow::ensure!(
+            !entry.is_empty(),
+            "--fleet {s:?}: entry {} is empty (trailing or doubled comma?)",
+            pos + 1
+        );
+        let (class, slots) = match entry.rsplit_once('x') {
+            Some((c, k)) if !c.is_empty() && !k.is_empty() && k.bytes().all(|b| b.is_ascii_digit()) => {
+                (c, k.parse::<usize>().unwrap_or(0))
+            }
+            _ => (entry, 1),
+        };
+        anyhow::ensure!(
+            class == "zcu102" || sizes.contains_key(class),
+            "--fleet {s:?}: unknown board class {class:?} in entry {} \
+             (want zcu102 or a Table-I DPU size like B512, B1024, B4096)",
+            pos + 1
+        );
+        anyhow::ensure!(
+            slots >= 1,
+            "--fleet {s:?}: entry {} ({entry:?}) asks for zero DPU slots (want CLASSxK with K >= 1)",
+            pos + 1
+        );
+        out.push(BoardSpec::of_class(class).slots(slots));
+    }
+    Ok(out)
 }
 
 /// Roll a finished [`Board`] into its report slice. Shared by the
@@ -403,6 +676,13 @@ pub(crate) fn finish_board(i: usize, mut b: Board, span_s: f64) -> BoardReport {
     } else {
         1.0
     };
+    let aux_served: u64 = b.aux.iter().map(|s| s.served).sum();
+    let slot_served: Vec<u64> = std::iter::once(b.requests_done - aux_served)
+        .chain(b.aux.iter().map(|s| s.served))
+        .collect();
+    let slot_reconfigs: Vec<u64> = std::iter::once(b.totals.reconfigs)
+        .chain(b.aux.iter().map(|s| s.reconfigs))
+        .collect();
     BoardReport {
         board: i,
         class: b.profile.class.to_string(),
@@ -422,6 +702,9 @@ pub(crate) fn finish_board(i: usize, mut b: Board, span_s: f64) -> BoardReport {
         link_events: b.link_events,
         availability,
         gauges: b.gauges.to_vec(),
+        slot_served,
+        slot_reconfigs,
+        pr_overlap: b.pr_overlap,
     }
 }
 
@@ -458,6 +741,15 @@ pub struct BoardReport {
     /// Bounded decision-instant gauge time series (the newest
     /// [`crate::coordinator::board`] ring capacity points).
     pub gauges: Vec<GaugePoint>,
+    /// Requests served per DPU slot (index 0 = lead slot; length =
+    /// the board's slot count, so always 1 on a single-slot board).
+    pub slot_served: Vec<u64>,
+    /// Reconfigurations per DPU slot: full board-level decisions for
+    /// slot 0, partial reconfigurations for slots ≥ 1.
+    pub slot_reconfigs: Vec<u64>,
+    /// Times any slot reconfigured while a sibling slot kept serving —
+    /// the partial-reconfiguration overlap the slot model exists for.
+    pub pr_overlap: u64,
 }
 
 /// Per-model latency/SLO slice of the fleet report.
@@ -669,6 +961,16 @@ impl FleetReport {
                 b.availability,
                 b.latency.fingerprint()
             );
+            // slot columns only on multi-slot boards: a single-slot
+            // fleet's fingerprint stays byte-identical to the pre-slot
+            // executor (the K=1 identity contract)
+            if b.slot_served.len() > 1 {
+                let _ = write!(s, ":sl=");
+                for (k, (sv, rc)) in b.slot_served.iter().zip(&b.slot_reconfigs).enumerate() {
+                    let _ = write!(s, "{}{}+{}", if k > 0 { "," } else { "" }, sv, rc);
+                }
+                let _ = write!(s, ":pr={}", b.pr_overlap);
+            }
         }
         for m in &self.by_model {
             let _ = write!(
@@ -714,6 +1016,14 @@ impl FleetReport {
                 ppw,
                 b.availability,
             ));
+        }
+        for b in &self.boards {
+            if b.slot_served.len() > 1 {
+                out.push_str(&format!(
+                    "       b{} slots: served {:?}, reconfigs {:?}, {} overlapped partial reconfigs\n",
+                    b.board, b.slot_served, b.slot_reconfigs, b.pr_overlap,
+                ));
+            }
         }
         out.push_str(
             "model                    slo_ms   reqs   p50_ms   p95_ms   p99_ms   max_ms   viol\n",
@@ -861,6 +1171,18 @@ impl FleetCoordinator {
             config.boards,
             config.profiles.len()
         );
+        anyhow::ensure!(
+            config.slots.is_empty() || config.slots.len() == config.boards,
+            "fleet has {} boards but {} slot counts (empty = one DPU slot per board)",
+            config.boards,
+            config.slots.len()
+        );
+        for (i, &k) in config.slots.iter().enumerate() {
+            anyhow::ensure!(
+                k >= 1,
+                "board {i} slot count is 0 (every board hosts at least its lead slot)"
+            );
+        }
         let sim = DpuSim::load()?;
         let min_macs = sim.sizes().values().map(|s| s.peak_macs).min().unwrap_or(0);
         for (i, p) in config.profiles.iter().enumerate() {
@@ -929,14 +1251,18 @@ impl FleetCoordinator {
     /// single-queue loop and the sharded executor so both start from
     /// bit-identical boards (same per-board sampler seed split).
     pub(crate) fn mk_board(&self, i: usize, base: &PowerBase) -> Board {
-        Board::new(
+        let mut b = Board::new(
             self.profile_of(i),
             Sampler::from_calibration(
                 self.config.seed ^ (0xb0a2d + i as u64),
                 self.sim.calibration(),
             ),
             base,
-        )
+        );
+        if let Some(&k) = self.config.slots.get(i) {
+            b.set_slots(k);
+        }
+        b
     }
 
     /// The serving loop's event budget for `scenario` (a generous
@@ -1029,6 +1355,17 @@ impl FleetCoordinator {
         for q in b.queue.iter().skip(skip) {
             w += self.est_service_s(&b.profile, &q.model, state)? * lk;
         }
+        // multi-slot boards drain the backlog K-ways concurrently:
+        // fold sibling-slot remainders in, then spread total work over
+        // the slot count (the untouched K=1 path divides by nothing)
+        if !b.aux.is_empty() {
+            for s in &b.aux {
+                if matches!(s.phase, Phase::Serving | Phase::Reconfiguring) {
+                    w += (s.busy_until - t).max(0.0);
+                }
+            }
+            w /= b.slot_count() as f64;
+        }
         Ok(w)
     }
 
@@ -1074,6 +1411,17 @@ impl FleetCoordinator {
             };
         }
         w += self.est_service_s(&b.profile, incoming, state)? * lk;
+        // slot-level availability: sibling slots absorb queued work
+        // concurrently, so the predicted wait spreads over the slot
+        // count (untouched on single-slot boards)
+        if !b.aux.is_empty() {
+            for s in &b.aux {
+                if matches!(s.phase, Phase::Serving | Phase::Reconfiguring) {
+                    w += (s.busy_until - t).max(0.0);
+                }
+            }
+            w /= b.slot_count() as f64;
+        }
         Ok(w)
     }
 
@@ -1295,8 +1643,56 @@ impl FleetCoordinator {
     /// Try to make progress on board `i` at time `t`: start serving the
     /// head request if its decision is valid, schedule a decision if
     /// not, or settle into idle (arming the sleep timer) when the queue
-    /// is empty. No-op while the board is busy or asleep.
+    /// is empty — then offer queued work to any idle sibling DPU slots.
+    /// No-op while the board is busy or asleep (single-slot boards) —
+    /// aux slots can still pick up work while the lead serves.
     fn kick(&mut self, rs: &mut RunState<'_>, i: usize, t: f64) -> Result<()> {
+        self.kick_lead(rs, i, t)?;
+        self.kick_aux(rs, i, t)
+    }
+
+    /// Dispatch queued work onto idle auxiliary DPU slots of board `i`
+    /// (DESIGN.md §16): each idle slot claims the first queued request
+    /// matching the board's decided model, paying a partial
+    /// reconfiguration first when its loaded action differs. A no-op on
+    /// single-slot boards — the K=1 event stream is untouched.
+    fn kick_aux(&mut self, rs: &mut RunState<'_>, i: usize, t: f64) -> Result<()> {
+        if rs.boards[i].aux.is_empty() {
+            return Ok(());
+        }
+        let state = state_at(&rs.scenario.schedules[i], t);
+        let emits = kick_aux_slots(
+            &self.sim,
+            &mut self.metrics_cache,
+            &mut rs.boards[i],
+            state,
+            t,
+        )?;
+        for e in emits {
+            match e.kind {
+                AuxEmitKind::Frame { request } => {
+                    rs.tracker.on_start(request, t);
+                    rs.events.push(
+                        e.at,
+                        FleetEvent::FrameDone {
+                            board: i,
+                            slot: e.slot,
+                            request,
+                        },
+                    );
+                }
+                AuxEmitKind::Reconfig => {
+                    rs.events
+                        .push(e.at, FleetEvent::ReconfigDone { board: i, slot: e.slot });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The lead-slot half of [`Self::kick`] — exactly the pre-slot
+    /// board-level progress rule.
+    fn kick_lead(&mut self, rs: &mut RunState<'_>, i: usize, t: f64) -> Result<()> {
         match rs.boards[i].phase {
             Phase::Sleeping
             | Phase::Waking
@@ -1355,8 +1751,18 @@ impl FleetCoordinator {
             b.phase = Phase::Serving;
             b.phase_power_w = p_serve;
             b.serving_meets = m.meets_constraint;
-            b.busy_until =
-                t + m.frame_service_s() / (1.0 - 0.4 * b.derate) * (1.0 + b.link);
+            let mut service = m.frame_service_s() / (1.0 - 0.4 * b.derate) * (1.0 + b.link);
+            // shared-fabric contention (DESIGN.md §16): when sibling
+            // slots are active and the aggregate peak MACs oversubscribe
+            // the fabric cap, service inflates proportionally; a
+            // single-slot board never computes the factor
+            if !b.aux.is_empty() {
+                let factor = b.fabric_factor(&self.sim);
+                if factor > 1.0 {
+                    service *= factor;
+                }
+            }
+            b.busy_until = t + service;
             b.obs_traffic_bps = m.dpu_traffic_bps(instances);
             b.obs_host_util = m.host_util_pct(instances);
             b.obs_p_fpga = p_serve;
@@ -1378,6 +1784,7 @@ impl FleetCoordinator {
                 until,
                 FleetEvent::FrameDone {
                     board: i,
+                    slot: 0,
                     request: head_req,
                 },
             );
@@ -1482,6 +1889,7 @@ impl FleetCoordinator {
                 .filter(|&j| {
                     rs.boards[j].queue.is_empty()
                         && matches!(rs.boards[j].phase, Phase::Idle | Phase::Sleeping)
+                        && rs.boards[j].aux_all_idle()
                 })
                 .max_by(|&a, &b| {
                     // highest static power wins; exact ties resolve to
@@ -1501,6 +1909,7 @@ impl FleetCoordinator {
                 b.reconfig = ReconfigManager::new();
                 b.decided = None;
                 b.idle_epoch += 1;
+                b.power_off_aux();
             }
         }
         Ok(())
@@ -1571,6 +1980,7 @@ impl FleetCoordinator {
             b.decided = Some((action_id, req.model.name(), req.state));
             b.phase = Phase::Reconfiguring;
             b.busy_until = t + overhead.total_s();
+            b.note_lead_reconfig_overlap();
             // the newly applied action is the loaded configuration now,
             // so the board's own (profile-scaled) idle power is the
             // overhead power — same helper as the sharded apply site
@@ -1578,7 +1988,12 @@ impl FleetCoordinator {
             let b = &mut rs.boards[i];
             b.phase_power_w = p_over;
             let until = b.busy_until;
-            rs.events.push(until, FleetEvent::ReconfigDone { board: i });
+            rs.events
+                .push(until, FleetEvent::ReconfigDone { board: i, slot: 0 });
+            // sibling slots may adopt the fresh decision immediately,
+            // overlapping their partial reconfigs with the lead's full
+            // one (no-op on single-slot boards)
+            self.kick_aux(rs, i, t)?;
         }
         Ok(())
     }
@@ -1662,6 +2077,7 @@ impl FleetCoordinator {
                 b.offline = true;
                 b.phase = Phase::Sleeping;
                 b.phase_power_w = 0.0;
+                b.power_off_aux();
             }
         }
 
@@ -1683,8 +2099,11 @@ impl FleetCoordinator {
                 let ev = match fe.action {
                     FaultAction::Fail => FleetEvent::BoardFail { board: fe.board },
                     FaultAction::Recover => FleetEvent::BoardRecover { board: fe.board },
+                    // injected thermal faults hit the whole package, so
+                    // every DPU slot of the board derates together
                     FaultAction::Derate { level } => FleetEvent::ThermalDerate {
                         board: fe.board,
+                        slot: SLOT_ALL,
                         level,
                     },
                     FaultAction::LinkDegrade { permille } => FleetEvent::LinkDegrade {
@@ -1748,13 +2167,14 @@ impl FleetCoordinator {
                     .expect("fleet has boards");
                 anyhow::bail!(
                     "fleet event budget exhausted after {} events at t={:.3}s \
-                     (policy {}, routing {}): board {} is stuck with queue depth {} \
+                     (policy {}, routing {}): board {} slot {} is stuck with queue depth {} \
                      ({} of {} requests still unserved){}",
                     rs.events.popped(),
                     t,
                     self.policy.name(),
                     self.config.routing.name(),
                     worst,
+                    rs.boards[worst].stuck_slot(),
                     depth,
                     rs.remaining,
                     scenario.requests.len(),
@@ -1809,9 +2229,19 @@ impl FleetCoordinator {
                     advance(&mut rs.boards[board], t);
                     rs.boards[board].phase = Phase::Holding;
                     rs.boards[board].phase_power_w = rs.boards[board].p_static_w;
+                    // sibling slots come back cold with the board
+                    rs.boards[board].wake_aux();
                     self.kick(&mut rs, board, t)?;
                 }
-                FleetEvent::ReconfigDone { board } => {
+                FleetEvent::ReconfigDone { board, slot } => {
+                    if slot > 0 {
+                        // a sibling slot finished its partial
+                        // reconfiguration (stale-guarded inside)
+                        if aux_reconfig_done(&mut rs.boards[board], slot, t) {
+                            self.kick(&mut rs, board, t)?;
+                        }
+                        continue;
+                    }
                     // stale if the board died mid-reconfiguration
                     if rs.boards[board].phase != Phase::Reconfiguring
                         || (t - rs.boards[board].busy_until).abs() > 1e-9
@@ -1824,7 +2254,70 @@ impl FleetCoordinator {
                     rs.boards[board].phase_power_w = p_idle;
                     self.kick(&mut rs, board, t)?;
                 }
-                FleetEvent::FrameDone { board, request } => {
+                FleetEvent::FrameDone { board, slot, request } => {
+                    if slot > 0 {
+                        // a sibling slot completed a frame: identical
+                        // request accounting to the lead path, without
+                        // touching the lead slot's phase machine
+                        let done = match aux_frame_done(&mut rs.boards[board], slot, request, t)
+                        {
+                            Some(d) => d,
+                            None => continue, // stale (board died / slot reset)
+                        };
+                        {
+                            let b = &mut rs.boards[board];
+                            b.totals.frames += 1.0;
+                            b.requests_done += 1;
+                        }
+                        let latency_ms = (t - done.at_s) * 1e3;
+                        rs.tracker.on_done(request, t);
+                        rs.fold.push(request, t, latency_ms);
+                        let name = done.model.name();
+                        let slo_ms = self.config.slo.target_ms(&name);
+                        let violated = latency_ms > slo_ms;
+                        {
+                            let b = &mut rs.boards[board];
+                            b.latency.record_ms(latency_ms);
+                            if violated {
+                                b.slo_violations += 1;
+                            }
+                        }
+                        let acc = rs.by_model.entry(name).or_insert_with(|| ModelAcc {
+                            hist: LatencyHistogram::new(),
+                            violations: 0,
+                            done: 0,
+                        });
+                        acc.hist.record_ms(latency_ms);
+                        acc.done += 1;
+                        if violated {
+                            acc.violations += 1;
+                        }
+                        rs.remaining -= 1;
+                        if rs.remaining == 0 {
+                            rs.end_t = Some(scenario.horizon_s.max(t));
+                        }
+                        // an aux frame can be the board's last activity:
+                        // re-arm the sleep dwell if everything is idle
+                        // (the guard discards it if work arrives first)
+                        {
+                            let b = &rs.boards[board];
+                            if b.phase == Phase::Idle
+                                && b.queue.is_empty()
+                                && b.aux_all_idle()
+                                && b.idle_to_sleep_s.is_finite()
+                            {
+                                rs.events.push(
+                                    t + b.idle_to_sleep_s,
+                                    FleetEvent::SleepTimer {
+                                        board,
+                                        idle_epoch: b.idle_epoch,
+                                    },
+                                );
+                            }
+                        }
+                        self.kick(&mut rs, board, t)?;
+                        continue;
+                    }
                     // stale if the board died mid-frame (the in-flight
                     // frame was dropped with the board; its request
                     // re-routed or explicitly counted)
@@ -1883,10 +2376,14 @@ impl FleetCoordinator {
                 }
                 FleetEvent::SleepTimer { board, idle_epoch } => {
                     let b = &mut rs.boards[board];
-                    if b.phase == Phase::Idle && b.idle_epoch == idle_epoch {
+                    // the whole board naps or none of it: a serving or
+                    // reconfiguring sibling slot vetoes the descent (a
+                    // later all-idle instant re-arms the dwell)
+                    if b.phase == Phase::Idle && b.idle_epoch == idle_epoch && b.aux_all_idle() {
                         advance(b, t);
                         b.phase = Phase::Sleeping;
                         b.phase_power_w = b.sleep_w;
+                        b.power_off_aux();
                     }
                 }
                 FleetEvent::WorkloadShift { board } => {
@@ -1962,7 +2459,13 @@ impl FleetCoordinator {
                         b.obs_traffic_bps = 0.0;
                         b.obs_host_util = 0.0;
                         b.obs_p_fpga = 0.0;
-                        b.queue.drain(..).collect()
+                        // sibling-slot in-flight requests left the queue
+                        // at their serve start: fold them back in (their
+                        // frames die with the board, the requests live)
+                        let mut backlog: Vec<QueuedReq> = b.queue.drain(..).collect();
+                        backlog.extend(b.take_aux_inflight());
+                        b.power_off_aux();
+                        backlog
                     };
                     // the in-flight frame dies with the board (partial
                     // service energy already spent, frame not counted),
@@ -2001,13 +2504,14 @@ impl FleetCoordinator {
                         // next decision charges a full reconfiguration
                         b.reconfig = ReconfigManager::new();
                         b.decided = None;
+                        b.wake_aux();
                     }
                     self.kick(&mut rs, board, t)?;
                 }
-                FleetEvent::ThermalDerate { board, level } => {
+                FleetEvent::ThermalDerate { board, slot, level } => {
                     let b = &mut rs.boards[board];
                     advance(b, t);
-                    b.derate = f64::from(level) / 1000.0;
+                    b.apply_derate(slot, f64::from(level) / 1000.0);
                     b.derate_events += 1;
                     // the in-flight frame finishes at the rate fixed at
                     // its serve start; the NEXT serve start derates
@@ -2409,10 +2913,134 @@ mod tests {
 
     #[test]
     fn generated_scenarios_shape_up() {
-        let s = FleetScenario::generate(ArrivalPattern::Bursty, 4, 60.0, 20.0, 0.7, 11).unwrap();
+        let s = FleetSpec::new()
+            .pattern(ArrivalPattern::Bursty)
+            .boards(4)
+            .horizon_s(60.0)
+            .rate_rps(20.0)
+            .correlation(0.7)
+            .seed(11)
+            .scenario()
+            .unwrap();
         assert_eq!(s.schedules.len(), 4);
         assert!(!s.requests.is_empty());
         assert!(s.requests.windows(2).all(|w| w[0].at_s <= w[1].at_s));
         assert!(s.requests.iter().all(|r| r.at_s < 60.0));
+    }
+
+    #[test]
+    fn fleet_spec_builds_configs_and_validates() {
+        // all-reference, all-single-slot: the homogeneous fast paths
+        let (cfg, scenario) = FleetSpec::new().boards(3).horizon_s(5.0).realize().unwrap();
+        assert_eq!(cfg.boards, 3);
+        assert!(cfg.profiles.is_empty(), "reference fleet keeps the fast path");
+        assert!(cfg.slots.is_empty(), "single-slot fleet keeps the fast path");
+        assert_eq!(scenario.schedules.len(), 3);
+
+        // mixed classes + slots resolve per board
+        let cfg = FleetSpec::new()
+            .board(BoardSpec::of_class("B4096").slots(2))
+            .board(BoardSpec::of_class("B512"))
+            .board(BoardSpec::reference().slots(3))
+            .config()
+            .unwrap();
+        assert_eq!(cfg.profiles.len(), 3);
+        assert_eq!(cfg.profiles[0].class.as_ref(), "B4096");
+        assert_eq!(cfg.profiles[2].class.as_ref(), "zcu102");
+        assert_eq!(cfg.slots, vec![2, 1, 3]);
+
+        // validation is owned by the builder
+        let err = FleetSpec::new().config().unwrap_err().to_string();
+        assert!(err.contains("at least one board"), "{err}");
+        let err = FleetSpec::new()
+            .board(BoardSpec::of_class("B512").slots(0))
+            .config()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("board 0 slot count is 0"), "{err}");
+        let err = FleetSpec::new()
+            .board(BoardSpec::of_class("B9999"))
+            .config()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown board class"), "{err}");
+    }
+
+    #[test]
+    fn fleet_spec_grammar_parses_and_rejects() {
+        let specs = parse_fleet_spec("B4096x2,B512,B1024x4").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].class_name(), "B4096");
+        assert_eq!(specs[0].slot_count(), 2);
+        assert_eq!(specs[1].class_name(), "B512");
+        assert_eq!(specs[1].slot_count(), 1);
+        assert_eq!(specs[2].slot_count(), 4);
+        let z = parse_fleet_spec("zcu102x2").unwrap();
+        assert_eq!(z[0].class_name(), "zcu102");
+        assert_eq!(z[0].slot_count(), 2);
+
+        let err = parse_fleet_spec("B4096x2,").unwrap_err().to_string();
+        assert!(err.contains("entry 2 is empty"), "{err}");
+        let err = parse_fleet_spec("B4096,,B512").unwrap_err().to_string();
+        assert!(err.contains("entry 2 is empty"), "{err}");
+        let err = parse_fleet_spec("B777").unwrap_err().to_string();
+        assert!(err.contains("unknown board class \"B777\""), "{err}");
+        let err = parse_fleet_spec("B512x0").unwrap_err().to_string();
+        assert!(err.contains("zero DPU slots"), "{err}");
+    }
+
+    #[test]
+    fn deprecated_generate_matches_fleet_spec() {
+        #[allow(deprecated)]
+        let old = FleetScenario::generate(ArrivalPattern::Steady, 2, 12.0, 6.0, 0.4, 9).unwrap();
+        let new = FleetSpec::new()
+            .boards(2)
+            .horizon_s(12.0)
+            .rate_rps(6.0)
+            .correlation(0.4)
+            .seed(9)
+            .scenario()
+            .unwrap();
+        assert_eq!(old.requests.len(), new.requests.len());
+        assert_eq!(old.schedules, new.schedules);
+        assert!(old
+            .requests
+            .iter()
+            .zip(&new.requests)
+            .all(|(a, b)| a.at_s == b.at_s && a.model.name() == b.model.name()));
+    }
+
+    #[test]
+    fn multi_slot_board_keeps_serving_through_partial_reconfig() {
+        // two-slot B4096 board under a steady stream: sibling slots must
+        // pick up frames (slot_served[1] > 0), at least one partial
+        // reconfiguration overlapped a serving sibling, and the K=1
+        // run of the same scenario serves the same request set
+        let spec = FleetSpec::new()
+            .board(BoardSpec::of_class("B4096").slots(2))
+            .horizon_s(20.0)
+            .rate_rps(8.0)
+            .seed(5)
+            .routing(RoutingPolicy::RoundRobin);
+        let (cfg, scenario) = spec.realize().unwrap();
+        let mut f = fleet(cfg);
+        let r = f.run(&scenario).unwrap();
+        assert_eq!(r.requests_done() as usize, r.requests_total);
+        assert_eq!(r.boards[0].slot_served.len(), 2);
+        assert!(
+            r.boards[0].slot_served[1] > 0,
+            "sibling slot never served: {:?}",
+            r.boards[0].slot_served
+        );
+        assert!(
+            r.boards[0].slot_reconfigs[1] > 0,
+            "sibling slot never reconfigured: {:?}",
+            r.boards[0].slot_reconfigs
+        );
+        assert!(
+            r.boards[0].pr_overlap > 0,
+            "no partial reconfig overlapped a serving sibling"
+        );
+        assert!(r.fingerprint().contains(":sl="), "multi-slot fingerprint column missing");
     }
 }

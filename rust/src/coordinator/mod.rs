@@ -19,8 +19,8 @@ pub use board::BoardProfile;
 pub use engine::{DecisionEngine, QueueContext, Selector};
 pub use events::{EventQueue, FleetEvent};
 pub use fleet::{
-    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetScenario,
-    RoutingPolicy, RunMode, SloConfig,
+    parse_fleet_spec, AutoscaleConfig, BoardSpec, FleetConfig, FleetCoordinator, FleetPolicy,
+    FleetReport, FleetScenario, FleetSpec, RoutingPolicy, RunMode, SloConfig,
 };
 pub use reconfig::{Overhead, ReconfigManager};
 pub use server::{Arrival, Coordinator, CoordRunMode, Event, Report, Scenario, Totals};

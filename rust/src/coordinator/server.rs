@@ -11,7 +11,10 @@
 //! Physics — power-state phases, energy segmentation, overhead and
 //! constraint-violation accounting — lives in the shared board kernel
 //! ([`crate::coordinator::board`], DESIGN.md §12); this module only
-//! schedules against it. The default [`CoordRunMode::EventDriven`] loop
+//! schedules against it. The kernel is slot-aware (DESIGN.md §16), but
+//! this single-board loop always runs the reference single-slot board,
+//! so its event stream is exactly the pre-slot one — multi-slot boards
+//! exist only behind the fleet executors. The default [`CoordRunMode::EventDriven`] loop
 //! drains a typed [`EventQueue`] exactly like the fleet executors;
 //! [`CoordRunMode::LegacySegment`] keeps the retired nested-loop control
 //! flow as a parity reference (same kernel, same decision helper — the

@@ -49,12 +49,11 @@
 //!   boards by global index.
 //!
 //! ```
-//! use dpuconfig::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario};
+//! use dpuconfig::coordinator::fleet::{FleetCoordinator, FleetPolicy, FleetSpec};
 //! use dpuconfig::rl::Baseline;
-//! use dpuconfig::workload::traffic::ArrivalPattern;
 //!
-//! let cfg = FleetConfig { boards: 2, ..FleetConfig::default() };
-//! let scenario = FleetScenario::generate(ArrivalPattern::Steady, 2, 20.0, 5.0, 0.5, 7).unwrap();
+//! let spec = FleetSpec::new().boards(2).horizon_s(20.0).rate_rps(5.0).seed(7);
+//! let (cfg, scenario) = spec.realize().unwrap();
 //! let mk = || FleetCoordinator::new(cfg.clone(), FleetPolicy::Static(Baseline::Optimal)).unwrap();
 //! let one = mk().run_threads(&scenario, 1).unwrap();
 //! let four = mk().run_threads(&scenario, 4).unwrap();
@@ -62,10 +61,11 @@
 //! ```
 
 use crate::coordinator::board::{
-    advance, est_service_cached, metrics_cached, observe_for_decision, select_allowed, Board,
-    EstCache, MetricsCache, Phase, PowerBase, QueuedReq,
+    advance, aux_frame_done, aux_reconfig_done, est_service_cached, kick_aux_slots,
+    metrics_cached, observe_for_decision, select_allowed, AuxEmitKind, Board, EstCache,
+    MetricsCache, Phase, PowerBase, QueuedReq,
 };
-use crate::coordinator::events::{EventQueue, FleetEvent};
+use crate::coordinator::events::{EventQueue, FleetEvent, SLOT_ALL};
 use crate::coordinator::fleet::{
     failed_note_for, finish_board, BoardReport, DecisionRequest, FleetConfig, FleetCoordinator,
     FleetPolicy, FleetReport, FleetRequest, FleetScenario, ModelAcc, ModelLatencyReport,
@@ -196,16 +196,19 @@ fn wake_board(slot: &mut Slot, t: f64) {
 }
 
 /// Apply one resolved configuration decision (the tail of the
-/// single-queue `decide_due`): charge overheads, schedule `ReconfigDone`.
+/// single-queue `decide_due`): charge overheads, schedule `ReconfigDone`,
+/// then let sibling slots adopt the fresh decision immediately — their
+/// partial reconfigs overlap the lead's full one.
 fn apply_decision(
     slot: &mut Slot,
+    mcache: &mut MetricsCache,
     ctx: &ShardCtx<'_>,
     action_id: usize,
     model: &crate::models::ModelVariant,
     state: WorkloadState,
     headroom_s: f64,
     t: f64,
-) {
+) -> Result<()> {
     let action = ctx.sim.actions()[action_id].clone();
     let b = &mut slot.board;
     advance(b, t);
@@ -220,11 +223,14 @@ fn apply_decision(
     b.decided = Some((action_id, model.name(), state));
     b.phase = Phase::Reconfiguring;
     b.busy_until = t + overhead.total_s();
+    b.note_lead_reconfig_overlap();
     // the newly applied action is the loaded configuration now, so the
     // board's own (profile-scaled) idle power is the overhead power
     b.phase_power_w = b.idle_power_w(ctx.sim);
     let until = b.busy_until;
-    slot.queue.push(until, FleetEvent::ReconfigDone { board: slot.idx });
+    slot.queue
+        .push(until, FleetEvent::ReconfigDone { board: slot.idx, slot: 0 });
+    kick_aux(slot, mcache, ctx, t)
 }
 
 /// Resolve a decision inline inside the shard (static, order-independent
@@ -258,7 +264,16 @@ fn decide_local(
         dec.state,
         None,
     )?;
-    apply_decision(slot, ctx, action_id, &dec.head_model, dec.state, dec.queue.headroom_s, t);
+    apply_decision(
+        slot,
+        mcache,
+        ctx,
+        action_id,
+        &dec.head_model,
+        dec.state,
+        dec.queue.headroom_s,
+        t,
+    )?;
     slot.decisions += 1;
     slot.batches += 1;
     slot.extra_events += 1;
@@ -267,10 +282,64 @@ fn decide_local(
 
 /// Make progress on the slot's board at time `t`: start serving the head
 /// request if its decision is valid, resolve/queue a decision if not, or
-/// settle into idle (arming the sleep timer) when the queue is empty.
-/// Mirrors the single-queue `kick`, with decisions going either inline
-/// (static fast path) or to the coordinator via `pending_t`.
+/// settle into idle (arming the sleep timer) when the queue is empty —
+/// then offer queued work to any idle sibling DPU slots. Mirrors the
+/// single-queue `kick`, with decisions going either inline (static fast
+/// path) or to the coordinator via `pending_t`.
 fn kick_slot(
+    slot: &mut Slot,
+    mcache: &mut MetricsCache,
+    ecache: &mut EstCache,
+    ctx: &ShardCtx<'_>,
+    t: f64,
+) -> Result<()> {
+    kick_lead(slot, mcache, ecache, ctx, t)?;
+    kick_aux(slot, mcache, ctx, t)
+}
+
+/// Dispatch queued work onto idle auxiliary DPU slots (DESIGN.md §16):
+/// the sharded mirror of the single-queue `kick_aux`. Serve starts are
+/// recorded into `Slot::starts` for reservoir members only; completion
+/// events land on the board's local timeline. A no-op on single-slot
+/// boards — the K=1 event stream is untouched.
+fn kick_aux(slot: &mut Slot, mcache: &mut MetricsCache, ctx: &ShardCtx<'_>, t: f64) -> Result<()> {
+    if slot.board.aux.is_empty() {
+        return Ok(());
+    }
+    let state = state_at(&ctx.schedules[slot.idx], t);
+    let emits = kick_aux_slots(ctx.sim, mcache, &mut slot.board, state, t)?;
+    for e in emits {
+        match e.kind {
+            AuxEmitKind::Frame { request } => {
+                if ctx.spec.contains(request) {
+                    slot.starts.push((request, t));
+                }
+                slot.queue.push(
+                    e.at,
+                    FleetEvent::FrameDone {
+                        board: slot.idx,
+                        slot: e.slot,
+                        request,
+                    },
+                );
+            }
+            AuxEmitKind::Reconfig => {
+                slot.queue.push(
+                    e.at,
+                    FleetEvent::ReconfigDone {
+                        board: slot.idx,
+                        slot: e.slot,
+                    },
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The lead-slot half of [`kick_slot`] — exactly the pre-slot board-level
+/// progress rule.
+fn kick_lead(
     slot: &mut Slot,
     mcache: &mut MetricsCache,
     ecache: &mut EstCache,
@@ -337,7 +406,17 @@ fn kick_slot(
         b.phase = Phase::Serving;
         b.phase_power_w = p_serve;
         b.serving_meets = m.meets_constraint;
-        b.busy_until = t + m.frame_service_s() / (1.0 - 0.4 * b.derate) * (1.0 + b.link);
+        let mut service = m.frame_service_s() / (1.0 - 0.4 * b.derate) * (1.0 + b.link);
+        // shared-fabric contention (DESIGN.md §16): oversubscribed
+        // aggregate peak MACs inflate service; single-slot boards never
+        // compute the factor
+        if !b.aux.is_empty() {
+            let factor = b.fabric_factor(ctx.sim);
+            if factor > 1.0 {
+                service *= factor;
+            }
+        }
+        b.busy_until = t + service;
         b.obs_traffic_bps = m.dpu_traffic_bps(instances);
         b.obs_host_util = m.host_util_pct(instances);
         b.obs_p_fpga = p_serve;
@@ -361,6 +440,7 @@ fn kick_slot(
             until,
             FleetEvent::FrameDone {
                 board: slot.idx,
+                slot: 0,
                 request: head_req,
             },
         );
@@ -416,9 +496,18 @@ fn process_event(
             advance(&mut slot.board, t);
             slot.board.phase = Phase::Holding;
             slot.board.phase_power_w = slot.board.p_static_w;
+            slot.board.wake_aux();
             kick_slot(slot, mcache, ecache, ctx, t)?;
         }
-        FleetEvent::ReconfigDone { .. } => {
+        FleetEvent::ReconfigDone { slot: aux, .. } => {
+            if aux > 0 {
+                // a sibling slot finished its partial reconfiguration
+                // (stale-guarded inside)
+                if aux_reconfig_done(&mut slot.board, aux, t) {
+                    kick_slot(slot, mcache, ecache, ctx, t)?;
+                }
+                return Ok(());
+            }
             // stale if the board died mid-reconfiguration
             if slot.board.phase != Phase::Reconfiguring
                 || (t - slot.board.busy_until).abs() > 1e-9
@@ -431,7 +520,62 @@ fn process_event(
             slot.board.phase_power_w = p_idle;
             kick_slot(slot, mcache, ecache, ctx, t)?;
         }
-        FleetEvent::FrameDone { request, .. } => {
+        FleetEvent::FrameDone {
+            slot: aux, request, ..
+        } => {
+            if aux > 0 {
+                // a sibling slot completed a frame: identical request
+                // accounting to the lead path, without touching the lead
+                // slot's phase machine
+                let done = match aux_frame_done(&mut slot.board, aux, request, t) {
+                    Some(d) => d,
+                    None => return Ok(()), // stale (board died / slot reset)
+                };
+                {
+                    let b = &mut slot.board;
+                    b.totals.frames += 1.0;
+                    b.requests_done += 1;
+                }
+                let latency_ms = (t - done.at_s) * 1e3;
+                let name = done.model.name();
+                let slo_ms = ctx.config.slo.target_ms(&name);
+                let violated = latency_ms > slo_ms;
+                {
+                    let b = &mut slot.board;
+                    b.latency.record_ms(latency_ms);
+                    if violated {
+                        b.slo_violations += 1;
+                    }
+                }
+                slot.completions.push(Completion {
+                    req: request,
+                    done_s: t,
+                    latency_ms,
+                    model: name,
+                    violated,
+                });
+                // an aux frame can be the board's last activity: re-arm
+                // the sleep dwell if everything is idle (the guard
+                // discards it if work arrives first)
+                {
+                    let b = &slot.board;
+                    if b.phase == Phase::Idle
+                        && b.queue.is_empty()
+                        && b.aux_all_idle()
+                        && b.idle_to_sleep_s.is_finite()
+                    {
+                        slot.queue.push(
+                            t + b.idle_to_sleep_s,
+                            FleetEvent::SleepTimer {
+                                board: slot.idx,
+                                idle_epoch: b.idle_epoch,
+                            },
+                        );
+                    }
+                }
+                kick_slot(slot, mcache, ecache, ctx, t)?;
+                return Ok(());
+            }
             // stale if the board died mid-frame (the in-flight frame
             // was dropped with the board; its request re-routed or
             // explicitly counted at the fault barrier)
@@ -475,10 +619,14 @@ fn process_event(
         }
         FleetEvent::SleepTimer { idle_epoch, .. } => {
             let b = &mut slot.board;
-            if b.phase == Phase::Idle && b.idle_epoch == idle_epoch {
+            // the whole board naps or none of it: a serving or
+            // reconfiguring sibling slot vetoes the descent (a later
+            // all-idle instant re-arms the dwell)
+            if b.phase == Phase::Idle && b.idle_epoch == idle_epoch && b.aux_all_idle() {
                 advance(b, t);
                 b.phase = Phase::Sleeping;
                 b.phase_power_w = b.sleep_w;
+                b.power_off_aux();
             }
         }
         FleetEvent::WorkloadShift { .. } => {
@@ -514,13 +662,16 @@ fn process_event(
                 // decision charges a full reconfiguration
                 b.reconfig = ReconfigManager::new();
                 b.decided = None;
+                b.wake_aux();
             }
             kick_slot(slot, mcache, ecache, ctx, t)?;
         }
-        FleetEvent::ThermalDerate { level, .. } => {
+        FleetEvent::ThermalDerate {
+            slot: aux, level, ..
+        } => {
             let b = &mut slot.board;
             advance(b, t);
-            b.derate = f64::from(level) / 1000.0;
+            b.apply_derate(aux, f64::from(level) / 1000.0);
             b.derate_events += 1;
             // the in-flight frame finishes at the rate fixed at its
             // serve start; the NEXT serve start derates
@@ -573,7 +724,13 @@ fn drain_slot(
         if horizon.is_infinite() && slot.pending_t.is_none() && slot.future_arrivals == 0 {
             if let Some(s) = slot.queue.peek() {
                 if let FleetEvent::SleepTimer { idle_epoch, .. } = s.event {
-                    if slot.board.phase == Phase::Idle && slot.board.idle_epoch == idle_epoch {
+                    // a timer a busy sibling slot would veto is NOT live:
+                    // process (and discard) it so the slot's later events
+                    // still drain
+                    if slot.board.phase == Phase::Idle
+                        && slot.board.idle_epoch == idle_epoch
+                        && slot.board.aux_all_idle()
+                    {
                         break; // park: resolved against the final span
                     }
                 }
@@ -589,9 +746,10 @@ fn drain_slot(
             };
             anyhow::bail!(
                 "fleet event budget exhausted after {} events on one timeline: \
-                 board {} is stuck with queue depth {} at t={:.3}s{}",
+                 board {} slot {} is stuck with queue depth {} at t={:.3}s{}",
                 slot.queue.popped() + slot.extra_events,
                 slot.idx,
+                slot.board.stuck_slot(),
                 slot.board.queue.len(),
                 ev.t_s,
                 note,
@@ -812,6 +970,7 @@ impl FleetCoordinator {
                 b.offline = true;
                 b.phase = Phase::Sleeping;
                 b.phase_power_w = 0.0;
+                b.power_off_aux();
             }
         }
 
@@ -862,10 +1021,13 @@ impl FleetCoordinator {
                             fe.at_s,
                             FleetEvent::BoardRecover { board: slot.idx },
                         ),
+                        // thermal faults hit the whole package: every
+                        // DPU slot on the board derates together
                         FaultAction::Derate { level } => slot.queue.push(
                             fe.at_s,
                             FleetEvent::ThermalDerate {
                                 board: slot.idx,
+                                slot: SLOT_ALL,
                                 level,
                             },
                         ),
@@ -954,15 +1116,20 @@ impl FleetCoordinator {
                     .map(|s| s.idx)
                     .collect();
                 dead.sort_unstable();
+                let stuck = {
+                    let (si, pi) = loc[worst];
+                    shards[si].slots[pi].board.stuck_slot()
+                };
                 anyhow::bail!(
                     "fleet event budget exhausted after {} events \
-                     (policy {}, routing {}, {} threads): board {} is stuck with \
+                     (policy {}, routing {}, {} threads): board {} slot {} is stuck with \
                      queue depth {} ({} of {} requests still unserved){}",
                     popped,
                     self.policy.name(),
                     self.config.routing.name(),
                     threads,
                     worst,
+                    stuck,
                     depth,
                     total.saturating_sub(done_count(&shards) + dropped as usize),
                     total,
@@ -1015,7 +1182,12 @@ impl FleetCoordinator {
                         b.obs_traffic_bps = 0.0;
                         b.obs_host_util = 0.0;
                         b.obs_p_fpga = 0.0;
-                        b.queue.drain(..).collect()
+                        let mut backlog: Vec<QueuedReq> = b.queue.drain(..).collect();
+                        // sibling slots die with the board: their
+                        // in-flight frames re-route like the backlog
+                        backlog.extend(b.take_aux_inflight());
+                        b.power_off_aux();
+                        backlog
                     };
                     for q in backlog {
                         let target = {
@@ -1140,6 +1312,7 @@ impl FleetCoordinator {
                             let b = &shards[si].slots[pi].board;
                             b.queue.is_empty()
                                 && matches!(b.phase, Phase::Idle | Phase::Sleeping)
+                                && b.aux_all_idle()
                         })
                         .max_by(|&a, &b| {
                             p_static(&shards, a)
@@ -1157,6 +1330,7 @@ impl FleetCoordinator {
                         b.reconfig = ReconfigManager::new();
                         b.decided = None;
                         b.idle_epoch += 1;
+                        b.power_off_aux();
                     }
                 }
                 continue;
@@ -1371,16 +1545,22 @@ impl FleetCoordinator {
                         spec,
                     };
                     let (si, pi) = loc[req.board];
-                    let slot = &mut shards[si].slots[pi];
+                    let Shard {
+                        slots,
+                        metrics_cache,
+                        ..
+                    } = &mut shards[si];
+                    let slot = &mut slots[pi];
                     apply_decision(
                         slot,
+                        metrics_cache,
                         &ctx,
                         action_id,
                         &req.model,
                         req.state,
                         req.queue.headroom_s,
                         t,
-                    );
+                    )?;
                     decisions += 1;
                 }
             }
@@ -1396,15 +1576,21 @@ impl FleetCoordinator {
                 .map(|s| s.idx)
                 .collect();
             dead.sort_unstable();
+            let stuck = {
+                let (si, pi) = loc[worst];
+                shards[si].slots[pi].board.stuck_slot()
+            };
             anyhow::bail!(
                 "fleet stalled with {} of {} requests unserved \
-                 (policy {}, routing {}, {} threads): board {} is stuck with queue depth {}{}",
+                 (policy {}, routing {}, {} threads): board {} slot {} is stuck \
+                 with queue depth {}{}",
                 total - done - dropped as usize,
                 total,
                 self.policy.name(),
                 self.config.routing.name(),
                 threads,
                 worst,
+                stuck,
                 depth,
                 failed_note_for(&dead),
             );
@@ -1536,10 +1722,19 @@ impl FleetCoordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fleet::FleetSpec;
     use crate::workload::traffic::ArrivalPattern;
 
     fn scenario() -> FleetScenario {
-        FleetScenario::generate(ArrivalPattern::Bursty, 4, 25.0, 8.0, 0.7, 5).unwrap()
+        FleetSpec::new()
+            .pattern(ArrivalPattern::Bursty)
+            .boards(4)
+            .horizon_s(25.0)
+            .rate_rps(8.0)
+            .correlation(0.7)
+            .seed(5)
+            .scenario()
+            .unwrap()
     }
 
     fn coord(routing: RoutingPolicy, baseline: Baseline) -> FleetCoordinator {

@@ -65,6 +65,12 @@ pub struct EnergyMeter {
     pub idle_j: f64,
     pub sleep_j: f64,
     pub wake_j: f64,
+    /// Energy spent by auxiliary DPU slots (slots ≥ 1 of a multi-slot
+    /// board) across *their* serve/idle/reconfigure regimes. Joules
+    /// only: the board's wall-time conservation invariant
+    /// (`total_s() == span`) is owned by the lead slot, and sibling
+    /// slots overlap it in time rather than extending it.
+    pub slot_j: f64,
     pub active_s: f64,
     pub idle_s: f64,
     pub sleep_s: f64,
@@ -98,9 +104,15 @@ impl EnergyMeter {
         self.wake_j += e_j;
     }
 
+    /// Integrate `dt_s` of auxiliary-slot power at `p_w` watts (joules
+    /// only; see [`EnergyMeter::slot_j`]).
+    pub fn add_slot(&mut self, p_w: f64, dt_s: f64) {
+        self.slot_j += p_w * dt_s;
+    }
+
     /// Total PL energy across all regimes.
     pub fn total_j(&self) -> f64 {
-        self.active_j + self.idle_j + self.sleep_j + self.wake_j
+        self.active_j + self.idle_j + self.sleep_j + self.wake_j + self.slot_j
     }
 
     /// Total accounted wall time.

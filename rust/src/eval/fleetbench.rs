@@ -19,7 +19,7 @@
 
 use crate::coordinator::board::BoardProfile;
 use crate::coordinator::fleet::{
-    FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy, RunMode,
+    FleetConfig, FleetCoordinator, FleetPolicy, FleetSpec, RoutingPolicy, RunMode,
 };
 use crate::eval::minijson::{self, Json};
 use crate::rl::Baseline;
@@ -133,10 +133,11 @@ fn run_pair(
     seed: u64,
     tick_s: f64,
     classes: &[&str],
+    slots: &[usize],
     faults: Option<FaultProfile>,
 ) -> Result<ScenarioResult> {
     let scenario =
-        FleetScenario::generate(pattern, boards, horizon_s, rate_rps, correlation, seed)?;
+        FleetSpec::new().pattern(pattern).boards(boards).horizon_s(horizon_s).rate_rps(rate_rps).correlation(correlation).seed(seed).scenario()?;
     let profiles: Vec<BoardProfile> = if classes.is_empty() {
         Vec::new()
     } else {
@@ -147,6 +148,9 @@ fn run_pair(
             .map(|c| BoardProfile::of_class(c, &sizes))
             .collect::<Result<_>>()?
     };
+    if !slots.is_empty() {
+        anyhow::ensure!(slots.len() == boards, "one slot count per board");
+    }
     let mk = || -> Result<FleetCoordinator> {
         let cfg = FleetConfig {
             boards,
@@ -154,6 +158,7 @@ fn run_pair(
             routing: RoutingPolicy::SloAware,
             seed,
             profiles: profiles.clone(),
+            slots: slots.to_vec(),
             faults: faults.clone(),
             ..FleetConfig::default()
         };
@@ -196,7 +201,7 @@ fn run_stream(smoke: bool, tick_s: f64) -> Result<ScenarioResult> {
     let (horizon, rate) = if smoke { (60.0, 150.0) } else { (240.0, 400.0) };
     let seed = 31;
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, boards, horizon, rate, 0.5, seed)?;
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(boards).horizon_s(horizon).rate_rps(rate).correlation(0.5).seed(seed).scenario()?;
     let cap = 256;
     let cfg = FleetConfig {
         boards,
@@ -257,7 +262,7 @@ fn run_dense_10k(smoke: bool, tick_s: f64) -> Result<ScenarioResult> {
     let (horizon, rate) = if smoke { (2.0, 1500.0) } else { (6.0, 4000.0) };
     let seed = 41;
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, boards, horizon, rate, 0.5, seed)?;
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(boards).horizon_s(horizon).rate_rps(rate).correlation(0.5).seed(seed).scenario()?;
     let mk = || -> Result<FleetCoordinator> {
         let cfg = FleetConfig {
             boards,
@@ -317,7 +322,7 @@ fn run_scaling(smoke: bool) -> Result<ScalingReport> {
     let (horizon, rate) = if smoke { (30.0, 120.0) } else { (90.0, 200.0) };
     let seed = 21;
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, boards, horizon, rate, 0.5, seed)?;
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(boards).horizon_s(horizon).rate_rps(rate).correlation(0.5).seed(seed).scenario()?;
     let mk = || -> Result<FleetCoordinator> {
         let cfg = FleetConfig {
             boards,
@@ -393,6 +398,7 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             11,
             tick_s,
             &[],
+            &[],
             None,
         )?,
         run_pair(
@@ -405,6 +411,7 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             12,
             tick_s,
             &[],
+            &[],
             None,
         )?,
         run_pair(
@@ -416,6 +423,7 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             0.7,
             13,
             tick_s,
+            &[],
             &[],
             None,
         )?,
@@ -432,6 +440,7 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             14,
             tick_s,
             &["B512", "B1024", "B4096", "B4096"],
+            &[],
             None,
         )?,
         // fault injection (DESIGN.md §13): a correlated failure storm
@@ -448,7 +457,25 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
             15,
             tick_s,
             &[],
+            &[],
             Some(FaultProfile::correlated(15)),
+        )?,
+        // multi-slot boards (DESIGN.md §16): a rack mixing a 2-slot
+        // B4096, a single-slot B512, and a 4-slot B1024 — points the
+        // gate at the shared-fabric contention + partial-reconfiguration
+        // path and pins its event-vs-tick parity
+        run_pair(
+            "multi_slot",
+            ArrivalPattern::Steady,
+            3,
+            dense_h,
+            dense_rate * 0.5,
+            0.7,
+            16,
+            tick_s,
+            &["B4096", "B512", "B1024"],
+            &[2, 1, 4],
+            None,
         )?,
         // streaming telemetry (DESIGN.md §14): high request volume with a
         // small trail-reservoir cap — records peak RSS, pins O(cap) memory

@@ -10,9 +10,10 @@
 //! dpuconfig fig6    [--dwell 30]                # reconfiguration timeline
 //! dpuconfig serve   [--requests 64]             # threaded decision service
 //! dpuconfig decide  --model ResNet152 --state M # one decision, verbose
-//! dpuconfig fleet   [--boards 4] [--routing energy_aware] [--pattern diurnal]
+//! dpuconfig fleet   [--fleet "B4096x2,B512,B1024x4"]  # CLASSxK = K DPU slots
+//!                   [--boards 4] [--routing energy_aware] [--pattern diurnal]
 //!                   [--rate 20] [--slo-ms 250] [--slo ResNet152=120]
-//!                   [--profiles B512,B1024,B4096,B4096]   # heterogeneous fleet
+//!                   [--profiles B512,B1024,B4096,B4096]  # alias: single-slot boards
 //!                   [--faults independent|correlated|thermal|link] [--autoscale]
 //!                   [--threads N] [--fingerprint] [--fine-tick] [--assert-served]
 //!                   [--metrics-port 0] [--metrics-hold 5] [--trace-out traces.jsonl]
@@ -145,36 +146,51 @@ fn run() -> Result<()> {
             colocate_demo(args.positional.clone(), state)?;
         }
         "fleet" => {
-            // --profiles B512,B1024,B4096: one board class per entry (a
-            // heterogeneous fleet); the board count follows the list
-            let profile_classes: Vec<String> = args
-                .opt("profiles")
-                .map(|s| {
-                    s.split(',')
-                        .filter(|c| !c.is_empty())
-                        .map(String::from)
-                        .collect()
-                })
-                .unwrap_or_default();
-            let boards = if profile_classes.is_empty() {
-                args.opt_usize("boards", 4)?
+            // --fleet "B4096x2,B512,B1024x4": one entry per board,
+            // CLASSxK for K DPU slots (DESIGN.md §16). The older
+            // --boards N / --profiles B512,B1024,B4096 flags remain as
+            // documented aliases that desugar to the same per-board
+            // spec list (one single-slot board per profile entry).
+            let specs: Vec<dpuconfig::coordinator::BoardSpec> = if let Some(s) = args.opt("fleet")
+            {
+                anyhow::ensure!(
+                    args.opt("profiles").is_none() && args.opt("boards").is_none(),
+                    "--fleet already names every board; drop --boards/--profiles"
+                );
+                dpuconfig::coordinator::parse_fleet_spec(s)?
             } else {
-                if let Some(explicit) = args.opt("boards") {
-                    let n: usize = explicit
-                        .parse()
-                        .with_context(|| format!("--boards {explicit:?} is not an integer"))?;
-                    anyhow::ensure!(
-                        n == profile_classes.len(),
-                        "--boards {n} conflicts with --profiles ({} classes listed); \
-                         drop --boards or make them agree",
-                        profile_classes.len()
-                    );
+                let profile_classes: Vec<String> = args
+                    .opt("profiles")
+                    .map(|s| {
+                        s.split(',')
+                            .filter(|c| !c.is_empty())
+                            .map(String::from)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                if profile_classes.is_empty() {
+                    let n = args.opt_usize("boards", 4)?;
+                    vec![dpuconfig::coordinator::BoardSpec::reference(); n]
+                } else {
+                    if let Some(explicit) = args.opt("boards") {
+                        let n: usize = explicit
+                            .parse()
+                            .with_context(|| format!("--boards {explicit:?} is not an integer"))?;
+                        anyhow::ensure!(
+                            n == profile_classes.len(),
+                            "--boards {n} conflicts with --profiles ({} classes listed); \
+                             drop --boards or make them agree",
+                            profile_classes.len()
+                        );
+                    }
+                    profile_classes
+                        .iter()
+                        .map(|c| dpuconfig::coordinator::BoardSpec::of_class(c))
+                        .collect()
                 }
-                profile_classes.len()
             };
             let opts = FleetDemoOpts {
-                boards,
-                profile_classes,
+                specs,
                 horizon: args.opt_f64("horizon", 120.0)?,
                 rate: args.opt_f64("rate", 20.0)?,
                 routing: args.opt_or("routing", "energy_aware").parse()?,
@@ -372,9 +388,9 @@ fn default_threads() -> usize {
 }
 
 struct FleetDemoOpts {
-    boards: usize,
-    /// Board classes for a heterogeneous fleet (empty = homogeneous).
-    profile_classes: Vec<String>,
+    /// One entry per board: class + DPU slot count (the `--fleet`
+    /// grammar; the legacy flags desugar to single-slot entries).
+    specs: Vec<dpuconfig::coordinator::BoardSpec>,
     horizon: f64,
     rate: f64,
     routing: dpuconfig::coordinator::RoutingPolicy,
@@ -406,8 +422,7 @@ struct FleetDemoOpts {
 
 fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
     use dpuconfig::coordinator::{
-        AutoscaleConfig, BoardProfile, FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario,
-        RunMode, SloConfig,
+        AutoscaleConfig, BoardSpec, FleetCoordinator, FleetPolicy, FleetSpec, RunMode, SloConfig,
     };
     use dpuconfig::workload::traffic::FaultProfile;
     let fleet_policy = match o.policy.as_str() {
@@ -422,15 +437,6 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         "random" => FleetPolicy::Static(Baseline::Random),
         other => bail!("unknown policy {other:?}"),
     };
-    let profiles: Vec<BoardProfile> = if o.profile_classes.is_empty() {
-        Vec::new()
-    } else {
-        let sizes = dpuconfig::data::load_dpu_sizes()?;
-        o.profile_classes
-            .iter()
-            .map(|c| BoardProfile::of_class(c, &sizes))
-            .collect::<Result<_>>()?
-    };
     let faults = match &o.faults {
         Some(kind) => Some(FaultProfile::named(kind, o.seed)?),
         None => None,
@@ -439,37 +445,52 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
         !(o.fine_tick && (faults.is_some() || o.autoscale)),
         "--fine-tick is the pre-fault reference mode; drop --faults/--autoscale"
     );
-    let mut cfg = FleetConfig {
-        boards: o.boards,
-        routing: o.routing,
-        seed: o.seed,
-        slo: SloConfig {
-            default_ms: o.slo_ms,
-            per_model: o.slo_overrides.clone(),
-        },
-        profiles,
-        faults,
-        autoscale: o.autoscale.then(AutoscaleConfig::default),
-        ..FleetConfig::default()
+    anyhow::ensure!(
+        !(o.fine_tick && o.specs.iter().any(|s| s.slot_count() > 1)),
+        "--fine-tick is the single-slot reference mode; drop multi-slot entries from --fleet"
+    );
+    let mut fspec = FleetSpec::new()
+        .pattern(o.pattern)
+        .horizon_s(o.horizon)
+        .rate_rps(o.rate)
+        .correlation(o.correlation)
+        .seed(o.seed)
+        .routing(o.routing);
+    for s in &o.specs {
+        fspec = fspec.board(s.clone());
+    }
+    let (mut cfg, scenario) = fspec.realize()?;
+    cfg.slo = SloConfig {
+        default_ms: o.slo_ms,
+        per_model: o.slo_overrides.clone(),
     };
+    cfg.faults = faults;
+    cfg.autoscale = o.autoscale.then(AutoscaleConfig::default);
     if let Some(cap) = o.trail_sample {
         cfg.trail_sample = cap;
     }
-    let scenario = FleetScenario::generate(
-        o.pattern,
-        o.boards,
-        o.horizon,
-        o.rate,
-        o.correlation,
-        o.seed,
-    )?;
+    let reference_fleet = o
+        .specs
+        .iter()
+        .all(|s| *s == BoardSpec::reference());
     println!(
         "fleet: {} boards{}, {} requests ({}), routing {}, horizon {}s, SLO {} ms, {} thread(s){}{}",
-        o.boards,
-        if o.profile_classes.is_empty() {
+        o.specs.len(),
+        if reference_fleet {
             String::new()
         } else {
-            format!(" [{}]", o.profile_classes.join(","))
+            format!(
+                " [{}]",
+                o.specs
+                    .iter()
+                    .map(|s| if s.slot_count() == 1 {
+                        s.class_name().to_string()
+                    } else {
+                        format!("{}x{}", s.class_name(), s.slot_count())
+                    })
+                    .collect::<Vec<_>>()
+                    .join(",")
+            )
         },
         scenario.requests.len(),
         o.pattern.name(),

@@ -733,14 +733,14 @@ mod tests {
         // determinism satellite: the full request stream (times + model
         // assignment), not just arrival times, must reproduce per seed —
         // for every arrival process
-        use crate::coordinator::fleet::FleetScenario;
+        use crate::coordinator::fleet::FleetSpec;
         for pattern in [
             ArrivalPattern::Steady,
             ArrivalPattern::Diurnal,
             ArrivalPattern::Bursty,
         ] {
-            let a = FleetScenario::generate(pattern, 2, 60.0, 10.0, 0.7, 21).unwrap();
-            let b = FleetScenario::generate(pattern, 2, 60.0, 10.0, 0.7, 21).unwrap();
+            let a = FleetSpec::new().pattern(pattern).boards(2).horizon_s(60.0).rate_rps(10.0).correlation(0.7).seed(21).scenario().unwrap();
+            let b = FleetSpec::new().pattern(pattern).boards(2).horizon_s(60.0).rate_rps(10.0).correlation(0.7).seed(21).scenario().unwrap();
             assert_eq!(a.requests.len(), b.requests.len(), "{pattern:?}");
             for (x, y) in a.requests.iter().zip(&b.requests) {
                 assert_eq!(x.at_s, y.at_s);
@@ -748,7 +748,7 @@ mod tests {
             }
             assert_eq!(a.schedules, b.schedules, "{pattern:?} schedules");
             // and a different seed must actually change the stream
-            let c = FleetScenario::generate(pattern, 2, 60.0, 10.0, 0.7, 22).unwrap();
+            let c = FleetSpec::new().pattern(pattern).boards(2).horizon_s(60.0).rate_rps(10.0).correlation(0.7).seed(22).scenario().unwrap();
             assert!(
                 a.requests.len() != c.requests.len()
                     || a

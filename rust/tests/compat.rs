@@ -1,0 +1,80 @@
+//! Pre-builder compatibility surface (DESIGN.md §16).
+//!
+//! The typed [`FleetSpec`]/[`BoardSpec`] builder owns fleet
+//! construction now; the positional `FleetScenario::generate` shim and
+//! hand-rolled `FleetConfig` literals stay alive for downstream users.
+//! These tests exercise that surface from outside the crate: the
+//! deprecated entry points must compile (under `allow(deprecated)`,
+//! which CI's deprecation gate sanctions only here and in the shim's
+//! own module) and behave identically to the builder.
+
+use dpuconfig::coordinator::fleet::{
+    FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, FleetSpec, RoutingPolicy,
+};
+use dpuconfig::rl::Baseline;
+use dpuconfig::workload::traffic::ArrivalPattern;
+
+/// The deprecated positional generator is a thin forward to the
+/// builder: same requests, same co-runner schedules, same horizon.
+#[test]
+fn deprecated_generate_is_a_thin_builder_forward() {
+    #[allow(deprecated)]
+    let old = FleetScenario::generate(ArrivalPattern::Bursty, 3, 18.0, 7.0, 0.6, 21).unwrap();
+    let new = FleetSpec::new()
+        .pattern(ArrivalPattern::Bursty)
+        .boards(3)
+        .horizon_s(18.0)
+        .rate_rps(7.0)
+        .correlation(0.6)
+        .seed(21)
+        .scenario()
+        .unwrap();
+    assert_eq!(old.horizon_s, new.horizon_s);
+    assert_eq!(old.schedules, new.schedules);
+    assert_eq!(old.requests.len(), new.requests.len());
+    assert!(old
+        .requests
+        .iter()
+        .zip(&new.requests)
+        .all(|(a, b)| a.at_s == b.at_s && a.model.name() == b.model.name()));
+}
+
+/// A run wired entirely through the old surface — positional scenario
+/// plus a hand-rolled `FleetConfig` literal — fingerprints identically
+/// to the same fleet built through the typed spec.
+#[test]
+fn old_construction_path_runs_identically_to_the_builder() {
+    #[allow(deprecated)]
+    let old_scenario =
+        FleetScenario::generate(ArrivalPattern::Steady, 2, 15.0, 6.0, 0.5, 4).unwrap();
+    let old_cfg = FleetConfig {
+        boards: 2,
+        routing: RoutingPolicy::LeastLoaded,
+        seed: 4,
+        ..FleetConfig::default()
+    };
+    let old = FleetCoordinator::new(old_cfg, FleetPolicy::Static(Baseline::Optimal))
+        .unwrap()
+        .run(&old_scenario)
+        .unwrap();
+
+    let spec = FleetSpec::new()
+        .boards(2)
+        .pattern(ArrivalPattern::Steady)
+        .horizon_s(15.0)
+        .rate_rps(6.0)
+        .correlation(0.5)
+        .seed(4)
+        .routing(RoutingPolicy::LeastLoaded);
+    let (cfg, scenario) = spec.realize().unwrap();
+    let new = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal))
+        .unwrap()
+        .run(&scenario)
+        .unwrap();
+
+    assert_eq!(
+        old.fingerprint(),
+        new.fingerprint(),
+        "builder-built fleet drifted from the legacy construction path"
+    );
+}

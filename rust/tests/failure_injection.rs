@@ -17,7 +17,7 @@
 
 use dpuconfig::coordinator::fleet::{
     AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetReport, FleetRequest,
-    FleetScenario, RoutingPolicy,
+    FleetScenario, FleetSpec, RoutingPolicy,
 };
 use dpuconfig::csvutil::Table;
 use dpuconfig::data::load_models;
@@ -198,7 +198,7 @@ fn assert_conserved(r: &FleetReport, scenario: &FleetScenario) {
 #[test]
 fn board_death_mid_frame_loses_no_request() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 4, 30.0, 12.0, 0.5, 7).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(4).horizon_s(30.0).rate_rps(12.0).correlation(0.5).seed(7).scenario().unwrap();
     let cfg = FleetConfig {
         boards: 4,
         routing: RoutingPolicy::SloAware,
@@ -236,7 +236,7 @@ fn board_death_mid_frame_loses_no_request() {
 #[test]
 fn slo_aware_beats_round_robin_p99_under_correlated_storm() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 4, 40.0, 15.0, 0.7, 9).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(4).horizon_s(40.0).rate_rps(15.0).correlation(0.7).seed(9).scenario().unwrap();
     // dense storms (mtbf 6 s, 90% hit rate) so deaths are certain and
     // the routing policies have something to disagree about
     let storm = FaultProfile {
@@ -283,7 +283,7 @@ fn slo_aware_beats_round_robin_p99_under_correlated_storm() {
 #[test]
 fn link_degradation_conserves_and_is_deterministic_across_threads() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 4, 40.0, 10.0, 0.6, 19).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(4).horizon_s(40.0).rate_rps(10.0).correlation(0.6).seed(19).scenario().unwrap();
     let mk = |routing: RoutingPolicy| {
         let cfg = FleetConfig {
             boards: 4,
@@ -322,7 +322,7 @@ fn link_degradation_conserves_and_is_deterministic_across_threads() {
 #[test]
 fn link_degradation_inflates_service_time() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 2, 30.0, 12.0, 0.5, 23).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(2).horizon_s(30.0).rate_rps(12.0).correlation(0.5).seed(23).scenario().unwrap();
     let run = |faults: Option<FaultProfile>| {
         let cfg = FleetConfig {
             boards: 2,
@@ -358,7 +358,7 @@ fn link_degradation_inflates_service_time() {
 /// 1 rps trickle to the 60 s horizon (so ScaleCheck keeps beating and
 /// the drain side of the policy is actually exercised).
 fn flash_crowd(boards: usize) -> FleetScenario {
-    let crowd = FleetScenario::generate(ArrivalPattern::Steady, 4, 10.0, 200.0, 0.0, 21).unwrap();
+    let crowd = FleetSpec::new().pattern(ArrivalPattern::Steady).boards(4).horizon_s(10.0).rate_rps(200.0).correlation(0.0).seed(21).scenario().unwrap();
     let mut requests = crowd.requests;
     let mut t = 11.0;
     while t < 58.0 {
@@ -460,7 +460,7 @@ fn autoscaler_provisions_under_flash_crowd_and_drains_on_trough() {
 #[test]
 fn fault_fingerprints_identical_across_threads_for_every_combo() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 4, 20.0, 10.0, 0.6, 13).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(4).horizon_s(20.0).rate_rps(10.0).correlation(0.6).seed(13).scenario().unwrap();
     let mk = |routing: RoutingPolicy, baseline: Baseline| {
         let cfg = FleetConfig {
             boards: 4,
@@ -504,7 +504,7 @@ fn fault_fingerprints_identical_across_threads_for_every_combo() {
 #[test]
 fn fault_plus_autoscale_fingerprints_identical_across_threads() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 4, 25.0, 12.0, 0.6, 17).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(4).horizon_s(25.0).rate_rps(12.0).correlation(0.6).seed(17).scenario().unwrap();
     let mk = || {
         let cfg = FleetConfig {
             boards: 4,

@@ -9,7 +9,7 @@
 //! event-budget exhaustion error naming the stuck board.
 
 use dpuconfig::coordinator::fleet::{
-    least_loaded_pick, FleetConfig, FleetCoordinator, FleetPolicy, FleetRequest, FleetScenario,
+    least_loaded_pick, FleetConfig, FleetCoordinator, FleetPolicy, FleetRequest, FleetScenario, FleetSpec,
     RoutingPolicy, RunMode, SloConfig,
 };
 use dpuconfig::coordinator::BoardProfile;
@@ -55,7 +55,7 @@ fn optimal_fleet(cfg: FleetConfig) -> FleetCoordinator {
 #[test]
 fn event_core_matches_fine_tick_on_dense_scenario() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 2, 30.0, 30.0, 0.7, 11).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(2).horizon_s(30.0).rate_rps(30.0).correlation(0.7).seed(11).scenario().unwrap();
     let cfg = FleetConfig {
         boards: 2,
         tick_s: 0.05,
@@ -91,7 +91,7 @@ fn event_core_matches_fine_tick_on_dense_scenario() {
 #[test]
 fn event_core_skips_idle_on_sparse_diurnal_scenario() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Diurnal, 4, 400.0, 0.4, 0.7, 12).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Diurnal).boards(4).horizon_s(400.0).rate_rps(0.4).correlation(0.7).seed(12).scenario().unwrap();
     assert!(!scenario.requests.is_empty());
     let cfg = FleetConfig {
         boards: 4,
@@ -202,7 +202,7 @@ fn slo_router_beats_round_robin_on_p99_in_bursty_storm() {
 #[test]
 fn sleeping_fleet_beats_always_on_fleet_under_diurnal_load() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Diurnal, 4, 300.0, 2.0, 0.8, 17).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Diurnal).boards(4).horizon_s(300.0).rate_rps(2.0).correlation(0.8).seed(17).scenario().unwrap();
 
     let managed_cfg = FleetConfig {
         boards: 4,
@@ -247,7 +247,7 @@ fn sleeping_fleet_beats_always_on_fleet_under_diurnal_load() {
 #[test]
 fn same_seed_same_report_for_every_routing_and_policy() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 3, 30.0, 8.0, 0.7, 9).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(3).horizon_s(30.0).rate_rps(8.0).correlation(0.7).seed(9).scenario().unwrap();
     let fingerprint = |routing: RoutingPolicy, policy: &str| -> String {
         let cfg = FleetConfig {
             boards: 3,
@@ -338,7 +338,7 @@ fn first_request_lands_on_board_zero_under_least_loaded() {
 #[test]
 fn trails_and_model_histograms_are_consistent() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 2, 20.0, 10.0, 0.5, 21).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(2).horizon_s(20.0).rate_rps(10.0).correlation(0.5).seed(21).scenario().unwrap();
     let cfg = FleetConfig {
         boards: 2,
         routing: RoutingPolicy::SloAware,
@@ -370,7 +370,7 @@ fn trails_and_model_histograms_are_consistent() {
 #[test]
 fn sharded_fingerprint_is_thread_count_invariant_for_every_combo() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 3, 30.0, 8.0, 0.7, 9).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(3).horizon_s(30.0).rate_rps(8.0).correlation(0.7).seed(9).scenario().unwrap();
     let fingerprint = |routing: RoutingPolicy, policy: &str, threads: usize| -> String {
         let cfg = FleetConfig {
             boards: 3,
@@ -410,7 +410,7 @@ fn sharded_fingerprint_is_thread_count_invariant_for_every_combo() {
 #[test]
 fn prop_random_board_partitions_produce_identical_fingerprints() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 5, 25.0, 6.0, 0.7, 13).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(5).horizon_s(25.0).rate_rps(6.0).correlation(0.7).seed(13).scenario().unwrap();
     let mk = || {
         let cfg = FleetConfig {
             boards: 5,
@@ -443,7 +443,7 @@ fn prop_random_board_partitions_produce_identical_fingerprints() {
 #[test]
 fn sharded_executor_matches_single_queue_physics() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 3, 25.0, 10.0, 0.6, 19).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(3).horizon_s(25.0).rate_rps(10.0).correlation(0.6).seed(19).scenario().unwrap();
     for routing in RoutingPolicy::all() {
         let cfg = FleetConfig {
             boards: 3,
@@ -539,7 +539,7 @@ fn mixed_profiles(classes: &[&str]) -> Vec<BoardProfile> {
 #[test]
 fn heterogeneous_fleet_fingerprint_is_thread_invariant_for_every_combo() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 3, 30.0, 6.0, 0.7, 15).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(3).horizon_s(30.0).rate_rps(6.0).correlation(0.7).seed(15).scenario().unwrap();
     let fingerprint = |routing: RoutingPolicy, policy: &str, threads: usize| -> String {
         let cfg = FleetConfig {
             boards: 3,
@@ -582,7 +582,7 @@ fn heterogeneous_fleet_fingerprint_is_thread_invariant_for_every_combo() {
 #[test]
 fn heterogeneous_fleet_event_core_matches_fine_tick() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 3, 30.0, 15.0, 0.6, 16).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(3).horizon_s(30.0).rate_rps(15.0).correlation(0.6).seed(16).scenario().unwrap();
     let mk = || {
         let cfg = FleetConfig {
             boards: 3,

@@ -9,7 +9,7 @@
 //! * the serving loop (Selector::Online through the coordinator) and the
 //!   fleet (one shared online policy) both close the feedback loop.
 
-use dpuconfig::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario};
+use dpuconfig::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetPolicy, FleetSpec};
 use dpuconfig::coordinator::{Coordinator, Scenario, Selector};
 use dpuconfig::online::buffer::{gae, ReplayBuffer, Transition};
 use dpuconfig::online::policy::MlpPolicy;
@@ -243,7 +243,7 @@ fn serving_loop_closes_the_feedback_loop_under_drift() {
 #[test]
 fn fleet_shares_one_online_policy() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 3, 60.0, 10.0, 0.7, 5).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(3).horizon_s(60.0).rate_rps(10.0).correlation(0.7).seed(5).scenario().unwrap();
     let cfg = FleetConfig {
         boards: 3,
         seed: 5,

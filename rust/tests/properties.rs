@@ -5,7 +5,7 @@
 //! frames and energy; availability is a true fraction).
 
 use dpuconfig::coordinator::fleet::{
-    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetSpec, RoutingPolicy,
 };
 use dpuconfig::coordinator::{Arrival, Coordinator, Event, ReconfigManager, Scenario, Selector};
 use dpuconfig::dpusim::{DpuSim, FPS_CONSTRAINT};
@@ -279,7 +279,7 @@ fn prop_speculative_sharded_fingerprint_matches_single_queue() {
             ArrivalPattern::Bursty
         };
         let scenario =
-            FleetScenario::generate(pattern, boards, horizon, rate, 0.4, seed).unwrap();
+            FleetSpec::new().pattern(pattern).boards(boards).horizon_s(horizon).rate_rps(rate).correlation(0.4).seed(seed).scenario().unwrap();
         let faults = if g.bool() {
             FaultProfile::link(seed)
         } else {
@@ -341,7 +341,7 @@ fn prop_faults_only_ever_cost_frames_and_energy() {
         } else {
             ArrivalPattern::Bursty
         };
-        let scenario = FleetScenario::generate(pattern, 4, horizon, rate, 0.3, seed).unwrap();
+        let scenario = FleetSpec::new().pattern(pattern).boards(4).horizon_s(horizon).rate_rps(rate).correlation(0.3).seed(seed).scenario().unwrap();
         let mk = |faults: Option<FaultProfile>| {
             let cfg = FleetConfig {
                 boards: 4,

@@ -1,0 +1,230 @@
+//! Multi-slot board integration contracts (DESIGN.md §16).
+//!
+//! Three pins:
+//! - **K=1 identity** — a fleet with an explicit `slots: vec![1; n]`
+//!   must fingerprint byte-identically to the pre-slot path (`slots:
+//!   vec![]`) for every RoutingPolicy x FleetPolicy combo at 1 and 4
+//!   host threads, and neither run may grow the `:sl=` column.
+//! - **Fabric economics** — frames served are invariant in slot count
+//!   (extra slots never lose or invent work), per-slot accounting
+//!   closes (`sum(slot_served) == requests_done` on every board), and
+//!   total energy is strictly monotone in slot count: sibling slots
+//!   burn retention power all run, and the shared-fabric cap means
+//!   they cannot conjure MAC throughput to pay for it (the
+//!   oversubscription inflation factor itself is pinned by the board
+//!   kernel's unit tests).
+//! - **Thread invariance** — a mixed multi-slot rack under fault
+//!   injection + the autoscaler produces one fingerprint for the
+//!   single-queue loop and for the sharded executor at every thread
+//!   count.
+
+use dpuconfig::coordinator::fleet::{
+    parse_fleet_spec, AutoscaleConfig, BoardSpec, FleetConfig, FleetCoordinator, FleetPolicy,
+    FleetSpec, RoutingPolicy,
+};
+use dpuconfig::rl::Baseline;
+use dpuconfig::runtime::{default_policy_path, PolicyRuntime};
+use dpuconfig::workload::traffic::{ArrivalPattern, FaultProfile};
+
+const ROUTINGS: [RoutingPolicy; 4] = [
+    RoutingPolicy::RoundRobin,
+    RoutingPolicy::LeastLoaded,
+    RoutingPolicy::EnergyAware,
+    RoutingPolicy::SloAware,
+];
+
+const BASELINES: [Baseline; 4] = [
+    Baseline::Optimal,
+    Baseline::MaxFps,
+    Baseline::MinPower,
+    Baseline::Random,
+];
+
+/// Acceptance pin: explicit single-slot boards are the pre-slot kernel,
+/// bit for bit, for every routing x static-baseline combo at 1 and 4
+/// threads. The slot machinery must be invisible when K=1.
+#[test]
+fn k1_fleets_fingerprint_identically_to_pre_slot_boards() {
+    let scenario = FleetSpec::new()
+        .pattern(ArrivalPattern::Bursty)
+        .boards(3)
+        .horizon_s(15.0)
+        .rate_rps(6.0)
+        .correlation(0.5)
+        .seed(11)
+        .scenario()
+        .unwrap();
+    for routing in ROUTINGS {
+        for baseline in BASELINES {
+            let mk = |slots: Vec<usize>| {
+                let cfg = FleetConfig {
+                    boards: 3,
+                    routing,
+                    seed: 11,
+                    slots,
+                    ..FleetConfig::default()
+                };
+                FleetCoordinator::new(cfg, FleetPolicy::Static(baseline)).unwrap()
+            };
+            for threads in [1usize, 4] {
+                let base = mk(Vec::new())
+                    .run_threads(&scenario, threads)
+                    .unwrap()
+                    .fingerprint();
+                let k1 = mk(vec![1; 3])
+                    .run_threads(&scenario, threads)
+                    .unwrap()
+                    .fingerprint();
+                assert_eq!(
+                    base, k1,
+                    "K=1 drifted from pre-slot: {routing:?} {baseline:?} threads={threads}"
+                );
+                assert!(
+                    !k1.contains(":sl="),
+                    "single-slot fleet grew a slot column: {k1}"
+                );
+            }
+        }
+    }
+}
+
+/// Same identity for the learned-policy arm of FleetPolicy (gated on
+/// the committed policy artifact, like the other agent suites).
+#[test]
+fn k1_identity_holds_for_agent_policy() {
+    if !default_policy_path(1).exists() {
+        eprintln!("skipping: policy artifact not present");
+        return;
+    }
+    let scenario = FleetSpec::new()
+        .pattern(ArrivalPattern::Steady)
+        .boards(2)
+        .horizon_s(12.0)
+        .rate_rps(5.0)
+        .correlation(0.5)
+        .seed(3)
+        .scenario()
+        .unwrap();
+    let run = |slots: Vec<usize>, threads: usize| {
+        let rt = PolicyRuntime::load(&default_policy_path(1), 1).unwrap();
+        let cfg = FleetConfig {
+            boards: 2,
+            routing: RoutingPolicy::EnergyAware,
+            seed: 3,
+            slots,
+            ..FleetConfig::default()
+        };
+        FleetCoordinator::new(cfg, FleetPolicy::Agent(rt))
+            .unwrap()
+            .run_threads(&scenario, threads)
+            .unwrap()
+            .fingerprint()
+    };
+    for threads in [1usize, 4] {
+        assert_eq!(
+            run(Vec::new(), threads),
+            run(vec![1; 2], threads),
+            "agent K=1 drifted at threads={threads}"
+        );
+    }
+}
+
+/// Fabric-contention economics on one B4096-class board: slot count
+/// k in {1, 2, 3} serves exactly the same request set (never faster
+/// than the shared fabric allows, never dropping work), per-slot
+/// accounting closes, and total energy strictly increases with k —
+/// idle siblings hold bitstream retention power, so a slot that does
+/// not earn its keep shows up on the meter.
+#[test]
+fn fabric_contention_frames_invariant_energy_monotone_in_slots() {
+    let mut last_energy = f64::NEG_INFINITY;
+    let mut frames: Option<u64> = None;
+    for k in [1usize, 2, 3] {
+        let (cfg, scenario) = FleetSpec::new()
+            .board(BoardSpec::of_class("B4096").slots(k))
+            .pattern(ArrivalPattern::Steady)
+            .horizon_s(25.0)
+            .rate_rps(3.0)
+            .seed(7)
+            .routing(RoutingPolicy::RoundRobin)
+            .realize()
+            .unwrap();
+        let r = FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal))
+            .unwrap()
+            .run(&scenario)
+            .unwrap();
+        assert_eq!(
+            r.requests_done() as usize,
+            r.requests_total,
+            "k={k}: fabric cap must stretch service, never drop frames"
+        );
+        let b = &r.boards[0];
+        assert_eq!(b.slot_served.len(), k);
+        assert_eq!(
+            b.slot_served.iter().sum::<u64>(),
+            b.requests_done,
+            "k={k}: per-slot serve accounting does not close: {:?}",
+            b.slot_served
+        );
+        match frames {
+            None => frames = Some(r.requests_done()),
+            Some(f) => assert_eq!(
+                f,
+                r.requests_done(),
+                "k={k}: served-frame count must be invariant in slot count"
+            ),
+        }
+        let e = r.total_energy_j();
+        assert!(
+            e > last_energy,
+            "k={k}: energy must grow with slot count (retention power), got {e} after {last_energy}"
+        );
+        last_energy = e;
+    }
+}
+
+/// Tentpole acceptance: a mixed multi-slot rack (B4096x2, B512,
+/// B1024x4) under correlated fault injection and the SLO-pressure
+/// autoscaler is byte-identical across executors and thread counts,
+/// conserves requests, and reports the slot columns.
+#[test]
+fn mixed_multi_slot_rack_is_thread_count_invariant_under_faults_and_autoscale() {
+    let mut spec = FleetSpec::new()
+        .pattern(ArrivalPattern::Bursty)
+        .horizon_s(25.0)
+        .rate_rps(10.0)
+        .correlation(0.6)
+        .seed(13)
+        .routing(RoutingPolicy::SloAware);
+    for b in parse_fleet_spec("B4096x2,B512,B1024x4").unwrap() {
+        spec = spec.board(b);
+    }
+    let (mut cfg, scenario) = spec.realize().unwrap();
+    cfg.faults = Some(FaultProfile::correlated(17));
+    cfg.autoscale = Some(AutoscaleConfig {
+        min_active: 2,
+        ..AutoscaleConfig::default()
+    });
+    let mk = || {
+        FleetCoordinator::new(cfg.clone(), FleetPolicy::Static(Baseline::Optimal)).unwrap()
+    };
+    let base = mk().run(&scenario).unwrap();
+    assert_eq!(
+        base.requests_done() + base.dropped,
+        base.requests_total as u64,
+        "conservation broke on the multi-slot rack"
+    );
+    assert!(
+        base.fingerprint().contains(":sl="),
+        "multi-slot rack lost its slot column: {}",
+        base.fingerprint()
+    );
+    for threads in [1usize, 2, 4] {
+        let fp = mk().run_threads(&scenario, threads).unwrap().fingerprint();
+        assert_eq!(
+            fp,
+            base.fingerprint(),
+            "sharded executor drifted from the single queue at threads={threads}"
+        );
+    }
+}

@@ -7,7 +7,7 @@
 //! documented 12.5% of the exact sampled values.
 
 use dpuconfig::coordinator::fleet::{
-    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetScenario, RoutingPolicy,
+    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetSpec, RoutingPolicy,
 };
 use dpuconfig::online::OnlineAgent;
 use dpuconfig::rl::Baseline;
@@ -27,7 +27,7 @@ fn optimal_fleet(cfg: FleetConfig) -> FleetCoordinator {
 #[test]
 fn prop_random_partitions_preserve_sampled_trails_and_stream_digest() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 5, 40.0, 12.0, 0.6, 29).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(5).horizon_s(40.0).rate_rps(12.0).correlation(0.6).seed(29).scenario().unwrap();
     let n = scenario.requests.len();
     let cap = 64usize;
     assert!(n > 4 * cap, "need a stream much larger than the cap, got {n}");
@@ -82,7 +82,7 @@ fn prop_random_partitions_preserve_sampled_trails_and_stream_digest() {
 #[test]
 fn trail_memory_is_bounded_by_cap_on_large_streams() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 4, 120.0, 40.0, 0.5, 37).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(4).horizon_s(120.0).rate_rps(40.0).correlation(0.5).seed(37).scenario().unwrap();
     let n = scenario.requests.len();
     let cap = 32usize;
     assert!(n > 1000, "need a dense stream, got {n}");
@@ -132,7 +132,7 @@ fn trail_memory_is_bounded_by_cap_on_large_streams() {
 #[test]
 fn latency_quantiles_stay_within_documented_error_of_exact() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Steady, 2, 30.0, 10.0, 0.6, 33).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(2).horizon_s(30.0).rate_rps(10.0).correlation(0.6).seed(33).scenario().unwrap();
     let n = scenario.requests.len();
     let cfg = FleetConfig {
         boards: 2,
@@ -174,7 +174,7 @@ fn latency_quantiles_stay_within_documented_error_of_exact() {
 #[test]
 fn stream_digest_is_thread_invariant_under_faults_and_autoscale() {
     let scenario =
-        FleetScenario::generate(ArrivalPattern::Bursty, 4, 30.0, 8.0, 0.7, 43).unwrap();
+        FleetSpec::new().pattern(ArrivalPattern::Bursty).boards(4).horizon_s(30.0).rate_rps(8.0).correlation(0.7).seed(43).scenario().unwrap();
     let fingerprint = |routing: RoutingPolicy, policy: &str, threads: usize| -> String {
         let cfg = FleetConfig {
             boards: 4,
