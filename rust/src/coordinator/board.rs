@@ -76,6 +76,47 @@ impl ClassId {
     }
 }
 
+/// Interned model-variant identifier (DESIGN.md §17): the `ClassId`
+/// pattern applied to `ModelVariant::name()` strings, so the routing
+/// hot path — decided-vs-head validity checks, the switch-overhead
+/// chain in `predicted_wait_s`, aux-slot dispatch matching — compares
+/// two bytes instead of allocating and comparing a formatted `String`
+/// per queued request. Process-global, append-only, idempotent; names
+/// stay authoritative at the report/fingerprint boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(pub u16);
+
+fn model_registry() -> &'static Mutex<Vec<Arc<str>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<str>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+impl ModelId {
+    /// Id for `name`, registering it on first sight. Linear scan over
+    /// the registry is deliberate: workloads hold a handful of model
+    /// variants, and interning happens once per admission/decision,
+    /// never per queue walk.
+    pub fn intern(name: &str) -> ModelId {
+        let mut reg = model_registry().lock().expect("model registry poisoned");
+        if let Some(i) = reg.iter().position(|c| &**c == name) {
+            return ModelId(i as u16);
+        }
+        let id = u16::try_from(reg.len()).expect("more than u16::MAX model variants");
+        reg.push(Arc::from(name));
+        ModelId(id)
+    }
+
+    /// Interned id of a model variant (`ModelVariant::name()`).
+    pub fn of(v: &ModelVariant) -> ModelId {
+        ModelId::intern(&v.name())
+    }
+
+    /// The model name this id was interned under.
+    pub fn resolve(self) -> Arc<str> {
+        model_registry().lock().expect("model registry poisoned")[self.0 as usize].clone()
+    }
+}
+
 /// What one board class looks like to the physics kernel.
 ///
 /// `wake_penalty_s` / `idle_to_sleep_s` are `None` to inherit the
@@ -246,6 +287,9 @@ pub(crate) const GAUGE_RING_CAP: usize = 256;
 pub(crate) struct QueuedReq {
     pub(crate) req: usize,
     pub(crate) model: ModelVariant,
+    /// Interned twin of `model.name()` — what the hot-path validity
+    /// checks and switch-overhead chains compare (DESIGN.md §17).
+    pub(crate) model_id: ModelId,
     pub(crate) at_s: f64,
 }
 
@@ -323,8 +367,17 @@ pub(crate) struct Board {
     /// When the current frame/overhead/wake completes.
     pub(crate) busy_until: f64,
     pub(crate) queue: VecDeque<QueuedReq>,
-    /// Chosen action for (head model, state), if still valid.
-    pub(crate) decided: Option<(usize, String, WorkloadState)>,
+    /// Chosen action for (head model, state), if still valid. The model
+    /// component is the interned [`ModelId`], not the name: validity
+    /// checks and wait prediction run per event on the routing hot path.
+    pub(crate) decided: Option<(usize, ModelId, WorkloadState)>,
+    /// Routing-visible revision (DESIGN.md §17): bumped by [`advance`],
+    /// which every executor calls at the top of each event that touches
+    /// this board, before mutating wait-relevant state. The route index
+    /// re-keys a board only when its revision moved (or its cached key
+    /// had a time-decaying busy component), which is what makes routing
+    /// cost independent of fleet size on the hot path.
+    pub(crate) rev: u64,
     /// A DecisionDue event is already scheduled for this board.
     pub(crate) decision_pending: bool,
     /// Invalidates SleepTimer events from earlier idle episodes.
@@ -402,6 +455,7 @@ impl Board {
             busy_until: 0.0,
             queue: VecDeque::new(),
             decided: None,
+            rev: 0,
             decision_pending: false,
             idle_epoch: 0,
             serving_meets: true,
@@ -592,6 +646,14 @@ impl Board {
 /// Integrate the board's current regime from `last_t` to `t` — the one
 /// place simulated time becomes energy/busy/overhead/violation totals.
 pub(crate) fn advance(b: &mut Board, t: f64) {
+    // every executor calls advance at the top of each event that touches
+    // this board — including same-instant re-entries the dt guard below
+    // skips — so bumping the routing revision HERE (before the guard)
+    // conservatively marks the board dirty for the route index
+    // (DESIGN.md §17). Over-invalidation is a wasted re-key;
+    // under-invalidation would be a routing bug, which the debug-assert
+    // scan oracle in `FleetCoordinator::route` exists to catch.
+    b.rev += 1;
     let dt = t - b.last_t;
     if dt <= 0.0 {
         return;
@@ -680,7 +742,7 @@ pub(crate) fn kick_aux_slots(
     {
         return Ok(out);
     }
-    let Some((aid, dmodel, dstate)) = b.decided.clone() else {
+    let Some((aid, dmodel, dstate)) = b.decided else {
         return Ok(out);
     };
     // a decision made under an earlier workload state is stale for fresh
@@ -699,7 +761,7 @@ pub(crate) fn kick_aux_slots(
             .queue
             .iter()
             .skip(skip)
-            .position(|q| q.model.name() == dmodel)
+            .position(|q| q.model_id == dmodel)
         else {
             continue;
         };
@@ -719,6 +781,10 @@ pub(crate) fn kick_aux_slots(
             slot.busy_until = t + dur;
             slot.action = Some(aid);
             slot.reconfigs += 1;
+            // aux kicks can fire on decide_due's continue path without an
+            // `advance` in the chain; the slot's busy remainder feeds the
+            // wait summaries, so invalidate explicitly (DESIGN.md §17)
+            b.rev += 1;
             if sibling_serving {
                 b.pr_overlap += 1;
             }
@@ -746,6 +812,9 @@ pub(crate) fn kick_aux_slots(
         let slot = &mut b.aux[k];
         slot.busy_until = t + dur;
         slot.current = Some(q);
+        // queue shrank and a slot went busy: invalidate the board's
+        // cached wait summary (DESIGN.md §17)
+        b.rev += 1;
         out.push(AuxEmit {
             slot: (k + 1) as u16,
             at: t + dur,
@@ -1234,17 +1303,19 @@ mod tests {
         let mut mc = MetricsCache::new();
         let mut ec = EstCache::new();
         let (aid, _) = best_allowed_cached(&s, &mut mc, &mut ec, &b.profile, &v, st).unwrap();
-        b.decided = Some((aid, v.name(), st));
+        b.decided = Some((aid, ModelId::of(&v), st));
         // lead slot busy with the head; the aux slot must pick up req 1
         b.phase = Phase::Serving;
         b.queue.push_back(QueuedReq {
             req: 0,
             model: v.clone(),
+            model_id: ModelId::of(&v),
             at_s: 0.0,
         });
         b.queue.push_back(QueuedReq {
             req: 1,
             model: v.clone(),
+            model_id: ModelId::of(&v),
             at_s: 0.0,
         });
         // cold aux slot: the first kick pays a partial reconfiguration

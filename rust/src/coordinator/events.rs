@@ -22,6 +22,17 @@
 //! (slot recycled since the key was minted) detectable — an invariant
 //! violation we check on every pop.
 //!
+//! Events are also the routing index's invalidation clock (DESIGN.md
+//! §17): every handler that mutates a board runs `advance` first, which
+//! bumps that board's summary revision, so the incremental router
+//! re-keys exactly the boards an event touched — enqueue, `FrameDone`,
+//! `ReconfigDone`, decisions, `WakeDone`/`SleepTimer`,
+//! `BoardFail`/`BoardRecover`, `ThermalDerate`/`LinkDegrade`,
+//! `WorkloadShift`, `ScaleCheck`. The handful of mutations reachable
+//! without an `advance` (serve starts on a decision's continue path,
+//! aux-slot dispatches) bump the revision explicitly at the mutation
+//! site.
+//!
 //! ```
 //! use dpuconfig::coordinator::events::{EventQueue, FleetEvent};
 //! let mut q = EventQueue::new();

@@ -46,8 +46,9 @@
 use crate::coordinator::board::{
     advance, aux_frame_done, aux_reconfig_done, est_service_cached, fit_action, kick_aux_slots,
     metrics_cached, observe_for_decision, select_allowed, AuxEmitKind, Board, BoardProfile,
-    EstCache, MetricsCache, Phase, PowerBase, QueuedReq,
+    EstCache, MetricsCache, ModelId, Phase, PowerBase, QueuedReq,
 };
+use crate::coordinator::route_index::RouteIndex;
 use crate::coordinator::engine::QueueContext;
 use crate::coordinator::events::{EventQueue, FleetEvent, SLOT_ALL};
 use crate::coordinator::reconfig::{
@@ -294,6 +295,13 @@ pub struct FleetConfig {
     /// merge-closed, so the sharded executor retains the identical
     /// sample.
     pub trail_sample: usize,
+    /// Escape hatch (DESIGN.md §17): `true` forces the O(B·Q) scan
+    /// router for every policy instead of the incremental route index.
+    /// Picks — and therefore fleet fingerprints — are identical either
+    /// way; the flag exists for A/B benchmarking (`route_10k`), the CI
+    /// routing-parity smoke, and as a fallback while diagnosing a
+    /// suspected index bug.
+    pub routing_scan: bool,
 }
 
 impl Default for FleetConfig {
@@ -313,6 +321,7 @@ impl Default for FleetConfig {
             faults: None,
             autoscale: None,
             trail_sample: 512,
+            routing_scan: false,
         }
     }
 }
@@ -817,6 +826,16 @@ pub struct FleetReport {
     /// (time-warp-lite rollback). Like `spec_conflicts`, zero unless the
     /// frontier invariant breaks.
     pub spec_redrains: u64,
+    /// Tournament-index leaf refreshes the router performed (DESIGN.md
+    /// §17) — each one is a full per-board wait recompute, so
+    /// `route_updates / route_picks` is the observed amortized rebuild
+    /// width. Executor observability, deliberately NOT in
+    /// [`Self::fingerprint`]; zero when the scan router is active.
+    pub route_updates: u64,
+    /// Indexed routing decisions served (tournament-tree descents plus
+    /// energy-aware SoA sweeps). Zero under `--routing-scan` and for
+    /// round-robin, which never routes via the index.
+    pub route_picks: u64,
 }
 
 impl FleetReport {
@@ -913,6 +932,8 @@ impl FleetReport {
             spec_routes: self.spec_routes,
             spec_conflicts: self.spec_conflicts,
             spec_redrains: self.spec_redrains,
+            route_updates: self.route_updates,
+            route_picks: self.route_picks,
         }
     }
 
@@ -1136,6 +1157,10 @@ pub struct FleetCoordinator {
     /// (class, model, state) -> the restricted oracle's action and its
     /// per-frame service time (the routing predictor's unit).
     pub(crate) est_cache: EstCache,
+    /// Tournament-tree routing index over per-board wait summaries
+    /// (DESIGN.md §17). Rebuilt lazily from `Board::rev`; reset at the
+    /// start of every run.
+    pub(crate) route_index: RouteIndex,
 }
 
 impl FleetCoordinator {
@@ -1216,6 +1241,7 @@ impl FleetCoordinator {
             online_rewards: RewardCalculator::new(),
             metrics_cache: MetricsCache::new(),
             est_cache: EstCache::new(),
+            route_index: RouteIndex::default(),
         })
     }
 
@@ -1355,18 +1381,7 @@ impl FleetCoordinator {
         for q in b.queue.iter().skip(skip) {
             w += self.est_service_s(&b.profile, &q.model, state)? * lk;
         }
-        // multi-slot boards drain the backlog K-ways concurrently:
-        // fold sibling-slot remainders in, then spread total work over
-        // the slot count (the untouched K=1 path divides by nothing)
-        if !b.aux.is_empty() {
-            for s in &b.aux {
-                if matches!(s.phase, Phase::Serving | Phase::Reconfiguring) {
-                    w += (s.busy_until - t).max(0.0);
-                }
-            }
-            w /= b.slot_count() as f64;
-        }
-        Ok(w)
+        Ok(spread_over_slots(b, w, t))
     }
 
     /// Predicted completion wait of `incoming` if routed to `b`:
@@ -1379,6 +1394,7 @@ impl FleetCoordinator {
         b: &Board,
         state: WorkloadState,
         incoming: &ModelVariant,
+        incoming_id: ModelId,
         t: f64,
     ) -> Result<f64> {
         // link degradation inflates every service estimate (not the
@@ -1392,18 +1408,18 @@ impl FleetCoordinator {
         }
         let switch_s = (TELEMETRY_US + RL_INFERENCE_US + INSTR_LOAD_US) as f64 * 1e-6;
         let mut w = (b.busy_until - t).max(0.0);
-        let mut prev: Option<String> = b.decided.as_ref().map(|d| d.1.clone());
+        // the switch-overhead chain compares interned model ids — two
+        // bytes per queued request instead of a formatted String clone
+        let mut prev: Option<ModelId> = b.decided.map(|d| d.1);
         let skip = usize::from(b.phase == Phase::Serving);
         for q in b.queue.iter().skip(skip) {
-            let name = q.model.name();
-            if prev.as_deref() != Some(name.as_str()) {
+            if prev != Some(q.model_id) {
                 w += switch_s;
             }
             w += self.est_service_s(&b.profile, &q.model, state)? * lk;
-            prev = Some(name);
+            prev = Some(q.model_id);
         }
-        let name = incoming.name();
-        if prev.as_deref() != Some(name.as_str()) {
+        if prev != Some(incoming_id) {
             w += if prev.is_none() {
                 full_decision_overhead_s()
             } else {
@@ -1411,18 +1427,7 @@ impl FleetCoordinator {
             };
         }
         w += self.est_service_s(&b.profile, incoming, state)? * lk;
-        // slot-level availability: sibling slots absorb queued work
-        // concurrently, so the predicted wait spreads over the slot
-        // count (untouched on single-slot boards)
-        if !b.aux.is_empty() {
-            for s in &b.aux {
-                if matches!(s.phase, Phase::Serving | Phase::Reconfiguring) {
-                    w += (s.busy_until - t).max(0.0);
-                }
-            }
-            w /= b.slot_count() as f64;
-        }
-        Ok(w)
+        Ok(spread_over_slots(b, w, t))
     }
 
     /// Pick the target board for a newly arrived request. Takes a slice
@@ -1435,7 +1440,77 @@ impl FleetCoordinator {
     /// as explicitly dropped. Without fault injection every board is
     /// always routable and the selection is bit-identical to the
     /// pre-fault router.
+    ///
+    /// The state-dependent policies (least-loaded, SLO-aware,
+    /// energy-aware) resolve through the incremental [`RouteIndex`]
+    /// (DESIGN.md §17): per-board wait summaries re-keyed only at the
+    /// events that change them, selected through a tournament tree.
+    /// `FleetConfig::routing_scan` forces the original O(B·Q) scan; in
+    /// debug builds the scan always runs as an oracle and any
+    /// divergence from the index is a panic.
     pub(crate) fn route(
+        &mut self,
+        boards: &[&Board],
+        schedules: &[Vec<(f64, WorkloadState)>],
+        model: &ModelVariant,
+        t: f64,
+    ) -> Result<Option<usize>> {
+        if self.config.routing_scan || self.config.routing == RoutingPolicy::RoundRobin {
+            // round-robin is already O(1) amortized (cursor walk) and is
+            // the one policy whose pick mutates router state — the index
+            // has nothing to offer it
+            return self.route_scan(boards, schedules, model, t);
+        }
+        let picked = self.route_indexed(boards, schedules, model, t)?;
+        #[cfg(debug_assertions)]
+        {
+            let oracle = self.route_scan(boards, schedules, model, t)?;
+            debug_assert_eq!(
+                picked,
+                oracle,
+                "route index diverged from the scan oracle ({} at t={t:.6})",
+                self.config.routing.name()
+            );
+        }
+        Ok(picked)
+    }
+
+    /// The indexed routing path: take the [`RouteIndex`] out of `self`
+    /// so its sync closures can borrow the service-estimate caches
+    /// mutably, then put it back whatever happens.
+    fn route_indexed(
+        &mut self,
+        boards: &[&Board],
+        schedules: &[Vec<(f64, WorkloadState)>],
+        model: &ModelVariant,
+        t: f64,
+    ) -> Result<Option<usize>> {
+        let mut idx = std::mem::take(&mut self.route_index);
+        let picked = match self.config.routing {
+            RoutingPolicy::LeastLoaded => {
+                idx.pick_least_loaded(boards, t, self, |this: &mut Self, i, b| {
+                    let state = state_at(&schedules[i], t);
+                    this.board_backlog_s(b, state, t)
+                })
+            }
+            RoutingPolicy::SloAware => {
+                let mid = ModelId::of(model);
+                idx.pick_slo_aware(boards, mid, t, self, |this: &mut Self, i, b| {
+                    let state = state_at(&schedules[i], t);
+                    this.predicted_wait_s(b, state, model, mid, t)
+                })
+            }
+            RoutingPolicy::EnergyAware => Ok(idx.pick_energy_aware(boards, self.config.wake_backlog)),
+            RoutingPolicy::RoundRobin => unreachable!("round-robin never routes via the index"),
+        };
+        self.route_index = idx;
+        picked
+    }
+
+    /// The original full-scan router — the oracle the index is measured
+    /// against (debug builds assert equality on every pick) and the
+    /// `--routing-scan` escape hatch.
+    pub(crate) fn route_scan(
         &mut self,
         boards: &[&Board],
         schedules: &[Vec<(f64, WorkloadState)>],
@@ -1510,6 +1585,7 @@ impl FleetCoordinator {
                     .min_by_key(|&i| (boards[i].queue.len(), i)))
             }
             RoutingPolicy::SloAware => {
+                let mid = ModelId::of(model);
                 let mut best: Option<usize> = None;
                 let mut best_wait = f64::INFINITY;
                 for (i, b) in boards.iter().enumerate() {
@@ -1517,7 +1593,7 @@ impl FleetCoordinator {
                         continue;
                     }
                     let state = state_at(&schedules[i], t);
-                    let w = self.predicted_wait_s(b, state, model, t)?;
+                    let w = self.predicted_wait_s(b, state, model, mid, t)?;
                     if w < best_wait - 1e-12 {
                         best = Some(i);
                         best_wait = w;
@@ -1729,9 +1805,10 @@ impl FleetCoordinator {
         let (head_model, head_req, valid) = {
             let b = &rs.boards[i];
             let head = b.queue.front().expect("non-empty queue");
+            let head_id = head.model_id;
             let valid = matches!(
                 &b.decided,
-                Some((_, m, s)) if *m == head.model.name() && *s == state
+                Some((_, m, s)) if *m == head_id && *s == state
             );
             (head.model.clone(), head.req, valid)
         };
@@ -1748,6 +1825,10 @@ impl FleetCoordinator {
             // factor is an exact identity, so fault-free runs stay
             // bit-identical to the pre-fault kernel.
             let p_serve = m.p_fpga * (1.0 + b.derate);
+            // serving can start on `decide_due`'s continue path without an
+            // `advance` in the chain — bump the summary revision explicitly
+            // (DESIGN.md §17)
+            b.rev += 1;
             b.phase = Phase::Serving;
             b.phase_power_w = p_serve;
             b.serving_meets = m.meets_constraint;
@@ -1932,7 +2013,7 @@ impl FleetCoordinator {
             let valid = match rs.boards[i].queue.front() {
                 Some(head) => matches!(
                     &rs.boards[i].decided,
-                    Some((_, m, s)) if *m == head.model.name() && *s == state
+                    Some((_, m, s)) if *m == head.model_id && *s == state
                 ),
                 None => false,
             };
@@ -1977,7 +2058,7 @@ impl FleetCoordinator {
             if overhead.reconfig_us > 0 {
                 b.totals.reconfigs += 1;
             }
-            b.decided = Some((action_id, req.model.name(), req.state));
+            b.decided = Some((action_id, ModelId::of(&req.model), req.state));
             b.phase = Phase::Reconfiguring;
             b.busy_until = t + overhead.total_s();
             b.note_lead_reconfig_overlap();
@@ -2035,6 +2116,7 @@ impl FleetCoordinator {
         self.rr_cursor = 0;
         self.rng = XorShift64::new(self.config.seed ^ 0xf1ee7c0de);
         self.online_rewards = RewardCalculator::new();
+        self.route_index.reset();
         let base = self.power_base();
 
         let boards: Vec<Board> = (0..self.config.boards)
@@ -2199,12 +2281,14 @@ impl FleetCoordinator {
                     match target {
                         Some(target) => {
                             rs.tracker.on_route(request, t, target);
+                            let model_id = ModelId::of(&model);
                             self.enqueue_on(
                                 &mut rs,
                                 target,
                                 QueuedReq {
                                     req: request,
                                     model,
+                                    model_id,
                                     at_s: t,
                                 },
                                 t,
@@ -2594,8 +2678,29 @@ impl FleetCoordinator {
             spec_routes: 0,
             spec_conflicts: 0,
             spec_redrains: 0,
+            route_updates: self.route_index.updates,
+            route_picks: self.route_index.picks,
         })
     }
+}
+
+/// Slot-level availability (DESIGN.md §16), shared by
+/// [`FleetCoordinator::board_backlog_s`] and
+/// [`FleetCoordinator::predicted_wait_s`]: sibling DPU slots absorb
+/// queued work concurrently, so fold busy sibling-slot remainders into
+/// the accumulated wait and spread the total over the slot count. The
+/// K=1 path is untouched bit for bit — an empty aux vec adds nothing
+/// and divides by nothing.
+pub(crate) fn spread_over_slots(b: &Board, mut w: f64, t: f64) -> f64 {
+    if !b.aux.is_empty() {
+        for s in &b.aux {
+            if matches!(s.phase, Phase::Serving | Phase::Reconfiguring) {
+                w += (s.busy_until - t).max(0.0);
+            }
+        }
+        w /= b.slot_count() as f64;
+    }
+    w
 }
 
 /// "; board N has failed and not recovered" when dead boards exist —

@@ -11,6 +11,7 @@ pub mod events;
 pub mod fleet;
 pub mod placement;
 pub mod reconfig;
+pub(crate) mod route_index;
 pub mod server;
 pub mod service;
 pub mod shard;

@@ -1,0 +1,465 @@
+//! Incremental routing index (DESIGN.md §17): routing as an index, not
+//! a scan.
+//!
+//! The scan router ([`crate::coordinator::fleet::FleetCoordinator::route_scan`])
+//! pays O(B·Q) per arrival — every board's queue re-walked, every
+//! service estimate re-hashed. This module keeps the same *answers*
+//! while moving the cost to the events that change them:
+//!
+//! * a per-board **wait summary** — the scan's key (predicted wait for
+//!   SLO-aware, backlog seconds for least-loaded) memoized per board and
+//!   invalidated by [`crate::coordinator::board::Board::rev`], which
+//!   every state-mutating event bumps (see the invalidation table in
+//!   DESIGN.md §17);
+//! * a **tournament tree** — an implicit segment-tree minimum over
+//!   `(key, board index)` with lazy point updates, so a pick is an
+//!   O(log B) root read after re-keying only the boards whose revision
+//!   moved (plus boards with live time-decaying terms, which re-key per
+//!   pick until their in-flight work drains);
+//! * an **SoA sweep** for energy-aware routing — routable/sleeping
+//!   flags (`Vec<u8>`), queue depths (`Vec<u32>`) and static powers
+//!   (`Vec<f64>`) refreshed rev-lazily, so the policy's four-step
+//!   cascade runs over three cache-linear arrays instead of
+//!   re-filtering `&[&Board]` three times.
+//!
+//! Bit-identity contract: cached keys are only ever *reused*, never
+//! delta-adjusted — a stale summary is recomputed by the exact same
+//! function the scan calls, so a pick through the index returns the
+//! same board the scan would have returned and fleet fingerprints are
+//! byte-identical either way. Debug builds assert this on every pick
+//! (the scan runs as an oracle); release builds keep the
+//! `--routing-scan` escape hatch.
+//!
+//! The tie-break combine mirrors the scan exactly: least-loaded uses a
+//! strict `<` (leftmost minimum, [`crate::coordinator::fleet::least_loaded_pick`]),
+//! SLO-aware uses the scan's `1e-12` epsilon fold (a candidate must
+//! beat the incumbent by more than the epsilon). The epsilon fold is
+//! not associative for chains of sub-epsilon near-ties; §17 documents
+//! why generated traffic cannot produce them and the debug oracle
+//! guards the claim.
+
+use anyhow::Result;
+
+use crate::coordinator::board::{Board, ModelId, Phase};
+
+/// Sentinel for "never keyed": forces the first sync to build every
+/// leaf (board revisions start at 0 and only count up).
+const NO_REV: u64 = u64::MAX;
+
+/// The scan router's SLO-aware tie-break epsilon, mirrored verbatim.
+const SLO_EPS: f64 = 1e-12;
+
+/// `flags` bit: board is routable (not failed, not autoscaled offline).
+const F_ROUTABLE: u8 = 1 << 0;
+
+/// `flags` bit: board is in [`Phase::Sleeping`].
+const F_SLEEPING: u8 = 1 << 1;
+
+/// True when board `b`'s routing key has no live time-decaying term at
+/// `t` — i.e. the key computed at an earlier instant is still exact
+/// now. The keys fold `(busy_until - t).max(0.0)` for the lead slot
+/// and every Serving/Reconfiguring aux slot; once those remainders hit
+/// zero they stay zero (monotone time), and every other term (service
+/// estimates, switch overheads, link/derate factors, workload state)
+/// only changes through events that bump [`Board::rev`].
+fn time_free(b: &Board, t: f64) -> bool {
+    b.busy_until <= t
+        && b.aux.iter().all(|s| {
+            !(matches!(s.phase, Phase::Serving | Phase::Reconfiguring) && s.busy_until > t)
+        })
+}
+
+fn routable(b: &Board) -> bool {
+    !b.offline && b.phase != Phase::Failed
+}
+
+/// Implicit-array tournament tree: node 1 is the root, node `i`'s
+/// children are `2i`/`2i+1`, leaves live at `cap..cap+n` (padded to a
+/// power of two with `+inf` keys that can never win against a finite
+/// key). Each node stores the winning `(key, board index)` of its
+/// subtree; a point update rewrites one leaf and replays `log2(cap)`
+/// combines on the path to the root.
+struct Tree {
+    /// Board count this tree is sized for.
+    n: usize,
+    /// Leaf capacity: `n.next_power_of_two()`.
+    cap: usize,
+    /// Winning key per node (`2*cap` entries, node 0 unused).
+    key: Vec<f64>,
+    /// Winning board index per node.
+    win: Vec<u32>,
+    /// [`Board::rev`] each leaf was last keyed at ([`NO_REV`] = never).
+    rev_seen: Vec<u64>,
+    /// Whether the cached key was time-free when computed (else it must
+    /// be re-keyed every pick until the board drains).
+    time_free: Vec<bool>,
+    /// Epsilon combine (SLO-aware fold) vs strict `<` (least-loaded).
+    eps: bool,
+}
+
+impl Tree {
+    fn new(n: usize, eps: bool) -> Tree {
+        let cap = n.next_power_of_two().max(1);
+        let mut t = Tree {
+            n,
+            cap,
+            key: vec![f64::INFINITY; 2 * cap],
+            win: vec![0; 2 * cap],
+            rev_seen: vec![NO_REV; n],
+            time_free: vec![false; n],
+            eps,
+        };
+        for (i, w) in t.win[cap..].iter_mut().enumerate() {
+            *w = i as u32;
+        }
+        for node in (1..cap).rev() {
+            let (k, w) = t.combine(2 * node, 2 * node + 1);
+            t.key[node] = k;
+            t.win[node] = w;
+        }
+        t
+    }
+
+    /// Winner of `l` vs `r` (both node indices, `l` the left subtree).
+    /// The right side must *beat* the left to win — exactly the scan's
+    /// left-fold "keep the incumbent on ties" rule.
+    fn combine(&self, l: usize, r: usize) -> (f64, u32) {
+        let beat = if self.eps {
+            self.key[r] < self.key[l] - SLO_EPS
+        } else {
+            self.key[r] < self.key[l]
+        };
+        if beat {
+            (self.key[r], self.win[r])
+        } else {
+            (self.key[l], self.win[l])
+        }
+    }
+
+    /// Point update: re-key leaf `i` and replay combines up to the root.
+    fn update(&mut self, i: usize, k: f64) {
+        let mut node = self.cap + i;
+        self.key[node] = k;
+        node /= 2;
+        while node >= 1 {
+            let (k, w) = self.combine(2 * node, 2 * node + 1);
+            self.key[node] = k;
+            self.win[node] = w;
+            node /= 2;
+        }
+    }
+
+    /// Re-key exactly the boards whose cached summary is stale: revision
+    /// moved, or the cached key still carried a live in-flight remainder.
+    /// Unroutable boards key to `+inf` (and are trivially time-free, so
+    /// they cost nothing until they change again). Returns the number of
+    /// leaves refreshed.
+    fn sync<C, F>(&mut self, boards: &[&Board], t: f64, ctx: &mut C, keyf: &mut F) -> Result<u64>
+    where
+        F: FnMut(&mut C, usize, &Board) -> Result<f64>,
+    {
+        let mut refreshed = 0u64;
+        for (i, &b) in boards.iter().enumerate() {
+            if self.rev_seen[i] == b.rev && self.time_free[i] {
+                continue;
+            }
+            let (k, free) = if routable(b) {
+                (keyf(ctx, i, b)?, time_free(b, t))
+            } else {
+                (f64::INFINITY, true)
+            };
+            self.rev_seen[i] = b.rev;
+            self.time_free[i] = free;
+            self.update(i, k);
+            refreshed += 1;
+        }
+        Ok(refreshed)
+    }
+
+    /// The tournament winner, `None` when no routable board exists
+    /// (every leaf at `+inf`).
+    fn root_pick(&self) -> Option<usize> {
+        if self.key[1].is_finite() {
+            Some(self.win[1] as usize)
+        } else {
+            None
+        }
+    }
+}
+
+/// The coordinator's routing index: one strict tree for least-loaded,
+/// one epsilon tree per model variant for SLO-aware (predicted waits
+/// depend on the incoming model through switch overheads and service
+/// estimates, so mixed-model traffic must not thrash a single tree),
+/// and the SoA flag/depth/power arrays for energy-aware. Reset at the
+/// start of every run; sized lazily on first pick.
+#[derive(Default)]
+pub(crate) struct RouteIndex {
+    /// Least-loaded tournament tree (strict `<` combine).
+    ll: Option<Tree>,
+    /// SLO-aware trees, keyed by interned [`ModelId`] (linear scan: a
+    /// workload holds a handful of model variants).
+    slo: Vec<(ModelId, Tree)>,
+    /// Energy-aware SoA: routable/sleeping flag bits per board.
+    flags: Vec<u8>,
+    /// Energy-aware SoA: queue depths.
+    qlen: Vec<u32>,
+    /// Energy-aware SoA: resolved static PL power (step-3 sleeper rank).
+    p_static: Vec<f64>,
+    /// [`Board::rev`] the SoA rows were last refreshed at.
+    ea_rev: Vec<u64>,
+    /// Leaf/row refreshes performed (each is one full per-board key
+    /// recompute) — `dpufleet_route_updates_total`.
+    pub(crate) updates: u64,
+    /// Indexed picks served — `dpufleet_route_picks_total`.
+    pub(crate) picks: u64,
+}
+
+impl RouteIndex {
+    /// Drop every cached summary and counter (run start).
+    pub(crate) fn reset(&mut self) {
+        *self = RouteIndex::default();
+    }
+
+    /// Least-loaded pick: lexicographic minimum of `(backlog, index)`
+    /// over routable boards, `None` iff nothing is routable — the same
+    /// answer as the scan over
+    /// [`crate::coordinator::fleet::least_loaded_pick`].
+    pub(crate) fn pick_least_loaded<C, F>(
+        &mut self,
+        boards: &[&Board],
+        t: f64,
+        ctx: &mut C,
+        mut keyf: F,
+    ) -> Result<Option<usize>>
+    where
+        F: FnMut(&mut C, usize, &Board) -> Result<f64>,
+    {
+        let n = boards.len();
+        if self.ll.as_ref().map(|tr| tr.n) != Some(n) {
+            self.ll = Some(Tree::new(n, false));
+        }
+        let tree = self.ll.as_mut().expect("tree just ensured");
+        self.updates += tree.sync(boards, t, ctx, &mut keyf)?;
+        self.picks += 1;
+        Ok(tree.root_pick())
+    }
+
+    /// SLO-aware pick for traffic of `model`: the scan's epsilon fold
+    /// over predicted waits, served from the model's own tree.
+    pub(crate) fn pick_slo_aware<C, F>(
+        &mut self,
+        boards: &[&Board],
+        model: ModelId,
+        t: f64,
+        ctx: &mut C,
+        mut keyf: F,
+    ) -> Result<Option<usize>>
+    where
+        F: FnMut(&mut C, usize, &Board) -> Result<f64>,
+    {
+        let n = boards.len();
+        let j = match self
+            .slo
+            .iter()
+            .position(|(m, tr)| *m == model && tr.n == n)
+        {
+            Some(j) => j,
+            None => {
+                self.slo.retain(|(m, _)| *m != model);
+                self.slo.push((model, Tree::new(n, true)));
+                self.slo.len() - 1
+            }
+        };
+        self.updates += self.slo[j].1.sync(boards, t, ctx, &mut keyf)?;
+        self.picks += 1;
+        Ok(self.slo[j].1.root_pick())
+    }
+
+    /// Energy-aware pick: the scan's four-step cascade (first awake
+    /// board with an empty queue; least-backlogged awake board under
+    /// the wake threshold; cheapest sleeper by static power; shortest
+    /// routable queue) replayed over the rev-lazy SoA arrays in one
+    /// ascending pass, so ties resolve to the lowest index exactly as
+    /// the scan's ordered filters do.
+    pub(crate) fn pick_energy_aware(
+        &mut self,
+        boards: &[&Board],
+        wake_backlog: usize,
+    ) -> Option<usize> {
+        self.sync_ea(boards);
+        self.picks += 1;
+        // lowest-index minima per cascade step, collected in one
+        // ascending pass; strict `<` against the incumbent key keeps the
+        // lowest index on ties, exactly like the scan's `min_by_key`
+        const NONE: usize = usize::MAX;
+        let mut awake_min = (u32::MAX, NONE);
+        let mut sleeper_min = (f64::INFINITY, NONE);
+        let mut any_min = (u32::MAX, NONE);
+        for i in 0..boards.len() {
+            let f = self.flags[i];
+            if f & F_ROUTABLE == 0 {
+                continue;
+            }
+            let q = self.qlen[i];
+            if f & F_SLEEPING == 0 {
+                if q == 0 {
+                    // step 1: the first awake empty board short-circuits
+                    // every later step
+                    return Some(i);
+                }
+                if q < awake_min.0 {
+                    awake_min = (q, i);
+                }
+            } else if self.p_static[i] < sleeper_min.0 {
+                sleeper_min = (self.p_static[i], i);
+            }
+            if q < any_min.0 {
+                any_min = (q, i);
+            }
+        }
+        if awake_min.1 != NONE && (awake_min.0 as usize) < wake_backlog {
+            return Some(awake_min.1);
+        }
+        if sleeper_min.1 != NONE {
+            return Some(sleeper_min.1);
+        }
+        if any_min.1 != NONE {
+            Some(any_min.1)
+        } else {
+            None
+        }
+    }
+
+    /// Refresh the energy-aware SoA rows whose board revision moved.
+    /// Unlike the wait trees there is no time-decaying term: phase,
+    /// queue depth and routability only change through rev-bumping
+    /// events.
+    fn sync_ea(&mut self, boards: &[&Board]) {
+        let n = boards.len();
+        if self.ea_rev.len() != n {
+            self.ea_rev = vec![NO_REV; n];
+            self.flags = vec![0; n];
+            self.qlen = vec![0; n];
+            self.p_static = vec![0.0; n];
+        }
+        for (i, &b) in boards.iter().enumerate() {
+            if self.ea_rev[i] == b.rev {
+                continue;
+            }
+            let mut f = 0u8;
+            if routable(b) {
+                f |= F_ROUTABLE;
+            }
+            if b.phase == Phase::Sleeping {
+                f |= F_SLEEPING;
+            }
+            self.flags[i] = f;
+            self.qlen[i] = b.queue.len() as u32;
+            self.p_static[i] = b.p_static_w;
+            self.ea_rev[i] = b.rev;
+            self.updates += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_min(keys: &[f64], eps: bool) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        let mut best_k = f64::INFINITY;
+        for (i, &k) in keys.iter().enumerate() {
+            let beat = if eps { k < best_k - SLO_EPS } else { k < best_k };
+            if beat {
+                best = Some(i);
+                best_k = k;
+            }
+        }
+        best.filter(|&i| keys[i].is_finite())
+    }
+
+    #[test]
+    fn tournament_tree_lazy_point_updates_track_the_naive_fold() {
+        // non-power-of-two width exercises the +inf padding leaves
+        let mut keys = vec![5.0, 3.0, 9.0, 3.0, 7.0];
+        let mut tr = Tree::new(keys.len(), false);
+        for (i, &k) in keys.iter().enumerate() {
+            tr.update(i, k);
+        }
+        assert_eq!(tr.root_pick(), Some(1), "leftmost of the tied minima");
+
+        // point invalidation: worsen the winner — the tie sibling takes
+        // over without touching any other leaf
+        keys[1] = 10.0;
+        tr.update(1, keys[1]);
+        assert_eq!(tr.root_pick(), naive_min(&keys, false));
+        assert_eq!(tr.root_pick(), Some(3));
+
+        // improve a mid leaf below everything
+        keys[4] = 0.5;
+        tr.update(4, keys[4]);
+        assert_eq!(tr.root_pick(), Some(4));
+
+        // knock the winner out entirely (unroutable = +inf leaf)
+        keys[4] = f64::INFINITY;
+        tr.update(4, keys[4]);
+        assert_eq!(tr.root_pick(), naive_min(&keys, false));
+
+        // randomized churn stays glued to the fold (tiny LCG, no
+        // wall-clock entropy)
+        let mut x: u64 = 0x9e3779b97f4a7c15;
+        for _ in 0..200 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let i = (x >> 33) as usize % keys.len();
+            let k = ((x >> 11) % 1000) as f64 / 10.0;
+            keys[i] = k;
+            tr.update(i, k);
+            assert_eq!(tr.root_pick(), naive_min(&keys, false));
+        }
+    }
+
+    #[test]
+    fn epsilon_combine_keeps_the_incumbent_inside_the_band() {
+        // a sub-epsilon improvement must NOT displace the leftmost
+        // incumbent (the scan's `w < best - 1e-12` fold); a strict tree
+        // would take it
+        let keys = [1.0, 1.0 - 0.5e-12, 2.0];
+        let mut eps_tr = Tree::new(keys.len(), true);
+        let mut strict_tr = Tree::new(keys.len(), false);
+        for (i, &k) in keys.iter().enumerate() {
+            eps_tr.update(i, k);
+            strict_tr.update(i, k);
+        }
+        assert_eq!(eps_tr.root_pick(), Some(0));
+        assert_eq!(strict_tr.root_pick(), Some(1));
+
+        // a super-epsilon improvement does displace it
+        let mut tr = Tree::new(2, true);
+        tr.update(0, 1.0);
+        tr.update(1, 1.0 - 5e-12);
+        assert_eq!(tr.root_pick(), Some(1));
+    }
+
+    #[test]
+    fn all_unroutable_leaves_yield_no_pick() {
+        let mut tr = Tree::new(3, true);
+        for i in 0..3 {
+            tr.update(i, f64::INFINITY);
+        }
+        assert_eq!(tr.root_pick(), None);
+        // a single finite leaf wins immediately
+        tr.update(2, 4.0);
+        assert_eq!(tr.root_pick(), Some(2));
+    }
+
+    #[test]
+    fn single_board_tree_is_its_own_root() {
+        let mut tr = Tree::new(1, false);
+        tr.update(0, 2.5);
+        assert_eq!(tr.root_pick(), Some(0));
+        tr.update(0, f64::INFINITY);
+        assert_eq!(tr.root_pick(), None);
+    }
+}

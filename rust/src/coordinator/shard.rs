@@ -63,7 +63,7 @@
 use crate::coordinator::board::{
     advance, aux_frame_done, aux_reconfig_done, est_service_cached, kick_aux_slots,
     metrics_cached, observe_for_decision, select_allowed, AuxEmitKind, Board, EstCache,
-    MetricsCache, Phase, PowerBase, QueuedReq,
+    MetricsCache, ModelId, Phase, PowerBase, QueuedReq,
 };
 use crate::coordinator::events::{EventQueue, FleetEvent, SLOT_ALL};
 use crate::coordinator::fleet::{
@@ -220,7 +220,7 @@ fn apply_decision(
     if overhead.reconfig_us > 0 {
         b.totals.reconfigs += 1;
     }
-    b.decided = Some((action_id, model.name(), state));
+    b.decided = Some((action_id, ModelId::of(model), state));
     b.phase = Phase::Reconfiguring;
     b.busy_until = t + overhead.total_s();
     b.note_lead_reconfig_overlap();
@@ -380,9 +380,10 @@ fn kick_lead(
     let (head_model, head_req, valid) = {
         let b = &slot.board;
         let head = b.queue.front().expect("non-empty queue");
+        let head_id = head.model_id;
         let valid = matches!(
             &b.decided,
-            Some((_, m, s)) if *m == head.model.name() && *s == state
+            Some((_, m, s)) if *m == head_id && *s == state
         );
         (head.model.clone(), head.req, valid)
     };
@@ -403,6 +404,10 @@ fn kick_lead(
         // transfer ×(1+l); exact identities at severity 0 keep
         // fault-free runs bit-identical
         let p_serve = m.p_fpga * (1.0 + b.derate);
+        // serving can start on a decision epoch's continue path without
+        // an `advance` in the chain — bump the summary revision
+        // explicitly (DESIGN.md §17)
+        b.rev += 1;
         b.phase = Phase::Serving;
         b.phase_power_w = p_serve;
         b.serving_meets = m.meets_constraint;
@@ -472,10 +477,12 @@ fn process_event(
         FleetEvent::Arrival { request } => {
             slot.future_arrivals = slot.future_arrivals.saturating_sub(1);
             let model = ctx.requests[request].model.clone();
+            let model_id = ModelId::of(&model);
             advance(&mut slot.board, t);
             slot.board.queue.push_back(QueuedReq {
                 req: request,
                 model,
+                model_id,
                 at_s: t,
             });
             if slot.board.phase == Phase::Sleeping {
@@ -917,6 +924,7 @@ impl FleetCoordinator {
         self.rr_cursor = 0;
         self.rng = XorShift64::new(self.config.seed ^ 0xf1ee7c0de);
         self.online_rewards = RewardCalculator::new();
+        self.route_index.reset();
         let base = self.power_base();
         let local = match &self.policy {
             FleetPolicy::Static(b) if *b != Baseline::Random => Some(*b),
@@ -1433,10 +1441,12 @@ impl FleetCoordinator {
                         est_cache,
                     } = &mut shards[si];
                     let slot = &mut slots[pi];
+                    let model_id = ModelId::of(&model);
                     advance(&mut slot.board, at);
                     slot.board.queue.push_back(QueuedReq {
                         req: arr_idx,
                         model,
+                        model_id,
                         at_s: at,
                     });
                     if slot.board.phase == Phase::Sleeping {
@@ -1494,7 +1504,7 @@ impl FleetCoordinator {
                 let valid = match slot.board.queue.front() {
                     Some(head) => matches!(
                         &slot.board.decided,
-                        Some((_, m, s)) if *m == head.model.name() && *s == state
+                        Some((_, m, s)) if *m == head.model_id && *s == state
                     ),
                     None => false,
                 };
@@ -1715,6 +1725,8 @@ impl FleetCoordinator {
             spec_routes,
             spec_conflicts,
             spec_redrains,
+            route_updates: self.route_index.updates,
+            route_picks: self.route_index.picks,
         })
     }
 }

@@ -241,11 +241,17 @@ fn run_stream(smoke: bool, tick_s: f64) -> Result<ScenarioResult> {
     })
 }
 
-/// Deliberately conservative: the floor exists to catch order-of-
-/// magnitude collapses (a re-introduced arrival barrier, an accidental
-/// O(B) scan per event) on the slowest CI runner, not to benchmark the
-/// host.
-const DENSE_10K_FLOOR_EPS: f64 = 1_000.0;
+/// An absolute events/sec target, not just a collapse guard: with the
+/// incremental routing index (DESIGN.md §17) the 10k-board row no
+/// longer pays an O(B·Q) scan per arrival, so the floor commits to the
+/// order-of-magnitude ROADMAP item 2 asks for while staying low enough
+/// for the slowest CI runner.
+const DENSE_10K_FLOOR_EPS: f64 = 5_000.0;
+
+/// Floor for the `route_10k` row's routed-arrivals/sec (indexed path).
+/// Conservative for slow CI runners; the full (non-smoke) bench
+/// additionally asserts the >=5x wall speedup over the scan router.
+const ROUTE_10K_FLOOR_EPS: f64 = 2_000.0;
 
 /// Scale row (DESIGN.md §15): 10k boards under SLO-aware routing and
 /// dense steady traffic on the sharded executor — the configuration the
@@ -310,6 +316,77 @@ fn run_dense_10k(smoke: bool, tick_s: f64) -> Result<ScenarioResult> {
         dropped: rn.dropped,
         peak_rss_mb: crate::telemetry::stream::peak_rss_mb(),
         min_events_per_sec: DENSE_10K_FLOOR_EPS,
+    })
+}
+
+/// Routing microbench (DESIGN.md §17): 10k boards, SLO-aware, dense
+/// steady arrivals, single worker — the configuration where routing cost
+/// dominates the event loop. The same scenario runs twice, once with
+/// the `routing_scan` escape hatch (the O(B·Q) baseline) and once on
+/// the tournament index; fingerprints are pinned byte-identical (the
+/// release-mode parity check — debug builds also assert every pick via
+/// the scan oracle), `events_per_sec` reports the *indexed* run's
+/// routed-arrivals/sec, and `wall_speedup` carries the scan-over-index
+/// wall ratio. The full (non-smoke) bench enforces the >=5x acceptance
+/// bar; smoke CI just reports the ratio (and the absolute floor keeps a
+/// collapse loud).
+fn run_route_10k(smoke: bool, tick_s: f64) -> Result<ScenarioResult> {
+    let boards = 10_000;
+    let (horizon, rate) = if smoke { (2.0, 800.0) } else { (4.0, 2500.0) };
+    let seed = 47;
+    let scenario =
+        FleetSpec::new().pattern(ArrivalPattern::Steady).boards(boards).horizon_s(horizon).rate_rps(rate).correlation(0.5).seed(seed).scenario()?;
+    let mk = |routing_scan: bool| -> Result<FleetCoordinator> {
+        let cfg = FleetConfig {
+            boards,
+            tick_s,
+            routing: RoutingPolicy::SloAware,
+            routing_scan,
+            seed,
+            trail_sample: 256,
+            ..FleetConfig::default()
+        };
+        FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal))
+    };
+    let mut fscan = mk(true)?;
+    let t0 = Instant::now();
+    let rscan = fscan.run_threads(&scenario, 1)?;
+    let wall_scan = t0.elapsed().as_secs_f64();
+    let mut fidx = mk(false)?;
+    let t1 = Instant::now();
+    let ridx = fidx.run_threads(&scenario, 1)?;
+    let wall_idx = t1.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        rscan.fingerprint() == ridx.fingerprint(),
+        "route_10k: indexed routing fingerprint diverged from the scan router"
+    );
+    let routed_per_sec = scenario.requests.len() as f64 / wall_idx.max(1e-9);
+    let speedup = wall_scan / wall_idx.max(1e-9);
+    if !smoke {
+        anyhow::ensure!(
+            speedup >= 5.0,
+            "route_10k: indexed routing is only {speedup:.2}x the scan at 10k boards \
+             (acceptance bar is 5x)"
+        );
+    }
+    Ok(ScenarioResult {
+        name: "route_10k",
+        pattern: ArrivalPattern::Steady.name(),
+        requests: scenario.requests.len(),
+        event_iterations: ridx.events,
+        tick_iterations: 0,
+        event_wall_s: wall_idx,
+        tick_wall_s: wall_scan,
+        events_per_sec: routed_per_sec,
+        iteration_speedup: 0.0,
+        wall_speedup: speedup,
+        frames_rel_err: 0.0,
+        energy_rel_err: 0.0,
+        p99_ms: ridx.latency().p99_ms(),
+        slo_violations: ridx.slo_violations(),
+        dropped: ridx.dropped,
+        peak_rss_mb: 0.0,
+        min_events_per_sec: ROUTE_10K_FLOOR_EPS,
     })
 }
 
@@ -483,6 +560,9 @@ pub fn run(smoke: bool) -> Result<FleetBenchReport> {
         // scale (DESIGN.md §15): 10k boards, SLO-aware, speculative
         // admission — events/sec + peak RSS + an absolute CI floor
         run_dense_10k(smoke, tick_s)?,
+        // routing microbench (DESIGN.md §17): indexed vs scan router at
+        // 10k boards — routed-arrivals/sec + pinned fingerprint parity
+        run_route_10k(smoke, tick_s)?,
     ];
     let scaling = Some(run_scaling(smoke)?);
     Ok(FleetBenchReport {

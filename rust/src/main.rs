@@ -16,6 +16,7 @@
 //!                   [--profiles B512,B1024,B4096,B4096]  # alias: single-slot boards
 //!                   [--faults independent|correlated|thermal|link] [--autoscale]
 //!                   [--threads N] [--fingerprint] [--fine-tick] [--assert-served]
+//!                   [--routing-scan]  # force the O(B·Q) scan router (parity hatch)
 //!                   [--metrics-port 0] [--metrics-hold 5] [--trace-out traces.jsonl]
 //!                   [--trail-sample 512]
 //! dpuconfig fleet-bench [--full] [--out BENCH_fleet.json] [--check-against BENCH_fleet.json]
@@ -205,6 +206,7 @@ fn run() -> Result<()> {
                 threads: args.opt_usize("threads", default_threads())?,
                 fingerprint: args.flag("fingerprint"),
                 fine_tick: args.flag("fine-tick"),
+                routing_scan: args.flag("routing-scan"),
                 assert_served: args.flag("assert-served"),
                 trail_sample: args
                     .opt("trail-sample")
@@ -408,6 +410,10 @@ struct FleetDemoOpts {
     threads: usize,
     fingerprint: bool,
     fine_tick: bool,
+    /// Force the O(B·Q) scan router instead of the incremental index
+    /// (DESIGN.md §17) — picks are identical either way; this is the
+    /// parity/diagnosis escape hatch.
+    routing_scan: bool,
     assert_served: bool,
     /// Override of the trail-reservoir cap (None = the config default).
     trail_sample: Option<usize>,
@@ -466,6 +472,7 @@ fn fleet_demo(o: &FleetDemoOpts) -> Result<()> {
     };
     cfg.faults = faults;
     cfg.autoscale = o.autoscale.then(AutoscaleConfig::default);
+    cfg.routing_scan = o.routing_scan;
     if let Some(cap) = o.trail_sample {
         cfg.trail_sample = cap;
     }

@@ -216,6 +216,8 @@ mod tests {
             spec_routes: 2,
             spec_conflicts: 0,
             spec_redrains: 0,
+            route_updates: 12,
+            route_picks: 5,
         }
     }
 

@@ -500,6 +500,15 @@ pub struct FleetSnapshot {
     pub spec_conflicts: u64,
     /// Admission spans broken early and re-drained after a conflict.
     pub spec_redrains: u64,
+    /// Routing-index leaf/row refreshes — each one re-keys a single
+    /// board's wait summary (DESIGN.md §17). `route_updates /
+    /// route_picks` is the observed amortized rebuild width; a value
+    /// near the fleet size means the index is thrashing (or the scan
+    /// escape hatch is off the hot path entirely, reporting zero).
+    pub route_updates: u64,
+    /// Routing decisions served through the tournament index (zero
+    /// under `--routing-scan` and for round-robin).
+    pub route_picks: u64,
 }
 
 /// Shared slot the fleet executors publish [`FleetSnapshot`]s into and
@@ -549,6 +558,10 @@ pub fn prometheus_text_snapshot(s: &FleetSnapshot) -> String {
     out.push_str(&format!("dpufleet_spec_conflicts_total {}\n", s.spec_conflicts));
     family(&mut out, "spec_redrains_total", "counter", "Admission spans re-drained after a speculation conflict");
     out.push_str(&format!("dpufleet_spec_redrains_total {}\n", s.spec_redrains));
+    family(&mut out, "route_updates_total", "counter", "Routing-index summary refreshes (one per re-keyed board)");
+    out.push_str(&format!("dpufleet_route_updates_total {}\n", s.route_updates));
+    family(&mut out, "route_picks_total", "counter", "Routing decisions served through the tournament index");
+    out.push_str(&format!("dpufleet_route_picks_total {}\n", s.route_picks));
     family(&mut out, "latency_ms", "gauge", "End-to-end latency quantiles (merged histograms)");
     for (q, v) in [("0.5", s.p50_ms), ("0.95", s.p95_ms), ("0.99", s.p99_ms)] {
         out.push_str(&format!("dpufleet_latency_ms{{quantile=\"{q}\"}} {v}\n"));
@@ -868,12 +881,16 @@ mod tests {
             spec_routes: 42,
             spec_conflicts: 0,
             spec_redrains: 0,
+            route_updates: 311,
+            route_picks: 77,
         };
         let txt = prometheus_text_snapshot(&snap);
         assert!(txt.contains("dpufleet_requests_served_total 90"));
         assert!(txt.contains("dpufleet_spec_routes_total 42"));
         assert!(txt.contains("dpufleet_spec_conflicts_total 0"));
         assert!(txt.contains("dpufleet_spec_redrains_total 0"));
+        assert!(txt.contains("dpufleet_route_updates_total 311"));
+        assert!(txt.contains("dpufleet_route_picks_total 77"));
         assert!(txt.contains("dpufleet_latency_ms{quantile=\"0.99\"} 80"));
         assert!(txt.contains("dpufleet_board_power_watts{board=\"0\",class=\"B4096\"} 9.5"));
         assert!(txt.contains("dpufleet_board_fails_total{board=\"0\",class=\"B4096\"} 1"));

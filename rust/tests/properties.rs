@@ -5,7 +5,8 @@
 //! frames and energy; availability is a true fraction).
 
 use dpuconfig::coordinator::fleet::{
-    AutoscaleConfig, FleetConfig, FleetCoordinator, FleetPolicy, FleetSpec, RoutingPolicy,
+    AutoscaleConfig, BoardSpec, FleetConfig, FleetCoordinator, FleetPolicy, FleetSpec,
+    RoutingPolicy,
 };
 use dpuconfig::coordinator::{Arrival, Coordinator, Event, ReconfigManager, Scenario, Selector};
 use dpuconfig::dpusim::{DpuSim, FPS_CONSTRAINT};
@@ -422,6 +423,89 @@ fn prop_faults_only_ever_cost_frames_and_energy() {
         for b in &thermal.boards {
             assert_eq!(b.fails, 0, "thermal derating never kills a board");
             assert!((b.availability - 1.0).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_indexed_routing_matches_the_scan_oracle() {
+    // The incremental route index (DESIGN.md §17) must be answer-
+    // identical to the O(B·Q) scan router: byte-identical fingerprints
+    // for every routing policy, on a mixed multi-slot fleet, with and
+    // without faults + autoscale, at 1 and 4 worker threads. (Debug
+    // builds additionally assert every individual pick against the
+    // scan oracle inside `route` itself, so a fingerprint match here is
+    // a pick-for-pick match, not a lucky collision.)
+    forall(122, 6, |g, _| {
+        let seed = 1 + g.usize(1_000_000) as u64;
+        let horizon = g.f64(20.0, 35.0);
+        let rate = g.f64(4.0, 10.0);
+        let pattern = if g.bool() {
+            ArrivalPattern::Steady
+        } else {
+            ArrivalPattern::Bursty
+        };
+        // mixed rack: multi-slot boards exercise the aux-slot terms of
+        // the wait summaries and their explicit rev bumps
+        let spec = FleetSpec::new()
+            .pattern(pattern)
+            .horizon_s(horizon)
+            .rate_rps(rate)
+            .correlation(0.4)
+            .seed(seed)
+            .board(BoardSpec::of_class("B4096").slots(2))
+            .board(BoardSpec::of_class("B512"))
+            .board(BoardSpec::of_class("B1024").slots(1 + g.usize(3)))
+            .board(BoardSpec::of_class("B4096"));
+        let (cfg0, scenario) = spec.realize().unwrap();
+        let faults = g.bool().then(|| {
+            if g.bool() {
+                FaultProfile::link(seed)
+            } else {
+                FaultProfile::correlated(seed)
+            }
+        });
+        let autoscale = g.bool().then(AutoscaleConfig::default);
+        for routing in [
+            RoutingPolicy::SloAware,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::EnergyAware,
+            RoutingPolicy::RoundRobin,
+        ] {
+            let mk = |routing_scan: bool| {
+                let cfg = FleetConfig {
+                    routing,
+                    routing_scan,
+                    faults: faults.clone(),
+                    autoscale: autoscale.clone(),
+                    ..cfg0.clone()
+                };
+                FleetCoordinator::new(cfg, FleetPolicy::Static(Baseline::Optimal)).unwrap()
+            };
+            for threads in [1usize, 4] {
+                let scan = mk(true).run_threads(&scenario, threads).unwrap();
+                let indexed = mk(false).run_threads(&scenario, threads).unwrap();
+                assert_eq!(
+                    scan.fingerprint(),
+                    indexed.fingerprint(),
+                    "{routing:?} x {threads} threads diverged (seed {seed}, \
+                     faults {}, autoscale {})",
+                    faults.is_some(),
+                    autoscale.is_some(),
+                );
+                // the counters are observability, not physics: the scan
+                // run never touches the index, the indexed run serves
+                // every arrival through it (round-robin stays on its
+                // O(1) cursor walk either way), and neither counter may
+                // leak into the fingerprint
+                assert_eq!(scan.route_picks, 0, "scan hatch must bypass the index");
+                if routing == RoutingPolicy::RoundRobin {
+                    assert_eq!(indexed.route_picks, 0, "round-robin never uses the index");
+                } else if !scenario.requests.is_empty() {
+                    assert!(indexed.route_picks > 0, "indexed run must route via the index");
+                }
+                assert!(!indexed.fingerprint().contains("route"));
+            }
         }
     });
 }
